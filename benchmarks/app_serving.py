@@ -1,0 +1,93 @@
+"""Application-level benchmark — paper Fig. 10 analog.
+
+N serving replicas ("nodes") run the same service over a shared dataset
+(shared-prefix requests = the paper's hot files).  Configurations mirror the
+paper's: local_only (Virtiofs baseline: every miss refetches from storage =
+prefill recompute), replicated (per-node caches, no sharing), dpc and dpc_sc.
+
+Reported per config × node count: per-node throughput normalized to the
+1-node local_only baseline, prefill tokens avoided, and page hit mix.
+The paper's claims checked here:
+  (1) per-node performance does not degrade as nodes are added (directory is
+      not a bottleneck);
+  (2) when aggregate cache covers the shared working set, dpc >> per-node
+      caching;
+  (3) dpc_sc trails dpc only slightly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_arch
+from repro.configs.base import DPCConfig, MeshConfig, RunConfig, ShapeConfig
+from repro.core.dpc_cache import DistributedKVCache
+from repro.models import registry
+from repro.models.spec import init_params
+from repro.serving.engine import ServingEngine
+
+ARCH = "granite-3-2b"
+PAGE = 8
+PROMPT = 64          # 8 shared pages
+NEW_TOKENS = 4
+REQS_PER_NODE = 6
+
+
+def make_engines(mode: str, n_nodes: int, params, arch):
+    run = RunConfig(
+        arch=arch, shape=ShapeConfig("b", PROMPT * 2, 4, "decode"),
+        mesh=MeshConfig((1,), ("data",)),
+        dpc=DPCConfig(mode=mode, page_size=PAGE, pool_pages_per_shard=512))
+    kv = DistributedKVCache(run.dpc, n_nodes)
+    return [ServingEngine(run, params, max_batch=4,
+                          max_pages_per_seq=PROMPT * 2 // PAGE + 2,
+                          node=i, num_nodes=n_nodes, kv_cache=kv)
+            for i in range(n_nodes)], kv
+
+
+def run():
+    arch = get_smoke_arch(ARCH)
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    hot_prefix = rng.randint(0, arch.vocab_size, PROMPT).tolist()
+
+    base_tput = None
+    for mode in ("local_only", "replicated", "dpc", "dpc_sc"):
+        for n_nodes in (1, 2, 4):
+            engines, kv = make_engines(mode, n_nodes, params, arch)
+            t0 = time.monotonic()
+            for i in range(REQS_PER_NODE * n_nodes):
+                # every request reads the hot shared prefix + a private tail
+                tail = rng.randint(0, arch.vocab_size, 8).tolist()
+                engines[i % n_nodes].submit(hot_prefix + tail,
+                                            max_new_tokens=NEW_TOKENS)
+            for _ in range(100000):
+                n = sum(e.step() for e in engines)
+                if n == 0:
+                    break
+            dt = time.monotonic() - t0
+            # engines time-share one CPU: the scalable quantity is AGGREGATE
+            # decode throughput; per-node = aggregate / n under real overlap
+            tput = REQS_PER_NODE * NEW_TOKENS * n_nodes / dt
+            if base_tput is None:
+                base_tput = tput
+            s = engines[0].stats
+            saved = sum(e.stats.prefill_tokens_saved for e in engines)
+            run_tok = sum(e.stats.prefill_tokens_run for e in engines)
+            loc = sum(e.stats.pages_local for e in engines)
+            rem = sum(e.stats.pages_remote for e in engines)
+            emit(f"app.{mode}.n{n_nodes}", 1e6 / max(tput, 1e-9),
+                 f"agg_tput={tput:.2f}tok/s "
+                 f"rel={tput / base_tput:.2f}x "
+                 f"prefill_saved={saved} run={run_tok} "
+                 f"hits(l/r)={loc}/{rem}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: timing, CSV emission, smoke-scale fixtures."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+            **kw) -> float:
+    """Median wall time (µs) of fn(*args) with jax block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def time_host(fn: Callable, *args, warmup: int = 1, iters: int = 5,
+              **kw) -> float:
+    """Median wall time (µs) of a host-side (already-blocking) call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def time_fresh(factory: Callable, fn: Callable, iters: int = 3) -> float:
+    """Median wall time (µs) of fn(state) over fresh states (for ops that
+    donate their inputs).  One extra warmup state absorbs jit compilation."""
+    states = [factory() for _ in range(iters + 1)]
+    fn(states[0])  # compile
+    times = []
+    for st in states[1:]:
+        t0 = time.perf_counter()
+        fn(st)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,70 @@
+"""Control-plane benchmark — paper Table 1 opcode costs.
+
+Directory opcode throughput vs descriptor batch size (the paper's batched
+64 B descriptors per round trip), plus the batched hash-probe read path
+(Pallas kernel vs jnp oracle).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, time_fresh
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.kernels import dispatch
+
+CFG = dirx.DirectoryConfig(capacity=1 << 14, num_nodes=32, max_probe=128)
+
+
+def run():
+    for batch in (1, 32, 256):
+        descs = D.make_batch(np.arange(batch) + 1, np.zeros(batch), 0)
+
+        t = time_fresh(
+            lambda: dirx.init_directory(CFG),
+            lambda d: jax.block_until_ready(dirx.lookup_and_install(
+                d, descs, max_probe=CFG.max_probe)[1]))
+        emit(f"dir.lookup_install.b{batch}", t,
+             f"{batch / t * 1e6:.0f} pages/s")
+
+        def warm():
+            d = dirx.init_directory(CFG)
+            d, _ = dirx.lookup_and_install(d, descs,
+                                           max_probe=CFG.max_probe)
+            return d
+
+        t = time_fresh(warm, lambda d: jax.block_until_ready(
+            dirx.commit(d, descs, max_probe=CFG.max_probe)[1]))
+        emit(f"dir.commit.b{batch}", t, f"{batch / t * 1e6:.0f} pages/s")
+
+        def warm_o():
+            d = warm()
+            d, _ = dirx.commit(d, descs, max_probe=CFG.max_probe)
+            return d
+
+        t = time_fresh(warm_o, lambda d: jax.block_until_ready(
+            dirx.begin_invalidate(d, descs, max_probe=CFG.max_probe)[1]))
+        emit(f"dir.begin_inv.b{batch}", t, f"{batch / t * 1e6:.0f} pages/s")
+
+    # read-path probe: Pallas kernel vs vmap oracle over a warm table
+    d = dirx.init_directory(CFG)
+    n = 2048
+    descs = D.make_batch(np.arange(n) % 997 + 1, np.arange(n) // 997, 0)
+    d, _ = dirx.lookup_and_install(d, descs, max_probe=CFG.max_probe)
+    queries = jnp.stack([descs[:, 0], descs[:, 1]], -1)
+    t_ref = time_fn(lambda k, q: dispatch.directory_probe(
+        k, q, max_probe=CFG.max_probe, impl="ref"), d.keys, queries)
+    t_pal = time_fn(lambda k, q: dispatch.directory_probe(
+        k, q, max_probe=CFG.max_probe, impl="pallas"), d.keys, queries,
+        iters=3)
+    emit("dir.probe_ref.b2048", t_ref, f"{n / t_ref * 1e6:.0f} probes/s")
+    emit("dir.probe_pallas_interp.b2048", t_pal,
+         "(interpret mode; TPU kernel keeps table in VMEM)")
+
+
+if __name__ == "__main__":
+    run()

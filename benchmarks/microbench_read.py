@@ -1,0 +1,115 @@
+"""Read-path microbenchmark — paper Fig. 6/7 analog.
+
+Scenarios per page read (4-node cluster, node 2 reading):
+  CM    miss everywhere: directory GRANT_E + materialize ("storage fetch" =
+        prefill recompute of the page's tokens) + COMMIT
+  CM-R  miss locally, hit remote: directory lookup -> MAP_S + first data-path
+        access (page fetch / remote attention)
+  CH-R  established mapping: data-path access only (directory rehit is
+        amortized; we also report the rehit lookup cost)
+
+The "storage" tier is prefill recompute; the data plane is the paged
+attention + page gather kernels.  The structural claim reproduced: CM is
+dominated by materialization and CM-R/CH-R by remote-memory-speed access,
+with the directory adding ~nothing to CM (piggybacked) — then
+latency(CM) >> latency(CM-R) ~ latency(CH-R).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, time_host
+from repro.configs import get_smoke_arch
+from repro.configs.base import ArchConfig, DPCConfig
+from repro.core.dpc_cache import DistributedKVCache
+from repro.kernels import dispatch
+from repro.models import registry
+from repro.models.spec import init_params
+
+PAGE = 16
+NODES = 4
+SPAN_PAGES = 8          # a prefix span of 8 pages = 128 tokens
+
+
+def bench_arch() -> ArchConfig:
+    """Big enough that recompute visibly dominates a page fetch on CPU."""
+    return ArchConfig(name="bench-lm", family="dense", num_layers=8,
+                      d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+                      d_ff=1024, vocab_size=32768, source="bench")
+
+
+def run():
+    arch = bench_arch()
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=256)
+
+    # --- "storage fetch": prefill recompute of one PREFIX SPAN (the unit a
+    # miss actually costs: the whole missing span re-runs through the model)
+    span = PAGE * SPAN_PAGES
+    batch = {"tokens": jnp.zeros((1, span), jnp.int32)}
+    prefill = jax.jit(lambda p, b: api.prefill(p, arch, b, remat=False)[0])
+    t_storage = time_fn(prefill, params, batch) / SPAN_PAGES  # per page
+
+    # --- data plane: one-page attention (the remote/local hit service time)
+    hkv, hd = arch.num_kv_heads, arch.resolved_head_dim
+    hq = arch.num_heads
+    k_pool = jnp.zeros((64, PAGE, hkv, hd), jnp.bfloat16)
+    v_pool = jnp.zeros_like(k_pool)
+    q = jnp.zeros((1, hq, hd), jnp.bfloat16)
+    pt = jnp.zeros((1, 1), jnp.int32)
+    sl = jnp.full((1,), PAGE, jnp.int32)
+    t_attend = time_fn(
+        lambda *a: dispatch.paged_attention(*a, impl="ref"),
+        q, k_pool, v_pool, pt, sl)
+
+    # --- page transfer (ship_data service: gather one page)
+    ids = jnp.zeros((1,), jnp.int32)
+    t_gather = time_fn(lambda *a: dispatch.page_gather(*a, impl="ref"),
+                       k_pool, ids)
+
+    for batch_pages in (1, 32, 128):
+        # --- directory control-plane costs, batched
+        kv = DistributedKVCache(dpc, NODES)
+        streams = list(range(1, batch_pages + 1))
+        pages = [0] * batch_pages
+
+        def cm_lookup():
+            kv2 = DistributedKVCache(dpc, NODES)
+            return kv2.lookup(streams, pages, node=2)
+        t_cm_dir = time_host(cm_lookup, iters=3) / batch_pages
+
+        # warm node 0, then first remote lookup from node 2 (CM-R)
+        kv = DistributedKVCache(dpc, NODES)
+        lks = kv.lookup(streams, pages, 0)
+        kv.commit(streams, pages, 0, lks)
+
+        def cmr_lookup():
+            return kv.lookup(streams, pages, 2)
+        t_cmr_dir = time_host(cmr_lookup, iters=1, warmup=0) / batch_pages
+        t_chr_dir = time_host(cmr_lookup, iters=3) / batch_pages  # rehits
+
+        t_cm = t_cm_dir + t_storage
+        t_cmr = t_cmr_dir + t_gather
+        t_chr = t_chr_dir + t_attend
+        emit(f"read.CM.b{batch_pages}", t_cm,
+             f"dir={t_cm_dir:.1f}us storage={t_storage:.1f}us")
+        emit(f"read.CM-R.b{batch_pages}", t_cmr,
+             f"dir={t_cmr_dir:.1f}us fetch={t_gather:.1f}us "
+             f"speedup_vs_CM={t_cm / t_cmr:.1f}x")
+        emit(f"read.CH-R.b{batch_pages}", t_chr,
+             f"dir={t_chr_dir:.1f}us attend={t_attend:.1f}us "
+             f"speedup_vs_CM={t_cm / t_chr:.1f}x")
+
+    # paper claim check: remote hits are much cheaper than misses
+    assert t_storage > t_gather, \
+        f"storage fetch ({t_storage:.0f}us) must dominate remote fetch " \
+        f"({t_gather:.0f}us)"
+
+
+if __name__ == "__main__":
+    run()

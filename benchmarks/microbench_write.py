@@ -1,0 +1,68 @@
+"""Write-path microbenchmark — paper Fig. 8/9 analog.
+
+Relaxed DPC: buffered writes stay local (no directory round trip) — the
+write cost is the in-memory copy.  DPC_SC: every write range pays the
+two-step LOOKUP_LOCK -> copy -> UNLOCK protocol; batching over the range
+amortizes the directory latency (the paper's 128 KB-extent batching).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, time_fresh, time_host
+from repro.configs.base import DPCConfig
+from repro.core.coherence import CoherenceManager
+from repro.core.dpc_cache import DistributedKVCache
+from repro.kernels import dispatch
+
+PAGE = 16
+NODES = 4
+
+
+def run():
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=1024)
+
+    # the data copy itself (page install via scatter kernel)
+    pool = jnp.zeros((256, PAGE, 4, 16), jnp.bfloat16)
+    pages = jnp.ones((1, PAGE, 4, 16), jnp.bfloat16)
+    t_copy = time_fn(lambda *a: dispatch.page_scatter(*a, impl="ref"),
+                     pool, jnp.zeros((1,), jnp.int32), pages)
+
+    for batch_pages in (1, 32, 128):
+        streams = list(range(1, batch_pages + 1))
+        pages_idx = [0] * batch_pages
+
+        # relaxed: no directory traffic at all
+        kv = DistributedKVCache(dpc, NODES)
+        coh = CoherenceManager(kv.proto, "dpc")
+        t_relaxed = time_host(
+            lambda: coh.commit(coh.prepare(streams, pages_idx, 1)),
+            iters=3) / batch_pages + t_copy
+        emit(f"write.relaxed.b{batch_pages}", t_relaxed,
+             f"copy={t_copy:.1f}us dir=0us")
+
+        # strong: two-step lock/unlock per batch (fresh directory per
+        # sample: LOOKUP_LOCK grants E, which only happens once per page)
+        def fresh_sc():
+            kv = DistributedKVCache(dpc, NODES)
+            return CoherenceManager(kv.proto, "dpc_sc")
+
+        def sc_write(coh):
+            t = coh.prepare(streams, pages_idx, 1)
+            coh.commit(t)
+
+        t_sc = time_fresh(fresh_sc, sc_write) / batch_pages + t_copy
+        emit(f"write.dpc_sc.b{batch_pages}", t_sc,
+             f"copy={t_copy:.1f}us overhead_vs_relaxed="
+             f"{t_sc / max(t_relaxed, 1e-9):.2f}x")
+
+    # paper claim: batching hides the strong-coherence round trip
+    # (per-page SC overhead at b=128 << at b=1); asserted in tests.
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Roofline table — reads results/dryrun.json (produced by launch/dryrun.py)
+and prints the per-(arch × shape × mesh) three-term roofline with bottleneck
+and MFU-at-bound.  The dry-run itself needs the 512-device flag, so it runs
+as its own process; this module only reports."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def run():
+    if not os.path.exists(RESULTS):
+        emit("roofline.missing", 0.0,
+             f"run `python -m repro.launch.dryrun` first ({RESULTS})")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    rows = []
+    for key, v in sorted(results.items()):
+        if v.get("status") != "ok":
+            continue
+        arch, shape, meshname, datapath = key.split("|")
+        r = v["roofline"]
+        rows.append((key, r))
+        emit(
+            f"roofline.{arch}.{shape}.{meshname}",
+            r["t_bound_s"] * 1e6 if "t_bound_s" in r else max(
+                r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+            f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+            f"tl={r['t_collective_s']:.2e} dom={r['bottleneck']} "
+            f"mfu_bound={r['mfu_bound']:.3f} "
+            f"fits={v['memory']['fits_hbm']}")
+    # summary: worst cells per category
+    if rows:
+        coll = [x for x in rows if x[1]["bottleneck"] == "collective"]
+        emit("roofline.summary", 0.0,
+             f"cells={len(rows)} collective_bound={len(coll)}")
+
+
+if __name__ == "__main__":
+    run()

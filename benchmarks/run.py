@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (app_serving, control_plane, microbench_read,
+                            microbench_write, reclamation, roofline)
+    suites = [
+        ("microbench_read", microbench_read.run),     # paper Fig. 6/7
+        ("microbench_write", microbench_write.run),   # paper Fig. 8/9
+        ("reclamation", reclamation.run),             # paper §6.2.5
+        ("control_plane", control_plane.run),         # paper Table 1
+        ("app_serving", app_serving.run),             # paper Fig. 10
+        ("roofline", roofline.run),                   # brief §Roofline
+    ]
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fault-tolerance drill: training with a simulated node failure +
+restart-from-checkpoint, and serving with a replica failure mid-stream.
+
+Run:  PYTHONPATH=src python examples/failover.py
+"""
+
+import jax
+
+from repro.configs import get_smoke_arch
+from repro.configs.base import (DPCConfig, MeshConfig, RunConfig,
+                                ShapeConfig)
+from repro.core.dpc_cache import DistributedKVCache
+from repro.models import registry
+from repro.models.spec import init_params
+from repro.runtime.liveness import Membership, elastic_mesh_shape
+from repro.serving.engine import ServingEngine
+
+
+def train_failover():
+    print("== training: kill node at step 60, restart from checkpoint ==")
+    from repro.launch import train
+    train.main(["--arch", "qwen3-1.7b", "--steps", "100", "--batch", "4",
+                "--seq", "64", "--ckpt-dir", "/tmp/repro_failover",
+                "--ckpt-every", "25", "--kill-at", "60", "--log-every", "25"])
+
+
+def serving_failover():
+    print("\n== serving: replica 1 dies; its pages are lost, cluster "
+          "recovers ==")
+    arch = get_smoke_arch("granite-3-2b")
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    run = RunConfig(arch=arch, shape=ShapeConfig("s", 64, 4, "decode"),
+                    mesh=MeshConfig((1,), ("data",)),
+                    dpc=DPCConfig(page_size=8, pool_pages_per_shard=64))
+    kv = DistributedKVCache(run.dpc, 2)
+    engines = [ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
+                             node=i, num_nodes=2, kv_cache=kv)
+               for i in range(2)]
+    membership = Membership(num_nodes=2)
+
+    prompt = list(range(10, 34))
+    engines[1].submit(prompt, max_new_tokens=2)
+    for _ in range(20):
+        if engines[1].step() == 0:
+            break
+    print(f"  replica 1 cached {kv.directory_occupancy()} pages")
+
+    # replica 1 dies: directory drops it; epoch bumps; mesh shrinks
+    membership.evict(1, "fail")
+    lost = kv.fail_node(1)
+    print(f"  replica 1 failed -> {lost} owned pages lost "
+          f"(cache shrink, not data loss: prefill regenerates)")
+    print(f"  membership epoch={membership.epoch}; new mesh for 16 "
+          f"chips/replica: {elastic_mesh_shape(16, 16)}")
+
+    # replica 0 re-reads the prompt: misses, refills, keeps serving
+    engines[0].submit(prompt, max_new_tokens=2)
+    for _ in range(20):
+        if engines[0].step() == 0:
+            break
+    print(f"  replica 0 refilled; directory occupancy="
+          f"{kv.directory_occupancy()}, stats={engines[0].stats.as_dict()}")
+
+
+if __name__ == "__main__":
+    train_failover()
+    serving_failover()

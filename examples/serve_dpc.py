@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests through the DPC cache, comparing
+the paper's four configurations on the same shared-prefix workload.
+
+Run:  PYTHONPATH=src python examples/serve_dpc.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for mode in ("local_only", "replicated", "dpc", "dpc_sc"):
+        print(f"\n===== mode={mode} =====")
+        serve.main(["--mode", mode, "--requests", "12", "--share", "0.75",
+                    "--prompt-len", "48", "--new-tokens", "6"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: a ~100M-param qwen3-style model for a few
+hundred steps on the synthetic pipeline, with checkpointing + the host-tier
+DPC data cache.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(This drives repro.launch.train — the same driver that jits with production
+mesh shardings on a real pod.)
+"""
+
+import argparse
+import dataclasses
+import sys
+
+from repro.configs.base import ArchConfig
+
+
+def arch_100m() -> ArchConfig:
+    """~100M params: 12L, d=768, proper GQA + swiglu (qwen3 family)."""
+    return ArchConfig(name="qwen3-100m", family="dense", num_layers=12,
+                      d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+                      d_ff=2048, vocab_size=32000, qk_norm=True,
+                      source="examples")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # register the example arch so --arch resolves it
+    import repro.configs as C
+    mod = type(sys)("example_arch")
+    mod.config = arch_100m
+    mod.smoke_config = arch_100m
+    sys.modules["repro.configs._example"] = mod
+    C._ARCH_MODULES["qwen3-100m"] = "repro.configs._example"
+
+    from repro.launch import train
+    return train.main([
+        "--arch", "qwen3-100m", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--n-micro", "2", "--lr", "6e-4", "--warmup", "30",
+        "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,133 @@
+"""Async checkpoint/restore for TrainState + data cursor.
+
+Checkpoint layout (one dir per step):
+    ckpt_dir/step_000100/
+        manifest.json        step, leaf paths, shapes/dtypes, extra state
+        leaf_00000.npy ...   one file per pytree leaf
+
+Writes happen on a background thread (training never blocks on I/O); a
+``.complete`` marker commits the checkpoint atomically so a crash mid-write
+is never restored from.  ``restore_latest`` finds the newest complete step —
+the restart path node failures funnel into (runtime/liveness.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, state, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write to disk async."""
+        flat, _ = _flatten_with_paths(state)
+        host_leaves = [np.asarray(x) for x in flat]   # device -> host now
+        # numpy .npy cannot round-trip bf16 (ml_dtypes) — store a uint16 view
+        # and record the logical dtype in the manifest
+        dtypes = [str(a.dtype) for a in host_leaves]
+        host_leaves = [a.view(np.uint16) if a.dtype.str == "<V2" or
+                       "bfloat16" in str(a.dtype) else a
+                       for a in host_leaves]
+        extra = dict(extra or {})
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "n_leaves": len(host_leaves),
+                        "extra": extra,
+                        "leaves": [{"shape": list(a.shape), "dtype": dt}
+                                   for a, dt in zip(host_leaves, dtypes)]}
+            for i, a in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)
+            open(os.path.join(path, ".complete"), "w").close()
+            self._gc()
+            self.saves += 1
+
+        self.wait()
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self._complete_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def _complete_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, ".complete")):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._complete_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, state_like) -> Tuple[Any, Dict]:
+        """Restore into the structure (and shardings) of ``state_like``."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = _flatten_with_paths(state_like)
+        assert manifest["n_leaves"] == len(flat), "state structure changed"
+        leaves = []
+        for i, like in enumerate(flat):
+            a = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            want = manifest["leaves"][i]["dtype"]
+            if "bfloat16" in want and a.dtype == np.uint16:
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            if hasattr(like, "sharding"):
+                leaves.append(jax.device_put(a, like.sharding))
+            else:
+                leaves.append(jax.numpy.asarray(a))
+        return jax.tree_util.tree_unflatten(treedef, leaves), \
+            manifest["extra"]
+
+    def restore_latest(self, state_like) -> Optional[Tuple[Any, Dict, int]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        state, extra = self.restore(step, state_like)
+        return state, extra, step

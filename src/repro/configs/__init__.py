@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-exported)
+    ArchConfig,
+    AudioConfig,
+    DPCConfig,
+    MLAConfig,
+    MeshConfig,
+    MoEConfig,
+    MULTI_POD_MESH,
+    RunConfig,
+    SINGLE_POD_MESH,
+    SHAPES,
+    SHAPES_BY_NAME,
+    ShapeConfig,
+    ShardingConfig,
+    SSMConfig,
+    VisionConfig,
+    resolve_pages_per_seq,
+    shape_applicable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "musicgen-large": "repro.configs.musicgen_large",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def _loader(arch_id: str, fn: str) -> Callable[[], ArchConfig]:
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    return getattr(mod, fn)
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _loader(arch_id, "config")()
+
+
+def get_smoke_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _loader(arch_id, "smoke_config")()
+
+
+def get_shape(shape_name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[shape_name]

@@ -1,0 +1,398 @@
+"""Architecture / run configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; every benchmark shape is
+a ``ShapeConfig``.  ``(ArchConfig, ShapeConfig, MeshConfig, DPCConfig)`` fully
+determines a lowered program — the dry-run, roofline, trainers and the serving
+engine all consume these and nothing else.
+
+Configs are plain frozen dataclasses (hashable → usable as jit static args and
+cache keys).  ``src/repro/configs/<arch>.py`` exposes ``config()`` (the exact
+published config) and ``smoke_config()`` (same family, tiny) for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+
+    num_experts: int
+    top_k: int
+    expert_ffn: int                     # per-expert intermediate size
+    num_shared_experts: int = 0
+    shared_expert_ffn: int = 0
+    router_dtype: str = "float32"
+    # layers [0, first_dense_layers) use a dense FFN instead of MoE
+    first_dense_layers: int = 0
+    dense_ffn: int = 0                  # ffn width for those dense layers
+    capacity_factor: float = 1.25       # train-time expert capacity
+    router_aux_loss: float = 0.001
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0                # 0 = full-rank q projection (v2-lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / RWKV6 state-space parameters."""
+
+    state_dim: int = 64                 # N (per-head state size)
+    head_dim: int = 64                  # P (mamba2 head dim) / rwkv head size
+    num_heads: int = 0                  # 0 = derive from d_model // head_dim
+    conv_kernel: int = 4                # mamba2 short conv
+    expand: int = 2                     # mamba2 inner expansion
+    chunk_size: int = 128               # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Stub modality frontend: precomputed patch/frame embeddings."""
+
+    num_image_tokens: int = 1601        # llama-3.2-vision: (448/14)^2+1 per tile
+    cross_attn_every: int = 5           # a cross-attn layer every N layers
+    embed_dim: int = 0                  # 0 = d_model (pre-projected stub)
+
+
+@dataclass(frozen=True)
+class AudioConfig:
+    """MusicGen-style EnCodec token decoder (frontend stubbed)."""
+
+    num_codebooks: int = 4
+    codebook_size: int = 2048
+    text_cond_tokens: int = 0           # 0 = unconditional backbone
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture.  Field semantics follow the brief's table."""
+
+    name: str
+    family: str                         # dense | moe | vlm | hybrid | ssm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                      # query heads (0 for attn-free)
+    num_kv_heads: int                   # GQA kv heads
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 = d_model // num_heads
+    # --- block variants ---
+    mlp_variant: str = "swiglu"         # swiglu | squared_relu | gelu
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # --- optional sub-configs ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    vision: Optional[VisionConfig] = None
+    audio: Optional[AudioConfig] = None
+    # hybrid (zamba2): indices of layers that append the shared attention block
+    hybrid_attn_every: int = 0          # 0 = pure; else shared attn after every N ssm blocks
+    # which block type the main scan uses
+    block_kind: str = "attn"            # attn | mamba2 | rwkv6
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    # source tag from the assignment table
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.num_heads == 0
+
+    @property
+    def kv_dim_per_token(self) -> int:
+        """bf16 elements of KV state appended per token per attention layer."""
+        if self.attention_free:
+            return 0
+        if self.mla is not None:
+            return self.mla.kv_lora_rank + self.mla.qk_rope_head_dim
+        return 2 * self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def num_attn_layers(self) -> int:
+        """How many layers actually maintain a growing KV cache."""
+        if self.attention_free:
+            return 0
+        if self.block_kind == "mamba2" and self.hybrid_attn_every:
+            return self.num_layers // self.hybrid_attn_every
+        if self.vision is not None:
+            # cross-attn layers hold static image KV, not growing KV
+            n_cross = self.num_layers // self.vision.cross_attn_every
+            return self.num_layers - n_cross
+        return self.num_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        embed = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "audio" and self.audio:
+            embed = self.audio.num_codebooks * self.audio.codebook_size * d \
+                + self.audio.num_codebooks * self.audio.codebook_size * d
+        total = embed
+        for layer in range(L):
+            total += self._layer_params(layer, d, hd)
+        total += d  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        m = self.moe
+        for layer in range(L):
+            total += self._attn_params(d, hd) + 2 * d
+            if layer < m.first_dense_layers:
+                total += 3 * d * m.dense_ffn
+            else:
+                total += m.top_k * 3 * d * m.expert_ffn
+                total += m.num_shared_experts * 3 * d * m.shared_expert_ffn
+                total += d * m.num_experts  # router
+        return total + d
+
+    # -- helpers ------------------------------------------------------------
+
+    def _attn_params(self, d: int, hd: int) -> int:
+        if self.attention_free:
+            return 0
+        if self.mla is not None:
+            c = self.mla
+            qd = (c.qk_nope_head_dim + c.qk_rope_head_dim) * self.num_heads
+            down = d * (c.kv_lora_rank + c.qk_rope_head_dim)
+            up = c.kv_lora_rank * self.num_heads * (c.qk_nope_head_dim + c.v_head_dim)
+            q = d * qd if not c.q_lora_rank else d * c.q_lora_rank + c.q_lora_rank * qd
+            o = self.num_heads * c.v_head_dim * d
+            return q + down + up + o
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        return q + kv + o
+
+    def _mlp_params(self, d: int, ffn: int) -> int:
+        mats = 3 if self.mlp_variant == "swiglu" else 2
+        return mats * d * ffn
+
+    def _layer_params(self, layer: int, d: int, hd: int) -> int:
+        total = 2 * d  # norms
+        if self.block_kind == "attn":
+            total += self._attn_params(d, hd)
+            if self.moe is not None:
+                m = self.moe
+                if layer < m.first_dense_layers:
+                    total += self._mlp_params(d, m.dense_ffn)
+                else:
+                    total += m.num_experts * 3 * d * m.expert_ffn
+                    total += m.num_shared_experts * 3 * d * m.shared_expert_ffn
+                    total += d * m.num_experts
+            else:
+                total += self._mlp_params(d, self.d_ff)
+            if self.vision is not None and (layer + 1) % self.vision.cross_attn_every == 0:
+                total += self._attn_params(d, hd)  # extra cross-attn block
+        elif self.block_kind == "mamba2":
+            s = self.ssm
+            d_in = s.expand * d
+            total += 2 * d * d_in + d_in * d  # in_proj(x,z), out_proj
+            total += d_in * s.conv_kernel + 3 * d_in  # conv + dt/A/D params (approx)
+            total += self._mlp_params(d, self.d_ff)
+            if self.hybrid_attn_every and (layer + 1) % self.hybrid_attn_every == 0:
+                pass  # shared block params counted once below by caller family
+        elif self.block_kind == "rwkv6":
+            # time-mix: r,k,v,g,o + decay lora; channel-mix: k,v,r
+            total += 5 * d * d + 2 * d * 64
+            total += 2 * d * self.d_ff + d * d
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                           # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic context handling (SSM/hybrid only)."""
+    if shape.name == "long_500k" and arch.family not in ("ssm", "hybrid"):
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch.name} is pure full-attention — skipped per brief, see DESIGN.md §4"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Mesh / parallelism config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_chips(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    @property
+    def data_shards(self) -> int:
+        n = 1
+        for ax, s in zip(self.axes, self.shape):
+            if ax in ("data", "pod"):
+                n *= s
+        return n
+
+    @property
+    def model_shards(self) -> int:
+        for ax, s in zip(self.axes, self.shape):
+            if ax == "model":
+                return s
+        return 1
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Logical-axis → mesh-axis rules (MaxText-style)."""
+
+    # weights
+    fsdp: bool = True                   # shard weights over data axis too
+    # activations
+    shard_batch: Tuple[str, ...] = ("pod", "data")
+    shard_heads: str = "model"
+    shard_ffn: str = "model"
+    shard_vocab: str = "model"
+    shard_experts: str = "model"        # EP folded into model axis
+    # sequence parallelism for very long prefill
+    sequence_parallel: bool = False
+    # remat policy: none | minimal | full
+    remat: str = "full"
+
+
+# ---------------------------------------------------------------------------
+# DPC config — the paper's technique as a first-class feature
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DPCConfig:
+    """Distributed page cache over the KV pool.
+
+    ``mode``:
+      dpc          relaxed coherence (paper's DPC) — default
+      dpc_sc       strong coherence (two-step write: LOOKUP_LOCK/UNLOCK)
+      replicated   per-replica caching, no sharing (NFS/per-node baseline)
+      local_only   no cross-replica cache at all (Virtiofs baseline: every
+                   remote-miss refetches from "storage" = prefill recompute)
+
+    ``datapath``:
+      ship_data     paper-faithful CXL analog — fetch owner pages over ICI
+      ship_compute  beyond-paper — send q to owners, combine partials by LSE
+    """
+
+    mode: str = "dpc"
+    datapath: str = "ship_compute"
+    page_size: int = 64                 # tokens per KV page
+    pool_pages_per_shard: int = 4096    # physical pages per data shard
+    directory_capacity: int = 1 << 16   # hash slots (power of two)
+    inv_batch_threshold: int = 32       # paper §4.3 batch size
+    max_pages_per_seq: int = 0          # 0 = derive from shape
+    kv_dtype: str = "bfloat16"          # int8 enables quantized pool
+    # directory placement: sharded (hash-partitioned) | central (shard 0)
+    directory_placement: str = "sharded"
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode in ("dpc", "dpc_sc")
+
+
+# ---------------------------------------------------------------------------
+# Top-level run config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: ArchConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = SINGLE_POD_MESH
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    dpc: DPCConfig = field(default_factory=DPCConfig)
+    # optimizer
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    grad_clip: float = 1.0
+    # fault tolerance
+    checkpoint_every: int = 200
+    heartbeat_interval_s: float = 5.0
+    straggler_timeout_s: float = 30.0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_pages_per_seq(cfg: RunConfig) -> int:
+    if cfg.dpc.max_pages_per_seq:
+        return cfg.dpc.max_pages_per_seq
+    return max(1, (cfg.shape.seq_len + cfg.dpc.page_size - 1) // cfg.dpc.page_size)

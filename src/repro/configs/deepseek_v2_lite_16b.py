@@ -1,0 +1,64 @@
+"""deepseek-v2-lite-16b — 27L d_model=2048 16H d_ff=1408, vocab=102400.
+MLA kv_lora=512, MoE: 2 shared + 64 routed experts, top-6; first layer dense.
+[arXiv:2405.04434; hf]
+
+The assignment line reads "MoE 64e top-6 — 2 shared+160 routed top-6"; 160
+routed is the full DeepSeek-V2 — the Lite model (this entry) has 64 routed
+experts, so we take 64 routed + 2 shared, top-6, matching the HF config.
+"""
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+ARCH_ID = "deepseek-v2-lite-16b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="moe",
+        num_layers=27,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,                 # MLA: kv heads == q heads post up-proj
+        head_dim=128,
+        d_ff=1408,
+        vocab_size=102400,
+        rope_theta=10000.0,
+        mla=MLAConfig(
+            kv_lora_rank=512,
+            q_lora_rank=0,               # v2-lite: no q compression
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            num_experts=64,
+            top_k=6,
+            expert_ffn=1408,
+            num_shared_experts=2,
+            shared_expert_ffn=1408,
+            first_dense_layers=1,
+            dense_ffn=10944,
+        ),
+        source="arXiv:2405.04434; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="moe",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=256,
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ffn=96,
+                      num_shared_experts=1, shared_expert_ffn=96,
+                      first_dense_layers=1, dense_ffn=128),
+        source="smoke",
+    )

@@ -1,0 +1,39 @@
+"""granite-3-2b — 40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155.
+GQA, SwiGLU, tied embeddings.  [hf:ibm-granite/granite-3.0-2b-base; hf]"""
+
+from repro.configs.base import ArchConfig
+
+ARCH_ID = "granite-3-2b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=40,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=49155,
+        tie_embeddings=True,
+        rope_theta=10000.0,
+        source="hf:ibm-granite/granite-3.0-2b-base; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=True,
+        source="smoke",
+    )

@@ -1,0 +1,45 @@
+"""llama-3.2-vision-90b — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256; cross-attn image layers every 5 layers.
+[hf:meta-llama/Llama-3.2-11B-Vision family; unverified]
+
+The modality frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed patch embeddings (already projected to d_model); the backbone's
+cross-attention layers consume them as static KV.
+"""
+
+from repro.configs.base import ArchConfig, VisionConfig
+
+ARCH_ID = "llama-3.2-vision-90b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="vlm",
+        num_layers=100,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        rope_theta=500000.0,
+        vision=VisionConfig(num_image_tokens=1601, cross_attn_every=5),
+        source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="vlm",
+        num_layers=4,                    # one cross-attn group (3 self + 1 cross)
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        vision=VisionConfig(num_image_tokens=17, cross_attn_every=4),
+        source="smoke",
+    )

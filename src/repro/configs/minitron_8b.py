@@ -1,0 +1,39 @@
+"""minitron-8b — 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+Pruned nemotron: GQA + squared-ReLU.  [arXiv:2407.14679; hf]"""
+
+from repro.configs.base import ArchConfig
+
+ARCH_ID = "minitron-8b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=256000,
+        mlp_variant="squared_relu",
+        rope_theta=10000.0,
+        source="arXiv:2407.14679; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=256,
+        vocab_size=256,
+        mlp_variant="squared_relu",
+        source="smoke",
+    )

@@ -1,0 +1,46 @@
+"""musicgen-large — 48L d_model=2048 32H (kv=32, MHA) d_ff=8192 vocab=2048.
+Decoder-only over EnCodec tokens (4 codebooks, delay pattern).
+[arXiv:2306.05284; hf]
+
+Per the brief the EnCodec frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (sum of the 4 codebook embeddings, already at
+d_model); the backbone predicts 4 codebook heads of 2048 each.
+"""
+
+from repro.configs.base import ArchConfig, AudioConfig
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        mlp_variant="gelu",              # musicgen uses GELU MLPs
+        audio=AudioConfig(num_codebooks=4, codebook_size=2048),
+        source="arXiv:2306.05284; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="audio",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=64,
+        mlp_variant="gelu",
+        audio=AudioConfig(num_codebooks=4, codebook_size=64),
+        source="smoke",
+    )

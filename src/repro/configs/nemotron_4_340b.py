@@ -1,0 +1,39 @@
+"""nemotron-4-340b — 96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+GQA + squared-ReLU MLP (no gating).  [arXiv:2402.16819; unverified]"""
+
+from repro.configs.base import ArchConfig
+
+ARCH_ID = "nemotron-4-340b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=96,
+        d_model=18432,
+        num_heads=96,
+        num_kv_heads=8,
+        head_dim=192,
+        d_ff=73728,
+        vocab_size=256000,
+        mlp_variant="squared_relu",
+        rope_theta=10000.0,
+        source="arXiv:2402.16819; unverified",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=96,
+        num_heads=6,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=384,
+        vocab_size=256,
+        mlp_variant="squared_relu",
+        source="smoke",
+    )

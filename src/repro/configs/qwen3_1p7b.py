@@ -1,0 +1,41 @@
+"""qwen3-1.7b — 28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+qk_norm, GQA, head_dim=128, tied embeddings.  [hf:Qwen/Qwen3 family; hf]"""
+
+from repro.configs.base import ArchConfig
+
+ARCH_ID = "qwen3-1.7b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=28,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=6144,
+        vocab_size=151936,
+        qk_norm=True,
+        tie_embeddings=True,
+        rope_theta=1e6,
+        source="hf:Qwen/Qwen3-8B; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        qk_norm=True,
+        tie_embeddings=True,
+        source="smoke",
+    )

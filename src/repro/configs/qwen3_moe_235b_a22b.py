@@ -1,0 +1,46 @@
+"""qwen3-moe-235b-a22b — 94L d_model=4096 64H (GQA kv=4) d_ff=1536 vocab=151936,
+MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B family; hf]
+Qwen3 uses qk_norm and head_dim=128 (decoupled from d_model)."""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+ARCH_ID = "qwen3-moe-235b-a22b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="moe",
+        num_layers=94,
+        d_model=4096,
+        num_heads=64,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=1536,                       # per-expert intermediate
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        moe=MoEConfig(
+            num_experts=128,
+            top_k=8,
+            expert_ffn=1536,
+        ),
+        source="hf:Qwen/Qwen3-30B-A3B; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=256,
+        qk_norm=True,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ffn=96),
+        source="smoke",
+    )

@@ -1,0 +1,42 @@
+"""rwkv6-3b (Finch) — 32L d_model=2560 (attention-free) d_ff=8960 vocab=65536.
+Data-dependent decay time-mix + channel-mix.  [arXiv:2404.05892; hf]
+
+Attention-free: no KV cache grows with context, so the DPC KV-page technique
+is inapplicable to this arch (DESIGN.md §4); decode state is O(1) per layer.
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+ARCH_ID = "rwkv6-3b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="ssm",
+        num_layers=32,
+        d_model=2560,
+        num_heads=0,                     # attention-free
+        num_kv_heads=0,
+        d_ff=8960,
+        vocab_size=65536,
+        block_kind="rwkv6",
+        ssm=SSMConfig(state_dim=64, head_dim=64, chunk_size=128),
+        source="arXiv:2404.05892; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=128,
+        vocab_size=256,
+        block_kind="rwkv6",
+        ssm=SSMConfig(state_dim=16, head_dim=16, chunk_size=32),
+        source="smoke",
+    )

@@ -1,0 +1,49 @@
+"""zamba2-1.2b — 38L d_model=2048, Mamba2 backbone + shared attention block
+(32H kv=32 = MHA) d_ff=8192 vocab=32000, ssm_state=64.  [arXiv:2411.15242; hf]
+
+Zamba2 interleaves Mamba2 blocks with a single *shared* transformer block
+(attention + MLP, parameters reused at every application).  We apply the
+shared block after every ``hybrid_attn_every`` Mamba2 blocks.
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+ARCH_ID = "zamba2-1.2b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,                 # shared block is MHA
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=32000,
+        block_kind="mamba2",
+        hybrid_attn_every=6,             # shared attn block every 6 mamba blocks
+        ssm=SSMConfig(state_dim=64, head_dim=64, conv_kernel=4, expand=2,
+                      chunk_size=128),
+        source="arXiv:2411.15242; hf",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID + "-smoke",
+        family="hybrid",
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        block_kind="mamba2",
+        hybrid_attn_every=2,
+        ssm=SSMConfig(state_dim=16, head_dim=16, conv_kernel=4, expand=2,
+                      chunk_size=32),
+        source="smoke",
+    )

@@ -1,0 +1,15 @@
+"""DPC core — the paper's contribution: a distributed page cache with a
+page-granular directory (I/E/O/S/TBI), single-copy invariant, deterministic
+reclamation, and strong/relaxed coherence modes, in JAX arrays.
+
+Layers:
+  descriptors  packed batched page descriptors (the 64 B FUSE descriptor)
+  directory    open-addressed hash directory + batched opcodes
+  pagepool     per-node frame pool + CLOCK reclamation
+  protocol     composite event flows (read/write/reclaim/liveness)
+  coherence    dpc / dpc_sc / replicated / local_only write policies
+  refimpl      pure-Python executable spec (property-test oracle + host tier)
+  remote_read  ship_data datapath (page fetch over ICI, paper-faithful)
+  ship_compute beyond-paper datapath (owner-side partial attention + LSE)
+  dpc_cache    DistributedKVCache facade used by the serving engine
+"""

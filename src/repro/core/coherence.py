@@ -1,0 +1,91 @@
+"""Coherence modes (paper §5 + §6 configurations).
+
+  dpc          relaxed coherence: buffered writes stay local; pages already in
+               DPC are written through their mapping and reconciled at
+               writeback (NFS-like weak semantics).
+  dpc_sc       strong coherence: every write range runs the two-step
+               LOOKUP_LOCK -> UNLOCK protocol so a page has well-defined
+               ownership before data lands (POSIX-like).
+  replicated   per-node caching with no cross-node sharing (the uncoordinated
+               baseline regime: each node may hold its own copy).
+  local_only   no cache coordination at all (Virtiofs baseline: every remote
+               miss refetches from "storage" = prefill recompute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import descriptors as D
+from repro.core.protocol import DPCProtocol
+
+MODES = ("dpc", "dpc_sc", "replicated", "local_only")
+
+
+def mode_shares_pages(mode: str) -> bool:
+    return mode in ("dpc", "dpc_sc")
+
+
+def mode_strong(mode: str) -> bool:
+    return mode == "dpc_sc"
+
+
+@dataclasses.dataclass
+class WriteTicket:
+    """Outcome of write-preparation for a batched write range."""
+    streams: np.ndarray
+    pages: np.ndarray
+    node: int
+    strong: bool
+    # rows that must COMMIT (locked in E) after the data copy
+    locked_rows: np.ndarray
+    slots: np.ndarray
+    # rows being written through a remote mapping (dirty at ack time)
+    remote_rows: np.ndarray
+
+
+class CoherenceManager:
+    """Write-path policy over the protocol (paper §4.2 write path).
+
+    The generic buffered-write path iterates the range page by page; for DPC
+    mounts preparation/commit are decoupled and batched over contiguous runs
+    of missing pages — exactly what ``prepare``/``commit`` model.
+    """
+
+    def __init__(self, proto: DPCProtocol, mode: str = "dpc"):
+        assert mode in MODES, mode
+        self.proto = proto
+        self.mode = mode
+
+    def prepare(self, streams, pages, node: int) -> WriteTicket:
+        streams = np.asarray(streams, np.int32)
+        pages = np.asarray(pages, np.int32)
+        strong = mode_strong(self.mode)
+        if not mode_shares_pages(self.mode) or not strong:
+            # relaxed / baseline: the write proceeds locally, no round trip
+            return WriteTicket(streams, pages, node, False,
+                               np.empty(0, np.int64), np.empty(0, np.int32),
+                               np.empty(0, np.int64))
+        res = self.proto.write_prepare(streams, pages, node, strong=True)
+        locked = res.granted()
+        remote = res.remote_hits()
+        return WriteTicket(streams, pages, node, True,
+                           locked, res.slot[locked], remote)
+
+    def commit(self, ticket: WriteTicket) -> int:
+        """Step 2 (FUSE_DPC_UNLOCK): commit locked pages, dirty remote ones."""
+        n_ops = 0
+        if len(ticket.locked_rows):
+            self.proto.commit_pages(ticket.streams[ticket.locked_rows],
+                                    ticket.pages[ticket.locked_rows],
+                                    ticket.node, ticket.slots)
+            n_ops += len(ticket.locked_rows)
+        if len(ticket.remote_rows):
+            self.proto.mark_dirty(ticket.streams[ticket.remote_rows],
+                                  ticket.pages[ticket.remote_rows],
+                                  ticket.node)
+            n_ops += len(ticket.remote_rows)
+        return n_ops

@@ -1,0 +1,117 @@
+"""Packed page descriptors — the TPU analog of the paper's 64 B FUSE descriptors.
+
+Every directory opcode (Table 1) carries a *batch* of fixed-size descriptors so
+many pages are handled per round trip.  On device a descriptor is a 4-lane
+int32 row::
+
+    lane 0  stream_id   content-addressed group ("inode"): prefix hash / file id
+    lane 1  page_idx    logical page index within the stream ("file offset")
+    lane 2  node        requesting / acknowledging DPC node id
+    lane 3  aux         pfn on COMMIT, dirty bit on INV_ACK, flags otherwise
+
+Invalid rows are marked with ``stream_id == INVALID`` so fixed-capacity batches
+can be padded (the directory skips them), mirroring the paper's batched
+virtqueue messages.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = jnp.int32(-1)
+N_LANES = 4
+
+LANE_STREAM = 0
+LANE_PAGE = 1
+LANE_NODE = 2
+LANE_AUX = 3
+
+# Status codes returned per descriptor by directory ops (mirrors Fig. 2 events)
+ST_OK = 0            # op applied
+ST_GRANT_E = 1       # ACC_MISS_ALLOC: requester must materialize ("fetch")
+ST_MAP_S = 2         # ACC_MISS_RMAP: remote hit — (owner, pfn) returned
+ST_HIT_OWNER = 3     # requester already owns the page
+ST_HIT_SHARER = 4    # requester already maps the page
+ST_BLOCKED = 5       # page in E or TBI: retry after transition completes
+ST_FULL = 6          # directory at capacity (no insert slot within max probe)
+ST_BAD = 7           # protocol violation (e.g. COMMIT while not in E)
+
+STATUS_NAMES = {
+    ST_OK: "OK", ST_GRANT_E: "GRANT_E", ST_MAP_S: "MAP_S",
+    ST_HIT_OWNER: "HIT_OWNER", ST_HIT_SHARER: "HIT_SHARER",
+    ST_BLOCKED: "BLOCKED", ST_FULL: "FULL", ST_BAD: "BAD",
+}
+
+
+def make_batch(streams, pages, nodes, aux=None) -> jax.Array:
+    """Build a [N, 4] int32 descriptor batch."""
+    streams = jnp.asarray(streams, jnp.int32)
+    pages = jnp.asarray(pages, jnp.int32)
+    nodes = jnp.broadcast_to(jnp.asarray(nodes, jnp.int32), streams.shape)
+    if aux is None:
+        aux = jnp.zeros_like(streams)
+    else:
+        aux = jnp.broadcast_to(jnp.asarray(aux, jnp.int32), streams.shape)
+    return jnp.stack([streams, pages, nodes, aux], axis=-1)
+
+
+def pad_batch(batch: jax.Array, capacity: int) -> jax.Array:
+    """Pad a [N, 4] batch to [capacity, 4] with INVALID rows."""
+    n = batch.shape[0]
+    if n == capacity:
+        return batch
+    assert n < capacity, f"batch {n} exceeds capacity {capacity}"
+    pad = jnp.full((capacity - n, N_LANES), INVALID, jnp.int32)
+    return jnp.concatenate([batch, pad], axis=0)
+
+
+def hash_key(stream: jax.Array, page: jax.Array) -> jax.Array:
+    """fxhash-style 32-bit mix of (stream, page) — the directory probe hash.
+
+    Works on int32 (no x64 requirement); the same constants are used by the
+    Pallas ``directory_probe`` kernel and the Python refimpl so all three
+    agree on slot placement.
+    """
+    h = stream.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = h ^ (page.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 13)
+    return h
+
+
+def hash_key_py(stream: int, page: int) -> int:
+    """Python mirror of ``hash_key`` (used by refimpl)."""
+    mask = 0xFFFFFFFF
+    h = (stream * 0x9E3779B9) & mask
+    h ^= (page * 0x85EBCA6B) & mask
+    h ^= h >> 16
+    h = (h * 0xC2B2AE35) & mask
+    h ^= h >> 13
+    return h
+
+
+def global_page_id(node: int, slot: int, pool_pages: int) -> int:
+    """Linearized cluster-wide physical frame number ("owner PFN")."""
+    return node * pool_pages + slot
+
+
+def split_page_id(pid, pool_pages: int) -> Tuple[jax.Array, jax.Array]:
+    return pid // pool_pages, pid % pool_pages
+
+
+def stream_hash_from_tokens(tokens: np.ndarray, upto: int) -> int:
+    """Content-addressed stream id for a token prefix (host-side).
+
+    DPC keys file pages by (inode, offset); the serving analog keys KV pages
+    by (prefix content hash, page index) so identical prefixes on different
+    replicas resolve to the same directory entries.
+    """
+    h = 0x811C9DC5
+    for t in np.asarray(tokens[:upto]).tolist():
+        h = ((h ^ (t & 0xFFFF)) * 0x01000193) & 0x7FFFFFFF
+    return h or 1

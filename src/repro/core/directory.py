@@ -1,0 +1,509 @@
+"""Page-granular cache directory — the paper's Fig. 2/3 as JAX arrays.
+
+The directory is an open-addressed (linear probe + tombstone) hash table held
+in flat device arrays, so directory opcodes are jitted batched programs: one
+call processes a whole descriptor batch, mirroring the paper's batched FUSE
+messages ("each opcode carries a batch of fixed-size 64 B page descriptors").
+
+Entry normal form per slot (the paper's 14 B entry, widened to array lanes):
+
+    keys     [C, 2] int32   (stream_id, page_idx); stream EMPTY/TOMB sentinels
+    state    [C]    int32   FREE / E / O / TBI
+    owner    [C]    int32   owner node id (paper: 5 b node id)
+    sharers  [C, W] uint32  bitmask of S-state nodes (W = ceil(nodes/32))
+    pfn      [C]    int32   owner's page-frame number (paper: 52 b PFN)
+    dirty    [C]    bool    dirty accumulation (incl. INV_ACK dirty bits)
+
+Batch semantics: descriptors are applied **in order** (a ``fori_loop``), so
+two requests for the same absent page in one batch behave exactly like two
+serialized directory transactions: first gets E, the second BLOCKED —
+"directory operations are atomic at the page level".
+
+Placement: these arrays live wherever the caller puts them — replicated on
+shard 0 for the paper-faithful *central* directory, or hash-partitioned over
+the data axis for the *sharded* default (see core/protocol.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import descriptors as D
+
+# entry states
+FREE, E, O, TBI = 0, 1, 2, 3
+
+EMPTY = -1   # slot never used (probe chains stop here)
+TOMB = -2    # slot deleted (probe chains continue past)
+
+# stats vector layout (length 16; indices = status codes where applicable)
+N_STATS = 16
+STAT_SKIP = 15  # padded descriptor rows count here
+
+
+class DirectoryConfig(NamedTuple):
+    capacity: int            # power of two
+    num_nodes: int
+    max_probe: int = 128
+
+    @property
+    def sharer_words(self) -> int:
+        return (self.num_nodes + 31) // 32
+
+
+class DirectoryState(NamedTuple):
+    keys: jax.Array      # [C, 2] int32
+    state: jax.Array     # [C] int32
+    owner: jax.Array     # [C] int32
+    sharers: jax.Array   # [C, W] uint32
+    pfn: jax.Array       # [C] int32
+    dirty: jax.Array     # [C] bool
+    stats: jax.Array     # [N_STATS] int32
+
+
+def init_directory(cfg: DirectoryConfig) -> DirectoryState:
+    c, w = cfg.capacity, cfg.sharer_words
+    assert c & (c - 1) == 0, "capacity must be a power of two"
+    return DirectoryState(
+        keys=jnp.full((c, 2), EMPTY, jnp.int32),
+        state=jnp.zeros((c,), jnp.int32),
+        owner=jnp.full((c,), -1, jnp.int32),
+        sharers=jnp.zeros((c, w), jnp.uint32),
+        pfn=jnp.full((c,), -1, jnp.int32),
+        dirty=jnp.zeros((c,), bool),
+        stats=jnp.zeros((N_STATS,), jnp.int32),
+    )
+
+
+def abstract_directory(cfg: DirectoryConfig):
+    """ShapeDtypeStruct tree for dry-runs."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        init_directory(cfg))
+
+
+# ---------------------------------------------------------------------------
+# probe
+# ---------------------------------------------------------------------------
+
+
+def probe(keys: jax.Array, stream: jax.Array, page: jax.Array,
+          max_probe: int) -> Tuple[jax.Array, jax.Array]:
+    """Linear probe.  Returns (found_slot, insert_slot); -1 = none.
+
+    Stops at a match or at an EMPTY slot; tombstones are remembered as
+    insertion candidates but probed past (standard open addressing).
+    """
+    cap = keys.shape[0]
+    h0 = (D.hash_key(stream, page) & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    def cond(c):
+        _, steps, _, _, done = c
+        return jnp.logical_and(~done, steps < max_probe)
+
+    def body(c):
+        i, steps, found, insert, _ = c
+        s = keys[i, 0]
+        match = jnp.logical_and(s == stream, keys[i, 1] == page)
+        is_empty = s == EMPTY
+        is_tomb = s == TOMB
+        found = jnp.where(match, i, found)
+        insert = jnp.where(jnp.logical_and(insert < 0, is_empty | is_tomb),
+                           i, insert)
+        done = match | is_empty
+        return ((i + 1) & (cap - 1), steps + 1, found, insert, done)
+
+    init = (h0, jnp.int32(0), jnp.int32(-1), jnp.int32(-1), jnp.bool_(False))
+    _, _, found, insert, _ = lax.while_loop(cond, body, init)
+    return found, insert
+
+
+def _bit(node: jax.Array, word_idx: jax.Array) -> jax.Array:
+    """uint32 bit for ``node`` in sharer word ``word_idx`` (0 elsewhere)."""
+    in_word = (node // 32) == word_idx
+    return jnp.where(in_word, jnp.uint32(1) << (node % 32).astype(jnp.uint32),
+                     jnp.uint32(0))
+
+
+def _sharer_row_ops(num_words: int):
+    widx = jnp.arange(num_words, dtype=jnp.int32)
+
+    def set_bit(row, node):
+        return row | _bit(node, widx)
+
+    def clear_bit(row, node):
+        return row & ~_bit(node, widx)
+
+    def has_bit(row, node):
+        return jnp.any((row & _bit(node, widx)) != 0)
+
+    def empty(row):
+        return jnp.all(row == 0)
+
+    return set_bit, clear_bit, has_bit, empty
+
+
+# ---------------------------------------------------------------------------
+# batched opcodes
+# ---------------------------------------------------------------------------
+# Each op: (DirectoryState, descs [N,4]) -> (DirectoryState, results)
+# Results row: (status, owner, pfn) int32.
+
+
+def _cond_write(arr, slot, value, do):
+    """Write ``value`` at ``slot`` iff ``do`` (else rewrite current value)."""
+    slot = jnp.where(do, slot, 0)
+    cur = arr[slot]
+    return arr.at[slot].set(jnp.where(do, value, cur))
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def lookup_and_install(d: DirectoryState, descs: jax.Array,
+                       *, max_probe: int = 128):
+    """FUSE_DPC_READ: ACC_MISS_ALLOC / ACC_MISS_RMAP / hits / blocked.
+
+    For each valid descriptor:
+      absent           -> claim slot in E for requester        (GRANT_E)
+      present, E/TBI   -> BLOCKED (retry after transition)
+      present, O self  -> HIT_OWNER
+      present, O other -> add requester to sharers             (MAP_S / HIT_SHARER)
+    """
+    n_words = d.sharers.shape[1]
+    set_bit, _, has_bit, _ = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, insert = probe(d.keys, stream, page, max_probe)
+
+        present = found >= 0
+        st = d.state[jnp.maximum(found, 0)]
+        own = d.owner[jnp.maximum(found, 0)]
+        row = d.sharers[jnp.maximum(found, 0)]
+        cur_pfn = d.pfn[jnp.maximum(found, 0)]
+
+        is_blocked = present & ((st == E) | (st == TBI))
+        is_owner = present & (st == O) & (own == node)
+        already_s = present & (st == O) & (own != node) & has_bit(row, node)
+        new_s = present & (st == O) & (own != node) & ~has_bit(row, node)
+        can_claim = ~present & (insert >= 0)
+        no_room = ~present & (insert < 0)
+
+        status = jnp.where(is_blocked, D.ST_BLOCKED,
+                 jnp.where(is_owner, D.ST_HIT_OWNER,
+                 jnp.where(already_s, D.ST_HIT_SHARER,
+                 jnp.where(new_s, D.ST_MAP_S,
+                 jnp.where(can_claim, D.ST_GRANT_E,
+                 jnp.where(no_room, D.ST_FULL, D.ST_BAD))))))
+        status = jnp.where(valid, status, jnp.int32(STAT_SKIP))
+
+        # --- claim path (GRANT_E): install fresh entry at `insert`
+        do_claim = valid & can_claim
+        keys = _cond_write(d.keys, insert, jnp.stack([stream, page]), do_claim)
+        state = _cond_write(d.state, insert, jnp.int32(E), do_claim)
+        owner = _cond_write(d.owner, insert, node, do_claim)
+        sharers = _cond_write(d.sharers, insert,
+                              jnp.zeros((n_words,), jnp.uint32), do_claim)
+        pfn = _cond_write(d.pfn, insert, jnp.int32(-1), do_claim)
+        dirty = _cond_write(d.dirty, insert, jnp.bool_(False), do_claim)
+
+        # --- map path (MAP_S): set requester's sharer bit at `found`
+        do_map = valid & new_s
+        sharers = _cond_write(sharers, found, set_bit(row, node), do_map)
+
+        out_owner = jnp.where(is_owner | already_s | new_s, own,
+                    jnp.where(can_claim, node, jnp.int32(-1)))
+        out_pfn = jnp.where(is_owner | already_s | new_s, cur_pfn,
+                            jnp.int32(-1))
+        res = res.at[i].set(jnp.stack([status, out_owner, out_pfn]))
+
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (DirectoryState(keys, state, owner, sharers, pfn, dirty, stats),
+                res)
+
+    n = descs.shape[0]
+    res0 = jnp.zeros((n, 3), jnp.int32)
+    d, res = lax.fori_loop(0, n, step, (d, res0))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def commit(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """FUSE_DPC_UNLOCK: COMMIT (E -> O), publish the owner's PFN (aux lane)."""
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node, pfn_in = (descs[i, 0], descs[i, 1],
+                                      descs[i, 2], descs[i, 3])
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        ok = valid & (found >= 0) & (d.state[slot] == E) & (d.owner[slot] == node)
+
+        state = _cond_write(d.state, found, jnp.int32(O), ok)
+        pfn = _cond_write(d.pfn, found, pfn_in, ok)
+
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, pfn_in]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(state=state, pfn=pfn, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def abort_install(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """E holder backs out without materializing: entry returns to all-I."""
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        ok = valid & (found >= 0) & (d.state[slot] == E) & (d.owner[slot] == node)
+
+        keys = _cond_write(d.keys, found,
+                           jnp.full((2,), TOMB, jnp.int32), ok)
+        state = _cond_write(d.state, found, jnp.int32(FREE), ok)
+
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, jnp.int32(-1)]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(keys=keys, state=state, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def begin_invalidate(d: DirectoryState, descs: jax.Array,
+                     *, max_probe: int = 128):
+    """FUSE_DPC_BATCH_INV: owner reclaim, O -> TBI.
+
+    Returns (state, results, sharer_masks [N, W]) — the Invalidation Manager
+    fans DIR_INV out to every set bit and collects ACKs.
+    """
+    n_words = d.sharers.shape[1]
+
+    def step(i, carry):
+        d, res, masks = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        ok = valid & (found >= 0) & (d.state[slot] == O) & (d.owner[slot] == node)
+
+        state = _cond_write(d.state, found, jnp.int32(TBI), ok)
+
+        row = jnp.where(ok, d.sharers[slot], jnp.zeros((n_words,), jnp.uint32))
+        masks = masks.at[i].set(row)
+
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, d.pfn[slot]]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(state=state, stats=stats), res, masks)
+
+    n = descs.shape[0]
+    masks0 = jnp.zeros((n, n_words), jnp.uint32)
+    d, res, masks = lax.fori_loop(
+        0, n, step, (d, jnp.zeros((n, 3), jnp.int32), masks0))
+    return d, res, masks
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def ack_invalidate(d: DirectoryState, descs: jax.Array,
+                   *, max_probe: int = 128):
+    """FUSE_DPC_INV_ACK: a sharer tore down its mapping (aux lane = dirty)."""
+    n_words = d.sharers.shape[1]
+    _, clear_bit, has_bit, _ = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node, is_dirty = (descs[i, 0], descs[i, 1],
+                                        descs[i, 2], descs[i, 3])
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        row = d.sharers[slot]
+        ok = valid & (found >= 0) & (d.state[slot] == TBI) & has_bit(row, node)
+
+        sharers = _cond_write(d.sharers, found, clear_bit(row, node), ok)
+        dirty = _cond_write(d.dirty, found,
+                            d.dirty[slot] | (is_dirty != 0), ok)
+
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, jnp.int32(-1)]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(sharers=sharers, dirty=dirty, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def complete_invalidate(d: DirectoryState, descs: jax.Array,
+                        *, max_probe: int = 128):
+    """INVALIDATION_ACK: all sharers gone -> entry removed (TBI -> all-I).
+
+    Result pfn lane carries the writeback flag (1 = page was dirty somewhere:
+    owner must write back before freeing the frame).
+    BLOCKED is returned while sharer ACKs are still outstanding.
+    """
+    n_words = d.sharers.shape[1]
+    _, _, _, empty = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        in_tbi = valid & (found >= 0) & (d.state[slot] == TBI) & \
+            (d.owner[slot] == node)
+        done = in_tbi & empty(d.sharers[slot])
+
+        wb = jnp.where(done & d.dirty[slot], jnp.int32(1), jnp.int32(0))
+
+        keys = _cond_write(d.keys, found, jnp.full((2,), TOMB, jnp.int32), done)
+        state = _cond_write(d.state, found, jnp.int32(FREE), done)
+        dirty = _cond_write(d.dirty, found, jnp.bool_(False), done)
+        pfn = _cond_write(d.pfn, found, jnp.int32(-1), done)
+
+        status = jnp.where(~valid, jnp.int32(STAT_SKIP),
+                 jnp.where(done, D.ST_OK,
+                 jnp.where(in_tbi, D.ST_BLOCKED, D.ST_BAD)))
+        res = res.at[i].set(jnp.stack([status, node, wb]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(keys=keys, state=state, dirty=dirty, pfn=pfn,
+                           stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def sharer_drop(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """Sharer-side LOCAL_INV: voluntarily drop a remote mapping (aux=dirty)."""
+    n_words = d.sharers.shape[1]
+    _, clear_bit, has_bit, _ = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node, is_dirty = (descs[i, 0], descs[i, 1],
+                                        descs[i, 2], descs[i, 3])
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        row = d.sharers[slot]
+        ok = valid & (found >= 0) & has_bit(row, node)
+
+        sharers = _cond_write(d.sharers, found, clear_bit(row, node), ok)
+        dirty = _cond_write(d.dirty, found,
+                            d.dirty[slot] | (is_dirty != 0), ok)
+
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, jnp.int32(-1)]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(sharers=sharers, dirty=dirty, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def mark_dirty(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """A write through an established O/S mapping dirties the page."""
+    n_words = d.sharers.shape[1]
+    _, _, has_bit, _ = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        mapped = (d.owner[slot] == node) | has_bit(d.sharers[slot], node)
+        ok = valid & (found >= 0) & (d.state[slot] == O) & mapped
+
+        dirty = _cond_write(d.dirty, found, jnp.bool_(True), ok)
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, jnp.int32(-1)]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(dirty=dirty, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def fail_node(d: DirectoryState, node: jax.Array):
+    """Liveness (paper §5): drop a failed node from the whole directory.
+
+    Entries it owned are removed (lost clean cache state, capacity shrink);
+    its sharer bits are cleared everywhere so pending invalidations can
+    complete without its ACKs.  Vectorized over the full table.
+    """
+    n_words = d.sharers.shape[1]
+    widx = jnp.arange(n_words, dtype=jnp.int32)
+    bit = _bit(node, widx)  # [W]
+
+    owned = (d.owner == node) & (d.state != FREE)
+    keys = jnp.where(owned[:, None], jnp.full_like(d.keys, TOMB), d.keys)
+    state = jnp.where(owned, jnp.int32(FREE), d.state)
+    pfn = jnp.where(owned, jnp.int32(-1), d.pfn)
+    dirty = jnp.where(owned, False, d.dirty)
+    sharers = d.sharers & ~bit[None, :]
+    n_owned = jnp.sum(owned.astype(jnp.int32))
+    return d._replace(keys=keys, state=state, pfn=pfn, dirty=dirty,
+                      sharers=sharers), n_owned
+
+
+# ---------------------------------------------------------------------------
+# host-side views (tests / debugging)
+# ---------------------------------------------------------------------------
+
+
+def to_host_dict(d: DirectoryState, cfg: DirectoryConfig):
+    """Extract {(stream, page): (state, owner, sharers, pfn, dirty)}."""
+    import numpy as np
+    keys = np.asarray(d.keys)
+    state = np.asarray(d.state)
+    owner = np.asarray(d.owner)
+    sharers = np.asarray(d.sharers)
+    pfn = np.asarray(d.pfn)
+    dirty = np.asarray(d.dirty)
+    out = {}
+    for i in range(cfg.capacity):
+        if keys[i, 0] >= 0 and state[i] != FREE:
+            mask = set()
+            for w in range(cfg.sharer_words):
+                bits = int(sharers[i, w])
+                for b in range(32):
+                    if bits & (1 << b):
+                        mask.add(w * 32 + b)
+            out[(int(keys[i, 0]), int(keys[i, 1]))] = (
+                int(state[i]), int(owner[i]), mask, int(pfn[i]), bool(dirty[i]))
+    return out
+
+
+def occupancy(d: DirectoryState) -> jax.Array:
+    return jnp.sum((d.keys[:, 0] >= 0) & (d.state != FREE))

@@ -1,0 +1,165 @@
+"""DistributedKVCache — the facade tying the directory protocol (host control
+plane) to the device page pools (data plane).
+
+This is the DPC Client + DPC MM of the paper, specialized to KV pages: the
+serving engine asks it for pages by (stream, page_idx) key; it runs the
+read/commit/reclaim protocol against the cluster directory and hands back
+*global page ids* for the device page tables.  The data plane (ship_compute /
+ship_data / local backends) then serves the actual bytes.
+
+Coherence mode mapping (paper §6 configurations):
+    dpc / dpc_sc  pages shared cluster-wide through the directory
+    replicated    every node installs its own copy (uncoordinated per-node
+                  caches — the paper's NFS/per-node baseline regime)
+    local_only    no reuse at all: every miss "refetches from storage"
+                  (= prefill recompute; the Virtiofs baseline)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core.protocol import DPCProtocol, ProtocolConfig
+
+
+@dataclasses.dataclass
+class PageLookup:
+    """Engine-facing result for one page key."""
+    status: int
+    page_id: int          # global page id to put in the page table (-1 n/a)
+    owner: int
+    needs_fill: bool      # True -> caller must materialize (prefill) + commit
+    remote: bool          # True -> served from a peer's pool slice
+
+
+class DistributedKVCache:
+    """Cluster-wide single-copy KV page cache (one instance per cluster,
+    nodes addressed by id — in SPMD serving the engine process drives all
+    nodes' control planes, exactly like the directory daemon does)."""
+
+    def __init__(self, dpc: DPCConfig, num_nodes: int):
+        self.dpc = dpc
+        self.num_nodes = num_nodes
+        self.proto = DPCProtocol(ProtocolConfig(
+            num_nodes=num_nodes,
+            pool_pages=dpc.pool_pages_per_shard,
+            directory_capacity=dpc.directory_capacity,
+            inv_batch_threshold=dpc.inv_batch_threshold,
+            placement=dpc.directory_placement,
+        ))
+        # replicated-mode bookkeeping: per-node private caches
+        self._replica_maps: List[Dict[Tuple[int, int], int]] = [
+            {} for _ in range(num_nodes)]
+        self._replica_free: List[List[int]] = [
+            list(range(dpc.pool_pages_per_shard - 1, -1, -1))
+            for _ in range(num_nodes)]
+        self.stats = {"lookups": 0, "fills": 0, "remote_hits": 0,
+                      "local_hits": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------
+    # shared-mode path (dpc / dpc_sc)
+    # ------------------------------------------------------------------
+
+    def lookup(self, streams: Sequence[int], pages: Sequence[int],
+               node: int) -> List[PageLookup]:
+        """Batched page lookup for ``node`` (FUSE_DPC_READ)."""
+        self.stats["lookups"] += len(streams)
+        mode = self.dpc.mode
+        if mode in ("replicated", "local_only"):
+            return self._lookup_uncoordinated(streams, pages, node)
+
+        res = self.proto.read_pages(list(streams), list(pages), node)
+        out = []
+        pool_pages = self.dpc.pool_pages_per_shard
+        for i in range(len(streams)):
+            st = int(res.status[i])
+            if st == D.ST_GRANT_E:
+                slot = int(res.slot[i])
+                out.append(PageLookup(st, node * pool_pages + slot, node,
+                                      needs_fill=True, remote=False))
+                self.stats["fills"] += 1
+            elif st in (D.ST_MAP_S, D.ST_HIT_SHARER):
+                out.append(PageLookup(st, int(res.pfn[i]),
+                                      int(res.owner[i]), False, True))
+                self.stats["remote_hits"] += 1
+            elif st == D.ST_HIT_OWNER:
+                out.append(PageLookup(st, int(res.pfn[i]), node, False,
+                                      False))
+                self.stats["local_hits"] += 1
+            else:  # BLOCKED / FULL -> caller reclaims or recomputes
+                out.append(PageLookup(st, -1, -1, True, False))
+        return out
+
+    def commit(self, streams, pages, node: int, lookups: List[PageLookup]):
+        """Publish filled pages (E -> O)."""
+        rows = [i for i, lk in enumerate(lookups)
+                if lk.needs_fill and lk.page_id >= 0]
+        if not rows or self.dpc.mode in ("replicated", "local_only"):
+            return
+        pool_pages = self.dpc.pool_pages_per_shard
+        self.proto.commit_pages(
+            [streams[i] for i in rows], [pages[i] for i in rows], node,
+            [lookups[i].page_id % pool_pages for i in rows])
+
+    def reclaim(self, node: int, want: int) -> int:
+        """Synchronous reclaim round (engine calls under pool pressure)."""
+        freed, _ = self.proto.reclaim_sync(node, want)
+        self.stats["evictions"] += freed
+        return freed
+
+    def fail_node(self, node: int) -> int:
+        lost = self.proto.fail_node(node)
+        self._replica_maps[node].clear()
+        return lost
+
+    # ------------------------------------------------------------------
+    # uncoordinated baselines
+    # ------------------------------------------------------------------
+
+    def _lookup_uncoordinated(self, streams, pages, node: int
+                              ) -> List[PageLookup]:
+        """replicated: per-node private page cache (hits only on own copies);
+        local_only: never caches across requests at all."""
+        out = []
+        pool_pages = self.dpc.pool_pages_per_shard
+        pmap = self._replica_maps[node]
+        free = self._replica_free[node]
+        for s, p in zip(streams, pages):
+            key = (int(s), int(p))
+            if self.dpc.mode == "replicated" and key in pmap:
+                out.append(PageLookup(D.ST_HIT_OWNER,
+                                      node * pool_pages + pmap[key], node,
+                                      False, False))
+                self.stats["local_hits"] += 1
+                continue
+            if not free:
+                # evict an arbitrary victim (FIFO) to stay honest about
+                # capacity — uncoordinated caches thrash under big sets
+                if pmap:
+                    victim_key = next(iter(pmap))
+                    free.append(pmap.pop(victim_key))
+                    self.stats["evictions"] += 1
+                else:
+                    out.append(PageLookup(D.ST_FULL, -1, -1, True, False))
+                    continue
+            slot = free.pop()
+            if self.dpc.mode == "replicated":
+                pmap[key] = slot
+            self.stats["fills"] += 1
+            out.append(PageLookup(D.ST_GRANT_E, node * pool_pages + slot,
+                                  node, True, False))
+        return out
+
+    # ------------------------------------------------------------------
+
+    def hit_rate(self) -> float:
+        h = self.stats["remote_hits"] + self.stats["local_hits"]
+        return h / max(self.stats["lookups"], 1)
+
+    def directory_occupancy(self) -> int:
+        return len(self.proto.directory_view())

@@ -1,0 +1,183 @@
+"""Per-node physical page pool + CLOCK reclamation (paper §4.3, JAX arrays).
+
+Each DPC node owns a pool of physical page frames (pool slots).  The pool
+tracks, per slot, the logical key installed there (reverse map for
+invalidation), a CLOCK reference bit (second-chance LRU, standing in for the
+kernel's LRU lists), and a free stack.  "Local reclaim" = CLOCK scan picks
+victims -> protocol issues LOCAL_INV batches -> frames freed only after the
+directory's INVALIDATION_ACK — never unilaterally (deterministic reclamation).
+
+All ops are functional and jitted; slot state lives on device next to the KV
+pool it indexes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import descriptors as D
+
+EMPTY = -1
+
+# slot lifecycle: FREE -> RESERVED (E grant, being installed) -> INSTALLED
+# -> DRAINING (TBI, invalidation in flight) -> FREE
+S_FREE, S_RESERVED, S_INSTALLED, S_DRAINING = 0, 1, 2, 3
+
+
+class PoolState(NamedTuple):
+    key_of: jax.Array     # [P, 2] int32 (stream, page) or EMPTY
+    slot_state: jax.Array  # [P] int32 (S_*)
+    ref: jax.Array        # [P] int8 CLOCK reference bit
+    free_stack: jax.Array  # [P] int32
+    free_top: jax.Array   # scalar int32: stack[0:top] are free slots
+    hand: jax.Array       # scalar int32 CLOCK hand
+
+
+def init_pool(num_pages: int) -> PoolState:
+    return PoolState(
+        key_of=jnp.full((num_pages, 2), EMPTY, jnp.int32),
+        slot_state=jnp.zeros((num_pages,), jnp.int32),
+        ref=jnp.zeros((num_pages,), jnp.int8),
+        free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.int32(num_pages),
+        hand=jnp.int32(0),
+    )
+
+
+def abstract_pool(num_pages: int):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        init_pool(num_pages))
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def alloc(pool: PoolState, want: jax.Array) -> Tuple[PoolState, jax.Array]:
+    """Pop up to len(want) slots; want[i] masks row i.  Returns slots (-1 if
+    none free / not wanted).  Slots come back RESERVED (the E state's
+    "exclusive right to install the next resident copy")."""
+    n = want.shape[0]
+
+    def step(i, carry):
+        pool, out = carry
+        can = want[i] & (pool.free_top > 0)
+        top = pool.free_top - 1
+        slot = pool.free_stack[jnp.maximum(top, 0)]
+        slot = jnp.where(can, slot, jnp.int32(-1))
+        free_top = jnp.where(can, top, pool.free_top)
+        ss = jnp.where(can, pool.slot_state.at[jnp.maximum(slot, 0)]
+                       .set(S_RESERVED), pool.slot_state)
+        ref = jnp.where(can, pool.ref.at[jnp.maximum(slot, 0)].set(1), pool.ref)
+        out = out.at[i].set(slot)
+        return pool._replace(slot_state=ss, ref=ref, free_top=free_top), out
+
+    out0 = jnp.full((n,), -1, jnp.int32)
+    return lax.fori_loop(0, n, step, (pool, out0))
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def install(pool: PoolState, slots: jax.Array, keys: jax.Array) -> PoolState:
+    """RESERVED -> INSTALLED: bind keys [N,2] to slots [N] (COMMIT time).
+    Rows with slot < 0 are skipped."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    cur_keys = pool.key_of[safe]
+    cur_state = pool.slot_state[safe]
+    key_of = pool.key_of.at[safe].set(jnp.where(ok[:, None], keys, cur_keys))
+    slot_state = pool.slot_state.at[safe].set(
+        jnp.where(ok, jnp.int32(S_INSTALLED), cur_state))
+    return pool._replace(key_of=key_of, slot_state=slot_state)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def touch(pool: PoolState, slots: jax.Array) -> PoolState:
+    """Set CLOCK ref bits on access (negative slots skipped)."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    ref = pool.ref.at[safe].set(
+        jnp.where(ok, jnp.int8(1), pool.ref[safe]))
+    return pool._replace(ref=ref)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def begin_drain(pool: PoolState, slots: jax.Array) -> PoolState:
+    """INSTALLED -> DRAINING when LOCAL_INV is issued: the frame is retained
+    ("kept on the LRU") and blocked for I/O until the ACK round completes."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    cur = pool.slot_state[safe]
+    slot_state = pool.slot_state.at[safe].set(
+        jnp.where(ok & (cur == S_INSTALLED), jnp.int32(S_DRAINING), cur))
+    return pool._replace(slot_state=slot_state)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def release(pool: PoolState, slots: jax.Array) -> PoolState:
+    """DRAINING/RESERVED -> FREE after INVALIDATION_ACK (+writeback if dirty).
+    Pushes slots back on the free stack.  Negative slots skipped."""
+    n = slots.shape[0]
+
+    def step(i, pool):
+        slot = slots[i]
+        ok = slot >= 0
+        safe = jnp.maximum(slot, 0)
+        key_of = pool.key_of.at[safe].set(
+            jnp.where(ok, jnp.full((2,), EMPTY, jnp.int32), pool.key_of[safe]))
+        ss = pool.slot_state.at[safe].set(
+            jnp.where(ok, jnp.int32(S_FREE), pool.slot_state[safe]))
+        ref = pool.ref.at[safe].set(jnp.where(ok, jnp.int8(0), pool.ref[safe]))
+        top = pool.free_top
+        stack = pool.free_stack.at[jnp.where(ok, top, 0)].set(
+            jnp.where(ok, slot, pool.free_stack[0]))
+        top = jnp.where(ok, top + 1, top)
+        return pool._replace(key_of=key_of, slot_state=ss, ref=ref,
+                             free_stack=stack, free_top=top)
+
+    return lax.fori_loop(0, n, step, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("want",), donate_argnums=0)
+def clock_scan(pool: PoolState, want: int) -> Tuple[PoolState, jax.Array]:
+    """Second-chance CLOCK over INSTALLED slots: pick up to ``want`` victims.
+
+    Referenced slots get their bit cleared and are skipped (one more pass of
+    life); unreferenced INSTALLED slots become victims.  Scans at most two
+    full revolutions.  Returns (pool, victim_slots [want] int32, -1 padded).
+    """
+    p = pool.key_of.shape[0]
+    max_steps = 2 * p
+
+    def cond(c):
+        pool, victims, n_found, steps = c
+        return jnp.logical_and(n_found < want, steps < max_steps)
+
+    def body(c):
+        pool, victims, n_found, steps = c
+        slot = pool.hand
+        hand = jnp.where(slot + 1 >= p, 0, slot + 1)
+        installed = pool.slot_state[slot] == S_INSTALLED
+        referenced = pool.ref[slot] > 0
+        # second chance: clear the bit
+        ref = pool.ref.at[slot].set(
+            jnp.where(installed & referenced, jnp.int8(0), pool.ref[slot]))
+        is_victim = installed & ~referenced
+        victims = victims.at[jnp.where(is_victim, n_found, want)].set(
+            jnp.where(is_victim, slot, jnp.int32(-1)))
+        n_found = n_found + is_victim.astype(jnp.int32)
+        return (pool._replace(ref=ref, hand=hand), victims, n_found, steps + 1)
+
+    victims0 = jnp.full((want + 1,), -1, jnp.int32)  # +1 scratch row
+    pool, victims, _, _ = lax.while_loop(
+        cond, body, (pool, victims0, jnp.int32(0), jnp.int32(0)))
+    return pool, victims[:want]
+
+
+def num_free(pool: PoolState) -> jax.Array:
+    return pool.free_top
+
+
+def num_installed(pool: PoolState) -> jax.Array:
+    return jnp.sum(pool.slot_state == S_INSTALLED)

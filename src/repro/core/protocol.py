@@ -1,0 +1,378 @@
+"""DPC event layer: the six directory events composed over directory + pools.
+
+The serving engine (and the host-tier data cache) drives the protocol through
+these composite flows; each flow is the faithful sequence from the paper:
+
+  read path    (§4.2)  lookup_and_install -> [GRANT_E? alloc frame ->
+                        materialize -> commit] / [MAP_S? map remote frame]
+  write path   (§4.2)  relaxed: local write (+mark_dirty)
+                       strong (DPC_SC): LOOKUP_LOCK -> write -> UNLOCK commit
+  reclamation  (§4.3)  CLOCK victims -> LOCAL_INV batch (frames retained,
+                        DRAINING) -> DIR_INV fan-out -> INV_ACKs (dirty bits)
+                        -> INVALIDATION_ACK -> writeback if dirty -> free
+
+The *directory placement* mirrors DESIGN.md §2: ``central`` keeps one
+directory consulted by every node (the paper's storage-server placement);
+``sharded`` hash-partitions entries over nodes by key (TPU-native default).
+Both run the identical protocol — placement only decides which shard's arrays
+an opcode batch lands on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core import pagepool as pp
+
+
+@dataclasses.dataclass
+class ProtocolConfig:
+    num_nodes: int
+    pool_pages: int                  # physical pages per node
+    directory_capacity: int = 1 << 14
+    inv_batch_threshold: int = 32    # paper §4.3
+    max_probe: int = 128
+    placement: str = "sharded"       # sharded | central
+
+    def dir_config(self) -> dirx.DirectoryConfig:
+        return dirx.DirectoryConfig(self.directory_capacity, self.num_nodes,
+                                    self.max_probe)
+
+
+class DPCState(NamedTuple):
+    """Cluster-wide protocol state (device arrays).
+
+    ``dirs``: tuple of DirectoryState — one per directory shard (len 1 for
+    central placement, len num_nodes for sharded).
+    ``pools``: tuple of PoolState, one per node.
+    """
+    dirs: Tuple[dirx.DirectoryState, ...]
+    pools: Tuple[pp.PoolState, ...]
+
+
+def init_state(cfg: ProtocolConfig) -> DPCState:
+    n_dirs = 1 if cfg.placement == "central" else cfg.num_nodes
+    dcfg = cfg.dir_config()
+    return DPCState(
+        dirs=tuple(dirx.init_directory(dcfg) for _ in range(n_dirs)),
+        pools=tuple(pp.init_pool(cfg.pool_pages) for _ in range(cfg.num_nodes)),
+    )
+
+
+def dir_shard_of(cfg: ProtocolConfig, stream: int, page: int) -> int:
+    """Which directory shard owns the entry for (stream, page)."""
+    if cfg.placement == "central":
+        return 0
+    return D.hash_key_py(stream, page) % cfg.num_nodes
+
+
+def _group_by_shard(cfg: ProtocolConfig, streams, pages) -> Dict[int, List[int]]:
+    groups: Dict[int, List[int]] = {}
+    for i, (s, p) in enumerate(zip(streams, pages)):
+        groups.setdefault(dir_shard_of(cfg, int(s), int(p)), []).append(i)
+    return groups
+
+
+@dataclasses.dataclass
+class ReadResult:
+    """Per-page outcome of the read path (host-side view for the engine)."""
+    status: np.ndarray        # [N] int32 status codes
+    owner: np.ndarray         # [N] owner node (valid for hits)
+    pfn: np.ndarray           # [N] global frame number (valid for hits)
+    slot: np.ndarray          # [N] local slot allocated for GRANT_E rows (-1)
+
+    def granted(self) -> np.ndarray:
+        return np.nonzero(self.status == D.ST_GRANT_E)[0]
+
+    def remote_hits(self) -> np.ndarray:
+        return np.nonzero((self.status == D.ST_MAP_S) |
+                          (self.status == D.ST_HIT_SHARER))[0]
+
+    def local_hits(self) -> np.ndarray:
+        return np.nonzero(self.status == D.ST_HIT_OWNER)[0]
+
+    def blocked(self) -> np.ndarray:
+        return np.nonzero((self.status == D.ST_BLOCKED) |
+                          (self.status == D.ST_FULL))[0]
+
+
+class DPCProtocol:
+    """Host-driven protocol orchestrator over jitted directory/pool ops.
+
+    This object plays the role of the paper's DPC MM + Directory Manager +
+    Invalidation Manager: it routes batched opcodes to directory shards,
+    allocates/retains/frees pool frames, and runs the deterministic
+    reclamation sequence.  All heavy state stays in device arrays.
+    """
+
+    def __init__(self, cfg: ProtocolConfig, state: Optional[DPCState] = None):
+        self.cfg = cfg
+        self.state = state or init_state(cfg)
+        # pages in TBI with outstanding sharer ACKs: (stream, page) -> set(nodes)
+        self.pending_inv: Dict[Tuple[int, int], Dict] = {}
+        # counters for the microbenchmarks
+        self.counters = {
+            "reads": 0, "grants": 0, "remote_hits": 0, "local_hits": 0,
+            "blocked": 0, "commits": 0, "reclaims": 0, "dir_invs": 0,
+            "inv_acks": 0, "writebacks": 0, "dropped_nodes": 0,
+        }
+
+    # -- helpers -------------------------------------------------------------
+
+    def _dir_op(self, op, shard: int, descs: jax.Array, **kw):
+        dirs = list(self.state.dirs)
+        out = op(dirs[shard], descs, max_probe=self.cfg.max_probe, **kw)
+        dirs[shard] = out[0]
+        self.state = self.state._replace(dirs=tuple(dirs))
+        return out[1:]
+
+    def _routed(self, op, streams, pages, nodes, aux=None):
+        """Route a descriptor batch to directory shards; reassemble results."""
+        streams = np.asarray(streams, np.int32)
+        pages = np.asarray(pages, np.int32)
+        nodes = np.broadcast_to(np.asarray(nodes, np.int32), streams.shape)
+        aux = (np.zeros_like(streams) if aux is None
+               else np.broadcast_to(np.asarray(aux, np.int32), streams.shape))
+        n = len(streams)
+        res = np.zeros((n, 3), np.int32)
+        extra: Dict[int, np.ndarray] = {}
+        for shard, idxs in _group_by_shard(self.cfg, streams, pages).items():
+            batch = D.make_batch(streams[idxs], pages[idxs], nodes[idxs],
+                                 aux[idxs])
+            out = self._dir_op(op, shard, batch)
+            res[idxs] = np.asarray(out[0])
+            if len(out) > 1:  # begin_invalidate returns sharer masks
+                extra[shard] = (idxs, np.asarray(out[1]))
+        return res, extra
+
+    def _pool_update(self, node: int, new_pool: pp.PoolState):
+        pools = list(self.state.pools)
+        pools[node] = new_pool
+        self.state = self.state._replace(pools=tuple(pools))
+
+    # -- read path (FUSE_DPC_READ) --------------------------------------------
+
+    def read_pages(self, streams, pages, node: int) -> ReadResult:
+        """Batched read-miss handling for ``node``.
+
+        GRANT_E rows come back with a locally allocated frame (the paper's
+        preallocated DMA target); the caller materializes contents (prefill /
+        storage fetch) and must then call ``commit_pages``.  If the local pool
+        is exhausted the grant is aborted (engine should reclaim + retry).
+        """
+        res, _ = self._routed(dirx.lookup_and_install, streams, pages, node)
+        n = len(res)
+        slots = np.full((n,), -1, np.int32)
+
+        grant_rows = np.nonzero(res[:, 0] == D.ST_GRANT_E)[0]
+        if len(grant_rows):
+            want = jnp.asarray(np.ones(len(grant_rows), bool))
+            pool, got = pp.alloc(self.state.pools[node], want)
+            self._pool_update(node, pool)
+            got = np.asarray(got)
+            slots[grant_rows] = got
+            # pool exhausted -> abort those E grants (caller must reclaim)
+            failed = grant_rows[got < 0]
+            if len(failed):
+                streams_a = np.asarray(streams, np.int32)[failed]
+                pages_a = np.asarray(pages, np.int32)[failed]
+                self._routed(dirx.abort_install, streams_a, pages_a, node)
+                res[failed, 0] = D.ST_FULL
+
+        # CLOCK touch on local hits
+        local = np.nonzero(res[:, 0] == D.ST_HIT_OWNER)[0]
+        if len(local):
+            lslots = res[local, 2] % self.cfg.pool_pages
+            self._pool_update(node, pp.touch(self.state.pools[node],
+                                             jnp.asarray(lslots, jnp.int32)))
+
+        c = self.counters
+        c["reads"] += n
+        c["grants"] += int((res[:, 0] == D.ST_GRANT_E).sum())
+        c["remote_hits"] += int(((res[:, 0] == D.ST_MAP_S) |
+                                 (res[:, 0] == D.ST_HIT_SHARER)).sum())
+        c["local_hits"] += int((res[:, 0] == D.ST_HIT_OWNER).sum())
+        c["blocked"] += int(((res[:, 0] == D.ST_BLOCKED) |
+                             (res[:, 0] == D.ST_FULL)).sum())
+        return ReadResult(res[:, 0], res[:, 1], res[:, 2], slots)
+
+    # -- commit (FUSE_DPC_UNLOCK) ----------------------------------------------
+
+    def commit_pages(self, streams, pages, node: int, slots) -> np.ndarray:
+        """E -> O: publish global PFNs, bind keys to pool slots."""
+        slots = np.asarray(slots, np.int32)
+        pfns = np.where(slots >= 0,
+                        node * self.cfg.pool_pages + slots, -1).astype(np.int32)
+        res, _ = self._routed(dirx.commit, streams, pages, node, pfns)
+        keys = np.stack([np.asarray(streams, np.int32),
+                         np.asarray(pages, np.int32)], -1)
+        self._pool_update(node, pp.install(
+            self.state.pools[node], jnp.asarray(slots), jnp.asarray(keys)))
+        self.counters["commits"] += int((res[:, 0] == D.ST_OK).sum())
+        return res[:, 0]
+
+    # -- write path ------------------------------------------------------------
+
+    def write_prepare(self, streams, pages, node: int, strong: bool
+                      ) -> ReadResult:
+        """DPC_SC two-step write, step 1 (FUSE_DPC_LOOKUP_LOCK).
+
+        Strong mode consults the directory for every page in the write range:
+        absent pages are locked in E; remotely-owned pages come back as S
+        mappings to write through (CXL keeps them coherent).  Relaxed mode is
+        a no-op returning local-write statuses — pages not previously in DPC
+        stay local-only and untracked (paper §5 Relaxed consistency).
+        """
+        if not strong:
+            n = len(np.asarray(streams))
+            z = np.zeros((n,), np.int32)
+            return ReadResult(np.full((n,), D.ST_OK, np.int32),
+                              z - 1, z - 1, z - 1)
+        return self.read_pages(streams, pages, node)
+
+    def mark_dirty(self, streams, pages, node: int) -> np.ndarray:
+        res, _ = self._routed(dirx.mark_dirty, streams, pages, node)
+        return res[:, 0]
+
+    # -- reclamation (§4.3) ------------------------------------------------------
+
+    def reclaim_begin(self, node: int, want: int
+                      ) -> Tuple[np.ndarray, Dict[Tuple[int, int], List[int]]]:
+        """Owner-side LOCAL_INV: CLOCK scan -> TBI -> DIR_INV fan-out list.
+
+        Returns (victim_slots, {key: [sharer nodes to notify]}).  Frames move
+        to DRAINING (retained, I/O-blocked) — they are *not* freed until
+        ``reclaim_finish`` observes all ACKs ("deterministic reclamation").
+        """
+        pool, victims = pp.clock_scan(self.state.pools[node], want)
+        victims_np = np.asarray(victims)
+        victims_np = victims_np[victims_np >= 0]
+        if len(victims_np) == 0:
+            self._pool_update(node, pool)
+            return victims_np, {}
+        keys = np.asarray(pool.key_of)[victims_np]
+        pool = pp.begin_drain(pool, jnp.asarray(victims_np))
+        self._pool_update(node, pool)
+
+        res, extra = self._routed(dirx.begin_invalidate,
+                                  keys[:, 0], keys[:, 1], node)
+        notify: Dict[Tuple[int, int], List[int]] = {}
+        ok_rows = set(np.nonzero(res[:, 0] == D.ST_OK)[0].tolist())
+        for shard, (idxs, masks) in extra.items():
+            for j, row in enumerate(idxs):
+                if row not in ok_rows:
+                    continue
+                key = (int(keys[row, 0]), int(keys[row, 1]))
+                sharer_nodes = _mask_to_nodes(masks[j])
+                notify[key] = sharer_nodes
+                self.pending_inv[key] = {
+                    "owner": node, "slot": int(victims_np[row]),
+                    "waiting": set(sharer_nodes),
+                }
+        self.counters["reclaims"] += len(notify)
+        self.counters["dir_invs"] += sum(len(v) for v in notify.values())
+        return victims_np, notify
+
+    def reclaim_ack(self, stream: int, page: int, node: int,
+                    dirty: bool = False) -> int:
+        """FUSE_DPC_INV_ACK from sharer ``node`` (notification manager path)."""
+        res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
+                              [1 if dirty else 0])
+        key = (stream, page)
+        if key in self.pending_inv:
+            self.pending_inv[key]["waiting"].discard(node)
+        self.counters["inv_acks"] += 1
+        return int(res[0, 0])
+
+    def reclaim_finish(self, node: int) -> Tuple[int, int]:
+        """Complete all ready invalidations for ``node``: INVALIDATION_ACK ->
+        writeback-if-dirty -> frames freed.  Returns (freed, writebacks)."""
+        ready = [(k, v) for k, v in self.pending_inv.items()
+                 if v["owner"] == node and not v["waiting"]]
+        if not ready:
+            return 0, 0
+        streams = [k[0] for k, _ in ready]
+        pages = [k[1] for k, _ in ready]
+        res, _ = self._routed(dirx.complete_invalidate, streams, pages, node)
+        freed_slots, writebacks = [], 0
+        for (key, info), row in zip(ready, res):
+            if row[0] == D.ST_OK:
+                freed_slots.append(info["slot"])
+                writebacks += int(row[2])  # pfn lane = writeback flag
+                del self.pending_inv[key]
+        if freed_slots:
+            self._pool_update(node, pp.release(
+                self.state.pools[node], jnp.asarray(freed_slots, jnp.int32)))
+        self.counters["writebacks"] += writebacks
+        return len(freed_slots), writebacks
+
+    def reclaim_sync(self, node: int, want: int,
+                     ack_fn=None) -> Tuple[int, int]:
+        """One full synchronous reclamation round (used by µbenchmarks and
+        under memory pressure): LOCAL_INV -> deliver DIR_INVs (``ack_fn`` lets
+        the engine tear down real page-table mappings) -> finish."""
+        _, notify = self.reclaim_begin(node, want)
+        for key, sharer_nodes in notify.items():
+            for s in sharer_nodes:
+                if ack_fn is not None:
+                    ack_fn(key, s)
+                self.reclaim_ack(key[0], key[1], s)
+        return self.reclaim_finish(node)
+
+    # -- sharer-side voluntary drop ---------------------------------------------
+
+    def drop_mapping(self, streams, pages, node: int, dirty=None) -> np.ndarray:
+        aux = None if dirty is None else np.asarray(dirty, np.int32)
+        res, _ = self._routed(dirx.sharer_drop, streams, pages, node, aux)
+        return res[:, 0]
+
+    # -- liveness (paper §5) ------------------------------------------------------
+
+    def fail_node(self, node: int) -> int:
+        """Directory-side failure handling: remove the node everywhere and
+        unblock any invalidation waiting on its ACK."""
+        dirs = list(self.state.dirs)
+        lost = 0
+        for i, dshard in enumerate(dirs):
+            dshard, n_owned = dirx.fail_node(dshard, jnp.int32(node))
+            dirs[i] = dshard
+            lost += int(n_owned)
+        self.state = self.state._replace(dirs=tuple(dirs))
+        for key, info in list(self.pending_inv.items()):
+            info["waiting"].discard(node)
+            if info["owner"] == node:
+                del self.pending_inv[key]
+        self.counters["dropped_nodes"] += 1
+        return lost
+
+    # -- views ---------------------------------------------------------------
+
+    def directory_view(self) -> Dict:
+        out = {}
+        dcfg = self.cfg.dir_config()
+        for dshard in self.state.dirs:
+            out.update(dirx.to_host_dict(dshard, dcfg))
+        return out
+
+    def hit_rate(self) -> float:
+        c = self.counters
+        hits = c["remote_hits"] + c["local_hits"]
+        return hits / max(c["reads"], 1)
+
+
+def _mask_to_nodes(mask_row: np.ndarray) -> List[int]:
+    nodes = []
+    for w, bits in enumerate(np.asarray(mask_row).tolist()):
+        b = int(bits)
+        while b:
+            low = b & -b
+            nodes.append(w * 32 + low.bit_length() - 1)
+            b ^= low
+    return nodes

@@ -1,0 +1,288 @@
+"""Pure-Python reference implementation of the DPC protocol.
+
+This is the executable spec: a dict-based model of the paper's directory
+(Fig. 2 state machine + Fig. 3 components) against which the array-based JAX
+directory is property-tested.  It is also used directly by the *host-tier*
+data-pipeline cache (``repro/data``), where a Python directory is the natural
+implementation (the paper's directory is itself a user-space daemon).
+
+States per entry (cluster view):  the paper stores a per-node state vector;
+the equivalent normal form we store is ``(state, owner, sharers)`` where
+``state ∈ {E, O, TBI}`` for present entries, absence == all-I.  A node's
+per-node state is derived:  owner in O/E/TBI, members of ``sharers`` in S,
+everyone else I — exactly the encoding the paper's 14 B entry uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core import descriptors as D
+
+# entry states (global view; per-node states are derived)
+FREE, E, O, TBI = 0, 1, 2, 3
+STATE_NAMES = {FREE: "FREE", E: "E", O: "O", TBI: "TBI"}
+
+Key = Tuple[int, int]  # (stream_id, page_idx)
+
+
+@dataclass
+class Entry:
+    state: int
+    owner: int
+    sharers: Set[int] = field(default_factory=set)
+    pfn: int = -1
+    dirty: bool = False
+    # dirty bits reported by sharers during an invalidation round
+    inv_dirty: bool = False
+
+
+@dataclass
+class RefStats:
+    grants_e: int = 0
+    maps_s: int = 0
+    hits_owner: int = 0
+    hits_sharer: int = 0
+    blocked: int = 0
+    full: int = 0
+    bad: int = 0
+    invalidations: int = 0
+    inv_acks: int = 0
+    completions: int = 0
+
+
+class RefDirectory:
+    """Executable spec of the DPC cache directory."""
+
+    def __init__(self, capacity: int, num_nodes: int):
+        self.capacity = capacity
+        self.num_nodes = num_nodes
+        self.entries: Dict[Key, Entry] = {}
+        self.stats = RefStats()
+
+    # -- derived per-node state (paper Fig. 2 vocabulary) --------------------
+
+    def node_state(self, key: Key, node: int) -> str:
+        e = self.entries.get(key)
+        if e is None:
+            return "I"
+        if node == e.owner:
+            return STATE_NAMES[e.state]  # E / O / TBI
+        if node in e.sharers:
+            return "S"
+        return "I"
+
+    # -- opcode: FUSE_DPC_READ / FUSE_DPC_LOOKUP_LOCK -------------------------
+
+    def lookup_and_install(self, stream: int, page: int, node: int
+                           ) -> Tuple[int, int, int]:
+        """Returns (status, owner, pfn).  Drives ACC_MISS_ALLOC/ACC_MISS_RMAP."""
+        key = (stream, page)
+        e = self.entries.get(key)
+        if e is None:
+            if len(self.entries) >= self.capacity:
+                self.stats.full += 1
+                return D.ST_FULL, -1, -1
+            self.entries[key] = Entry(state=E, owner=node)
+            self.stats.grants_e += 1
+            return D.ST_GRANT_E, node, -1
+        if e.state in (E, TBI):
+            self.stats.blocked += 1
+            return D.ST_BLOCKED, -1, -1
+        # state == O
+        if e.owner == node:
+            self.stats.hits_owner += 1
+            return D.ST_HIT_OWNER, node, e.pfn
+        if node in e.sharers:
+            self.stats.hits_sharer += 1
+            return D.ST_HIT_SHARER, e.owner, e.pfn
+        e.sharers.add(node)
+        self.stats.maps_s += 1
+        return D.ST_MAP_S, e.owner, e.pfn
+
+    # -- opcode: FUSE_DPC_UNLOCK (COMMIT, E -> O) ------------------------------
+
+    def commit(self, stream: int, page: int, node: int, pfn: int) -> int:
+        e = self.entries.get((stream, page))
+        if e is None or e.state != E or e.owner != node:
+            self.stats.bad += 1
+            return D.ST_BAD
+        e.state = O
+        e.pfn = pfn
+        return D.ST_OK
+
+    def abort_install(self, stream: int, page: int, node: int) -> int:
+        """E holder failed to materialize (e.g. admission rejected): back to all-I."""
+        key = (stream, page)
+        e = self.entries.get(key)
+        if e is None or e.state != E or e.owner != node:
+            self.stats.bad += 1
+            return D.ST_BAD
+        del self.entries[key]
+        return D.ST_OK
+
+    # -- opcode: FUSE_DPC_BATCH_INV (owner-initiated reclaim, LOCAL_INV) ------
+
+    def begin_invalidate(self, stream: int, page: int, node: int
+                         ) -> Tuple[int, Set[int]]:
+        """O -> TBI.  Returns sharer set the directory must DIR_INV."""
+        e = self.entries.get((stream, page))
+        if e is None or e.state != O or e.owner != node:
+            self.stats.bad += 1
+            return D.ST_BAD, set()
+        e.state = TBI
+        e.inv_dirty = e.dirty
+        self.stats.invalidations += 1
+        return D.ST_OK, set(e.sharers)
+
+    # -- opcode: FUSE_DPC_INV_ACK (sharer acknowledges DIR_INV) ---------------
+
+    def ack_invalidate(self, stream: int, page: int, node: int,
+                       dirty: bool) -> int:
+        e = self.entries.get((stream, page))
+        if e is None or e.state != TBI or node not in e.sharers:
+            self.stats.bad += 1
+            return D.ST_BAD
+        e.sharers.discard(node)
+        e.inv_dirty = e.inv_dirty or dirty
+        self.stats.inv_acks += 1
+        return D.ST_OK
+
+    # -- INVALIDATION_ACK: all sharers gone -> owner writes back, entry -> I --
+
+    def complete_invalidate(self, stream: int, page: int, node: int
+                            ) -> Tuple[int, bool]:
+        """Returns (status, needs_writeback)."""
+        key = (stream, page)
+        e = self.entries.get(key)
+        if e is None or e.state != TBI or e.owner != node:
+            self.stats.bad += 1
+            return D.ST_BAD, False
+        if e.sharers:
+            return D.ST_BLOCKED, False  # ACKs outstanding
+        dirty = e.inv_dirty
+        del self.entries[key]
+        self.stats.completions += 1
+        return D.ST_OK, dirty
+
+    # -- sharer-side LOCAL_INV (drop a remote mapping voluntarily) ------------
+
+    def sharer_drop(self, stream: int, page: int, node: int,
+                    dirty: bool = False) -> int:
+        e = self.entries.get((stream, page))
+        if e is None or node not in e.sharers:
+            self.stats.bad += 1
+            return D.ST_BAD
+        e.sharers.discard(node)
+        e.dirty = e.dirty or dirty
+        return D.ST_OK
+
+    def mark_dirty(self, stream: int, page: int, node: int) -> int:
+        """A write through an O/S mapping dirties the page (relaxed-mode path)."""
+        e = self.entries.get((stream, page))
+        if e is None or e.state != O or (node != e.owner and node not in e.sharers):
+            self.stats.bad += 1
+            return D.ST_BAD
+        e.dirty = True
+        return D.ST_OK
+
+    # -- liveness (paper §5): node failure -------------------------------------
+
+    def fail_node(self, node: int) -> Tuple[List[Key], List[Key]]:
+        """Directory-side failure handling: drop the node from every sharer
+        set; entries it owned are lost (cache-capacity shrink) and removed.
+        Returns (owned_lost, shares_dropped)."""
+        owned, shared = [], []
+        for key, e in list(self.entries.items()):
+            if e.owner == node:
+                owned.append(key)
+                del self.entries[key]
+            elif node in e.sharers:
+                e.sharers.discard(node)
+                shared.append(key)
+        return owned, shared
+
+    # -- invariants (property tests assert these after every op) --------------
+
+    def check_invariants(self) -> None:
+        for key, e in self.entries.items():
+            assert e.state in (E, O, TBI), f"{key}: bad state {e.state}"
+            assert 0 <= e.owner < self.num_nodes, f"{key}: bad owner {e.owner}"
+            # single-copy invariant: exactly one owner, owner not in sharers
+            assert e.owner not in e.sharers, f"{key}: owner in sharers"
+            if e.state == E:
+                # no valid copy exists anywhere: nobody may map it
+                assert not e.sharers, f"{key}: sharers while in E"
+                assert e.pfn == -1, f"{key}: pfn published while in E"
+            for s in e.sharers:
+                assert 0 <= s < self.num_nodes
+        assert len(self.entries) <= self.capacity
+
+    def resident_pages(self, node: int) -> List[Key]:
+        return [k for k, e in self.entries.items()
+                if e.owner == node and e.state in (O, E, TBI)]
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+class RefPagePool:
+    """Executable spec of one node's physical page pool (+ CLOCK reclaim)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.key_of: Dict[int, Optional[Key]] = {i: None for i in range(num_pages)}
+        self.ref_bit: List[int] = [0] * num_pages
+        self.clock_hand = 0
+
+    def alloc(self) -> int:
+        """Returns a free slot or -1 (caller must reclaim)."""
+        if not self.free:
+            return -1
+        slot = self.free.pop()
+        self.ref_bit[slot] = 1
+        return slot
+
+    def install(self, slot: int, key: Key) -> None:
+        assert self.key_of[slot] is None
+        self.key_of[slot] = key
+
+    def touch(self, slot: int) -> None:
+        self.ref_bit[slot] = 1
+
+    def release(self, slot: int) -> Optional[Key]:
+        key = self.key_of[slot]
+        self.key_of[slot] = None
+        self.ref_bit[slot] = 0
+        self.free.append(slot)
+        return key
+
+    def clock_scan(self, want: int) -> List[int]:
+        """Second-chance CLOCK: pick up to ``want`` victims among installed slots."""
+        victims: List[int] = []
+        scanned = 0
+        limit = 2 * self.num_pages
+        while len(victims) < want and scanned < limit:
+            slot = self.clock_hand
+            self.clock_hand = (self.clock_hand + 1) % self.num_pages
+            scanned += 1
+            if self.key_of[slot] is None:
+                continue
+            if self.ref_bit[slot]:
+                self.ref_bit[slot] = 0
+            else:
+                victims.append(slot)
+        return victims
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def check_invariants(self) -> None:
+        installed = {s for s, k in self.key_of.items() if k is not None}
+        assert installed.isdisjoint(set(self.free))
+        assert len(set(self.free)) == len(self.free)
+        assert len(installed) + len(self.free) == self.num_pages

@@ -1,0 +1,345 @@
+"""ship_data datapath — the paper-faithful CXL remote read, ported to TPU.
+
+Under CXL a remote cache hit pulls the page *bytes* to the consumer.  The TPU
+rendering: each data-row fetches every page its requests reference — striped
+across its model columns so each page crosses the fabric once per consuming
+row — via a fixed-capacity all_to_all exchange with the owning nodes
+(request ids out, page payloads back; the two virtqueue directions of
+FUSE_DPC_READ).  Attention then runs locally over the staged pages, with an
+LSE combine across the row's stripe columns.
+
+Collective bytes scale with context KV per step — this is the baseline the
+beyond-paper ship_compute datapath (queries out, O(q+o) bytes) is measured
+against in EXPERIMENTS.md §Perf.
+
+Capacity note: per-(requester, owner) queue capacity is static (like MoE
+expert capacity).  Pages are hash-striped across owners, so a 4x-expected
+capacity overflows with negligible probability; overflowed fetches are
+dropped from attention and counted (`overflow`), never silently wrong about
+which tokens were attended (the mask excludes them).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.ship_compute import lse_combine_allreduce, _my_node
+from repro.kernels import dispatch
+
+
+def fetch_capacity(n_fetch: int, n_nodes: int, safety: int = 4) -> int:
+    expected = (n_fetch + n_nodes - 1) // n_nodes
+    return max(8, safety * expected)
+
+
+def build_fetch_plan(wanted: jax.Array, n_nodes: int, pool_pages: int,
+                     cap: int):
+    """wanted: [F] global page ids (-1 = skip).
+
+    Returns (req [n_nodes, cap] local slot ids for each owner (-1 pad),
+             owner_of [F], pos_of [F] (position in that owner's queue, -1 if
+             dropped), overflow count)."""
+    f = wanted.shape[0]
+    valid = wanted >= 0
+    owner = jnp.where(valid, wanted // pool_pages, n_nodes)
+    slot = jnp.where(valid, wanted % pool_pages, 0)
+
+    onehot = jax.nn.one_hot(owner, n_nodes + 1, dtype=jnp.int32)   # [F, O+1]
+    pos_mat = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_mat, owner[:, None], 1)[:, 0]    # [F]
+    keep = valid & (pos < cap)
+    overflow = jnp.sum(valid & ~keep)
+
+    req = jnp.full((n_nodes + 1, cap), -1, jnp.int32)
+    req = req.at[jnp.where(keep, owner, n_nodes),
+                 jnp.where(keep, pos, 0)].set(jnp.where(keep, slot, -1))
+    pos_of = jnp.where(keep, pos, -1)
+    return req[:n_nodes], jnp.minimum(owner, n_nodes - 1), pos_of, overflow
+
+
+def _a2a(x: jax.Array, axes) -> jax.Array:
+    """all_to_all over (possibly multiple) mesh axes on dim 0.
+
+    x: [n_nodes, ...] with n_nodes = prod(axis sizes), row-major over
+    ``axes`` (matching ``_my_node``); returns the transposed exchange
+    (row r of the result came from node r)."""
+    sizes = [jax.lax.axis_size(a) for a in axes]
+    lead = x.shape[0]
+    x = x.reshape(tuple(sizes) + x.shape[1:])
+    for i, ax in enumerate(axes):
+        # dim i (target index along ax) is exchanged; afterwards dim i is the
+        # sender index along ax
+        x = jax.lax.all_to_all(x, ax, split_axis=i, concat_axis=i,
+                               tiled=False)
+    return x.reshape((lead,) + x.shape[len(sizes):])
+
+
+def make_shipdata_attend(mesh: Mesh, *, batch_axes=("pod", "data"),
+                         head_axis="model", pool_pages: int,
+                         capacity_safety: int = 4, impl: str = "auto"):
+    """Returns attend(q, k_new, v_new, k_pool, v_pool, page_table, seq_lens,
+    append_slot) with paper-faithful fetch-the-page semantics.
+
+    Same global shardings as ship_compute's attend.
+    """
+    dpc_axes = tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    b_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+    import numpy as np
+    n_nodes_static = int(np.prod([mesh.shape[a] for a in dpc_axes]))
+    tp_static = mesh.shape[head_axis] if head_axis in mesh.axis_names else 1
+
+    def attend(q, k_new, v_new, k_pool, v_pool, page_table, seq_lens,
+               append_slot):
+        me = _my_node(dpc_axes)
+        page = k_pool.shape[1]
+        b_loc, n_pages = page_table.shape
+
+        # --- owner-side append (identical to ship_compute): gather the
+        # tiny new-token KV over DP so the owning node installs it
+        kn_all, vn_all = k_new, v_new
+        sl_g, ap_g = seq_lens, append_slot
+        for ax in reversed(b_axes):
+            kn_all = jax.lax.all_gather(kn_all, ax, axis=0, tiled=True)
+            vn_all = jax.lax.all_gather(vn_all, ax, axis=0, tiled=True)
+            sl_g = jax.lax.all_gather(sl_g, ax, axis=0, tiled=True)
+            ap_g = jax.lax.all_gather(ap_g, ax, axis=0, tiled=True)
+        local = (ap_g >= 0) & (ap_g // pool_pages == me)
+        slot = jnp.where(local, ap_g % pool_pages, pool_pages)
+        off = sl_g % page
+        k_pool = k_pool.at[slot, off].set(kn_all.astype(k_pool.dtype),
+                                          mode="drop")
+        v_pool = v_pool.at[slot, off].set(vn_all.astype(v_pool.dtype),
+                                          mode="drop")
+
+        # --- stripe: this column fetches pages n with n % tp == my_col
+        my_col = (jax.lax.axis_index(head_axis)
+                  if head_axis in mesh.axis_names else jnp.int32(0))
+        stripe = (jnp.arange(n_pages) % tp_static)[None, :] == my_col
+        wanted = jnp.where(stripe & (page_table >= 0), page_table, -1)
+        wanted = wanted.reshape(-1)                               # [F]
+
+        cap = fetch_capacity(wanted.shape[0], n_nodes_static,
+                             capacity_safety)
+        req, owner_of, pos_of, overflow = build_fetch_plan(
+            wanted, n_nodes_static, pool_pages, cap)
+
+        # --- FUSE_DPC_READ out: request ids to owners
+        req_recv = _a2a(req, dpc_axes)                            # [O, cap]
+        # --- owner DMA: gather my slots for each peer
+        safe = jnp.maximum(req_recv, 0)
+        pages_k = jnp.where((req_recv >= 0)[..., None, None, None],
+                            k_pool[safe], 0)
+        pages_v = jnp.where((req_recv >= 0)[..., None, None, None],
+                            v_pool[safe], 0)
+        # barrier pins the wire format to the pool dtype — XLA otherwise
+        # hoists the attention kernel's f32 upcast through the exchange and
+        # doubles the fabric bytes (§Perf iteration C1)
+        pages_k, pages_v = jax.lax.optimization_barrier((pages_k, pages_v))
+        # --- payload back: the page bytes cross the fabric here
+        resp_k = _a2a(pages_k, dpc_axes)    # [O, cap, page, Hkv, D]
+        resp_v = _a2a(pages_v, dpc_axes)
+
+        # --- stage into per-request layout; dropped/invalid -> zero + mask
+        got = pos_of >= 0
+        staged_k = jnp.where(
+            got[:, None, None, None],
+            resp_k[owner_of, jnp.maximum(pos_of, 0)], 0)
+        staged_v = jnp.where(
+            got[:, None, None, None],
+            resp_v[owner_of, jnp.maximum(pos_of, 0)], 0)
+        staged_k = staged_k.reshape((b_loc, n_pages) + staged_k.shape[1:])
+        staged_v = staged_v.reshape((b_loc, n_pages) + staged_v.shape[1:])
+
+        # --- local attention over the stripe (full q heads for the row)
+        q_all = q
+        if head_axis in mesh.axis_names:
+            q_all = jax.lax.all_gather(q_all, head_axis, axis=1, tiled=True)
+        flat_k = staged_k.reshape((b_loc * n_pages,) + staged_k.shape[2:])
+        flat_v = staged_v.reshape((b_loc * n_pages,) + staged_v.shape[2:])
+        pt_stripe = jnp.where(
+            stripe & (page_table >= 0) & got.reshape(b_loc, n_pages),
+            jnp.arange(b_loc * n_pages, dtype=jnp.int32).reshape(
+                b_loc, n_pages),
+            -1)
+        out, (m, l) = dispatch.paged_attention(
+            q_all, flat_k, flat_v, pt_stripe, seq_lens + 1, impl=impl,
+            with_stats=True)
+
+        # --- combine across the row's stripe columns only
+        if head_axis in mesh.axis_names:
+            o = lse_combine_allreduce(out.astype(jnp.float32), m, l,
+                                      (head_axis,), wire_dtype=q.dtype)
+            h_loc = q.shape[1]
+            h_idx = jax.lax.axis_index(head_axis)
+            o = jax.lax.dynamic_slice_in_dim(o, h_idx * h_loc, h_loc, 1)
+        else:
+            o = out.astype(jnp.float32)
+        overflow = jax.lax.psum(overflow, dpc_axes)
+        return o.astype(q.dtype), k_pool, v_pool, overflow
+
+    batch_p = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    head_p = head_axis if head_axis in mesh.axis_names else None
+    dpc_p = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+
+    return shard_map(
+        attend, mesh=mesh,
+        in_specs=(
+            P(batch_p, head_p, None),
+            P(batch_p, None, None),
+            P(batch_p, None, None),
+            P(dpc_p, None, None, None),
+            P(dpc_p, None, None, None),
+            P(batch_p, None),
+            P(batch_p),
+            P(batch_p),
+        ),
+        out_specs=(
+            P(batch_p, head_p, None),
+            P(dpc_p, None, None, None),
+            P(dpc_p, None, None, None),
+            P(),
+        ),
+        check_rep=False,
+    )
+
+
+def make_shipdata_attend_mla(mesh: Mesh, *, batch_axes=("pod", "data"),
+                             head_axis="model", pool_pages: int,
+                             capacity_safety: int = 4, impl: str = "auto",
+                             sm_scale=None):
+    """MLA variant: fetch latent pages [P, page, R+Dr] to the consumer and
+    attend locally (same stripe/a2a structure as the GQA path)."""
+    dpc_axes = tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    b_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+    import numpy as np
+    n_nodes_static = int(np.prod([mesh.shape[a] for a in dpc_axes]))
+    tp_static = mesh.shape[head_axis] if head_axis in mesh.axis_names else 1
+
+    def attend(q_latent, q_rope, latent_new, pool, page_table, seq_lens,
+               append_slot):
+        me = _my_node(dpc_axes)
+        page = pool.shape[1]
+        b_loc, n_pages = page_table.shape
+
+        ln_all, sl_g, ap_g = latent_new, seq_lens, append_slot
+        for ax in reversed(b_axes):
+            ln_all = jax.lax.all_gather(ln_all, ax, axis=0, tiled=True)
+            sl_g = jax.lax.all_gather(sl_g, ax, axis=0, tiled=True)
+            ap_g = jax.lax.all_gather(ap_g, ax, axis=0, tiled=True)
+        local = (ap_g >= 0) & (ap_g // pool_pages == me)
+        slot = jnp.where(local, ap_g % pool_pages, pool_pages)
+        pool = pool.at[slot, sl_g % page].set(ln_all.astype(pool.dtype),
+                                              mode="drop")
+
+        my_col = (jax.lax.axis_index(head_axis)
+                  if head_axis in mesh.axis_names else jnp.int32(0))
+        stripe = (jnp.arange(n_pages) % tp_static)[None, :] == my_col
+        wanted = jnp.where(stripe & (page_table >= 0),
+                           page_table, -1).reshape(-1)
+        cap = fetch_capacity(wanted.shape[0], n_nodes_static,
+                             capacity_safety)
+        req, owner_of, pos_of, overflow = build_fetch_plan(
+            wanted, n_nodes_static, pool_pages, cap)
+        req_recv = _a2a(req, dpc_axes)
+        safe = jnp.maximum(req_recv, 0)
+        pages_lat = jnp.where((req_recv >= 0)[..., None, None], pool[safe], 0)
+        pages_lat = jax.lax.optimization_barrier(pages_lat)  # bf16 wire (C1)
+        resp = _a2a(pages_lat, dpc_axes)
+
+        got = pos_of >= 0
+        staged = jnp.where(got[:, None, None],
+                           resp[owner_of, jnp.maximum(pos_of, 0)], 0)
+        staged = staged.reshape((b_loc, n_pages) + staged.shape[1:])
+
+        ql, qr = q_latent, q_rope
+        if head_axis in mesh.axis_names:
+            ql = jax.lax.all_gather(ql, head_axis, axis=1, tiled=True)
+            qr = jax.lax.all_gather(qr, head_axis, axis=1, tiled=True)
+        flat = staged.reshape((b_loc * n_pages,) + staged.shape[2:])
+        pt_stripe = jnp.where(
+            stripe & (page_table >= 0) & got.reshape(b_loc, n_pages),
+            jnp.arange(b_loc * n_pages, dtype=jnp.int32).reshape(
+                b_loc, n_pages), -1)
+        out, (m, l) = dispatch.mla_paged_attention(
+            ql, qr, flat, pt_stripe, seq_lens + 1, impl=impl,
+            with_stats=True, sm_scale=sm_scale)
+
+        if head_axis in mesh.axis_names:
+            o = lse_combine_allreduce(out.astype(jnp.float32), m, l,
+                                      (head_axis,), wire_dtype=q_latent.dtype)
+            h_loc = q_latent.shape[1]
+            h_idx = jax.lax.axis_index(head_axis)
+            o = jax.lax.dynamic_slice_in_dim(o, h_idx * h_loc, h_loc, 1)
+        else:
+            o = out.astype(jnp.float32)
+        overflow = jax.lax.psum(overflow, dpc_axes)
+        return o.astype(q_latent.dtype), pool, overflow
+
+    batch_p = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    head_p = head_axis if head_axis in mesh.axis_names else None
+    dpc_p = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+
+    return shard_map(
+        attend, mesh=mesh,
+        in_specs=(
+            P(batch_p, head_p, None),
+            P(batch_p, head_p, None),
+            P(batch_p, None),
+            P(dpc_p, None, None),
+            P(batch_p, None),
+            P(batch_p),
+            P(batch_p),
+        ),
+        out_specs=(
+            P(batch_p, head_p, None),
+            P(dpc_p, None, None),
+            P(),
+        ),
+        check_rep=False,
+    )
+
+
+class ShipDataBackend:
+    """Model-facing backend using the paper-faithful fetch-pages datapath."""
+
+    def __init__(self, mesh: Mesh, page_table, seq_lens, append_slot, *,
+                 pool_pages: int, batch_axes=("pod", "data"),
+                 head_axis="model", impl="auto"):
+        self.page_table = page_table
+        self.seq_lens = seq_lens
+        self.append_slot = append_slot
+        self._attend = make_shipdata_attend(
+            mesh, batch_axes=batch_axes, head_axis=head_axis,
+            pool_pages=pool_pages, impl=impl)
+        self._mesh = mesh
+        self._kw = dict(batch_axes=batch_axes, head_axis=head_axis,
+                        pool_pages=pool_pages, impl=impl)
+        self._mla_cache = {}
+
+    def attend_mla(self, q_latent, q_rope, latent_new, latent_pool, *,
+                   sm_scale=None):
+        key = float(sm_scale) if sm_scale is not None else None
+        if key not in self._mla_cache:
+            self._mla_cache[key] = make_shipdata_attend_mla(
+                self._mesh, sm_scale=sm_scale, **self._kw)
+        out, pool, _ = self._mla_cache[key](
+            q_latent, q_rope, latent_new, latent_pool,
+            self.page_table, self.seq_lens, self.append_slot)
+        return out, pool
+
+    def attend(self, q, k_new, v_new, k_pool, v_pool):
+        # overflow (dropped fetches beyond queue capacity) is returned by the
+        # raw attend; the backend interface discards it — benchmarks that
+        # track it call ``self._attend`` directly.
+        out, k_pool, v_pool, _ = self._attend(
+            q, k_new, v_new, k_pool, v_pool, self.page_table, self.seq_lens,
+            self.append_slot)
+        return out, k_pool, v_pool

@@ -1,0 +1,287 @@
+"""ship_compute datapath — beyond-paper DPC remote reads on TPU.
+
+Under CXL the consumer's CPU always pulls page *bytes*.  On a TPU mesh we can
+instead ship the (tiny) queries to each page's owner, compute partial
+flash-decode attention there, and combine partials with a log-sum-exp
+reduction — collective bytes drop from O(context KV) to O(q + o) per step.
+
+Layout (DESIGN.md §5): pool slot dim sharded over every DPC axis
+(pod × data × model), so each chip is one DPC node owning a disjoint slice of
+pages; pages are fully self-contained (all kv heads).  The page table carries
+*global* page ids (node * P_local + slot); each node resolves its own slice
+and masks the rest — exactly the directory's owner/PFN resolution.
+
+The LSE combine is an all_reduce (bytes independent of node count), not an
+all_gather of partials (bytes linear in node count).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels import dispatch
+
+NEG_INF = -1e30
+
+
+def _axis_size(axes) -> int:
+    import numpy as np
+    return int(np.prod([jax.lax.axis_size(a) for a in axes]))
+
+
+def _my_node(dpc_axes: Sequence[str]) -> jax.Array:
+    """Linearized DPC node id of this shard (row-major over dpc_axes)."""
+    node = jnp.int32(0)
+    for ax in dpc_axes:
+        node = node * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return node
+
+
+def localize_table(page_table: jax.Array, my_node: jax.Array,
+                   pool_pages: int) -> jax.Array:
+    """Global page ids -> local slots on this node (-1 elsewhere)."""
+    owner = page_table // pool_pages
+    slot = page_table % pool_pages
+    mine = (page_table >= 0) & (owner == my_node)
+    return jnp.where(mine, slot, -1)
+
+
+def lse_combine_allreduce(o, m, l, axes, wire_dtype=None):
+    """Exact softmax combination of per-node partials via all_reduce.
+
+    o: [B, H, D] float32 partial outputs (already normalized by local l);
+    m, l: [B, H].  Returns combined o (replicated over ``axes``).
+
+    ``wire_dtype`` (§Perf iteration C2): the big o-partial all_reduce crosses
+    the fabric in the cache's storage dtype (bf16 in production) — halving
+    combine bytes; the tiny m/l reductions stay f32 for exactness.
+    """
+    m_star = jax.lax.pmax(m, axes)
+    w = l * jnp.exp(m - m_star)                       # [B, H]
+    sum_w = jax.lax.psum(w, axes)
+    ow = o * w[..., None]
+    if wire_dtype is not None and jnp.dtype(wire_dtype) != jnp.float32:
+        ow = ow.astype(wire_dtype)
+        ow = jax.lax.optimization_barrier(ow)  # keep the wire in this dtype
+    o_sum = jax.lax.psum(ow, axes).astype(jnp.float32)
+    return o_sum / jnp.maximum(sum_w, 1e-20)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def make_dpc_attend(mesh: Mesh, *, batch_axes=("pod", "data"),
+                    head_axis="model", pool_pages: int,
+                    impl: str = "auto"):
+    """Returns attend(q, k_new, v_new, k_pool, v_pool, page_table, seq_lens,
+    append_slot) with DPC ship_compute semantics.
+
+    Shardings (global views):
+      q          [B, Hq, D]     batch over batch_axes, heads over head_axis
+      k_new/v_new[B, Hkv, D]    batch over batch_axes, heads replicated
+      pools      [Pg, page, Hkv, D]  slots over ALL dpc axes
+      page_table [B, N] global ids; seq_lens/append_slot [B] (global ids)
+    """
+    dpc_axes = tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    b_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+
+    def attend(q, k_new, v_new, k_pool, v_pool, page_table, seq_lens,
+               append_slot):
+        me = _my_node(dpc_axes)
+
+        # --- gather the (tiny) per-request metadata + new-token KV so that
+        # whichever node owns a request's filling page performs the install
+        kn_all, vn_all = k_new, v_new
+        pt_all, sl_all, ap_all = page_table, seq_lens, append_slot
+        for ax in reversed(b_axes):
+            kn_all = jax.lax.all_gather(kn_all, ax, axis=0, tiled=True)
+            vn_all = jax.lax.all_gather(vn_all, ax, axis=0, tiled=True)
+            pt_all = jax.lax.all_gather(pt_all, ax, axis=0, tiled=True)
+            sl_all = jax.lax.all_gather(sl_all, ax, axis=0, tiled=True)
+            ap_all = jax.lax.all_gather(ap_all, ax, axis=0, tiled=True)
+
+        # --- owner-side append of the new token (single-copy: one writer;
+        # non-local rows are routed out of bounds and dropped)
+        page = k_pool.shape[1]
+        local = (ap_all >= 0) & (ap_all // pool_pages == me)
+        slot = jnp.where(local, ap_all % pool_pages, pool_pages)
+        off = sl_all % page
+        k_pool = k_pool.at[slot, off].set(kn_all.astype(k_pool.dtype),
+                                          mode="drop")
+        v_pool = v_pool.at[slot, off].set(vn_all.astype(v_pool.dtype),
+                                          mode="drop")
+
+        # --- ship queries: gather heads over TP, batch over DP
+        q_all = q
+        if head_axis in mesh.axis_names:
+            q_all = jax.lax.all_gather(q_all, head_axis, axis=1, tiled=True)
+        for ax in reversed(b_axes):
+            q_all = jax.lax.all_gather(q_all, ax, axis=0, tiled=True)
+
+        # --- owner-side partial attention over the local slice
+        pt_local = localize_table(pt_all, me, pool_pages)
+        out, (m, l) = dispatch.paged_attention(
+            q_all, k_pool, v_pool, pt_local, sl_all + 1, impl=impl,
+            with_stats=True)
+
+        # --- LSE combine across every owner, then take my slice back
+        o = lse_combine_allreduce(out.astype(jnp.float32), m, l, dpc_axes,
+                                  wire_dtype=q.dtype)
+
+        b_loc = q.shape[0]
+        h_loc = q.shape[1]
+        b_idx = jnp.int32(0)
+        for ax in b_axes:
+            b_idx = b_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        o = jax.lax.dynamic_slice_in_dim(o, b_idx * b_loc, b_loc, 0)
+        if head_axis in mesh.axis_names:
+            h_idx = jax.lax.axis_index(head_axis)
+            o = jax.lax.dynamic_slice_in_dim(o, h_idx * h_loc, h_loc, 1)
+        return o.astype(q.dtype), k_pool, v_pool
+
+    batch_p = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    head_p = head_axis if head_axis in mesh.axis_names else None
+    dpc_p = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+
+    return shard_map(
+        attend, mesh=mesh,
+        in_specs=(
+            P(batch_p, head_p, None),            # q
+            P(batch_p, None, None),              # k_new (replicated heads)
+            P(batch_p, None, None),              # v_new
+            P(dpc_p, None, None, None),          # k_pool
+            P(dpc_p, None, None, None),          # v_pool
+            P(batch_p, None),                    # page_table
+            P(batch_p),                          # seq_lens
+            P(batch_p),                          # append_slot
+        ),
+        out_specs=(
+            P(batch_p, head_p, None),            # out
+            P(dpc_p, None, None, None),
+            P(dpc_p, None, None, None),
+        ),
+        check_rep=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA (latent pages)
+# ---------------------------------------------------------------------------
+
+
+def make_dpc_attend_mla(mesh: Mesh, *, batch_axes=("pod", "data"),
+                        head_axis="model", pool_pages: int,
+                        impl: str = "auto", sm_scale=None):
+    """attend(q_latent, q_rope, latent_new, pool, page_table, seq_lens,
+    append_slot) over latent pages [Pg, page, R+Dr]."""
+    dpc_axes = tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    b_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+
+    def attend(q_latent, q_rope, latent_new, pool, page_table, seq_lens,
+               append_slot):
+        me = _my_node(dpc_axes)
+        page = pool.shape[1]
+
+        ln_all = latent_new
+        pt_all, sl_all, ap_all = page_table, seq_lens, append_slot
+        for ax in reversed(b_axes):
+            ln_all = jax.lax.all_gather(ln_all, ax, axis=0, tiled=True)
+            pt_all = jax.lax.all_gather(pt_all, ax, axis=0, tiled=True)
+            sl_all = jax.lax.all_gather(sl_all, ax, axis=0, tiled=True)
+            ap_all = jax.lax.all_gather(ap_all, ax, axis=0, tiled=True)
+
+        local = (ap_all >= 0) & (ap_all // pool_pages == me)
+        slot = jnp.where(local, ap_all % pool_pages, pool_pages)
+        off = sl_all % page
+        pool = pool.at[slot, off].set(ln_all.astype(pool.dtype), mode="drop")
+
+        ql, qr = q_latent, q_rope
+        if head_axis in mesh.axis_names:
+            ql = jax.lax.all_gather(ql, head_axis, axis=1, tiled=True)
+            qr = jax.lax.all_gather(qr, head_axis, axis=1, tiled=True)
+        for ax in reversed(b_axes):
+            ql = jax.lax.all_gather(ql, ax, axis=0, tiled=True)
+            qr = jax.lax.all_gather(qr, ax, axis=0, tiled=True)
+
+        pt_local = localize_table(pt_all, me, pool_pages)
+        out, (m, l) = dispatch.mla_paged_attention(
+            ql, qr, pool, pt_local, sl_all + 1, impl=impl, with_stats=True,
+            sm_scale=sm_scale)
+        o = lse_combine_allreduce(out.astype(jnp.float32), m, l, dpc_axes,
+                                  wire_dtype=q_latent.dtype)
+
+        b_loc, h_loc = q_latent.shape[0], q_latent.shape[1]
+        b_idx = jnp.int32(0)
+        for ax in b_axes:
+            b_idx = b_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        o = jax.lax.dynamic_slice_in_dim(o, b_idx * b_loc, b_loc, 0)
+        if head_axis in mesh.axis_names:
+            h_idx = jax.lax.axis_index(head_axis)
+            o = jax.lax.dynamic_slice_in_dim(o, h_idx * h_loc, h_loc, 1)
+        return o.astype(q_latent.dtype), pool
+
+    batch_p = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    head_p = head_axis if head_axis in mesh.axis_names else None
+    dpc_p = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+
+    return shard_map(
+        attend, mesh=mesh,
+        in_specs=(
+            P(batch_p, head_p, None),
+            P(batch_p, head_p, None),
+            P(batch_p, None),
+            P(dpc_p, None, None),
+            P(batch_p, None),
+            P(batch_p),
+            P(batch_p),
+        ),
+        out_specs=(
+            P(batch_p, head_p, None),
+            P(dpc_p, None, None),
+        ),
+        check_rep=False,
+    )
+
+
+class DPCBackend:
+    """Model-facing backend (same interface as cache.LocalBackend) that routes
+    attention through the DPC ship_compute datapath."""
+
+    def __init__(self, mesh: Mesh, page_table, seq_lens, append_slot, *,
+                 pool_pages: int, batch_axes=("pod", "data"),
+                 head_axis="model", impl="auto", sm_scale=None):
+        self.page_table = page_table
+        self.seq_lens = seq_lens
+        self.append_slot = append_slot
+        self._attend = make_dpc_attend(
+            mesh, batch_axes=batch_axes, head_axis=head_axis,
+            pool_pages=pool_pages, impl=impl)
+        self._attend_mla_cache = {}
+        self._mesh = mesh
+        self._kw = dict(batch_axes=batch_axes, head_axis=head_axis,
+                        pool_pages=pool_pages, impl=impl)
+
+    def attend(self, q, k_new, v_new, k_pool, v_pool):
+        return self._attend(q, k_new, v_new, k_pool, v_pool,
+                            self.page_table, self.seq_lens, self.append_slot)
+
+    def attend_mla(self, q_latent, q_rope, latent_new, latent_pool, *,
+                   sm_scale=None):
+        key = float(sm_scale) if sm_scale is not None else None
+        if key not in self._attend_mla_cache:
+            self._attend_mla_cache[key] = make_dpc_attend_mla(
+                self._mesh, sm_scale=sm_scale, **self._kw)
+        out, pool = self._attend_mla_cache[key](
+            q_latent, q_rope, latent_new, latent_pool,
+            self.page_table, self.seq_lens, self.append_slot)
+        return out, pool

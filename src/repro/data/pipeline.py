@@ -1,0 +1,152 @@
+"""Token data pipeline with a host-tier DPC shard cache.
+
+Synthetic-but-deterministic corpus (seeded per shard), sharded across data
+ranks.  The *host tier* reuses the DPC protocol at file granularity: dataset
+shards are pages, the refimpl directory coordinates which rank holds the
+single cached copy, and ranks that miss "fetch" from a peer (memcpy) instead
+of regenerating from "storage" (the synthetic generator stands in for the
+object store; its cost is made explicit so cache hits are observable).
+
+The iterator is checkpointable: ``state_dict()/load_state_dict`` capture the
+exact cursor, so restore resumes mid-epoch without sample loss or repeats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import refimpl
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_shards: int = 16          # dataset shards ("files")
+    shard_tokens: int = 1 << 16   # tokens per shard
+    seed: int = 0
+    storage_latency_s: float = 0.0   # simulated object-store latency
+
+
+class ShardStore:
+    """The "backing storage": deterministic shard synthesis."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.fetches = 0
+
+    def fetch(self, shard_id: int) -> np.ndarray:
+        self.fetches += 1
+        if self.cfg.storage_latency_s:
+            time.sleep(self.cfg.storage_latency_s)
+        rng = np.random.RandomState(self.cfg.seed * 9973 + shard_id)
+        return rng.randint(0, self.cfg.vocab_size,
+                           size=self.cfg.shard_tokens).astype(np.int32)
+
+
+class HostShardCache:
+    """DPC at shard granularity across data ranks (refimpl directory)."""
+
+    def __init__(self, cfg: DataConfig, num_ranks: int,
+                 capacity_per_rank: int = 4):
+        self.store = ShardStore(cfg)
+        self.dir = refimpl.RefDirectory(capacity=cfg.num_shards * 2,
+                                        num_nodes=num_ranks)
+        self.capacity = capacity_per_rank
+        self.resident: Dict[int, Dict[int, np.ndarray]] = {
+            r: {} for r in range(num_ranks)}
+        self.hits_local = 0
+        self.hits_remote = 0
+        self.misses = 0
+
+    def get(self, shard_id: int, rank: int) -> np.ndarray:
+        st, owner, _ = self.dir.lookup_and_install(0, shard_id, rank)
+        from repro.core import descriptors as D
+        if st == D.ST_HIT_OWNER:
+            self.hits_local += 1
+            return self.resident[rank][shard_id]
+        if st in (D.ST_MAP_S, D.ST_HIT_SHARER):
+            self.hits_remote += 1
+            return self.resident[owner][shard_id]  # remote read (memcpy)
+        if st == D.ST_GRANT_E:
+            self.misses += 1
+            self._evict_if_needed(rank)
+            data = self.store.fetch(shard_id)
+            self.resident[rank][shard_id] = data
+            self.dir.commit(0, shard_id, rank, shard_id)
+            return data
+        # BLOCKED/FULL: bypass the cache (direct fetch, no install)
+        self.misses += 1
+        return self.store.fetch(shard_id)
+
+    def _evict_if_needed(self, rank: int) -> None:
+        while len(self.resident[rank]) >= self.capacity:
+            victim = next(iter(self.resident[rank]))
+            st, sharers = self.dir.begin_invalidate(0, victim, rank)
+            if st == refimpl.D.ST_OK:
+                for s in sharers:
+                    self.dir.ack_invalidate(0, victim, s, False)
+                self.dir.complete_invalidate(0, victim, rank)
+            del self.resident[rank][victim]
+
+
+class TokenPipeline:
+    """Per-rank batched LM token iterator over the cached shards."""
+
+    def __init__(self, cfg: DataConfig, rank: int, num_ranks: int,
+                 cache: Optional[HostShardCache] = None):
+        self.cfg = cfg
+        self.rank = rank
+        self.num_ranks = num_ranks
+        self.cache = cache or HostShardCache(cfg, num_ranks)
+        self.cursor = 0               # global sample index for this rank
+        self.batch_per_rank = cfg.global_batch // num_ranks
+
+    def _sample(self, idx: int) -> Tuple[np.ndarray, np.ndarray]:
+        tokens_per_sample = self.cfg.seq_len + 1
+        samples_per_shard = self.cfg.shard_tokens // tokens_per_sample
+        shard_id = (idx // samples_per_shard) % self.cfg.num_shards
+        offset = (idx % samples_per_shard) * tokens_per_sample
+        shard = self.cache.get(shard_id, self.rank)
+        chunk = shard[offset:offset + tokens_per_sample]
+        return chunk[:-1], chunk[1:]
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        toks, labs = [], []
+        for i in range(self.batch_per_rank):
+            # rank-strided global order so ranks see disjoint streams
+            idx = self.cursor * self.num_ranks + self.rank \
+                + i * 7919 * self.num_ranks
+            t, l = self._sample(idx)
+            toks.append(t)
+            labs.append(l)
+        self.cursor += 1
+        return {"tokens": np.stack(toks), "labels": np.stack(labs)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    # -- checkpointable cursor --------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {"cursor": self.cursor, "rank": self.rank,
+                "seed": self.cfg.seed}
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert state["rank"] == self.rank and state["seed"] == self.cfg.seed
+        self.cursor = state["cursor"]
+
+
+def for_arch(arch: ArchConfig, seq_len: int, global_batch: int,
+             **kw) -> DataConfig:
+    vocab = (arch.audio.codebook_size if arch.family == "audio" and arch.audio
+             else arch.vocab_size)
+    return DataConfig(vocab_size=vocab, seq_len=seq_len,
+                      global_batch=global_batch, **kw)

@@ -1,0 +1,20 @@
+"""jit'd wrapper for the batched directory probe."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.directory_probe import directory_probe as _dp
+from repro.kernels.directory_probe import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe", "interpret"))
+def probe_batch(keys, queries, *, max_probe: int = 128,
+                interpret: bool = False):
+    return _dp.probe_batch(keys, queries, max_probe=max_probe,
+                           interpret=interpret)
+
+
+probe_batch_ref = _ref.probe_batch

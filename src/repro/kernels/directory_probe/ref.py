@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the batched directory hash probe (read-only path).
+
+Given the directory key table and a batch of (stream, page) queries, return
+per query the matching slot (or -1) and the first insertable slot seen
+(EMPTY or TOMB, or -1).  This is the hot lookup half of
+``directory.lookup_and_install`` — the mutation half stays in the serialized
+fori_loop, but a read-mostly workload (CH-R rehits) resolves through probes
+alone.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptors as D
+from repro.core.directory import EMPTY, TOMB, probe
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",))
+def probe_batch(keys: jax.Array, queries: jax.Array, *, max_probe: int = 128):
+    """keys: [C, 2] int32; queries: [N, 2] -> [N, 2] (found, insert)."""
+
+    def one(q):
+        found, insert = probe(keys, q[0], q[1], max_probe)
+        return jnp.stack([found, insert])
+
+    return jax.vmap(one)(queries)

@@ -1,0 +1,99 @@
+"""Kernel implementation dispatch.
+
+Models call through here.  ``impl``:
+  auto    -> pallas on TPU backends, ref elsewhere (CPU dry-run / tests)
+  pallas  -> force the Pallas kernel (interpret=True off-TPU)
+  ref     -> force the pure-jnp oracle
+
+The ref path is not a toy: it is scan-tiled, exact-FLOP, bounded-memory JAX
+(see flash_attention/ref.py) and is what the CPU dry-run lowers, so the
+roofline's cost_analysis reflects the same math the TPU kernels perform.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+_FORCED_IMPL = None  # test hook
+
+
+def set_default_impl(impl):
+    global _FORCED_IMPL
+    _FORCED_IMPL = impl
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    if _FORCED_IMPL is not None:
+        return _FORCED_IMPL
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal=True, chunk=512, impl="auto"):
+    from repro.kernels.flash_attention import ops, ref
+    if resolve_impl(impl) == "pallas":
+        return ops.flash_attention(q, k, v, causal=causal,
+                                   interpret=not _on_tpu())
+    return ref.tiled_causal_attention(q, k, v, chunk=chunk, causal=causal)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    pages_per_step=8, impl="auto", with_stats=False):
+    from repro.kernels.paged_attention import ops, ref
+    if resolve_impl(impl) == "pallas":
+        out, stats = ops.paged_attention(q, k_pool, v_pool, page_table,
+                                         seq_lens, interpret=not _on_tpu())
+    else:
+        out, stats = ref.paged_attention(q, k_pool, v_pool, page_table,
+                                         seq_lens, pages_per_step=pages_per_step)
+    return (out, stats) if with_stats else out
+
+
+def mla_paged_attention(q_latent, q_rope, latent_pool, page_table, seq_lens, *,
+                        pages_per_step=8, impl="auto", with_stats=False,
+                        sm_scale=None):
+    from repro.kernels.paged_attention import ops, ref
+    if resolve_impl(impl) == "pallas":
+        out, stats = ops.mla_paged_attention(q_latent, q_rope, latent_pool,
+                                             page_table, seq_lens,
+                                             interpret=not _on_tpu(),
+                                             sm_scale=sm_scale)
+    else:
+        out, stats = ref.mla_paged_attention(q_latent, q_rope, latent_pool,
+                                             page_table, seq_lens,
+                                             pages_per_step=pages_per_step,
+                                             sm_scale=sm_scale)
+    return (out, stats) if with_stats else out
+
+
+def directory_probe(keys, queries, *, max_probe=128, impl="auto"):
+    from repro.kernels.directory_probe import ops
+    if resolve_impl(impl) == "pallas":
+        return ops.probe_batch(keys, queries, max_probe=max_probe,
+                               interpret=not _on_tpu())
+    return ops.probe_batch_ref(keys, queries, max_probe=max_probe)
+
+
+def page_gather(pool, page_ids, *, impl="auto"):
+    from repro.kernels.page_gather import ops, ref
+    if resolve_impl(impl) == "pallas":
+        return ops.page_gather(pool, page_ids, interpret=not _on_tpu())
+    return ref.page_gather(pool, page_ids)
+
+
+def page_scatter(pool, page_ids, pages, *, impl="auto"):
+    from repro.kernels.page_gather import ops, ref
+    if resolve_impl(impl) == "pallas":
+        return ops.page_scatter(pool, page_ids, pages, interpret=not _on_tpu())
+    return ref.page_scatter(pool, page_ids, pages)

@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (prefill/train path).
+
+Tiling: grid (batch, q_head, q_blocks, kv_blocks) with the kv axis innermost;
+per-(b, h, i) the online-softmax state (m, l, acc) lives in VMEM scratch and
+the output tile is emitted on the final kv block of that row.  Causal rows
+skip kv blocks strictly above the diagonal via ``pl.when`` — skipped blocks
+cost no MXU work, matching the exact-FLOP ref oracle.
+
+GQA is handled in the k/v BlockSpec index maps (kv head = q head // n_rep),
+so kv tiles are never materialized per q-head in HBM.
+
+Supports Dk != Dv (MLA prefill: qk dim 192, v dim 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  q_len: int, k_len: int):
+    i = pl.program_id(2)           # q block
+    j = pl.program_id(3)           # kv block
+    nk = pl.num_programs(3)
+
+    # last kv block this q row touches (diagonal block for causal)
+    off = k_len - q_len
+    if causal:
+        j_max = jnp.minimum((i * block_q + block_q - 1 + off) // block_k,
+                            nk - 1)
+    else:
+        j_max = nk - 1
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    @pl.when(j <= j_max)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, Dk]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, Dk]
+        v = v_ref[0, 0].astype(jnp.float32)              # [bk, Dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                  # [bq, bk]
+
+        q_abs = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_abs = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_abs < k_len                              # padded keys
+        if causal:
+            mask = jnp.logical_and(mask, k_abs <= q_abs + off)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]                                 # [bq, 1]
+        l_prev = l_s[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # [bq, bk]
+        l_s[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_s[...] = acc_s[...] * alpha + pv
+
+    @pl.when(j == j_max)
+    def _emit():
+        l = jnp.maximum(l_s[...], 1e-20)
+        o_ref[0, 0] = (acc_s[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "sm_scale", "interpret"))
+def flash_attention_hmajor(q, k, v, *, causal: bool = True,
+                           block_q: int = 256, block_k: int = 256,
+                           sm_scale: float | None = None,
+                           interpret: bool = False):
+    """Head-major flash attention.
+
+    q: [B, Hq, Sq, Dk];  k: [B, Hkv, Sk, Dk];  v: [B, Hkv, Sk, Dv].
+    Returns [B, Hq, Sq, Dv].
+    """
+    b, hq, sq, dk = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    n_rep = hq // hkv
+    scale = sm_scale if sm_scale is not None else dk ** -0.5
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_p = pl.cdiv(sq, block_q) * block_q
+    sk_p = pl.cdiv(sk, block_k) * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, q_len=sq, k_len=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, dv), q.dtype),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dk),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dk),
+                         lambda b_, h, i, j, n_rep=n_rep: (b_, h // n_rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda b_, h, i, j, n_rep=n_rep: (b_, h // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dv),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, dv), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the Pallas flash attention kernel.
+
+Models use seq-major [B, S, H, D] activations; the kernel wants head-major
+tiles.  The transpose pair is fused by XLA into the surrounding layout
+assignment on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_hmajor
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "sm_scale", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, sm_scale=None,
+                    interpret: bool = False):
+    """q: [B, Sq, Hq, Dk]; k/v: [B, Sk, Hkv, D*].  Returns [B, Sq, Hq, Dv]."""
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_hmajor(qh, kh, vh, causal=causal, block_q=block_q,
+                                 block_k=block_k, sm_scale=sm_scale,
+                                 interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for flash attention (also the CPU/dry-run lowering path).
+
+``tiled_causal_attention`` processes exactly the lower-triangular tiles via a
+single ``lax.scan`` over a static (i, j) tile list, so
+
+  * HLO size is O(1) in sequence length (one scan body),
+  * peak memory is O(tile), and
+  * cost_analysis FLOPs count only the causally-needed work (no 2x masked
+    waste) — important because the roofline tables read HLO_FLOPs directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, T, Hkv, D] -> [B, T, Hkv*n_rep, D] (GQA head replication)."""
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(
+        b, t, h * n_rep, d)
+
+
+def reference_attention(q, k, v, *, causal: bool = True, scale=None):
+    """Naive O(S^2)-memory oracle used by the kernel unit tests."""
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "causal"))
+def tiled_causal_attention(q, k, v, *, chunk: int = 512, causal: bool = True):
+    """Memory-efficient exact attention.
+
+    q: [B, S, Hq, D];  k, v: [B, T, Hkv, D] with T == S for causal self-attn.
+    Returns [B, S, Hq, D].
+    """
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    dv = v.shape[-1]
+    n_rep = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    chunk = min(chunk, s, t)
+    # pad S and T to chunk multiples
+    sp = (s + chunk - 1) // chunk * chunk
+    tp = (t + chunk - 1) // chunk * chunk
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    nq, nk = sp // chunk, tp // chunk
+
+    # static tile list: causal keeps j <= i (+ diagonal offset for T > S)
+    off = (tp - sp) // chunk
+    tiles = [(i, j) for i in range(nq) for j in range(nk)
+             if (not causal) or j <= i + off]
+    tile_idx = jnp.asarray(tiles, jnp.int32)  # [n_tiles, 2]
+
+    qp = qp.reshape(b, nq, chunk, hq, d)
+    kp = kp.reshape(b, nk, chunk, hkv, d)
+    vp = vp.reshape(b, nk, chunk, hkv, dv)
+
+    o0 = jnp.zeros((b, nq, chunk, hq, dv), jnp.float32)
+    m0 = jnp.full((b, nq, chunk, hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, chunk, hq), jnp.float32)
+
+    pos_q = jnp.arange(chunk)
+    pos_k = jnp.arange(chunk)
+
+    def step(carry, ij):
+        o, m, l = carry
+        i, j = ij[0], ij[1]
+        qt = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)   # [B,C,Hq,D]
+        kt = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)   # [B,C,Hkv,D]
+        vt = jax.lax.dynamic_index_in_dim(vp, j, 1, keepdims=False)
+        if n_rep > 1:
+            kt = _repeat_kv(kt, n_rep)
+            vt = _repeat_kv(vt, n_rep)
+        sc = jnp.einsum("bqhd,bkhd->bqhk", qt.astype(jnp.float32),
+                        kt.astype(jnp.float32)) * scale                # [B,C,Hq,C]
+        # causal mask on the diagonal tile + padded-key mask
+        q_abs = i * chunk + pos_q                                      # [C]
+        k_abs = j * chunk + pos_k                                      # [C]
+        ok = k_abs[None, :] < t
+        if causal:
+            ok = ok & (k_abs[None, :] <= q_abs[:, None] + (t - s))
+        sc = jnp.where(ok[None, :, None, :], sc, NEG_INF)
+
+        mt = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        lt = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ot = jax.lax.dynamic_index_in_dim(o, i, 1, keepdims=False)
+
+        m_new = jnp.maximum(mt, sc.max(axis=-1))
+        alpha = jnp.exp(mt - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = lt * alpha + p.sum(axis=-1)
+        o_new = ot * alpha[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vt.astype(jnp.float32))
+
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        return (o, m, l), None
+
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), tile_idx)
+    out = o / jnp.maximum(l[..., None], 1e-20)
+    out = out.reshape(b, sp, hq, dv)[:, :s]
+    return out.astype(q.dtype)
+
+
+def cross_attention(q, k, v, *, chunk: int = 512):
+    """Non-causal cross attention (e.g. text->image); kv is short & static."""
+    return tiled_causal_attention(q, k, v, chunk=chunk, causal=False)

@@ -1,0 +1,37 @@
+"""jit'd wrappers: flatten arbitrary page feature dims for the Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.page_gather import page_gather as _pk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool, page_ids, *, interpret: bool = False):
+    """pool: [P, page, ...]; ids: [N] -> [N, page, ...]."""
+    p, page = pool.shape[:2]
+    feat = pool.shape[2:]
+    f = 1
+    for d in feat:
+        f *= d
+    out = _pk.page_gather(pool.reshape(p, page, f), page_ids,
+                          interpret=interpret)
+    return out.reshape((page_ids.shape[0], page) + feat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_scatter(pool, page_ids, pages, *, interpret: bool = False):
+    """pool: [P, page, ...]; ids: [N]; pages: [N, page, ...]."""
+    p, page = pool.shape[:2]
+    feat = pool.shape[2:]
+    f = 1
+    for d in feat:
+        f *= d
+    n = page_ids.shape[0]
+    out = _pk.page_scatter(pool.reshape(p, page, f), page_ids,
+                           pages.reshape(n, page, f), interpret=interpret)
+    return out.reshape((p, page) + feat)

@@ -1,0 +1,83 @@
+"""Pallas TPU page gather/scatter — the DPC data plane.
+
+``page_gather`` is the ship_data remote read: DMA whole pool pages selected
+by a scalar-prefetched id vector into a staging buffer (the "CXL.mem read of
+a mapped page").  ``page_scatter`` installs committed pages (E -> O) into
+pool slots in place via input/output aliasing.  Invalid ids (< 0) gather a
+zero page / scatter into a sacrificial scratch slot appended by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, pool_ref, o_ref):
+    n = pl.program_id(0)
+    valid = ids_ref[n] >= 0
+    page = pool_ref[0]
+    o_ref[0] = jnp.where(valid, page, jnp.zeros_like(page))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool, page_ids, *, interpret: bool = False):
+    """pool: [P, page, F] (wrapper-flattened features); ids: [N] int32.
+    Returns [N, page, F]."""
+    p, page, f = pool.shape
+    n = page_ids.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, page, f), pool.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec(
+                (1, page, f),
+                lambda i, ids: (jnp.maximum(ids[i], 0), 0, 0))],
+            out_specs=pl.BlockSpec((1, page, f), lambda i, ids: (i, 0, 0)),
+        ),
+        interpret=interpret,
+    )(page_ids, pool)
+
+
+def _scatter_kernel(ids_ref, pages_ref, pool_in_ref, pool_ref):
+    del ids_ref, pool_in_ref
+    pool_ref[0] = pages_ref[0].astype(pool_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "donate"))
+def page_scatter(pool, page_ids, pages, *, interpret: bool = False,
+                 donate: bool = True):
+    """Install pages [N, page, F] at slots ``page_ids`` (-1 dropped).
+
+    The pool is extended by one sacrificial slot that absorbs invalid writes,
+    then sliced back — the kernel itself writes unconditionally through the
+    aliased output so valid slots update in place.
+    """
+    del donate
+    p, page, f = pool.shape
+    n = page_ids.shape[0]
+    padded = jnp.concatenate([pool, jnp.zeros_like(pool[:1])], axis=0)
+    safe_ids = jnp.where(page_ids >= 0, page_ids, p)
+
+    out = pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((p + 1, page, f), pool.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, page, f), lambda i, ids: (i, 0, 0)),
+                pl.BlockSpec((1, page, f), lambda i, ids: (ids[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page, f), lambda i, ids: (ids[i], 0, 0)),
+        ),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(safe_ids, pages, padded)
+    return out[:p]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for DPC page gather/scatter.
+
+This is the data-plane of the paper's remote read: fetching whole KV pages
+from the (remote) owner's pool slice into a local staging buffer — the TPU
+analog of a CXL.mem read of a mapped page — and installing newly committed
+pages (E -> O) into pool slots.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def page_gather(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
+    """pool: [P, page, ...], page_ids: [N] int32 (-1 => zero page).
+
+    Returns [N, page, ...].
+    """
+    safe = jnp.maximum(page_ids, 0)
+    out = pool[safe]
+    mask = (page_ids >= 0).reshape((-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros_like(out))
+
+
+def page_scatter(pool: jax.Array, page_ids: jax.Array,
+                 pages: jax.Array) -> jax.Array:
+    """Install pages at slots ``page_ids`` (-1 entries are dropped).
+
+    pool: [P, page, ...]; page_ids: [N]; pages: [N, page, ...].
+    Returns updated pool.
+    """
+    valid = page_ids >= 0
+    # route invalid writes to a scratch slot past the end, then slice off
+    p = pool.shape[0]
+    ids = jnp.where(valid, page_ids, p)
+    padded = jnp.concatenate([pool, jnp.zeros_like(pool[:1])], axis=0)
+    padded = padded.at[ids].set(pages.astype(pool.dtype))
+    return padded[:p]

@@ -1,0 +1,26 @@
+"""jit'd public wrappers for the Pallas paged attention kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import (  # noqa: F401
+    mla_paged_attention as _mla_pallas,
+    paged_attention as _paged_pallas,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    interpret: bool = False):
+    return _paged_pallas(q, k_pool, v_pool, page_table, seq_lens,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "sm_scale"))
+def mla_paged_attention(q_latent, q_rope, latent_pool, page_table, seq_lens,
+                        *, interpret: bool = False, sm_scale=None):
+    return _mla_pallas(q_latent, q_rope, latent_pool, page_table, seq_lens,
+                       interpret=interpret, sm_scale=sm_scale)

@@ -1,0 +1,220 @@
+"""Pallas TPU paged decode attention over the DPC page pool.
+
+The page table is a *scalar-prefetch* operand: BlockSpec index maps read it
+to steer the pool-page DMA for each grid step — the hardware-level analog of
+"insert the remote frame into the page table and let loads hit it".  Invalid
+entries (< 0: pages in E/TBI, or beyond seq_len) clamp the DMA to slot 0 and
+are masked out of the softmax, so in-teardown pages are I/O-blocked exactly
+like the paper's reclaim path.
+
+Grid (batch, kv_head, page): one pool page per step per kv head; online
+softmax state in VMEM scratch; output emitted on the final page.  Returns the
+(m, l) stats needed by the ship_compute LSE combine.
+
+The MLA variant attends over compressed latent pages [P, page, R+Dr] with
+absorbed queries — the page is both K and V (out stays in latent space).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA paged attention
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref, m_o, l_o,
+                  m_s, l_s, acc_s, *, page: int, scale: float):
+    b = pl.program_id(0)
+    n = pl.program_id(2)
+    nn = pl.num_programs(2)
+
+    @pl.when(n == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    valid = pt_ref[b, n] >= 0
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [n_rep, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)            # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)            # [page, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = n * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < sl_ref[b], s, NEG_INF)        # [n_rep, page]
+
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(n == nn - 1)
+    def _emit():
+        l = jnp.maximum(l_s[...], 1e-20)
+        o_ref[0, 0] = (acc_s[...] / l).astype(o_ref.dtype)
+        m_o[0, 0] = m_s[...][:, 0]
+        l_o[0, 0] = l_s[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    interpret: bool = False):
+    """q: [B, Hq, D]; pools: [P, page, Hkv, D]; page_table: [B, N] int32;
+    seq_lens: [B].  Returns ([B, Hq, D], (m [B, Hq], l [B, Hq]))."""
+    b, hq, d = q.shape
+    p_phys, page, hkv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    n_rep = hq // hkv
+    scale = d ** -0.5
+
+    qr = q.reshape(b, hkv, n_rep, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, d),
+                         lambda b_, h, n, pt, sl: (b_, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, n, pt, sl:
+                         (jnp.maximum(pt[b_, n], 0), 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, n, pt, sl:
+                         (jnp.maximum(pt[b_, n], 0), 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_rep, d),
+                         lambda b_, h, n, pt, sl: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, n_rep), lambda b_, h, n, pt, sl: (b_, h, 0)),
+            pl.BlockSpec((1, 1, n_rep), lambda b_, h, n, pt, sl: (b_, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, d), jnp.float32),
+        ],
+    )
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, scale=scale),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, n_rep, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hkv, n_rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, n_rep), jnp.float32),
+        ],
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(page_table, seq_lens, qr, k_pool, v_pool)
+    return (out.reshape(b, hq, d),
+            (m.reshape(b, hq), l.reshape(b, hq)))
+
+
+# ---------------------------------------------------------------------------
+# MLA paged attention (absorbed latent space)
+# ---------------------------------------------------------------------------
+
+
+def _mla_kernel(pt_ref, sl_ref, q_ref, lat_ref, o_ref, m_o, l_o,
+                m_s, l_s, acc_s, *, page: int, r: int, scale: float):
+    b = pl.program_id(0)
+    n = pl.program_id(1)
+    nn = pl.num_programs(1)
+
+    @pl.when(n == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    valid = pt_ref[b, n] >= 0
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # [H, R+Dr]
+        lat = lat_ref[0].astype(jnp.float32)              # [page, R+Dr]
+        s = jax.lax.dot_general(q, lat, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = n * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < sl_ref[b], s, NEG_INF)        # [H, page]
+
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, lat[:, :r], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(n == nn - 1)
+    def _emit():
+        l = jnp.maximum(l_s[...], 1e-20)
+        o_ref[0] = (acc_s[...] / l).astype(o_ref.dtype)
+        m_o[0] = m_s[...][:, 0]
+        l_o[0] = l_s[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "sm_scale"))
+def mla_paged_attention(q_latent, q_rope, latent_pool, page_table, seq_lens,
+                        *, interpret: bool = False, sm_scale=None):
+    """q_latent: [B, H, R]; q_rope: [B, H, Dr]; latent_pool: [P, page, R+Dr].
+    Returns ([B, H, R] latent-space out, (m, l))."""
+    b, h, r = q_latent.shape
+    dr = q_rope.shape[-1]
+    p_phys, page, rd = latent_pool.shape
+    assert rd == r + dr
+    n_pages = page_table.shape[1]
+    scale = sm_scale if sm_scale is not None else (r + dr) ** -0.5
+
+    q_cat = jnp.concatenate([q_latent, q_rope], axis=-1)  # [B, H, R+Dr]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, rd), lambda b_, n, pt, sl: (b_, 0, 0)),
+            pl.BlockSpec((1, page, rd),
+                         lambda b_, n, pt, sl: (jnp.maximum(pt[b_, n], 0), 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, r), lambda b_, n, pt, sl: (b_, 0, 0)),
+            pl.BlockSpec((1, h), lambda b_, n, pt, sl: (b_, 0)),
+            pl.BlockSpec((1, h), lambda b_, n, pt, sl: (b_, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+    )
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_mla_kernel, page=page, r=r, scale=scale),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, r), q_latent.dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(page_table, seq_lens, q_cat, latent_pool)
+    return out, (m, l)

@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for paged decode attention over the DPC page pool.
+
+The KV pool is the *physical* side of the distributed page cache: pages are
+owned by exactly one pool slot cluster-wide (single-copy invariant); the page
+table maps each request's logical pages to physical slots.  Invalid entries
+(page id < 0) are masked — they correspond to pages still in E/TBI state or
+beyond seq_len.
+
+q:          [B, Hq, D]            one new token per request
+k_pool:     [P, page, Hkv, D]     physical key pages (this shard's slice)
+v_pool:     [P, page, Hkv, D]
+page_table: [B, N] int32          physical slot per logical page (-1 invalid)
+seq_lens:   [B] int32             tokens currently valid per request
+Returns     [B, Hq, D]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_step",))
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    pages_per_step: int = 8):
+    """GQA-grouped online softmax over pool pages.
+
+    kv heads are NEVER replicated/materialized (the Pallas kernel broadcasts
+    them in registers; here the grouped einsum keeps pool tiles in their
+    storage dtype and produces f32 scores directly via
+    preferred_element_type) — this keeps both HBM traffic and peak memory at
+    1x the pool bytes instead of n_rep x in f32.
+    """
+    b, hq, d = q.shape
+    p_phys, page, hkv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    n_rep = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    g = min(pages_per_step, n_pages)
+    npad = (n_pages + g - 1) // g * g
+    pt = jnp.pad(page_table, ((0, 0), (0, npad - n_pages)), constant_values=-1)
+    pt = pt.reshape(b, npad // g, g)
+
+    qg = q.reshape(b, hkv, n_rep, d).astype(jnp.float32)
+
+    def step(carry, ids_and_base):
+        o, m, l = carry                                # o: [B,Hkv,R,D]
+        ids, base = ids_and_base                       # ids: [B, G]
+        safe = jnp.maximum(ids, 0)
+        kt = k_pool[safe]                              # [B, G, page, Hkv, D]
+        vt = v_pool[safe]
+        sc = jnp.einsum("bhrd,bgphd->bhrgp", qg, kt,
+                        preferred_element_type=jnp.float32) * scale
+        # token position of (g, p) = (base + g_local) * page + p
+        pos = (base + jnp.arange(g))[None, :, None] * page + \
+            jnp.arange(page)[None, None, :]
+        ok = (ids[:, :, None] >= 0) & (pos < seq_lens[:, None, None])
+        sc = jnp.where(ok[:, None, None], sc, NEG_INF)  # [B,Hkv,R,G,page]
+
+        sc_flat = sc.reshape(b, hkv, n_rep, g * page)
+        m_new = jnp.maximum(m, sc_flat.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(sc - m_new[..., None, None])
+        l_new = l * alpha + p_.reshape(b, hkv, n_rep, -1).sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhrgp,bgphd->bhrd", p_, vt,
+            preferred_element_type=jnp.float32)
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((b, hkv, n_rep, d), jnp.float32)
+    m0 = jnp.full((b, hkv, n_rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, n_rep), jnp.float32)
+    bases = jnp.arange(npad // g) * g
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), (pt.swapaxes(0, 1), bases))
+    out = o / jnp.maximum(l[..., None], 1e-20)
+    return (out.reshape(b, hq, d).astype(q.dtype),
+            (m.reshape(b, hq), l.reshape(b, hq)))
+
+
+def paged_attention_nocache(q, k_pool, v_pool, page_table, seq_lens, **kw):
+    out, _ = paged_attention(q, k_pool, v_pool, page_table, seq_lens, **kw)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_step", "sm_scale"))
+def mla_paged_attention(q_latent, q_rope, latent_pool, page_table, seq_lens, *,
+                        pages_per_step: int = 8, sm_scale=None):
+    """Absorbed MLA decode attention over a latent page pool.
+
+    q_latent:    [B, H, R]        q projected into the kv-lora space (absorbed W_uk)
+    q_rope:      [B, H, Dr]       decoupled rope part
+    latent_pool: [P, page, R+Dr]  compressed latent + shared rope key
+    Returns      [B, H, R]        attention output still in latent space
+    """
+    b, h, r = q_latent.shape
+    dr = q_rope.shape[-1]
+    p_phys, page, rd = latent_pool.shape
+    assert rd == r + dr
+    n_pages = page_table.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(r + dr)
+
+    g = min(pages_per_step, n_pages)
+    npad = (n_pages + g - 1) // g * g
+    pt = jnp.pad(page_table, ((0, 0), (0, npad - n_pages)), constant_values=-1)
+    pt = pt.reshape(b, npad // g, g)
+
+    qlf = q_latent.astype(jnp.float32)
+    qrf = q_rope.astype(jnp.float32)
+
+    def step(carry, ids_and_base):
+        o, m, l = carry
+        ids, base = ids_and_base
+        safe = jnp.maximum(ids, 0)
+        lat = latent_pool[safe].astype(jnp.float32)      # [B, G, page, R+Dr]
+        kl, kr = lat[..., :r], lat[..., r:]
+        sc = (jnp.einsum("bhr,bgpr->bhgp", qlf, kl)
+              + jnp.einsum("bhr,bgpr->bhgp", qrf, kr)) * scale
+        pos = (base + jnp.arange(g))[None, :, None] * page + jnp.arange(page)[None, None, :]
+        ok = (ids[:, :, None] >= 0) & (pos < seq_lens[:, None, None])
+        sc = jnp.where(ok[:, None], sc, NEG_INF)
+
+        sc_flat = sc.reshape(b, h, g * page)
+        m_new = jnp.maximum(m, sc_flat.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(sc - m_new[..., None, None])
+        l_new = l * alpha + p_.reshape(b, h, -1).sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bhgp,bgpr->bhr", p_, kl)
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((b, h, r), jnp.float32)
+    m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    bases = jnp.arange(npad // g) * g
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), (pt.swapaxes(0, 1), bases))
+    out = o / jnp.maximum(l[..., None], 1e-20)
+    return out.astype(q_latent.dtype), (m, l)
+
+
+def combine_partials(outs, ms, ls):
+    """LSE-combine per-shard partial attention results (ship_compute datapath).
+
+    outs: [S, B, H, D] unnormalized o×l? — here: outs are *normalized* per-shard
+    outputs with their (m, l) stats; we recombine exactly:
+        o_full = sum_s o_s * l_s * exp(m_s - m*) / l*
+    """
+    m_star = jnp.max(ms, axis=0)
+    w = ls * jnp.exp(ms - m_star[None])
+    l_star = jnp.sum(w, axis=0)
+    o = jnp.sum(outs * w[..., None], axis=0) / jnp.maximum(l_star[..., None], 1e-20)
+    return o, (m_star, l_star)

@@ -1,0 +1,175 @@
+"""Analytic per-step FLOP / HBM-byte model (the napkin math, made exact).
+
+XLA's cost_analysis counts while bodies once (scan trip counts are not
+multiplied — verified empirically), so layer/microbatch/tile scans make its
+totals meaningless for a roofline.  This module derives the executed-step
+costs from the architecture math instead; the HLO is still the source of
+truth for *collectives* (trip-aware walker in hloanalysis.py) and for the
+memory fit.
+
+Conventions
+  MODEL_FLOPS (reported): 6·N_active·tokens (train) / 2·N_active·tokens
+  (forward), the standard MFU numerator.
+  flops (executed): adds causal attention (4·Hq·hd·T_ctx/2 per token per
+  attention layer), the backward 2x, and the full-remat re-forward.
+  HBM bytes: weight traffic (per pass over the stacked params), activation
+  stash write+read, KV pool read/write, optimizer state traffic.  Activation
+  *intra-layer* traffic is approximated as c_act · tokens · d_model · bytes
+  per layer pass (c_act ≈ 12 covers the qkv/mlp intermediate reads+writes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, RunConfig
+
+BF16 = 2
+F32 = 4
+C_ACT = 12.0   # per-layer activation read+write multiplier (see docstring)
+
+
+def _attn_flops_per_seq(arch: ArchConfig, seq: int, causal: bool = True
+                        ) -> float:
+    """Score + AV matmul FLOPs for one sequence through all attn layers."""
+    if arch.attention_free:
+        return 0.0
+    hq, hd = arch.num_heads, arch.resolved_head_dim
+    if arch.mla is not None:
+        qk = arch.mla.qk_nope_head_dim + arch.mla.qk_rope_head_dim
+        v = arch.mla.v_head_dim
+        per_pair = 2.0 * hq * (qk + v)
+    else:
+        per_pair = 4.0 * hq * hd
+    pairs = seq * seq / 2 if causal else seq * seq
+    extra = 0.0
+    if arch.vision is not None:   # cross-attn layers over image tokens
+        n_cross = arch.num_layers // arch.vision.cross_attn_every
+        extra = n_cross * 4.0 * hq * hd * seq * arch.vision.num_image_tokens
+    return per_pair * pairs * arch.num_attn_layers + extra
+
+
+def _decode_attn_flops(arch: ArchConfig, batch: int, ctx: int) -> float:
+    if arch.attention_free:
+        return 0.0
+    hq, hd = arch.num_heads, arch.resolved_head_dim
+    if arch.mla is not None:
+        rd = arch.mla.kv_lora_rank + arch.mla.qk_rope_head_dim
+        per_tok = 2.0 * hq * (rd + arch.mla.kv_lora_rank)
+    else:
+        per_tok = 4.0 * hq * hd
+    return per_tok * ctx * arch.num_attn_layers * batch
+
+
+def _ssm_flops_per_token(arch: ArchConfig) -> float:
+    """Mamba2/RWKV recurrent state math per token (beyond the projections,
+    which are inside active_param_count)."""
+    if arch.ssm is None:
+        return 0.0
+    s = arch.ssm
+    if arch.block_kind == "mamba2":
+        d_in = s.expand * arch.d_model
+        n_mamba = arch.num_layers
+        return 6.0 * d_in * s.state_dim * n_mamba
+    if arch.block_kind == "rwkv6":
+        h = arch.d_model // s.head_dim
+        return 6.0 * h * s.state_dim * s.head_dim * arch.num_layers
+    return 0.0
+
+
+def kv_bytes_per_token(arch: ArchConfig, kv_dtype_bytes: int = BF16) -> float:
+    return arch.kv_dim_per_token * kv_dtype_bytes * arch.num_attn_layers
+
+
+@dataclasses.dataclass
+class StepCosts:
+    model_flops: float        # 6/2 · N_active · tokens
+    flops_total: float        # executed (incl. attention, backward, remat)
+    hbm_bytes_total: float    # cluster-wide; divide by chips for per-device
+    notes: str = ""
+
+    def per_device(self, n_dev: int) -> Dict[str, float]:
+        return {"flops_per_dev": self.flops_total / n_dev,
+                "hbm_bytes_per_dev": self.hbm_bytes_total / n_dev,
+                "model_flops_total": self.model_flops}
+
+
+def train_costs(run: RunConfig, n_micro: int, accum_bytes: int = F32,
+                moment_bytes: int = F32) -> StepCosts:
+    arch = run.arch
+    tokens = run.shape.global_batch * run.shape.seq_len
+    n_active = arch.active_param_count()
+    n_total = arch.param_count()
+    w_bytes = n_total * BF16
+
+    fwd = 2.0 * n_active * tokens \
+        + _attn_flops_per_seq(arch, run.shape.seq_len) * run.shape.global_batch \
+        + _ssm_flops_per_token(arch) * tokens
+    remat_extra = 1.0 if run.sharding.remat != "none" else 0.0
+    flops = fwd * (3.0 + remat_extra)
+    model_flops = 6.0 * n_active * tokens
+
+    # weights: fwd + bwd + remat passes (active weights only for MoE)
+    w_active_bytes = n_active * BF16
+    weight_traffic = (2.0 + remat_extra) * w_active_bytes * n_micro \
+        + w_bytes  # optimizer pass reads every param once
+    # activations: per layer pass, read+write c_act times
+    act_traffic = C_ACT * tokens * arch.d_model * BF16 * arch.num_layers \
+        * (2.0 + remat_extra)
+    # gradients: accumulate read+write per microbatch + optimizer read
+    grad_traffic = n_total * accum_bytes * (2.0 * n_micro + 1)
+    # optimizer: read mu,nu,params; write mu,nu,params
+    opt_traffic = n_total * (2 * moment_bytes * 2 + 2 * BF16)
+    total_bytes = weight_traffic + act_traffic + grad_traffic + opt_traffic
+    return StepCosts(model_flops, flops, total_bytes,
+                     notes=f"n_micro={n_micro} remat={remat_extra:.0f}")
+
+
+def prefill_costs(run: RunConfig, kv_dtype_bytes: int = BF16) -> StepCosts:
+    arch = run.arch
+    tokens = run.shape.global_batch * run.shape.seq_len
+    n_active = arch.active_param_count()
+    fwd = 2.0 * n_active * tokens \
+        + _attn_flops_per_seq(arch, run.shape.seq_len) * run.shape.global_batch \
+        + _ssm_flops_per_token(arch) * tokens
+    kv_write = kv_bytes_per_token(arch, kv_dtype_bytes) * tokens
+    bytes_total = n_active * BF16 \
+        + C_ACT * tokens * arch.d_model * BF16 * arch.num_layers \
+        + kv_write
+    return StepCosts(2.0 * n_active * tokens, fwd, bytes_total)
+
+
+def decode_costs(run: RunConfig, kv_dtype_bytes: int = BF16) -> StepCosts:
+    arch = run.arch
+    b, ctx = run.shape.global_batch, run.shape.seq_len
+    n_active = arch.active_param_count()
+    fwd = 2.0 * n_active * b + _decode_attn_flops(arch, b, ctx) \
+        + _ssm_flops_per_token(arch) * b
+    # bytes: full weight read (batch amortizes it) + full KV read + states
+    kv_read = kv_bytes_per_token(arch, kv_dtype_bytes) * ctx * b
+    ssm_state = 0.0
+    if arch.ssm is not None and arch.block_kind == "mamba2":
+        s = arch.ssm
+        d_in = s.expand * arch.d_model
+        h = d_in // s.head_dim
+        ssm_state = 2.0 * b * h * s.head_dim * s.state_dim * F32 \
+            * arch.num_layers
+    if arch.ssm is not None and arch.block_kind == "rwkv6":
+        s = arch.ssm
+        h = arch.d_model // s.head_dim
+        ssm_state = 2.0 * b * h * s.state_dim * s.head_dim * F32 \
+            * arch.num_layers
+    bytes_total = n_active * BF16 + kv_read + ssm_state \
+        + C_ACT * b * arch.d_model * BF16 * arch.num_layers
+    return StepCosts(2.0 * n_active * b, fwd, bytes_total)
+
+
+def cell_costs(run: RunConfig, n_micro: int = 1, *,
+               accum_bytes: int = F32, moment_bytes: int = F32,
+               kv_dtype_bytes: int = BF16) -> StepCosts:
+    if run.shape.kind == "train":
+        return train_costs(run, n_micro, accum_bytes, moment_bytes)
+    if run.shape.kind == "prefill":
+        return prefill_costs(run, kv_dtype_bytes)
+    return decode_costs(run, kv_dtype_bytes)

@@ -1,0 +1,247 @@
+import os
+# 512 placeholder devices for the production meshes (dry-run only), plus
+# B1 (EXPERIMENTS.md §Perf): keep bf16<->f32 converts where the program put
+# them — otherwise XLA's excess-precision elision keeps the whole backward
+# in f32 and every TP/FSDP collective moves 2x the bytes.
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_allow_excess_precision=false")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the full-size step program — train_step for train shapes,
+prefill/serve steps for inference shapes — is lowered with production
+shardings on the 16×16 (single-pod, 256 chips) and 2×16×16 (multi-pod,
+512 chips) meshes, compiled by XLA's SPMD partitioner, and analyzed:
+memory_analysis (fits-HBM proof), cost_analysis (FLOPs/bytes), and the
+optimized HLO's collective traffic (launch/hloanalysis.py).  Results append
+incrementally to a JSON so the sweep is resumable.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --datapath ship_compute --out results/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shardlib
+from repro.configs import ARCH_IDS, get_arch, get_shape
+from repro.configs.base import (DPCConfig, MeshConfig, RunConfig, ShapeConfig,
+                                ShardingConfig, shape_applicable)
+from repro.launch import hloanalysis as hlo
+from repro.launch.mesh import make_mesh, mesh_config
+from repro.models import registry
+from repro.serving import steps as sst
+from repro.training import presets
+from repro.training import train_step as tst
+
+
+def cell_id(arch_id: str, shape_name: str, mesh: MeshConfig,
+            datapath: str) -> str:
+    pod = "multi" if mesh.multi_pod else "single"
+    return f"{arch_id}|{shape_name}|{pod}|{datapath}"
+
+
+def build_run(arch_id: str, shape: ShapeConfig, mesh_cfg: MeshConfig,
+              datapath: str) -> RunConfig:
+    arch = get_arch(arch_id)
+    tk = presets.train_knobs(arch_id)
+    sk = presets.serve_knobs(arch_id)
+    n_nodes = mesh_cfg.num_chips
+    page = sk.page_size
+    pages_per_req = (shape.seq_len + page - 1) // page
+    if shape.kind == "decode":
+        pages_per_req += 2  # slack for generated tokens
+    total_pages = shape.global_batch * pages_per_req
+    pool_pages = max(4, -(-total_pages // n_nodes) + 2)
+    dpc = DPCConfig(
+        mode="dpc", datapath=datapath, page_size=page,
+        pool_pages_per_shard=pool_pages,
+        max_pages_per_seq=pages_per_req, kv_dtype=sk.kv_dtype)
+    sharding = ShardingConfig(sequence_parallel=tk.sequence_parallel)
+    return RunConfig(arch=arch, shape=shape, mesh=mesh_cfg,
+                     sharding=sharding, dpc=dpc)
+
+
+def model_flops(run: RunConfig) -> float:
+    """Analytic MODEL_FLOPS per step: 6·N(_active)·tokens for training,
+    2·N·tokens forward-only (+ paged-attention dot FLOPs for decode)."""
+    arch = run.arch
+    n_active = arch.active_param_count()
+    if run.shape.kind == "train":
+        tokens = run.shape.global_batch * run.shape.seq_len
+        return 6.0 * n_active * tokens
+    if run.shape.kind == "prefill":
+        tokens = run.shape.global_batch * run.shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per request + attention over the cached context
+    b, s = run.shape.global_batch, run.shape.seq_len
+    attn = 4.0 * b * s * arch.num_attn_layers * \
+        arch.num_heads * arch.resolved_head_dim
+    return 2.0 * n_active * b + attn
+
+
+def lower_cell(run: RunConfig, mesh, datapath: str):
+    api = registry.get_model(run.arch)
+    arch, shape = run.arch, run.shape
+    tk = presets.train_knobs(arch.name)
+
+    if shape.kind == "train":
+        return tst.lower_train_step(
+            run, api, mesh, n_micro=tk.n_micro,
+            accum_dtype=tk.accum_dtype,
+            moment_dtype=tk.moment_dtype)
+
+    from repro.models.spec import abstract_params
+    params = abstract_params(api.specs(arch))
+    pshard = shardlib.specs_to_shardings(api.specs(arch), mesh, run.sharding)
+    b = shape.global_batch
+    pages_per_req = run.dpc.max_pages_per_seq
+    # pools are global views: per-shard pages × number of DPC nodes
+    global_pool = run.dpc.pool_pages_per_shard * run.mesh.num_chips
+    cache = api.init_cache(arch, run.dpc, b, pages_per_req,
+                           pool_pages=global_pool, abstract=True)
+    csh = sst.cache_shardings(cache, mesh, run)
+
+    if shape.kind == "prefill":
+        step = sst.make_prefill_step(run, api, mesh, datapath=datapath)
+        batch = registry.prefill_batch_spec(arch, b, shape.seq_len)
+        bsh = sst.token_shardings(run, mesh, batch)
+        targets = jax.ShapeDtypeStruct((b, pages_per_req), jnp.int32)
+        tsh = sst.token_shardings(run, mesh, targets)
+        with shardlib.activation_sharding(mesh, run.sharding):
+            jitted = jax.jit(step, in_shardings=(pshard, bsh, csh, tsh),
+                             donate_argnums=(2,))
+            return jitted.lower(params, batch, cache, targets)
+
+    # decode
+    step = sst.make_decode_step(run, api, mesh, datapath=datapath)
+    tok = registry.decode_token_spec(arch, b)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    toksh = sst.token_shardings(run, mesh, tok)
+    possh = sst.token_shardings(run, mesh, pos)
+    with shardlib.activation_sharding(mesh, run.sharding):
+        jitted = jax.jit(step, in_shardings=(pshard, toksh, possh, csh),
+                         donate_argnums=(3,))
+        return jitted.lower(params, tok, pos, cache)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             datapath: str) -> Dict:
+    shape = get_shape(shape_name)
+    arch = get_arch(arch_id)
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    mesh_cfg = mesh_config(multi_pod=multi_pod)
+    run = build_run(arch_id, shape, mesh_cfg, datapath)
+    mesh = make_mesh(mesh_cfg)
+    n_dev = mesh_cfg.num_chips
+
+    t0 = time.time()
+    lowered = lower_cell(run, mesh, datapath)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    from repro.launch import analytic
+    flops_raw, bytes_raw = hlo.cost_summary(compiled, n_dev)
+    mem = hlo.memory_summary(compiled)
+    colls = hlo.collective_bytes(compiled.as_text(), n_dev)
+    link_bytes = sum(c["link_bytes"] for c in colls.values())
+    tk = presets.train_knobs(arch_id)
+    costs = analytic.cell_costs(
+        run, n_micro=tk.n_micro,
+        accum_bytes=2 if tk.accum_dtype == "bfloat16" else 4,
+        moment_bytes=2 if tk.moment_dtype == "bfloat16" else 4,
+        kv_dtype_bytes=1 if run.dpc.kv_dtype == "int8" else 2)
+    roof = hlo.Roofline(flops_per_dev=costs.flops_total / n_dev,
+                        hbm_bytes_per_dev=costs.hbm_bytes_total / n_dev,
+                        link_bytes_per_dev=link_bytes, num_devices=n_dev,
+                        model_flops_total=costs.model_flops)
+    print(compiled.memory_analysis())
+    return {
+        "status": "ok",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": mem,
+        "collectives": colls,
+        "roofline": roof.as_dict(),
+        # raw cost_analysis (body-once: scan trip counts NOT multiplied)
+        "hlo_body_once": {"flops_per_dev": flops_raw,
+                          "bytes_per_dev": bytes_raw},
+        "knobs": dataclasses.asdict(presets.train_knobs(arch_id))
+        if shape.kind == "train" else
+        dataclasses.asdict(presets.serve_knobs(arch_id)),
+        "pool_pages_per_shard": run.dpc.pool_pages_per_shard,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--datapath", default="ship_compute",
+                    choices=["ship_compute", "ship_data", "local"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.shape == "all" else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_fail = 0
+    for arch_id in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = cell_id(arch_id, shape_name,
+                              mesh_config(multi_pod=multi), args.datapath)
+                if key in results and results[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key}", flush=True)
+                try:
+                    res = run_cell(arch_id, shape_name, multi, args.datapath)
+                except Exception as e:  # noqa
+                    res = {"status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"  ERROR {e}")
+                results[key] = res
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(f"  ok lower={res['lower_s']}s "
+                          f"compile={res['compile_s']}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"t=({r['t_compute_s']:.2e},"
+                          f"{r['t_memory_s']:.2e},"
+                          f"{r['t_collective_s']:.2e})s "
+                          f"fits={res['memory']['fits_hbm']}", flush=True)
+    print(f"done; {n_fail} failures")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

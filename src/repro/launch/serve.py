@@ -1,0 +1,102 @@
+"""Serving launcher: DPC-cached inference over a replica group.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+        --requests 24 --share 0.75 --mode dpc
+
+Drives the continuous-batching engine with a synthetic workload whose
+requests share prompt prefixes with probability ``--share`` (the paper's
+data-sharing regime: hot files read by many nodes).  Prints per-mode
+throughput + DPC hit statistics; ``--mode`` selects the paper's
+configurations (dpc / dpc_sc / replicated / local_only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_arch
+from repro.configs.base import (DPCConfig, MeshConfig, RunConfig,
+                                ShapeConfig)
+from repro.models import registry
+from repro.models.spec import init_params
+from repro.serving.engine import ServingEngine
+
+
+def synth_workload(n_requests: int, share: float, prompt_len: int,
+                   vocab: int, seed: int = 0):
+    """Zipf-ish shared-prefix workload: a few hot prefixes, private tails."""
+    rng = np.random.RandomState(seed)
+    hot = [rng.randint(0, vocab, prompt_len).tolist() for _ in range(3)]
+    out = []
+    for i in range(n_requests):
+        if rng.rand() < share:
+            base = hot[rng.randint(len(hot))]
+            tail = rng.randint(0, vocab, max(prompt_len // 8, 1)).tolist()
+            out.append(base + tail)
+        else:
+            out.append(rng.randint(0, vocab,
+                                   prompt_len + prompt_len // 8).tolist())
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--share", type=float, default=0.75)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--mode", default="dpc",
+                    choices=["dpc", "dpc_sc", "replicated", "local_only"])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_smoke_arch(args.arch)
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(args.seed))
+    run = RunConfig(
+        arch=arch,
+        shape=ShapeConfig("serve", args.prompt_len * 2, args.max_batch,
+                          "decode"),
+        mesh=MeshConfig((1,), ("data",)),
+        dpc=DPCConfig(mode=args.mode, page_size=args.page_size,
+                      pool_pages_per_shard=512))
+
+    max_pages = (args.prompt_len + args.prompt_len // 8 + args.new_tokens
+                 ) // args.page_size + 2
+    eng = ServingEngine(run, params, max_batch=args.max_batch,
+                        max_pages_per_seq=max_pages)
+    prompts = synth_workload(args.requests, args.share, args.prompt_len,
+                             arch.vocab_size, args.seed)
+
+    t0 = time.monotonic()
+    for p in prompts:
+        eng.submit(p, max_new_tokens=args.new_tokens)
+    for _ in range(100000):
+        if eng.step() == 0:
+            break
+    dt = time.monotonic() - t0
+
+    total_tokens = args.requests * args.new_tokens
+    s = eng.stats
+    print(f"mode={args.mode} requests={args.requests} share={args.share}")
+    print(f"  wall={dt:.2f}s decode_tokens={total_tokens} "
+          f"tput={total_tokens / dt:.1f} tok/s")
+    print(f"  pages: needed={s.pages_needed} local={s.pages_local} "
+          f"remote={s.pages_remote} filled={s.pages_filled}")
+    print(f"  prefill tokens: saved={s.prefill_tokens_saved} "
+          f"run={s.prefill_tokens_run}")
+    print(f"  directory hit rate={eng.kv.hit_rate():.3f} "
+          f"occupancy={eng.kv.directory_occupancy()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

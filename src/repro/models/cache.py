@@ -1,0 +1,305 @@
+"""Decode-time caches + the local attention backend.
+
+Caches are NamedTuple pytrees with per-layer leaves stacked on dim 0, so the
+layer scan feeds each layer its slice as scan xs and collects the updated
+slice as scan ys.  Attention caches are *paged*: physical pools indexed
+through page tables — the structure DPC's directory governs.  ``page_table``
+holds page ids in the pool's own id space: local slot ids in single-node
+mode, global ``node * P + slot`` ids under DPC (the distributed backend in
+``core/ship_compute.py`` resolves ownership per shard).
+
+``append_slot`` is the *local* slot of each request's currently-filling page
+(new tokens always land in pages the request's home node owns — ACC_MISS_ALLOC
+grants E locally, exactly the paper's preallocated DMA target).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, DPCConfig
+from repro.kernels import dispatch
+
+
+class PagedKVCache(NamedTuple):
+    k_pools: jax.Array      # [L, P, page, Hkv, D]
+    v_pools: jax.Array      # [L, P, page, Hkv, D]
+    page_table: jax.Array   # [B, N] int32 page ids (-1 invalid)
+    seq_lens: jax.Array     # [B] int32 tokens already cached
+    append_slot: jax.Array  # [B] int32 local slot of the filling page
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pools.shape[2]
+
+
+class MLAPagedCache(NamedTuple):
+    latent_pools: jax.Array  # [L, P, page, R+Dr]
+    page_table: jax.Array
+    seq_lens: jax.Array
+    append_slot: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.latent_pools.shape[2]
+
+
+class SSMCache(NamedTuple):
+    """Mamba2 per-layer recurrent state."""
+    conv: jax.Array    # [L, B, K-1, Dconv]
+    state: jax.Array   # [L, B, H, P, N]
+
+
+class RWKVCache(NamedTuple):
+    tm_shift: jax.Array  # [L, B, D] last token entering time-mix
+    cm_shift: jax.Array  # [L, B, D] last token entering channel-mix
+    wkv: jax.Array       # [L, B, H, N, V]
+
+
+class HybridCache(NamedTuple):
+    """zamba2: mamba states for every layer + paged KV per shared-attn call."""
+    ssm: SSMCache
+    attn: PagedKVCache   # leaves stacked over the n_invocations dim
+
+
+class VLMCache(NamedTuple):
+    """llama-vision: paged self-attn KV + static per-request image KV."""
+    self_attn: PagedKVCache       # [L_self, ...]
+    cross_k: jax.Array            # [G, B, T_img, Hkv, D]
+    cross_v: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# allocation
+# ---------------------------------------------------------------------------
+
+
+def alloc_paged(cfg: ArchConfig, dpc: DPCConfig, batch: int, max_pages: int,
+                num_layers: Optional[int] = None, pool_pages: Optional[int] = None,
+                dtype=None, abstract: bool = False):
+    """Paged KV (or MLA latent) cache for ``batch`` requests."""
+    L = num_layers if num_layers is not None else cfg.num_attn_layers
+    P = pool_pages if pool_pages is not None else dpc.pool_pages_per_shard
+    page = dpc.page_size
+    dt = jnp.dtype(dtype or dpc.kv_dtype)
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda s, d: jnp.zeros(s, d))
+    pt = (jax.ShapeDtypeStruct((batch, max_pages), jnp.int32) if abstract
+          else jnp.full((batch, max_pages), -1, jnp.int32))
+    common = dict(
+        page_table=pt,
+        seq_lens=mk((batch,), jnp.int32),
+        append_slot=mk((batch,), jnp.int32),
+    )
+    if cfg.mla is not None:
+        rd = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return MLAPagedCache(
+            latent_pools=mk((L, P, page, rd), dt), **common)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return PagedKVCache(
+        k_pools=mk((L, P, page, hkv, hd), dt),
+        v_pools=mk((L, P, page, hkv, hd), dt), **common)
+
+
+def alloc_ssm(cfg: ArchConfig, batch: int, num_layers: Optional[int] = None,
+              abstract: bool = False):
+    s = cfg.ssm
+    L = num_layers if num_layers is not None else cfg.num_layers
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    d_conv = d_in + 2 * s.state_dim
+    mk = (jax.ShapeDtypeStruct if abstract else jnp.zeros)
+    return SSMCache(
+        conv=mk((L, batch, s.conv_kernel - 1, d_conv), jnp.float32),
+        state=mk((L, batch, h, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+def alloc_rwkv(cfg: ArchConfig, batch: int, abstract: bool = False):
+    s = cfg.ssm
+    L, d = cfg.num_layers, cfg.d_model
+    h = d // s.head_dim
+    mk = (jax.ShapeDtypeStruct if abstract else jnp.zeros)
+    return RWKVCache(
+        tm_shift=mk((L, batch, d), jnp.float32),
+        cm_shift=mk((L, batch, d), jnp.float32),
+        wkv=mk((L, batch, h, s.state_dim, s.head_dim), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# local (single-shard) decode backend
+# ---------------------------------------------------------------------------
+
+
+class LocalBackend:
+    """Append + paged attention entirely against local pools.
+
+    Used by smoke tests and single-replica serving; the DPC distributed
+    backend (core/ship_compute.py) implements the same two methods over the
+    sharded pool with cross-shard LSE combination.
+    """
+
+    def __init__(self, page_table, seq_lens, append_slot, *, impl="auto"):
+        self.page_table = page_table
+        self.seq_lens = seq_lens
+        self.append_slot = append_slot
+        self.impl = impl
+
+    def attend(self, q, k_new, v_new, k_pool, v_pool
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """q: [B, Hq, D]; k_new/v_new: [B, Hkv, D]; pools: [P, page, Hkv, D].
+        Appends the new token then attends over seq_lens+1 tokens.
+        Negative append slots are dropped (inactive/padding requests)."""
+        page = k_pool.shape[1]
+        off = self.seq_lens % page
+        slot = jnp.where(self.append_slot >= 0, self.append_slot,
+                         k_pool.shape[0])
+        k_pool = k_pool.at[slot, off].set(
+            k_new.astype(k_pool.dtype), mode="drop")
+        v_pool = v_pool.at[slot, off].set(
+            v_new.astype(v_pool.dtype), mode="drop")
+        out = dispatch.paged_attention(q, k_pool, v_pool, self.page_table,
+                                       self.seq_lens + 1, impl=self.impl)
+        return out, k_pool, v_pool
+
+    def attend_mla(self, q_latent, q_rope, latent_new, latent_pool, *,
+                   sm_scale=None):
+        """latent_new: [B, R+Dr]; latent_pool: [P, page, R+Dr]."""
+        page = latent_pool.shape[1]
+        off = self.seq_lens % page
+        slot = jnp.where(self.append_slot >= 0, self.append_slot,
+                         latent_pool.shape[0])
+        latent_pool = latent_pool.at[slot, off].set(
+            latent_new.astype(latent_pool.dtype), mode="drop")
+        out = dispatch.mla_paged_attention(
+            q_latent, q_rope, latent_pool, self.page_table,
+            self.seq_lens + 1, impl=self.impl, sm_scale=sm_scale)
+        return out, latent_pool
+
+
+class LocalPageWriter:
+    """Installs prefill KV pages into local pool slots inside the layer scan.
+
+    ``targets``: [B, n_pages] local slot ids (-1 = skip; engine provides the
+    directory-granted slots).  The same writer object serves GQA pools
+    ((k_pool, v_pool) + kv stacked [2, B, S, Hkv, hd]) and MLA latent pools
+    (pool + latents [B, S, RD]).
+    """
+
+    def __init__(self, targets: jax.Array, page_size: int):
+        self.targets = targets
+        self.page_size = page_size
+
+    def _pack(self, kv: jax.Array):
+        """[B, S, ...] -> [B * n_pages, page, ...] (padded to page multiple)."""
+        b, s = kv.shape[:2]
+        page = self.page_size
+        n_pages = self.targets.shape[1]
+        sp = n_pages * page
+        if sp != s:
+            pad = [(0, 0), (0, sp - s)] + [(0, 0)] * (kv.ndim - 2)
+            kv = jnp.pad(kv, pad)
+        return kv.reshape((b * n_pages, page) + kv.shape[2:])
+
+    def _write(self, pool, pages):
+        flat_t = self.targets.reshape(-1)
+        slot = jnp.where(flat_t >= 0, flat_t, pool.shape[0])
+        return pool.at[slot].set(pages.astype(pool.dtype), mode="drop")
+
+    def write(self, pools, kv):
+        if isinstance(pools, tuple):              # GQA (k_pool, v_pool)
+            k_pool, v_pool = pools
+            k_pool = self._write(k_pool, self._pack(kv[0]))
+            v_pool = self._write(v_pool, self._pack(kv[1]))
+            return (k_pool, v_pool)
+        return self._write(pools, self._pack(kv))  # MLA latent pool
+
+
+class DPCPageWriter:
+    """Distributed prefill install: each node writes the granted pages it
+    owns (global target ids; single-copy — exactly one writer per page).
+
+    KV content arrives replicated across the model axis (kv projections are
+    replicated in the DPC serve scheme), sharded over batch rows; the write
+    itself is node-local, so installs cost no fabric traffic beyond the
+    row-local replication already present.
+    """
+
+    def __init__(self, mesh, targets: jax.Array, page_size: int,
+                 pool_pages: int, batch_axes=("pod", "data"),
+                 head_axis="model"):
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core.ship_compute import _my_node
+
+        self.targets = targets
+        self.page_size = page_size
+        dpc_axes = tuple(ax for ax in (*batch_axes, head_axis)
+                         if ax in mesh.axis_names)
+        b_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+        batch_p = (b_axes if len(b_axes) > 1
+                   else (b_axes[0] if b_axes else None))
+        dpc_p = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+        page = page_size
+
+        def write_one(pool, pages, targets):
+            # pages: [B_loc * n_pages, page, ...]; targets: [B_loc, n_pages]
+            me = _my_node(dpc_axes)
+            flat_t = targets.reshape(-1)
+            mine = (flat_t >= 0) & (flat_t // pool_pages == me)
+            slot = jnp.where(mine, flat_t % pool_pages, pool.shape[0])
+            return pool.at[slot].set(pages.astype(pool.dtype), mode="drop")
+
+        def make(nd_pool, nd_pages):
+            return shard_map(
+                write_one, mesh=mesh,
+                in_specs=(P(dpc_p, *([None] * (nd_pool - 1))),
+                          P(batch_p, *([None] * (nd_pages - 1))),
+                          P(batch_p, None)),
+                out_specs=P(dpc_p, *([None] * (nd_pool - 1))),
+                check_rep=False)
+
+        self._write3 = make(3, 3)   # MLA latent pool [P, page, RD]
+        self._write4 = make(4, 4)   # GQA pools [P, page, H, hd]
+
+    def _pack(self, kv: jax.Array):
+        b, s = kv.shape[:2]
+        page = self.page_size
+        n_pages = self.targets.shape[1]
+        sp = n_pages * page
+        if sp != s:
+            pad = [(0, 0), (0, sp - s)] + [(0, 0)] * (kv.ndim - 2)
+            kv = jnp.pad(kv, pad)
+        return kv.reshape((b * n_pages, page) + kv.shape[2:])
+
+    def write(self, pools, kv):
+        if isinstance(pools, tuple):
+            k_pool, v_pool = pools
+            k_pool = self._write4(k_pool, self._pack(kv[0]), self.targets)
+            v_pool = self._write4(v_pool, self._pack(kv[1]), self.targets)
+            return (k_pool, v_pool)
+        return self._write3(pools, self._pack(kv), self.targets)
+
+
+def host_assign_pages(page_table, seq_lens, append_slot, page_size,
+                      new_slots):
+    """Host-side helper: when a request's filling page is full, bind a fresh
+    slot (engine got it from the directory/pool) into the table.
+
+    All arrays are numpy; returns updated (page_table, append_slot).
+    """
+    import numpy as np
+    pt = np.asarray(page_table).copy()
+    sl = np.asarray(seq_lens)
+    ap = np.asarray(append_slot).copy()
+    for b in range(pt.shape[0]):
+        if sl[b] % page_size == 0:  # filling page is exactly full
+            idx = sl[b] // page_size
+            if idx < pt.shape[1] and new_slots[b] >= 0:
+                pt[b, idx] = new_slots[b]
+                ap[b] = new_slots[b]
+    return pt, ap

@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every N layers (weights reused at each invocation; each invocation has its
+own growing KV, cached as DPC pages).
+
+The layer stack is scanned in static segments of ``hybrid_attn_every`` mamba
+layers; the shared block runs between segments.  (Real Zamba2 additionally
+concatenates the original embedding into the shared block input and applies
+per-invocation LoRA — omitted; noted in DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import layers, ssm_mamba2
+from repro.models.cache import HybridCache, LocalBackend, PagedKVCache, SSMCache
+from repro.models.lm import stack_specs
+from repro.models.spec import ParamSpec
+
+
+def hybrid_segments(cfg: ArchConfig) -> List[int]:
+    """Sizes of consecutive mamba segments; shared attn runs after each
+    *full* segment (not after a trailing remainder)."""
+    e = cfg.hybrid_attn_every
+    n_full, rem = divmod(cfg.num_layers, e)
+    return [e] * n_full + ([rem] if rem else [])
+
+
+def n_attn_invocations(cfg: ArchConfig) -> int:
+    return cfg.num_layers // cfg.hybrid_attn_every
+
+
+def _mamba_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln": layers.rms_norm_spec(cfg.d_model),
+        "mamba": ssm_mamba2.mamba2_specs(cfg),
+    }
+
+
+def _shared_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": layers.rms_norm_spec(cfg.d_model),
+        "ln2": layers.rms_norm_spec(cfg.d_model),
+        "attn": layers.gqa_specs(cfg),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_variant,
+                                cfg.param_dtype),
+    }
+
+
+def hybrid_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "embedding": layers.embedding_specs(cfg),
+        "mamba_layers": stack_specs(_mamba_layer_specs(cfg), cfg.num_layers),
+        "shared_attn": _shared_block_specs(cfg),   # ONE block, reused
+        "final_norm": layers.rms_norm_spec(cfg.d_model),
+    }
+
+
+def _shared_fwd(sp, cfg, x, positions):
+    h = sharding.act(layers.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                     ("batch", None, None))
+    attn_out, (k, v) = layers.self_attention_block(sp["attn"], cfg, h,
+                                                   positions)
+    x = x + attn_out
+    h = sharding.act(layers.rms_norm(x, sp["ln2"], cfg.norm_eps),
+                     ("batch", None, None))
+    return x + layers.mlp_apply(sp["mlp"], h, cfg.mlp_variant), (k, v)
+
+
+def _tree_slice(tree, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def forward_hidden(params, cfg: ArchConfig, embeds, positions, *,
+                   collect_kv: bool = False, collect_state: bool = False,
+                   remat: bool = True, pools=None, writer=None):
+    """Returns (hidden, kv [n_invoc, 2, B, S, Hkv, hd] | pools' | None,
+    ssm_states).  With (pools, writer) each shared-attn invocation's KV is
+    installed into its pool slice."""
+    segs = hybrid_segments(cfg)
+    x = embeds
+    kv_all, conv_all, ssd_all = [], [], []
+    ofs = 0
+    for i, seg in enumerate(segs):
+        seg_params = _tree_slice(params["mamba_layers"], ofs, ofs + seg)
+
+        def mamba_body(x, lp):
+            h = layers.rms_norm(x, lp["ln"], cfg.norm_eps)
+            if collect_state:
+                out, (conv, st) = ssm_mamba2.mamba2_forward(
+                    lp["mamba"], cfg, h, return_state=True)
+                return sharding.act(x + out, ("batch", "seq", None)), \
+                    (conv, st)
+            out = x + ssm_mamba2.mamba2_forward(lp["mamba"], cfg, h)
+            return sharding.act(out, ("batch", "seq", None)), None
+
+        body = jax.checkpoint(mamba_body) if remat else mamba_body
+        x, states = jax.lax.scan(body, x, seg_params)
+        if collect_state:
+            conv_all.append(states[0])
+            ssd_all.append(states[1])
+        ofs += seg
+        if seg == cfg.hybrid_attn_every:   # full segment -> shared block
+            x, (k, v) = _shared_fwd(params["shared_attn"], cfg, x, positions)
+            if pools is not None:
+                inv = len(kv_all)
+                new_pool = writer.write((pools[0][inv], pools[1][inv]),
+                                        jnp.stack([k, v]))
+                kv_all.append(new_pool)
+            elif collect_kv:
+                kv_all.append(jnp.stack([k, v]))
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if pools is not None and kv_all:
+        kv = (jnp.stack([p[0] for p in kv_all]),
+              jnp.stack([p[1] for p in kv_all]))
+    else:
+        kv = jnp.stack(kv_all) if (collect_kv and kv_all) else None
+    ssm_states = ((jnp.concatenate(conv_all), jnp.concatenate(ssd_all))
+                  if collect_state else None)
+    return x, kv, ssm_states
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = layers.embed_tokens(params["embedding"], tokens)
+    hidden, _, _ = forward_hidden(params, cfg, x, positions, remat=remat)
+    loss = layers.chunked_lm_loss(hidden, labels, params["embedding"], cfg)
+    return loss, {"ce": loss}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, remat: bool = True,
+            pools=None, writer=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = layers.embed_tokens(params["embedding"], tokens)
+    hidden, kv, states = forward_hidden(params, cfg, x, positions,
+                                        collect_kv=True, collect_state=True,
+                                        remat=remat, pools=pools,
+                                        writer=writer)
+    logits = layers.unembed(params["embedding"], cfg, hidden[:, -1])
+    return logits, kv, states
+
+
+def decode_step(params, cfg: ArchConfig, tokens, positions,
+                cache: HybridCache, backend=None):
+    pc = cache.attn
+    if backend is None:
+        backend = LocalBackend(pc.page_table, pc.seq_lens, pc.append_slot)
+    segs = hybrid_segments(cfg)
+    x1 = layers.embed_tokens(params["embedding"], tokens[:, None])[:, 0]
+
+    new_conv, new_ssd, new_k, new_v = [], [], [], []
+    ofs, inv = 0, 0
+    for seg in segs:
+        seg_params = _tree_slice(params["mamba_layers"], ofs, ofs + seg)
+        conv_seg = cache.ssm.conv[ofs:ofs + seg]
+        ssd_seg = cache.ssm.state[ofs:ofs + seg]
+
+        def mamba_body(x1, xs):
+            lp, conv, st = xs
+            h = layers.rms_norm(x1[:, None], lp["ln"], cfg.norm_eps)[:, 0]
+            out, conv, st = ssm_mamba2.mamba2_decode(lp["mamba"], cfg, h,
+                                                     conv, st)
+            return x1 + out, (conv, st)
+
+        x1, (conv_out, ssd_out) = jax.lax.scan(
+            mamba_body, x1, (seg_params, conv_seg, ssd_seg))
+        new_conv.append(conv_out)
+        new_ssd.append(ssd_out)
+        ofs += seg
+        if seg == cfg.hybrid_attn_every:
+            sp = params["shared_attn"]
+            h = layers.rms_norm(x1[:, None], sp["ln1"], cfg.norm_eps)
+            q, k, v = layers.gqa_project_qkv(sp["attn"], cfg, h,
+                                             positions[:, None])
+            out, kp, vp = backend.attend(q[:, 0], k[:, 0], v[:, 0],
+                                         pc.k_pools[inv], pc.v_pools[inv])
+            x1 = x1 + layers.gqa_output(sp["attn"], out[:, None])[:, 0]
+            h = layers.rms_norm(x1[:, None], sp["ln2"], cfg.norm_eps)
+            x1 = x1 + layers.mlp_apply(sp["mlp"], h, cfg.mlp_variant)[:, 0]
+            new_k.append(kp)
+            new_v.append(vp)
+            inv += 1
+
+    new_cache = HybridCache(
+        ssm=SSMCache(jnp.concatenate(new_conv), jnp.concatenate(new_ssd)),
+        attn=pc._replace(k_pools=jnp.stack(new_k), v_pools=jnp.stack(new_v),
+                         seq_lens=pc.seq_lens + 1))
+    x1 = layers.rms_norm(x1[:, None], params["final_norm"],
+                         cfg.norm_eps)[:, 0]
+    logits = layers.unembed(params["embedding"], cfg, x1)
+    return logits, new_cache

@@ -1,0 +1,251 @@
+"""Common transformer building blocks (pure JAX, spec-tree style)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import dispatch
+from repro.models.spec import ParamSpec, pad_to_multiple
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), ("embed",), init="ones", dtype="float32")
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """qk-norm: normalize over the head_dim (last axis), scale: [head_dim]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (llama-style half rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, variant: str,
+              dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    if variant == "swiglu":
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype),
+        }
+    # squared_relu / gelu: two matrices
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def mlp_apply(params: Dict[str, jax.Array], x: jax.Array, variant: str) -> jax.Array:
+    # The hidden is pinned seq-UNSHARDED / ffn-sharded: under sequence
+    # parallelism XLA otherwise resolves the x(seq-sharded) x w(ffn-sharded)
+    # conflict by fully replicating the (huge) weights instead of gathering
+    # the activations — EXPERIMENTS.md §Perf iteration B2.
+    from repro import sharding as shardlib
+
+    def pin(h):
+        return shardlib.act(h, ("batch",) + (None,) * (h.ndim - 2) + ("mlp",))
+
+    if variant == "swiglu":
+        g = pin(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+        u = pin(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif variant == "squared_relu":
+        u = pin(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        r = jax.nn.relu(u.astype(jnp.float32))
+        h = (r * r).astype(x.dtype)
+    elif variant == "gelu":
+        u = pin(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(variant)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=shardlib.tp_dot_dtype())
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    specs = {
+        "w_q": ParamSpec((d, hq, hd), ("embed", "heads", None), dt),
+        "w_k": ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), dt),
+        "w_v": ParamSpec((d, hkv, hd), ("embed", "kv_heads", None), dt),
+        "w_o": ParamSpec((hq, hd, d), ("heads", None, "embed"), dt, fan_in=hq * hd),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), (None,), "float32", init="ones")
+        specs["k_norm"] = ParamSpec((hd,), (None,), "float32", init="ones")
+    return specs
+
+
+def gqa_project_qkv(params, cfg: ArchConfig, x: jax.Array,
+                    positions: jax.Array, *, rope: bool = True):
+    """x: [B, S, D] -> q [B,S,Hq,hd], k/v [B,S,Hkv,hd] (rope+norm applied).
+
+    Under sequence parallelism the projections consume seq-sharded x; the
+    attention itself needs the full key sequence, so q/k/v are explicitly
+    constrained seq-UNSHARDED here — one all-gather per layer at this
+    boundary instead of XLA re-gathering inside every attention tile
+    iteration (a 2080x blowup observed in the 32k dry-run; EXPERIMENTS.md
+    §Perf iteration A1)."""
+    from repro import sharding as shardlib
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shardlib.act(q, ("batch", None, "heads", None))
+    k = shardlib.act(k, ("batch", None, "kv_heads", None))
+    v = shardlib.act(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def gqa_output(params, attn: jax.Array) -> jax.Array:
+    """attn: [B, S, Hq, hd] -> [B, S, D]."""
+    from repro import sharding as shardlib
+    return jnp.einsum("bshk,hkd->bsd", attn, params["w_o"],
+                      preferred_element_type=shardlib.tp_dot_dtype())
+
+
+def self_attention_block(params, cfg: ArchConfig, x: jax.Array,
+                         positions: jax.Array, *, causal: bool = True):
+    """Full prefill/train self-attention; returns (out, (k, v)) for caching."""
+    q, k, v = gqa_project_qkv(params, cfg, x, positions)
+    attn = dispatch.flash_attention(q, k, v, causal=causal)
+    return gqa_output(params, attn), (k, v)
+
+
+def cross_attention_block(params, cfg: ArchConfig, x: jax.Array,
+                          kv_embeds: jax.Array):
+    """Cross-attn against precomputed (image) embeddings [B, T, D]."""
+    b, s, _ = x.shape
+    zero_pos = jnp.zeros((b, s), jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("btd,dhk->bthk", kv_embeds, params["w_k"])
+    v = jnp.einsum("btd,dhk->bthk", kv_embeds, params["w_v"])
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    del zero_pos
+    attn = dispatch.flash_attention(q, k, v, causal=False)
+    return gqa_output(params, attn)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    v = pad_to_multiple(cfg.vocab_size, 128)
+    specs = {"tok_embed": ParamSpec((v, cfg.d_model), ("vocab", "embed"),
+                                    cfg.param_dtype, fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, v), ("embed", "vocab"),
+                                     cfg.param_dtype)
+    return specs
+
+
+def embed_tokens(params, tokens: jax.Array) -> jax.Array:
+    return params["tok_embed"][tokens]
+
+
+def unembed(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["tok_embed"])
+    return jnp.einsum("...d,dv->...v", x, params["unembed"])
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          true_vocab: int) -> jax.Array:
+    """Mean CE over tokens; logits may be vocab-padded (padded ids masked)."""
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if v > true_vocab:
+        pad_mask = jnp.arange(v) >= true_vocab
+        lf = jnp.where(pad_mask, -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def chunked_lm_loss(x: jax.Array, labels: jax.Array, params, cfg: ArchConfig,
+                    *, chunk: int = 1024) -> jax.Array:
+    """CE computed in sequence chunks to bound the [*, vocab] logits buffer."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = (s + chunk - 1) // chunk
+    sp = n * chunk
+    xp = jnp.pad(x, ((0, 0), (0, sp - s), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, sp - s)))
+    valid = jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, sp - s)))
+    xc = xp.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = lp.reshape(b, n, chunk).swapaxes(0, 1)
+    vc = valid.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def step(acc, inp):
+        from repro import sharding as shardlib
+        xi, li, vi = inp
+        # vocab-sharded logits want seq-unsharded inputs (see mlp_apply note)
+        xi = shardlib.act(xi, ("batch", None, None))
+        logits = shardlib.act(unembed(params, cfg, xi),
+                              ("batch", None, "vocab"))
+        v = logits.shape[-1]
+        lf = logits.astype(jnp.float32)
+        if v > cfg.vocab_size:
+            lf = jnp.where(jnp.arange(v) >= cfg.vocab_size, -1e30, lf)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        picked = jnp.take_along_axis(lf, li[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - picked) * vi), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc, vc))
+    return total / (b * s)

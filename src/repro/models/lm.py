@@ -1,0 +1,402 @@
+"""Generic decoder-only LM: dense / MoE / MLA / audio / RWKV stacks.
+
+One scan-over-layers per homogeneous segment (e.g. DeepSeek = 1 dense-FFN
+layer + 26 MoE layers = two segments), with per-layer params stacked on a
+leading ``layers`` dim.  Prefill emits the KV page content per attention
+layer (k/v or MLA latents) as scan outputs; decode threads paged pools
+through the scan as xs/ys and calls the attention backend per layer.
+
+The audio family (MusicGen) embeds the sum of K codebook tokens and predicts
+K vocab heads; its frontend (EnCodec) is stubbed per the brief.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.kernels import dispatch
+from repro.models import layers, mla, moe, rwkv6
+from repro.models.cache import LocalBackend, MLAPagedCache, PagedKVCache, RWKVCache
+from repro.models.spec import ParamSpec, is_spec_leaf, pad_to_multiple
+
+# ---------------------------------------------------------------------------
+# segments & specs
+# ---------------------------------------------------------------------------
+
+
+class Segment(NamedTuple):
+    kind: str       # attn_dense | attn_moe | rwkv
+    count: int
+
+
+def lm_segments(cfg: ArchConfig) -> List[Segment]:
+    if cfg.block_kind == "rwkv6":
+        return [Segment("rwkv", cfg.num_layers)]
+    assert cfg.block_kind == "attn"
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        return [Segment("attn_dense", cfg.moe.first_dense_layers),
+                Segment("attn_moe",
+                        cfg.num_layers - cfg.moe.first_dense_layers)]
+    if cfg.moe is not None:
+        return [Segment("attn_moe", cfg.num_layers)]
+    return [Segment("attn_dense", cfg.num_layers)]
+
+
+def stack_specs(per_layer, count: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((count,) + s.shape, ("layers",) + s.logical_axes,
+                            s.dtype, s.init, s.fan_in),
+        per_layer, is_leaf=is_spec_leaf)
+
+
+def _attn_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    if cfg.mla is not None:
+        return mla.mla_specs(cfg)
+    return layers.gqa_specs(cfg)
+
+
+def _layer_specs(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {
+            "ln1": layers.rms_norm_spec(d),
+            "ln2": layers.rms_norm_spec(d),
+            "tm": rwkv6.rwkv6_timemix_specs(cfg),
+            "cm": rwkv6.rwkv6_channelmix_specs(cfg),
+        }
+    specs = {
+        "ln1": layers.rms_norm_spec(d),
+        "ln2": layers.rms_norm_spec(d),
+        "attn": _attn_specs(cfg),
+    }
+    if kind == "attn_moe":
+        specs["moe"] = moe.moe_specs(cfg)
+    else:
+        ffn = (cfg.moe.dense_ffn if cfg.moe is not None and cfg.moe.dense_ffn
+               else cfg.d_ff)
+        specs["mlp"] = layers.mlp_specs(d, ffn, cfg.mlp_variant,
+                                        cfg.param_dtype)
+    return specs
+
+
+def _embedding_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    if cfg.family == "audio" and cfg.audio is not None:
+        a = cfg.audio
+        v = pad_to_multiple(a.codebook_size, 128)
+        return {
+            "code_embed": ParamSpec((a.num_codebooks, v, cfg.d_model),
+                                    ("codebooks", "vocab", "embed"),
+                                    cfg.param_dtype, fan_in=cfg.d_model),
+            "code_unembed": ParamSpec((a.num_codebooks, cfg.d_model, v),
+                                      ("codebooks", "embed", "vocab"),
+                                      cfg.param_dtype),
+        }
+    return layers.embedding_specs(cfg)
+
+
+def lm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    segs = lm_segments(cfg)
+    return {
+        "embedding": _embedding_specs(cfg),
+        "segments": [stack_specs(_layer_specs(cfg, s.kind), s.count)
+                     for s in segs],
+        "final_norm": layers.rms_norm_spec(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed(params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: [B, S] (LM) or [B, K, S] (audio codes)."""
+    emb = params["embedding"]
+    if cfg.family == "audio" and cfg.audio is not None:
+        # sum of codebook embeddings
+        k = cfg.audio.num_codebooks
+        parts = [emb["code_embed"][i][tokens[:, i]] for i in range(k)]
+        return functools.reduce(jnp.add, parts)
+    return layers.embed_tokens(emb, tokens)
+
+
+def logits_head(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: [..., D] -> [..., V] (LM) or [..., K, V] (audio)."""
+    emb = params["embedding"]
+    if cfg.family == "audio" and cfg.audio is not None:
+        return jnp.einsum("...d,kdv->...kv", x, emb["code_unembed"])
+    return layers.unembed(emb, cfg, x)
+
+
+def lm_loss(params, cfg: ArchConfig, hidden: jax.Array, labels: jax.Array
+            ) -> jax.Array:
+    if cfg.family == "audio" and cfg.audio is not None:
+        logits = logits_head(params, cfg, hidden)        # [B,S,K,V]
+        lf = logits.astype(jnp.float32)
+        v = lf.shape[-1]
+        if v > cfg.audio.codebook_size:
+            lf = jnp.where(jnp.arange(v) >= cfg.audio.codebook_size,
+                           -1e30, lf)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        lab = labels.transpose(0, 2, 1)                  # [B,S,K]
+        picked = jnp.take_along_axis(lf, lab[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - picked)
+    return layers.chunked_lm_loss(hidden, labels, params["embedding"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_fwd(lp, cfg: ArchConfig, x, positions, kind: str):
+    """Returns (x', kv_pages, aux).
+
+    Norm outputs are pinned seq-unsharded (Megatron-SP boundary): the norm
+    runs on the seq-sharded residual, the gather moves bf16 activations, and
+    the projection weights stay sharded (§Perf iteration B3)."""
+    h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h = sharding.act(h, ("batch", None, None))
+    if cfg.mla is not None:
+        attn_out, latent = mla.mla_prefill_attention(lp["attn"], cfg, h,
+                                                     positions)
+        kv = latent                                          # [B,S,R+Dr]
+    else:
+        attn_out, (k, v) = layers.self_attention_block(lp["attn"], cfg, h,
+                                                       positions)
+        kv = jnp.stack([k, v])                               # [2,B,S,Hkv,hd]
+    x = x + attn_out
+    h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    h = sharding.act(h, ("batch", None, None))
+    if kind == "attn_moe":
+        ffn_out, aux = moe.moe_apply(lp["moe"], cfg, h)
+    else:
+        ffn_out = layers.mlp_apply(lp["mlp"], h, cfg.mlp_variant)
+        aux = jnp.zeros((), jnp.float32)
+    out = sharding.act(x + ffn_out, ("batch", "seq", None))
+    return out, kv, aux
+
+
+def _rwkv_layer_fwd(lp, cfg: ArchConfig, x):
+    h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + rwkv6.rwkv6_timemix(lp["tm"], cfg, h)
+    h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + rwkv6.rwkv6_channelmix(lp["cm"], h)
+    return sharding.act(x, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params, cfg: ArchConfig, embeds: jax.Array,
+                   positions: jax.Array, *, collect_kv: bool = False,
+                   remat: bool = True, pools=None, writer=None):
+    """embeds: [B, S, D] -> (hidden [B, S, D], kv_or_pools, aux_sum).
+
+    Without pools: kv_pages [L_attn, 2, B, S, Hkv, hd] (GQA) /
+    [L, B, S, R+Dr] (MLA) / None (rwkv).
+    With (pools, writer): each layer's KV is *streamed into the page pools*
+    inside the scan (never materialized across layers) and the updated pools
+    come back in kv's place — the prefill install path.
+    """
+    segs = lm_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    kv_all = []
+    pools_all = []
+    x = embeds
+    is_mla = cfg.mla is not None
+    ofs = 0
+
+    for seg, seg_params in zip(segs, params["segments"]):
+        if seg.kind == "rwkv":
+            def rwkv_body(x, lp):
+                return _rwkv_layer_fwd(lp, cfg, x), None
+            body = jax.checkpoint(rwkv_body) if remat else rwkv_body
+            x, _ = jax.lax.scan(body, x, seg_params)
+            continue
+
+        if pools is not None:
+            sl = slice(ofs, ofs + seg.count)
+            pools_seg = (pools[sl] if is_mla
+                         else (pools[0][sl], pools[1][sl]))
+
+            def attn_install_body(carry, xs, kind=seg.kind):
+                x, aux = carry
+                lp, pool_l = xs
+                x, kv, a = _attn_layer_fwd(lp, cfg, x, positions, kind)
+                pool_l = writer.write(pool_l, kv)
+                return (x, aux + a), pool_l
+
+            (x, aux_total), pools_out = jax.lax.scan(
+                attn_install_body, (x, aux_total), (seg_params, pools_seg))
+            pools_all.append(pools_out)
+            ofs += seg.count
+            continue
+
+        def attn_body(carry, lp, kind=seg.kind):
+            x, aux = carry
+            x, kv, a = _attn_layer_fwd(lp, cfg, x, positions, kind)
+            return (x, aux + a), kv if collect_kv else None
+
+        body = jax.checkpoint(attn_body) if remat else attn_body
+        (x, aux_total), kv_seg = jax.lax.scan(body, (x, aux_total),
+                                              seg_params)
+        if collect_kv:
+            kv_all.append(kv_seg)
+        ofs += seg.count
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if pools is not None and pools_all:
+        if is_mla:
+            out_pools = jnp.concatenate(pools_all, axis=0)
+        else:
+            out_pools = (jnp.concatenate([p[0] for p in pools_all], axis=0),
+                         jnp.concatenate([p[1] for p in pools_all], axis=0))
+        return x, out_pools, aux_total
+    kv = jnp.concatenate(kv_all, axis=0) if kv_all else None
+    return x, kv, aux_total
+
+
+def train_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+               *, remat: bool = True) -> Tuple[jax.Array, Dict]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    b = tokens.shape[0]
+    s = tokens.shape[-1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = sharding.act(embed(params, cfg, tokens), ("batch", "seq", None))
+    hidden, _, aux = forward_hidden(params, cfg, x, positions, remat=remat)
+    loss = lm_loss(params, cfg, hidden, labels)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, remat: bool = True, pools=None, writer=None):
+    """Returns (last-token logits, kv pages — or the updated pools when an
+    install writer is provided)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    s = tokens.shape[-1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = sharding.act(embed(params, cfg, tokens), ("batch", "seq", None))
+    hidden, kv, _ = forward_hidden(params, cfg, x, positions,
+                                   collect_kv=cfg.block_kind == "attn",
+                                   remat=remat, pools=pools, writer=writer)
+    logits = logits_head(params, cfg, hidden[:, -1])
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_decode(lp, cfg: ArchConfig, x1, positions, kind: str,
+                       backend, pools):
+    """x1: [B, D].  pools: per-layer cache slice.  Returns (x1', pools')."""
+    h = layers.rms_norm(x1[:, None], lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        latent_pool = pools
+        ql, qr = mla.mla_decode_q(lp["attn"], cfg, h[:, 0], positions)
+        latent_new = mla.latent_from_x(lp["attn"], cfg, h,
+                                       positions[:, None])[:, 0]
+        o_lat, latent_pool = backend.attend_mla(
+            ql, qr, latent_new, latent_pool, sm_scale=mla.mla_sm_scale(cfg))
+        attn_out = mla.mla_decode_out(lp["attn"], o_lat)
+        pools = latent_pool
+    else:
+        k_pool, v_pool = pools
+        q, k, v = layers.gqa_project_qkv(lp["attn"], cfg, h,
+                                         positions[:, None])
+        out, k_pool, v_pool = backend.attend(q[:, 0], k[:, 0], v[:, 0],
+                                             k_pool, v_pool)
+        attn_out = layers.gqa_output(lp["attn"], out[:, None])[:, 0]
+        pools = (k_pool, v_pool)
+    x1 = x1 + attn_out
+    h = layers.rms_norm(x1[:, None], lp["ln2"], cfg.norm_eps)
+    if kind == "attn_moe":
+        ffn_out, _ = moe.moe_apply(lp["moe"], cfg, h)
+    else:
+        ffn_out = layers.mlp_apply(lp["mlp"], h, cfg.mlp_variant)
+    return x1 + ffn_out[:, 0], pools
+
+
+def _rwkv_layer_decode(lp, cfg: ArchConfig, x1, state):
+    tm_shift, cm_shift, wkv = state
+    h = layers.rms_norm(x1[:, None], lp["ln1"], cfg.norm_eps)[:, 0]
+    o, tm_shift, wkv = rwkv6.rwkv6_timemix_decode(lp["tm"], cfg, h,
+                                                  tm_shift, wkv)
+    x1 = x1 + o
+    h = layers.rms_norm(x1[:, None], lp["ln2"], cfg.norm_eps)[:, 0]
+    o, cm_shift = rwkv6.rwkv6_channelmix_decode(lp["cm"], h, cm_shift)
+    return x1 + o, (tm_shift, cm_shift, wkv)
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
+                positions: jax.Array, cache, backend=None):
+    """One decode token.
+
+    tokens: [B] (LM) or [B, K] (audio); positions: [B].
+    cache: PagedKVCache / MLAPagedCache / RWKVCache.
+    Returns (logits, cache').
+    """
+    if backend is None and not isinstance(cache, RWKVCache):
+        backend = LocalBackend(cache.page_table, cache.seq_lens,
+                               cache.append_slot)
+    segs = lm_segments(cfg)
+    if cfg.family == "audio" and cfg.audio is not None:
+        x1 = embed(params, cfg, tokens[..., None])[:, 0]
+    else:
+        x1 = embed(params, cfg, tokens[:, None])[:, 0]
+
+    if cfg.block_kind == "rwkv6":
+        def body(x1, xs):
+            lp, st = xs
+            x1, st = _rwkv_layer_decode(lp, cfg, x1, st)
+            return x1, st
+        x1, (tm, cm, wkv) = jax.lax.scan(
+            body, x1, (params["segments"][0],
+                       (cache.tm_shift, cache.cm_shift, cache.wkv)))
+        new_cache = RWKVCache(tm, cm, wkv)
+    else:
+        is_mla = cfg.mla is not None
+        layer_ofs = 0
+        new_pools = []
+        for seg, seg_params in zip(segs, params["segments"]):
+            sl = slice(layer_ofs, layer_ofs + seg.count)
+            if is_mla:
+                pools_seg = cache.latent_pools[sl]
+            else:
+                pools_seg = (cache.k_pools[sl], cache.v_pools[sl])
+
+            def body(x1, xs, kind=seg.kind):
+                lp, pools = xs
+                x1, pools = _attn_layer_decode(lp, cfg, x1, positions, kind,
+                                               backend, pools)
+                return x1, pools
+
+            x1, pools_out = jax.lax.scan(body, x1, (seg_params, pools_seg))
+            new_pools.append(pools_out)
+            layer_ofs += seg.count
+
+        if is_mla:
+            lat = jnp.concatenate(new_pools, axis=0)
+            new_cache = cache._replace(latent_pools=lat,
+                                       seq_lens=cache.seq_lens + 1)
+        else:
+            kp = jnp.concatenate([p[0] for p in new_pools], axis=0)
+            vp = jnp.concatenate([p[1] for p in new_pools], axis=0)
+            new_cache = cache._replace(k_pools=kp, v_pools=vp,
+                                       seq_lens=cache.seq_lens + 1)
+
+    x1 = layers.rms_norm(x1[:, None], params["final_norm"],
+                         cfg.norm_eps)[:, 0]
+    logits = logits_head(params, cfg, x1)
+    return logits, new_cache

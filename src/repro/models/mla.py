@@ -1,0 +1,128 @@
+"""DeepSeek-style Multi-head Latent Attention (paper's own DeepSeek workload).
+
+The KV cache entry per token is the *compressed latent* [R + Dr] — 4–8x
+smaller than GQA KV — which is exactly what makes MLA the best-case DPC
+architecture: remote page fetches ship the latent, and the absorbed decode
+attends directly in latent space (w_uk folded into q, w_uv applied after).
+
+Prefill caches pages of latents; decode uses the absorbed form so remote
+pages are consumed without expansion.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import dispatch
+from repro.models import layers
+from repro.models.spec import ParamSpec
+
+
+def mla_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    c = cfg.mla
+    d, h, dt = cfg.d_model, cfg.num_heads, cfg.param_dtype
+    qd = c.qk_nope_head_dim + c.qk_rope_head_dim
+    specs = {
+        "w_dkv": ParamSpec((d, c.kv_lora_rank + c.qk_rope_head_dim),
+                           ("embed", "kv_lora"), dt),
+        "latent_norm": ParamSpec((c.kv_lora_rank,), (None,), "float32",
+                                 init="ones"),
+        "w_uk": ParamSpec((c.kv_lora_rank, h, c.qk_nope_head_dim),
+                          ("kv_lora", "heads", None), dt),
+        "w_uv": ParamSpec((c.kv_lora_rank, h, c.v_head_dim),
+                          ("kv_lora", "heads", None), dt),
+        "w_o": ParamSpec((h, c.v_head_dim, d), ("heads", None, "embed"), dt,
+                         fan_in=h * c.v_head_dim),
+    }
+    if c.q_lora_rank:
+        specs["w_dq"] = ParamSpec((d, c.q_lora_rank), ("embed", "q_lora"), dt)
+        specs["q_norm"] = ParamSpec((c.q_lora_rank,), (None,), "float32",
+                                    init="ones")
+        specs["w_uq"] = ParamSpec((c.q_lora_rank, h, qd),
+                                  ("q_lora", "heads", None), dt)
+    else:
+        specs["w_q"] = ParamSpec((d, h, qd), ("embed", "heads", None), dt)
+    return specs
+
+
+def _project_q(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: [B, S, D] -> q [B, S, H, nope+rope]."""
+    c = cfg.mla
+    if c.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+        cq = layers.rms_norm(cq, params["q_norm"], cfg.norm_eps)
+        return jnp.einsum("bsr,rhq->bshq", cq, params["w_uq"])
+    return jnp.einsum("bsd,dhq->bshq", x, params["w_q"])
+
+
+def mla_sm_scale(cfg: ArchConfig) -> float:
+    c = cfg.mla
+    return float((c.qk_nope_head_dim + c.qk_rope_head_dim) ** -0.5)
+
+
+def latent_from_x(params, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """The cacheable per-token latent: [B, S, R+Dr] (normed latent ‖ roped k)."""
+    c = cfg.mla
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    lat = layers.rms_norm(ckv[..., :c.kv_lora_rank], params["latent_norm"],
+                          cfg.norm_eps)
+    k_rope = ckv[..., None, c.kv_lora_rank:]                     # [B,S,1,Dr]
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return jnp.concatenate([lat, k_rope], axis=-1)
+
+
+def mla_prefill_attention(params, cfg: ArchConfig, x: jax.Array,
+                          positions: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Full (non-absorbed) MLA attention for train/prefill.
+
+    Returns (out [B, S, D], latent pages [B, S, R+Dr] for the cache).
+    """
+    c = cfg.mla
+    b, s, _ = x.shape
+    q = _project_q(params, cfg, x)                               # [B,S,H,qd]
+    q_nope = q[..., :c.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., c.qk_nope_head_dim:], positions,
+                               cfg.rope_theta)
+
+    latent = latent_from_x(params, cfg, x, positions)            # [B,S,R+Dr]
+    lat, k_rope = (latent[..., :c.kv_lora_rank],
+                   latent[..., c.kv_lora_rank:])
+    k_nope = jnp.einsum("bsr,rhn->bshn", lat, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", lat, params["w_uv"])
+
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, cfg.num_heads, c.qk_rope_head_dim))
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kfull = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # seq-unsharded at the attention boundary (see layers.gqa_project_qkv)
+    from repro import sharding as shardlib
+    qfull = shardlib.act(qfull, ("batch", None, "heads", None))
+    kfull = shardlib.act(kfull, ("batch", None, "heads", None))
+    v = shardlib.act(v, ("batch", None, "heads", None))
+    attn = dispatch.flash_attention(qfull, kfull, v, causal=True)
+    out = jnp.einsum("bshv,hvd->bsd", attn, params["w_o"])
+    return out, latent
+
+
+def mla_decode_q(params, cfg: ArchConfig, x1: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Absorbed decode queries.  x1: [B, D] -> (q_latent [B,H,R], q_rope)."""
+    c = cfg.mla
+    q = _project_q(params, cfg, x1[:, None])                     # [B,1,H,qd]
+    q_nope = q[..., :c.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., c.qk_nope_head_dim:],
+                               positions[:, None], cfg.rope_theta)
+    q_latent = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"])
+    return q_latent[:, 0], q_rope[:, 0]
+
+
+def mla_decode_out(params, o_latent: jax.Array) -> jax.Array:
+    """o_latent: [B, H, R] -> [B, D]."""
+    o = jnp.einsum("bhr,rhv->bhv", o_latent, params["w_uv"])
+    return jnp.einsum("bhv,hvd->bd", o, params["w_o"])

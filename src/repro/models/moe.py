@@ -1,0 +1,143 @@
+"""Mixture-of-experts FFN block (capacity-based top-k, scatter dispatch).
+
+Expert-parallel layout: expert weights are stacked [E, ...] with the expert
+dim sharded over the ``model`` mesh axis (EP folded into TP); activations are
+replicated across ``model``, so dispatch needs *no* token all_to_all — each
+model shard computes the experts it owns and the per-token combine is summed
+by the out-projection reduction like a TP MLP.
+
+Dispatch is index-based (scatter into [E, cap, D] buffers), not the one_hot
+einsum (whose [T, E, cap] dispatch tensor is quadratically larger).
+Overflowing tokens beyond expert capacity are dropped (standard).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import layers
+from repro.models.spec import ParamSpec, pad_to_multiple
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.param_dtype
+    e, f = m.num_experts, m.expert_ffn
+    specs = {
+        "w_router": ParamSpec((d, e), ("embed", None), "float32"),
+        "we_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dt),
+        "we_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dt),
+        "we_down": ParamSpec((e, f, d), ("experts", "mlp", "embed"), dt,
+                             fan_in=f),
+    }
+    if m.num_shared_experts:
+        fs = m.shared_expert_ffn * m.num_shared_experts
+        specs.update({
+            "ws_gate": ParamSpec((d, fs), ("embed", "mlp"), dt),
+            "ws_up": ParamSpec((d, fs), ("embed", "mlp"), dt),
+            "ws_down": ParamSpec((fs, d), ("mlp", "embed"), dt),
+        })
+    return specs
+
+
+def expert_capacity(m: MoEConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return pad_to_multiple(max(cap, 4), 4)
+
+
+def moe_apply(params, cfg: ArchConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [..., D] -> (out [..., D], aux_loss scalar)."""
+    m = cfg.moe
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    t = xf.shape[0]
+    e, k = m.num_experts, m.top_k
+    cap = expert_capacity(m, t)
+
+    # --- routing (float32 router, softmax over experts, renormalized top-k)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["w_router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    top_p, top_i = jax.lax.top_k(probs, k)                      # [T, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32),
+                       axis=0)
+    prob_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * prob_mean) * m.router_aux_loss
+
+    # --- dispatch: position of each (token, k) in its expert's queue
+    flat_e = top_i.reshape(-1)                                  # [T*K]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # [T*K, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot                   # pos before me
+    pos = jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]    # [T*K]
+    keep = (pos < cap).reshape(t, k)
+    slot_e = jnp.where(keep, top_i, e)                          # overflow slot
+    slot_c = jnp.where(keep, pos.reshape(t, k), 0)
+
+    # scatter tokens per routing slot WITHOUT materializing x repeated K
+    # times ([T*K, D] at 32k tokens is GBs); K static scatters instead
+    buf = jnp.zeros((e + 1, cap, d), x.dtype)
+    for i in range(k):
+        buf = buf.at[slot_e[:, i], slot_c[:, i]].add(xf)
+    buf = buf[:e]                                               # [E, cap, D]
+
+    # --- expert FFN (swiglu), expert dim sharded over `model`
+    g = jnp.einsum("ecd,edf->ecf", buf, params["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["we_down"])  # [E, cap, D]
+
+    # --- combine: gather each (token, k) result, weight by router prob;
+    # again one [T, D] gather per k instead of a [T*K, D] buffer
+    y = jnp.zeros((t, d), x.dtype)
+    for i in range(k):
+        w_i = (keep[:, i].astype(x.dtype)
+               * top_p[:, i].astype(x.dtype))[:, None]
+        y = y + out_buf[jnp.minimum(slot_e[:, i], e - 1),
+                        slot_c[:, i]] * w_i
+
+    # --- shared experts (dense, always-on)
+    if m.num_shared_experts:
+        gs = jnp.einsum("td,df->tf", xf, params["ws_gate"])
+        us = jnp.einsum("td,df->tf", xf, params["ws_up"])
+        hs = jax.nn.silu(gs.astype(jnp.float32)).astype(x.dtype) * us
+        y = y + jnp.einsum("tf,fd->td", hs, params["ws_down"])
+
+    return y.reshape(*lead, d), aux
+
+
+def moe_apply_dense_oracle(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """No-capacity oracle (every token sees its full top-k): test reference."""
+    m = cfg.moe
+    lead, d = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["w_router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def one_expert(eid):
+        g = xf @ params["we_gate"][eid]
+        u = xf @ params["we_up"][eid]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return h @ params["we_down"][eid]
+
+    all_out = jax.vmap(one_expert)(jnp.arange(m.num_experts))   # [E, T, D]
+    sel = jnp.take_along_axis(
+        all_out.transpose(1, 0, 2), top_i[..., None], axis=1)   # [T, K, D]
+    y = (sel * top_p[..., None].astype(x.dtype)).sum(axis=1)
+    if m.num_shared_experts:
+        gs = xf @ params["ws_gate"]
+        us = xf @ params["ws_up"]
+        hs = jax.nn.silu(gs.astype(jnp.float32)).astype(x.dtype) * us
+        y = y + hs @ params["ws_down"]
+    return y.reshape(*lead, d)

@@ -1,0 +1,156 @@
+"""Uniform model API over the 10 assigned architectures.
+
+Every family exposes the same five entry points; the training loop, serving
+engine, dry-run and benchmarks are family-agnostic:
+
+    specs(cfg)                              parameter spec tree
+    train_loss(params, cfg, batch)          -> (loss, metrics)
+    prefill(params, cfg, batch)             -> (last logits, kv, extra)
+    decode_step(params, cfg, tok, pos, cache, backend) -> (logits, cache')
+    init_cache(cfg, dpc, batch, max_pages)  decode cache pytree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, DPCConfig
+from repro.models import cache as cache_lib
+from repro.models import hybrid as hybrid_mod
+from repro.models import lm as lm_mod
+from repro.models import vlm as vlm_mod
+from repro.models.cache import (HybridCache, MLAPagedCache, PagedKVCache,
+                                RWKVCache, VLMCache)
+
+
+class ModelAPI(NamedTuple):
+    family: str
+    specs: Callable[[ArchConfig], Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+# ---------------------------------------------------------------------------
+# cache factories
+# ---------------------------------------------------------------------------
+
+
+def _init_cache_lm(cfg: ArchConfig, dpc: DPCConfig, batch: int,
+                   max_pages: int, *, pool_pages=None, abstract=False):
+    if cfg.block_kind == "rwkv6":
+        return cache_lib.alloc_rwkv(cfg, batch, abstract=abstract)
+    return cache_lib.alloc_paged(cfg, dpc, batch, max_pages,
+                                 pool_pages=pool_pages, abstract=abstract)
+
+
+def _init_cache_hybrid(cfg: ArchConfig, dpc: DPCConfig, batch: int,
+                       max_pages: int, *, pool_pages=None, abstract=False):
+    n_inv = hybrid_mod.n_attn_invocations(cfg)
+    return HybridCache(
+        ssm=cache_lib.alloc_ssm(cfg, batch, abstract=abstract),
+        attn=cache_lib.alloc_paged(cfg, dpc, batch, max_pages,
+                                   num_layers=n_inv, pool_pages=pool_pages,
+                                   abstract=abstract))
+
+
+def _init_cache_vlm(cfg: ArchConfig, dpc: DPCConfig, batch: int,
+                    max_pages: int, *, pool_pages=None, abstract=False):
+    g, n_self = vlm_mod.vlm_groups(cfg)
+    t = cfg.vision.num_image_tokens
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(dpc.kv_dtype)
+    mk = (jax.ShapeDtypeStruct if abstract else jnp.zeros)
+    return VLMCache(
+        self_attn=cache_lib.alloc_paged(cfg, dpc, batch, max_pages,
+                                        num_layers=g * n_self,
+                                        pool_pages=pool_pages,
+                                        abstract=abstract),
+        cross_k=mk((g, batch, t, hkv, hd), dt),
+        cross_v=mk((g, batch, t, hkv, hd), dt))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def _lm_api(family: str) -> ModelAPI:
+    return ModelAPI(family, lm_mod.lm_specs, lm_mod.train_loss,
+                    lm_mod.prefill, lm_mod.decode_step, _init_cache_lm)
+
+
+_API: Dict[str, ModelAPI] = {
+    "dense": _lm_api("dense"),
+    "moe": _lm_api("moe"),
+    "audio": _lm_api("audio"),
+    "ssm": _lm_api("ssm"),
+    "vlm": ModelAPI("vlm", vlm_mod.vlm_specs, vlm_mod.train_loss,
+                    vlm_mod.prefill, vlm_mod.decode_step, _init_cache_vlm),
+    "hybrid": ModelAPI("hybrid", hybrid_mod.hybrid_specs,
+                       hybrid_mod.train_loss, hybrid_mod.prefill,
+                       hybrid_mod.decode_step, _init_cache_hybrid),
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    return _API[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# batch construction (concrete + abstract "input_specs" for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def train_batch_spec(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+    if cfg.family == "audio" and cfg.audio is not None:
+        k = cfg.audio.num_codebooks
+        return {"tokens": tok((batch, k, seq)), "labels": tok((batch, k, seq))}
+    spec = {"tokens": tok((batch, seq)), "labels": tok((batch, seq))}
+    if cfg.family == "vlm":
+        spec["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision.num_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.activation_dtype))
+    return spec
+
+
+def prefill_batch_spec(cfg: ArchConfig, batch: int, seq: int):
+    spec = train_batch_spec(cfg, batch, seq)
+    del spec["labels"]
+    return spec
+
+
+def decode_token_spec(cfg: ArchConfig, batch: int):
+    if cfg.family == "audio" and cfg.audio is not None:
+        return jax.ShapeDtypeStruct((batch, cfg.audio.num_codebooks),
+                                    jnp.int32)
+    return jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+
+def make_train_batch(cfg: ArchConfig, batch: int, seq: int,
+                     key: jax.Array) -> Dict[str, Any]:
+    """Concrete random batch matching train_batch_spec (smoke tests)."""
+    spec = train_batch_spec(cfg, batch, seq)
+    out = {}
+    for name, s in spec.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            vocab = (cfg.audio.codebook_size if cfg.family == "audio"
+                     and cfg.audio else cfg.vocab_size)
+            out[name] = jax.random.randint(sub, s.shape, 0, vocab, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    """[B, V] -> [B]; audio [B, K, V] -> [B, K]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

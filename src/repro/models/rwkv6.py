@@ -1,0 +1,248 @@
+"""RWKV6 "Finch" block: data-dependent-decay time-mix + channel-mix.
+
+Attention-free: decode state is O(1) per layer (token-shift vectors + the
+[H, N, V] wkv state), so there is no growing KV cache and the DPC page
+technique does not apply to this arch (DESIGN.md §4) — long_500k decode runs
+entirely on recurrent state.
+
+Chunked parallel form for train/prefill: within a chunk the pairwise decay
+exp(cum[t-1] - cum[j]) (j <= t-1) is always <= 1, so the O(Q^2 N) 3-tensor
+einsum is numerically safe (no factored exp(+cum) overflow); across chunks the
+state recurrence is a scan.  Matches the token-by-token oracle exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.spec import ParamSpec
+
+TM_LORA_RANK = 32
+DECAY_LORA_RANK = 64
+MIX_NAMES = ("r", "k", "v", "w", "g")  # ddlerp targets
+
+
+def rwkv6_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    h = cfg.d_model // s.head_dim
+    return h, s.state_dim, s.head_dim  # (heads, N key dim, V value dim)
+
+
+def rwkv6_timemix_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.param_dtype
+    h, n, v = rwkv6_dims(cfg)
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), "float32", init="zeros"),
+        "mu": ParamSpec((5, d), (None, "embed"), "float32", init="zeros"),
+        "tm_w1": ParamSpec((d, 5 * TM_LORA_RANK), ("embed", None), dt),
+        "tm_w2": ParamSpec((5, TM_LORA_RANK, d), (None, None, "embed"), dt,
+                           fan_in=TM_LORA_RANK),
+        "w0": ParamSpec((d,), ("embed",), "float32", init="zeros"),
+        "w_lora1": ParamSpec((d, DECAY_LORA_RANK), ("embed", None), dt),
+        "w_lora2": ParamSpec((DECAY_LORA_RANK, d), (None, "embed"), dt,
+                             fan_in=DECAY_LORA_RANK),
+        "u": ParamSpec((h, n), (None, None), "float32", init="zeros"),
+        "w_r": ParamSpec((d, d), ("embed", "heads"), dt),
+        "w_k": ParamSpec((d, d), ("embed", "heads"), dt),
+        "w_v": ParamSpec((d, d), ("embed", "heads"), dt),
+        "w_g": ParamSpec((d, d), ("embed", "heads"), dt),
+        "w_o": ParamSpec((d, d), ("heads", "embed"), dt),
+        "ln_x": ParamSpec((d,), ("embed",), "float32", init="ones"),
+    }
+
+
+def rwkv6_channelmix_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "float32", init="zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), "float32", init="zeros"),
+        "c_wk": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "c_wv": ParamSpec((f, d), ("mlp", "embed"), dt),
+        "c_wr": ParamSpec((d, d), ("embed", "heads"), dt),
+    }
+
+
+def _token_shift(x: jax.Array, state: Optional[jax.Array]) -> jax.Array:
+    """x: [B, T, D] -> previous token per position (state = last token of the
+    previous segment, zeros at stream start)."""
+    b, t, d = x.shape
+    first = (jnp.zeros((b, 1, d), x.dtype) if state is None
+             else state[:, None].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x: jax.Array, xprev: jax.Array):
+    """Data-dependent lerp (RWKV6): five mixed inputs r,k,v,w,g."""
+    sx = (xprev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xxx = xf + sx * params["mu_x"]
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", xxx.astype(x.dtype),
+                               params["tm_w1"]).astype(jnp.float32))
+    lora = lora.reshape(*lora.shape[:-1], 5, TM_LORA_RANK)
+    lora = jnp.einsum("btfr,frd->btfd", lora.astype(x.dtype),
+                      params["tm_w2"]).astype(jnp.float32)
+    mixes = params["mu"][None, None] + lora                   # [B,T,5,D]
+    outs = [(xf + sx * mixes[:, :, i]).astype(x.dtype) for i in range(5)]
+    return outs  # xr, xk, xv, xw, xg
+
+
+def _decay_log(params, xw: jax.Array) -> jax.Array:
+    """log-decay  logw = -exp(w0 + lora(xw))  (negative)."""
+    w = params["w0"] + jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, params["w_lora1"])
+                 .astype(jnp.float32)).astype(xw.dtype),
+        params["w_lora2"]).astype(jnp.float32)
+    return -jnp.exp(w)
+
+
+def rwkv6_timemix(params, cfg: ArchConfig, x: jax.Array, *,
+                  shift_state: Optional[jax.Array] = None,
+                  wkv_state: Optional[jax.Array] = None,
+                  return_state: bool = False):
+    """x: [B, T, D] -> out [B, T, D] (+ (last_token, wkv_state'))."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    h, n, vd = rwkv6_dims(cfg)
+
+    xprev = _token_shift(x, shift_state)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xprev)
+
+    r = jnp.einsum("btd,de->bte", xr, params["w_r"]).reshape(b, t, h, n)
+    k = jnp.einsum("btd,de->bte", xk, params["w_k"]).reshape(b, t, h, n)
+    v = jnp.einsum("btd,de->bte", xv, params["w_v"]).reshape(b, t, h, vd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["w_g"])
+                    .astype(jnp.float32))
+    logw = _decay_log(params, xw).reshape(b, t, h, n)         # [B,T,H,N] < 0
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = params["u"]                                            # [H,N]
+
+    # --- chunked wkv
+    q = min(s.chunk_size, t)
+    tp = (t + q - 1) // q * q
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0), (0, 0))
+        rf, kf, vf = (jnp.pad(a, pad) for a in (rf, kf, vf))
+        logw = jnp.pad(logw, pad)
+    nc = tp // q
+
+    def to_chunks(arr):
+        return arr.reshape((b, nc, q) + arr.shape[2:]).swapaxes(0, 1)
+
+    r_c, k_c, v_c, w_c = map(to_chunks, (rf, kf, vf, logw))
+    strict_mask = jnp.tril(jnp.ones((q, q), jnp.float32), k=-1)
+
+    def chunk_step(state, inp):
+        rq, kq, vq, wq = inp              # [B,Q,H,N] ([B,Q,H,V] for vq)
+        cum = jnp.cumsum(wq, axis=1)      # inclusive [B,Q,H,N]
+        cum_m1 = cum - wq                 # exclusive (up to t-1)
+        # inter: o_t += (r_t * exp(cum_{t-1})) . state_in
+        y_inter = jnp.einsum("bqhn,bhnv->bqhv", rq * jnp.exp(cum_m1), state)
+        # intra (j < t): A[t,j] = sum_n r[t,n] k[j,n] exp(cum_m1[t,n]-cum[j,n])
+        dec = jnp.exp(jnp.clip(cum_m1[:, :, None] - cum[:, None], None, 0.0))
+        a_tj = jnp.einsum("bqhn,bjhn,bqjhn->bqjh", rq, kq, dec)
+        a_tj = a_tj * strict_mask[None, :, :, None]
+        y_intra = jnp.einsum("bqjh,bjhv->bqhv", a_tj, vq)
+        # diagonal bonus: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bqhn,hn,bqhn->bqh", rq, u, kq)
+        y_diag = bonus[..., None] * vq
+        # state update: s' = exp(cum[-1]) * s + sum_j exp(cum[-1]-cum[j]) k_j v_j
+        dec_last = jnp.exp(cum[:, -1:] - cum)                  # [B,Q,H,N]
+        state = state * jnp.exp(cum[:, -1])[..., None]
+        state = state + jnp.einsum("bqhn,bqhv->bhnv", kq * dec_last, vq)
+        return state, y_inter + y_intra + y_diag
+
+    state0 = (wkv_state if wkv_state is not None
+              else jnp.zeros((b, h, n, vd), jnp.float32))
+    state, y = jax.lax.scan(chunk_step, state0, (r_c, k_c, v_c, w_c))
+    y = y.swapaxes(0, 1).reshape(b, tp, h, vd)[:, :t]
+
+    # per-head group norm + gate + out projection
+    y = _head_norm(y, params["ln_x"], cfg.norm_eps).reshape(b, t, d)
+    out = jnp.einsum("btd,de->bte", (y * g).astype(x.dtype), params["w_o"])
+    if return_state:
+        return out, (x[:, -1], state)
+    return out
+
+
+def _head_norm(y: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """GroupNorm(heads) over the V dim; scale is [D] reshaped per head."""
+    b, t, h, vd = y.shape
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + eps)
+    return yn * scale.reshape(1, 1, h, vd)
+
+
+def rwkv6_timemix_decode(params, cfg: ArchConfig, x1: jax.Array,
+                         shift_state: jax.Array, wkv_state: jax.Array):
+    """One token: x1 [B, D].  Returns (out [B, D], x1, wkv_state')."""
+    b, d = x1.shape
+    h, n, vd = rwkv6_dims(cfg)
+    x = x1[:, None]
+    xprev = shift_state[:, None].astype(x.dtype)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xprev)
+
+    r = jnp.einsum("btd,de->bte", xr, params["w_r"]).reshape(b, h, n)
+    k = jnp.einsum("btd,de->bte", xk, params["w_k"]).reshape(b, h, n)
+    v = jnp.einsum("btd,de->bte", xv, params["w_v"]).reshape(b, h, vd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["w_g"])
+                    .astype(jnp.float32)).reshape(b, h, vd)
+    w = jnp.exp(_decay_log(params, xw).reshape(b, h, n))       # [B,H,N]
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = kf[..., None] * vf[:, :, None, :]                     # [B,H,N,V]
+    o = jnp.einsum("bhn,bhnv->bhv", rf,
+                   wkv_state + params["u"][None, :, :, None] * kv)
+    wkv_state = wkv_state * w[..., None] + kv
+
+    o = _head_norm(o[:, None].reshape(b, 1, h, vd), params["ln_x"],
+                   cfg.norm_eps).reshape(b, h, vd)
+    out = jnp.einsum("bd,de->be", (o * g).reshape(b, d).astype(x1.dtype),
+                     params["w_o"])
+    return out, x1, wkv_state
+
+
+def rwkv6_channelmix(params, x: jax.Array, *,
+                     shift_state: Optional[jax.Array] = None,
+                     return_state: bool = False):
+    xprev = _token_shift(x, shift_state)
+    sx = (xprev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = (xf + sx * params["mu_k"]).astype(x.dtype)
+    xr = (xf + sx * params["mu_r"]).astype(x.dtype)
+    kk = jnp.einsum("btd,df->btf", xk, params["c_wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    out = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xr, params["c_wr"]).astype(jnp.float32)
+    ).astype(x.dtype) * jnp.einsum("btf,fd->btd", kk, params["c_wv"])
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def rwkv6_channelmix_decode(params, x1: jax.Array, shift_state: jax.Array):
+    out = rwkv6_channelmix(params, x1[:, None],
+                           shift_state=shift_state)
+    return out[:, 0], x1
+
+
+def rwkv6_recurrent_oracle(params, cfg: ArchConfig, x: jax.Array):
+    """Token-by-token time-mix oracle for the chunked form."""
+    b, t, d = x.shape
+    h, n, vd = rwkv6_dims(cfg)
+    shift = jnp.zeros((b, d), x.dtype)
+    wkv = jnp.zeros((b, h, n, vd), jnp.float32)
+    outs = []
+    for i in range(t):
+        o, shift, wkv = rwkv6_timemix_decode(params, cfg, x[:, i], shift, wkv)
+        outs.append(o)
+    return jnp.stack(outs, 1), (shift, wkv)

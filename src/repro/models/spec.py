@@ -1,0 +1,91 @@
+"""Parameter specification trees.
+
+Every model declares its parameters as a pytree of ``ParamSpec`` (shape, dtype,
+logical axes, initializer).  From one spec tree we derive:
+
+  * materialized params       (``init_params`` — smoke tests, real training)
+  * abstract params           (``abstract_params`` — dry-run, no allocation)
+  * NamedShardings            (``specs_to_shardings`` via repro.sharding rules)
+
+Logical axis names (resolved by ``repro.sharding.logical_to_pspec``):
+  embed, vocab, heads, kv_heads, q_lora, kv_lora, mlp, experts, layers,
+  groups, ssm_inner, ssm_state, conv, codebooks, stack
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"        # normal | zeros | ones
+    # fan_in override for scaled init; 0 = use shape[-2] (or shape[-1] for 1D)
+    fan_in: int = 0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"spec rank mismatch: {self.shape} vs {self.logical_axes}")
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.fan_in
+    if not fan_in:
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec tree into a params pytree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec_leaf)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — zero allocation, for .lower()."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=is_spec_leaf)
+
+
+def param_bytes(specs) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec_leaf):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def param_count(specs) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec_leaf):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

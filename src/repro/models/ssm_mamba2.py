@@ -1,0 +1,203 @@
+"""Mamba2 block (SSD chunked scan) — zamba2's backbone.
+
+Training/prefill use the chunked SSD decomposition: intra-chunk attention-like
+term + inter-chunk state recurrence (a scan over chunk states), so HLO size is
+O(1) in sequence length and peak memory is O(chunk).  Decode is the O(1)
+recurrent update.
+
+All decay exponents are differences of an inclusive cumsum of negative
+``dt*A`` terms with j <= t, so every exp() argument is <= 0 — numerically safe
+without log-space gymnastics.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.spec import ParamSpec
+
+
+def mamba2_dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    d_conv = d_in + 2 * s.state_dim
+    return d_in, n_heads, s.head_dim, s.state_dim, d_conv
+
+
+def mamba2_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_in, h, p, n, d_conv = mamba2_dims(cfg)
+    k = cfg.ssm.conv_kernel
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * n + h), ("embed", "ssm_inner"),
+                             dt),
+        "conv_w": ParamSpec((k, d_conv), ("conv", None), dt, fan_in=k),
+        "conv_b": ParamSpec((d_conv,), (None,), "float32", init="zeros"),
+        "a_log": ParamSpec((h,), (None,), "float32", init="zeros"),
+        "d_skip": ParamSpec((h,), (None,), "float32", init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), "float32", init="zeros"),
+        "gn_scale": ParamSpec((d_in,), ("ssm_inner",), "float32", init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _split_zxbcdt(cfg: ArchConfig, zxbcdt: jax.Array):
+    d_in, h, p, n, d_conv = mamba2_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_conv]
+    dt = zxbcdt[..., d_in + d_conv:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                 init: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  xbc: [B, T, C]; conv_w: [K, C].
+    Returns (out [B, T, C], final K-1 raw inputs for decode handoff)."""
+    k = conv_w.shape[0]
+    b, t, c = xbc.shape
+    if init is None:
+        init = jnp.zeros((b, k - 1, c), xbc.dtype)
+    padded = jnp.concatenate([init.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + padded[:, i:i + t].astype(jnp.float32) * \
+            conv_w[i].astype(jnp.float32)
+    out = out + conv_b
+    return out.astype(xbc.dtype), padded[:, -(k - 1):] if k > 1 else \
+        jnp.zeros((b, 0, c), xbc.dtype)
+
+
+def mamba2_forward(params, cfg: ArchConfig, x: jax.Array, *,
+                   conv_init: Optional[jax.Array] = None,
+                   state_init: Optional[jax.Array] = None,
+                   return_state: bool = False):
+    """x: [B, T, D] -> y [B, T, D] (+ (conv_state, ssd_state) if requested)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    d_in, h, p, n, d_conv = mamba2_dims(cfg)
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    z, xbc, dt = _split_zxbcdt(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   conv_init)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_in]
+    bc = xbc[..., d_in:d_in + n].astype(jnp.float32)          # [B,T,N]
+    cc = xbc[..., d_in + n:].astype(jnp.float32)              # [B,T,N]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,T,H]
+    a = -jnp.exp(params["a_log"])                              # [H] negative
+    xh = xs.reshape(b, t, h, p).astype(jnp.float32)
+    da = dt * a                                                # [B,T,H] <= 0
+
+    # pad to chunk multiple
+    q = min(s.chunk_size, t)
+    tp = (t + q - 1) // q * q
+    if tp != t:
+        pad = ((0, 0), (0, tp - t))
+        xh = jnp.pad(xh, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        da = jnp.pad(da, pad + ((0, 0),))
+        bc = jnp.pad(bc, pad + ((0, 0),))
+        cc = jnp.pad(cc, pad + ((0, 0),))
+    nc = tp // q
+
+    def to_chunks(arr):
+        return arr.reshape((b, nc, q) + arr.shape[2:]).swapaxes(0, 1)
+
+    xs_c, dt_c, da_c, b_c, c_c = map(to_chunks, (xh, dt, da, bc, cc))
+    mask = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    def chunk_step(state, inp):
+        xq, dtq, daq, bq, cq = inp           # [B,Q,H,P] [B,Q,H] [B,Q,N] ...
+        cum = jnp.cumsum(daq, axis=1)        # [B,Q,H] inclusive
+        # inter-chunk: y_t += C_t . (exp(cum_t) * state_in)
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", cq, jnp.exp(cum), state)
+        # intra-chunk
+        sc = jnp.einsum("bqn,bjn->bqj", cq, bq)               # [B,Q,Q]
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,Q,Q,H]
+        w = sc[..., None] * dec * mask[None, :, :, None]
+        y_intra = jnp.einsum("bqjh,bjh,bjhp->bqhp", w, dtq, xq)
+        # state update
+        dec_last = jnp.exp(cum[:, -1:, :] - cum)              # [B,Q,H]
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None]
+        state = state + jnp.einsum("bqh,bqh,bqhp,bqn->bhpn",
+                                   dec_last, dtq, xq, bq)
+        return state, y_inter + y_intra
+
+    state0 = (state_init if state_init is not None
+              else jnp.zeros((b, h, p, n), jnp.float32))
+    state, y = jax.lax.scan(chunk_step, state0, (xs_c, dt_c, da_c, b_c, c_c))
+    y = y.swapaxes(0, 1).reshape(b, tp, h, p)[:, :t]
+    y = y + params["d_skip"][None, None, :, None] * xh[:, :t]
+    y = y.reshape(b, t, d_in)
+
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(gated.astype(x.dtype), params["gn_scale"],
+                        cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    if return_state:
+        return out, (conv_state, state)
+    return out
+
+
+def mamba2_decode(params, cfg: ArchConfig, x1: jax.Array,
+                  conv_state: jax.Array, state: jax.Array):
+    """One-token recurrent step.
+
+    x1: [B, D]; conv_state: [B, K-1, Dconv]; state: [B, H, P, N] float32.
+    Returns (y [B, D], conv_state', state').
+    """
+    d_in, h, p, n, d_conv = mamba2_dims(cfg)
+    k = cfg.ssm.conv_kernel
+
+    zxbcdt = jnp.einsum("bd,de->be", x1, params["in_proj"])
+    z, xbc_t, dt = _split_zxbcdt(cfg, zxbcdt)
+
+    window = jnp.concatenate(
+        [conv_state.astype(x1.dtype), xbc_t[:, None]], axis=1)  # [B,K,C]
+    xbc = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+           + params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    conv_state_new = window[:, 1:]
+
+    xs = xbc[..., :d_in]
+    bc = xbc[..., d_in:d_in + n]
+    cc = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(-1, h, p)
+
+    decay = jnp.exp(dt * a)                                   # [B,H]
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bc)
+    y = jnp.einsum("bn,bhpn->bhp", cc, state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, d_in)
+
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(gated.astype(x1.dtype), params["gn_scale"],
+                        cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])
+    return out, conv_state_new, state
+
+
+def mamba2_recurrent_oracle(params, cfg: ArchConfig, x: jax.Array):
+    """Token-by-token decode loop — the oracle chunked forward must match."""
+    b, t, d = x.shape
+    d_in, h, p, n, d_conv = mamba2_dims(cfg)
+    k = cfg.ssm.conv_kernel
+    conv = jnp.zeros((b, k - 1, d_conv), x.dtype)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    outs = []
+    for i in range(t):
+        y, conv, state = mamba2_decode(params, cfg, x[:, i], conv, state)
+        outs.append(y)
+    return jnp.stack(outs, axis=1), (conv, state)

@@ -1,0 +1,239 @@
+"""Llama-3.2-Vision-style backbone: self-attn decoder with interleaved
+cross-attention layers over precomputed image patch embeddings.
+
+Layer pattern: every ``cross_attn_every``-th layer is a cross-attn block;
+layers are scanned in groups of (E-1 self + 1 cross).  The vision frontend is
+a STUB per the brief — ``input_specs`` supplies patch embeddings at d_model.
+
+Cross-attn KV is *per-request static* state: computed once at prefill and
+cached densely ([G, B, T_img, Hkv, hd]); image reuse across requests is the
+"hot file" DPC case — the serving engine keys those pages by image hash.
+Self-attn KV is paged as usual.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.cache import LocalBackend, PagedKVCache, VLMCache
+from repro.models.lm import stack_specs
+from repro.models.spec import ParamSpec
+
+
+def vlm_groups(cfg: ArchConfig) -> Tuple[int, int]:
+    e = cfg.vision.cross_attn_every
+    assert cfg.num_layers % e == 0, "layers must divide into cross groups"
+    return cfg.num_layers // e, e - 1   # (n_groups, self layers per group)
+
+
+def _self_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": layers.rms_norm_spec(cfg.d_model),
+        "ln2": layers.rms_norm_spec(cfg.d_model),
+        "attn": layers.gqa_specs(cfg),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_variant,
+                                cfg.param_dtype),
+    }
+
+
+def _cross_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    specs = _self_layer_specs(cfg)
+    # cross-attn gating (llama-vision uses tanh gates on attn & mlp)
+    specs["gate_attn"] = ParamSpec((1,), (None,), "float32", init="zeros")
+    specs["gate_mlp"] = ParamSpec((1,), (None,), "float32", init="zeros")
+    return specs
+
+
+def vlm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    g, n_self = vlm_groups(cfg)
+    self_stack = stack_specs(_self_layer_specs(cfg), n_self)
+    self_stack = jax.tree.map(
+        lambda s: ParamSpec((g,) + s.shape, ("groups",) + s.logical_axes,
+                            s.dtype, s.init, s.fan_in),
+        self_stack, is_leaf=lambda x: isinstance(x, ParamSpec))
+    cross_stack = stack_specs(_cross_layer_specs(cfg), g)
+    return {
+        "embedding": layers.embedding_specs(cfg),
+        "self_layers": self_stack,       # [G, n_self, ...]
+        "cross_layers": cross_stack,     # [G, ...]
+        "final_norm": layers.rms_norm_spec(cfg.d_model),
+    }
+
+
+def _self_fwd(lp, cfg, x, positions):
+    h = sharding.act(layers.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                     ("batch", None, None))
+    attn_out, (k, v) = layers.self_attention_block(lp["attn"], cfg, h,
+                                                   positions)
+    x = x + attn_out
+    h = sharding.act(layers.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                     ("batch", None, None))
+    out = sharding.act(x + layers.mlp_apply(lp["mlp"], h, cfg.mlp_variant),
+                       ("batch", "seq", None))
+    return out, jnp.stack([k, v])
+
+
+def _cross_kv(lp, cfg, image_embeds):
+    k = jnp.einsum("btd,dhk->bthk", image_embeds, lp["attn"]["w_k"])
+    v = jnp.einsum("btd,dhk->bthk", image_embeds, lp["attn"]["w_v"])
+    if cfg.qk_norm:
+        k = layers.head_rms_norm(k, lp["attn"]["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _cross_fwd(lp, cfg, x, k, v):
+    h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["w_q"])
+    if cfg.qk_norm:
+        q = layers.head_rms_norm(q, lp["attn"]["q_norm"], cfg.norm_eps)
+    from repro.kernels import dispatch
+    attn = dispatch.flash_attention(q, k, v, causal=False)
+    attn_out = layers.gqa_output(lp["attn"], attn)
+    x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * attn_out
+    h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * layers.mlp_apply(
+        lp["mlp"], h, cfg.mlp_variant)
+
+
+def forward_hidden(params, cfg: ArchConfig, embeds, positions, image_embeds,
+                   *, collect_kv: bool = False, remat: bool = True,
+                   pools=None, writer=None):
+    """Returns (hidden, self_kv [L_self, 2, B, S, Hkv, hd] | pools' | None,
+    cross_kv ([G,B,T,H,hd], [G,...]) | None).
+
+    With (pools, writer) self-attn KV streams into page pools per layer."""
+    g, n_self = vlm_groups(cfg)
+    install = pools is not None
+    if install:
+        pools_g = (pools[0].reshape((g, n_self) + pools[0].shape[1:]),
+                   pools[1].reshape((g, n_self) + pools[1].shape[1:]))
+
+    def group_body(x, gp):
+        if install:
+            self_p, cross_p, pk, pv = gp
+        else:
+            self_p, cross_p = gp
+
+        def self_body(carry, xs):
+            x = carry
+            if install:
+                lp, pool_k, pool_v = xs
+                x, kv = _self_fwd(lp, cfg, x, positions)
+                pool_k, pool_v = writer.write((pool_k, pool_v), kv)
+                return x, (pool_k, pool_v)
+            lp = xs
+            x, kv = _self_fwd(lp, cfg, x, positions)
+            return x, kv if collect_kv else None
+
+        if install:
+            x, pools_out = jax.lax.scan(self_body, x, (self_p, pk, pv))
+        else:
+            x, kv_seg = jax.lax.scan(self_body, x, self_p)
+            pools_out = None
+        ck, cv = _cross_kv(cross_p, cfg, image_embeds)
+        x = _cross_fwd(cross_p, cfg, x, ck, cv)
+        cross_out = jnp.stack([ck, cv]) if (collect_kv or install) else None
+        if install:
+            return x, (pools_out, cross_out)
+        return x, (kv_seg, cross_out)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    xs = ((params["self_layers"], params["cross_layers"], pools_g[0],
+           pools_g[1]) if install
+          else (params["self_layers"], params["cross_layers"]))
+    x, (kv_groups, cross_groups) = jax.lax.scan(body, embeds, xs)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    if install:
+        new_pools = (
+            kv_groups[0].reshape((g * n_self,) + kv_groups[0].shape[2:]),
+            kv_groups[1].reshape((g * n_self,) + kv_groups[1].shape[2:]))
+        return x, new_pools, (cross_groups[:, 0], cross_groups[:, 1])
+    if not collect_kv:
+        return x, None, None
+    # kv_groups: [G, n_self, 2, B, S, Hkv, hd] -> [G*n_self, 2, ...]
+    kv = kv_groups.reshape((g * n_self,) + kv_groups.shape[2:])
+    cross_k, cross_v = cross_groups[:, 0], cross_groups[:, 1]
+    return x, kv, (cross_k, cross_v)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    image_embeds = batch["image_embeds"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = layers.embed_tokens(params["embedding"], tokens)
+    hidden, _, _ = forward_hidden(params, cfg, x, positions, image_embeds,
+                                  remat=remat)
+    loss = layers.chunked_lm_loss(hidden, labels, params["embedding"], cfg)
+    return loss, {"ce": loss}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, remat: bool = True,
+            pools=None, writer=None):
+    tokens = batch["tokens"]
+    image_embeds = batch["image_embeds"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = layers.embed_tokens(params["embedding"], tokens)
+    hidden, kv, cross = forward_hidden(params, cfg, x, positions,
+                                       image_embeds, collect_kv=True,
+                                       remat=remat, pools=pools,
+                                       writer=writer)
+    logits = layers.unembed(params["embedding"], cfg, hidden[:, -1])
+    return logits, kv, cross
+
+
+def decode_step(params, cfg: ArchConfig, tokens, positions, cache: VLMCache,
+                backend=None):
+    """tokens: [B]; cache.self_attn pools: [L_self, P, page, Hkv, hd]."""
+    pc = cache.self_attn
+    if backend is None:
+        backend = LocalBackend(pc.page_table, pc.seq_lens, pc.append_slot)
+    g, n_self = vlm_groups(cfg)
+    x1 = layers.embed_tokens(params["embedding"], tokens[:, None])[:, 0]
+
+    def group_body(x1, xs):
+        self_p, cross_p, pools_k, pools_v, ck, cv = xs
+        pools_g = (pools_k, pools_v)
+
+        def self_body(x1, xs2):
+            lp, pools = xs2
+            h = layers.rms_norm(x1[:, None], lp["ln1"], cfg.norm_eps)
+            q, k, v = layers.gqa_project_qkv(lp["attn"], cfg, h,
+                                             positions[:, None])
+            out, kp, vp = backend.attend(q[:, 0], k[:, 0], v[:, 0],
+                                         pools[0], pools[1])
+            x1 = x1 + layers.gqa_output(lp["attn"], out[:, None])[:, 0]
+            h = layers.rms_norm(x1[:, None], lp["ln2"], cfg.norm_eps)
+            x1 = x1 + layers.mlp_apply(lp["mlp"], h, cfg.mlp_variant)[:, 0]
+            return x1, (kp, vp)
+
+        x1, pools_out = jax.lax.scan(self_body, x1,
+                                     (self_p, (pools_g[0], pools_g[1])))
+        x1 = _cross_fwd(cross_p, cfg, x1[:, None], ck, cv)[:, 0]
+        return x1, pools_out
+
+    pools_grouped = (
+        pc.k_pools.reshape((g, n_self) + pc.k_pools.shape[1:]),
+        pc.v_pools.reshape((g, n_self) + pc.v_pools.shape[1:]))
+    x1, pools_out = jax.lax.scan(
+        group_body, x1,
+        (params["self_layers"], params["cross_layers"],
+         pools_grouped[0], pools_grouped[1], cache.cross_k, cache.cross_v))
+
+    kp = pools_out[0].reshape((g * n_self,) + pc.k_pools.shape[1:])
+    vp = pools_out[1].reshape((g * n_self,) + pc.v_pools.shape[1:])
+    new_cache = cache._replace(self_attn=pc._replace(
+        k_pools=kp, v_pools=vp, seq_lens=pc.seq_lens + 1))
+
+    x1 = layers.rms_norm(x1[:, None], params["final_norm"],
+                         cfg.norm_eps)[:, 0]
+    logits = layers.unembed(params["embedding"], cfg, x1)
+    return logits, new_cache

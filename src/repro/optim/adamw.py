@@ -1,0 +1,112 @@
+"""AdamW + LR schedules, functional, pytree-generic.
+
+Moments can be stored in bfloat16 (``moment_dtype``) — at 340B params the
+f32->bf16 moment change alone frees ~2.7 GB/chip on the 256-chip mesh, which
+is what lets the largest assigned archs train in 16 GiB HBM (see
+training/presets.py).  Update math always runs in float32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    schedule: str = "cosine"            # cosine | linear | constant
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def abstract_state(params_abstract, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(zeros, params_abstract),
+                      nu=jax.tree.map(zeros, params_abstract))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - 0.9 * frac
+    else:  # cosine to 10%
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(functools.reduce(jnp.add, leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def one(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu_f = mu.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        nu_f = nu.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+        upd = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, mu_f.astype(mdt), nu_f.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [one(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": lr}

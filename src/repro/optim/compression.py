@@ -1,0 +1,119 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+``compressed_allreduce_mean`` implements an int8 reduce-scatter + all-gather:
+each shard owns 1/n of every gradient, peers ship their int8-quantized chunk
+(+ one f32 scale) to the owner, the owner reduces in f32, re-quantizes, and
+all-gathers the result — wire bytes are ~1/4 of a bf16 ring all-reduce and
+~1/8 of f32.  Per-leaf error feedback (Karimireddy et al.) keeps the
+compression unbiased over time: the quantization residual is added back into
+the next step's gradient.
+
+Used by training/train_step.py when ``grad_compression="int8"`` (a shard_map
+stage over the data axes, between accumulation and the optimizer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+INT8_MAX = 127.0
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jax.Array, ef: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                                      jax.Array]:
+    """Error-feedback compression of one tensor.
+    Returns (q, scale, new_ef)."""
+    target = g.astype(jnp.float32) + ef.astype(jnp.float32)
+    q, scale = quantize_int8(target)
+    recon = dequantize_int8(q, scale)
+    return q, scale, (target - recon).astype(ef.dtype)
+
+
+def _flat_size(x):
+    n = 1
+    for d in x.shape:
+        n *= d
+    return n
+
+
+def make_compressed_allreduce(mesh: Mesh, axes=("pod", "data")):
+    """Returns mean_fn(flat_vec [N] f32) -> [N] f32 averaged over ``axes``
+    with int8 wire format (reduce-scatter + all-gather shape)."""
+    axes = tuple(ax for ax in axes if ax in mesh.axis_names)
+    import numpy as np
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def rs_ag(vec):
+        n = vec.shape[0]
+        chunk = n // n_shards
+        x = vec.reshape(n_shards, chunk)
+        q, scale = quantize_int8(x)          # per-row scales? one scale/tensor
+        # ship int8 chunks to their owners (reduce-scatter data movement)
+        parts_q = q
+        parts_s = jnp.broadcast_to(scale, (n_shards,))
+        for ax in axes:
+            na = jax.lax.axis_size(ax)
+            parts_q = parts_q.reshape((na, parts_q.shape[0] // na)
+                                      + parts_q.shape[1:])
+            parts_q = jax.lax.all_to_all(parts_q, ax, 0, 0, tiled=False)
+            parts_q = parts_q.reshape((-1,) + parts_q.shape[2:])
+            parts_s = parts_s.reshape(na, -1)
+            parts_s = jax.lax.all_to_all(parts_s, ax, 0, 0, tiled=False)
+            parts_s = parts_s.reshape(-1)
+        # wait: after the exchange each shard holds every peer's copy of *its*
+        # chunk: [n_shards, chunk] int8 + [n_shards] scales
+        mine = jnp.sum(parts_q.astype(jnp.float32).reshape(n_shards, chunk)
+                       * parts_s[:, None], axis=0) / n_shards
+        # re-quantize the reduced chunk and all-gather it back
+        q2, s2 = quantize_int8(mine)
+        out_q, out_s = q2, s2[None]
+        for ax in reversed(axes):
+            out_q = jax.lax.all_gather(out_q, ax, axis=0, tiled=False)
+            out_q = out_q.reshape((-1,) + out_q.shape[2:]) \
+                if out_q.ndim > 2 else out_q
+            out_s = jax.lax.all_gather(out_s, ax, axis=0, tiled=True)
+        out_q = out_q.reshape(n_shards, chunk)
+        return (out_q.astype(jnp.float32) * out_s[:, None]).reshape(n)
+
+    ax_spec = axes if len(axes) > 1 else axes[0]
+    return shard_map(rs_ag, mesh=mesh, in_specs=P(),
+                     out_specs=P(), check_rep=False)
+
+
+def compress_tree_with_ef(grads, ef_tree):
+    """Pointwise error-feedback int8 round-trip on every leaf (models the
+    wire quantization when no mesh is available, e.g. unit tests).
+
+    Returns (compressed grads (f32-reconstructed), new ef tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_tree)
+    outs = []
+    new_ef = []
+    for g, e in zip(flat_g, flat_e):
+        q, s, e2 = ef_compress(g, e)
+        outs.append(dequantize_int8(q, s).astype(g.dtype))
+        new_ef.append(e2)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_ef))
+
+
+def init_ef(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,151 @@
+"""Liveness, membership epochs, elastic re-meshing, straggler mitigation.
+
+Paper §5 at cluster scale, plus the training-side fault-tolerance features:
+
+  * Heartbeats + failure detection: a node missing ``timeout`` of heartbeats
+    is declared failed; the directory drops it (DistributedKVCache.fail_node)
+    and any invalidation waiting on its ACK completes — eviction liveness.
+  * Membership epochs: each change bumps the epoch; step functions are
+    re-lowered per epoch mesh (elastic data-parallel width).
+  * Symmetric directory failure: clients that lose the directory fall back
+    to local-only caching (paper's client-side timeout).
+  * Straggler watchdog: per-step durations feed an EWMA; steps slower than
+    ``straggler_factor``× the EWMA mark the slowest node suspect, and after
+    ``strikes`` consecutive marks the policy (report | evict) fires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass
+class MembershipEvent:
+    epoch: int
+    kind: str          # join | fail | evict_straggler | dir_lost
+    node: int
+    t: float
+
+
+class Membership:
+    """Heartbeat-driven membership with epochs."""
+
+    def __init__(self, num_nodes: int, timeout_s: float = 15.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.timeout_s = timeout_s
+        self.epoch = 0
+        self.last_seen: Dict[int, float] = {
+            n: clock() for n in range(num_nodes)}
+        self.alive: Set[int] = set(range(num_nodes))
+        self.events: List[MembershipEvent] = []
+        self._listeners: List[Callable[[MembershipEvent], None]] = []
+
+    def on_change(self, fn: Callable[[MembershipEvent], None]) -> None:
+        self._listeners.append(fn)
+
+    def heartbeat(self, node: int) -> None:
+        if node in self.alive:
+            self.last_seen[node] = self.clock()
+
+    def _emit(self, kind: str, node: int) -> None:
+        self.epoch += 1
+        ev = MembershipEvent(self.epoch, kind, node, self.clock())
+        self.events.append(ev)
+        for fn in self._listeners:
+            fn(ev)
+
+    def check(self) -> List[int]:
+        """Declare nodes failed whose heartbeat lapsed.  Returns new
+        failures."""
+        now = self.clock()
+        failed = [n for n in self.alive
+                  if now - self.last_seen[n] > self.timeout_s]
+        for n in failed:
+            self.alive.discard(n)
+            self._emit("fail", n)
+        return failed
+
+    def evict(self, node: int, kind: str = "evict_straggler") -> None:
+        if node in self.alive:
+            self.alive.discard(node)
+            self._emit(kind, node)
+
+    def join(self, node: int) -> None:
+        self.alive.add(node)
+        self.last_seen[node] = self.clock()
+        self._emit("join", node)
+
+
+def elastic_mesh_shape(alive_nodes: int, model_parallel: int,
+                       pods: int = 1) -> Optional[Tuple[int, ...]]:
+    """Largest (pod, data, model) mesh runnable on the surviving chips.
+
+    Chips per node group = model_parallel; data width shrinks to the largest
+    value the survivors support.  Returns None when nothing runnable
+    remains."""
+    groups = alive_nodes // model_parallel
+    if groups < 1:
+        return None
+    data = groups // pods
+    if data < 1:
+        pods, data = 1, groups
+    return (pods, data, model_parallel) if pods > 1 else \
+        (data, model_parallel)
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 2.0, strikes: int = 3,
+                 ewma: float = 0.9):
+        self.factor = factor
+        self.strikes_needed = strikes
+        self.ewma_coef = ewma
+        self.ewma: Optional[float] = None
+        self.strikes: Dict[int, int] = {}
+        self.flagged: List[Tuple[int, float]] = []
+
+    def observe(self, step_time_s: float,
+                slowest_node: Optional[int] = None) -> Optional[int]:
+        """Feed one step duration; returns a node id when the policy fires."""
+        if self.ewma is None:
+            self.ewma = step_time_s
+            return None
+        is_slow = step_time_s > self.factor * self.ewma
+        # only non-straggler steps update the baseline
+        if not is_slow:
+            self.ewma = self.ewma_coef * self.ewma + \
+                (1 - self.ewma_coef) * step_time_s
+        if is_slow and slowest_node is not None:
+            c = self.strikes.get(slowest_node, 0) + 1
+            self.strikes[slowest_node] = c
+            if c >= self.strikes_needed:
+                self.flagged.append((slowest_node, step_time_s))
+                self.strikes[slowest_node] = 0
+                return slowest_node
+        elif slowest_node is not None:
+            self.strikes[slowest_node] = 0
+        return None
+
+
+class DirectoryClientGuard:
+    """Client-side symmetric timeout (paper §5): if the directory stops
+    responding, disconnect from DPC, drop remote mappings, and fall back to
+    the purely local page-cache policy."""
+
+    def __init__(self, timeout_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_response = clock()
+        self.mode = "dpc"
+
+    def response_received(self) -> None:
+        self.last_response = self.clock()
+
+    def check(self) -> str:
+        if self.mode == "dpc" and \
+                self.clock() - self.last_response > self.timeout_s:
+            self.mode = "local_only"
+        return self.mode

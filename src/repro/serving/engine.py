@@ -1,0 +1,332 @@
+"""Continuous-batching serving engine with the DPC page cache.
+
+The engine is the "kernel" of the paper's client: it admits requests, asks
+the DistributedKVCache (directory) for each prefix page, builds device page
+tables, runs prefill for missing spans (the "storage fetch"), commits the
+installed pages (E -> O), and drives decode steps — reclaiming pages through
+the deterministic invalidation protocol when pools run low.
+
+Replica model: each DPC node is one serving replica (a model slice); the
+engine process drives all replicas SPMD-style, mirroring how one virtiofsd
+serves all clients in the paper's testbed.  The decode *data plane* is the
+jitted step (local or DPC datapaths from serving/steps.py); the engine is
+pure host control plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPCConfig, RunConfig
+from repro.core import descriptors as D
+from repro.core.dpc_cache import DistributedKVCache, PageLookup
+from repro.models import registry
+from repro.models.cache import MLAPagedCache
+from repro.serving import prefix_index, steps
+from repro.serving.prefix_index import PrefixStats
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]                 # prompt
+    max_new_tokens: int = 16
+    node: int = 0                     # home replica
+    # runtime state
+    generated: List[int] = dataclasses.field(default_factory=list)
+    page_ids: List[int] = dataclasses.field(default_factory=list)
+    page_keys: List = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    """Single-replica-group engine (CPU smoke scale; the distributed data
+    plane is exercised by the dry-run and spmd tests)."""
+
+    def __init__(self, run: RunConfig, params, *, max_batch: int = 8,
+                 max_pages_per_seq: int = 64, node: int = 0,
+                 num_nodes: int = 1, kv_cache: Optional[DistributedKVCache] = None):
+        self.run = run
+        self.arch = run.arch
+        self.api = registry.get_model(self.arch)
+        self.params = params
+        self.node = node
+        self.max_batch = max_batch
+        self.max_pages = max_pages_per_seq
+        self.kv = kv_cache or DistributedKVCache(run.dpc, num_nodes)
+        self.stats = PrefixStats()
+
+        self.queue: deque = deque()
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self._next_rid = 0
+
+        self.cache = self.api.init_cache(
+            self.arch, run.dpc, max_batch, max_pages_per_seq,
+            pool_pages=run.dpc.pool_pages_per_shard)
+        self._decode = jax.jit(steps.make_decode_step(run, self.api))
+        self._prefill = jax.jit(steps.make_prefill_step(run, self.api))
+
+        self._pt = np.full((max_batch, max_pages_per_seq), -1, np.int32)
+        self._sl = np.zeros((max_batch,), np.int32)
+        # -1 = no append target: inactive slots never write KV (backends
+        # drop negative append slots)
+        self._ap = np.full((max_batch,), -1, np.int32)
+
+    # ------------------------------------------------------------------
+
+    def submit(self, tokens: Sequence[int], max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, tokens=list(tokens),
+                                  max_new_tokens=max_new_tokens,
+                                  node=self.node, t_admit=time.monotonic()))
+        return rid
+
+    def _alloc_page(self, key) -> int:
+        """Grab one page id via the directory (reclaim + retry on pressure)."""
+        for _ in range(3):
+            lk = self.kv.lookup([key[0]], [key[1]], self.node)[0]
+            if lk.page_id >= 0:
+                if lk.needs_fill:
+                    self.kv.commit([key[0]], [key[1]], self.node, [lk])
+                return lk.page_id
+            if lk.status in (D.ST_FULL,):
+                self.kv.reclaim(self.node, self.kv.dpc.inv_batch_threshold)
+                continue
+            if lk.status == D.ST_BLOCKED:
+                continue
+        return -1
+
+    def _admit(self, slot: int, req: Request) -> None:
+        page = self.run.dpc.page_size
+        keys = prefix_index.page_keys(req.tokens, page)
+        req.page_keys = keys
+        lookups = self.kv.lookup([k[0] for k in keys], [k[1] for k in keys],
+                                 self.node)
+        self.stats.pages_needed += len(keys)
+
+        # longest prefix of already-present pages (full pages only)
+        n_full = len(req.tokens) // page
+        reuse = 0
+        for i, lk in enumerate(lookups[:n_full]):
+            if lk.page_id >= 0 and not lk.needs_fill:
+                reuse = i + 1
+                self.stats.pages_remote += int(lk.remote)
+                self.stats.pages_local += int(not lk.remote)
+            else:
+                break
+        self.stats.prefill_tokens_saved += reuse * page
+        self.stats.prefill_tokens_run += len(req.tokens) - reuse * page
+
+        # page table: reused pages + to-fill pages (tail pages are private)
+        req.page_ids = []
+        n_pages = len(keys)
+        pool_pages = self.kv.dpc.pool_pages_per_shard
+        for i, (key, lk) in enumerate(zip(keys, lookups)):
+            if i < reuse:
+                req.page_ids.append(lk.page_id)
+            else:
+                pid = (lk.page_id if lk.page_id >= 0 and lk.needs_fill
+                       else self._alloc_page((key[0] ^ 0x5A5A5A ^ req.rid,
+                                              key[1])))
+                req.page_ids.append(pid)
+                self.stats.pages_filled += 1
+        self._pt[slot, :] = -1
+        self._pt[slot, :n_pages] = req.page_ids
+        self.active[slot] = req
+
+        if 0 < reuse == n_full:
+            # cached-prefix admission: every full page reused — skip prefill
+            # entirely and DECODE the short tail over the cached pages
+            self._sl[slot] = reuse * page
+            self._ap[slot] = (req.page_ids[reuse] % pool_pages
+                              if reuse < n_pages else -1)
+            self._sync_cache_tables()
+            for t in req.tokens[reuse * page:]:
+                self._decode_one(slot, int(t))
+            return
+
+        # whole-span prefill (first sight of this prefix)
+        targets = np.full((self.max_batch, n_pages), -1, np.int32)
+        for i in range(reuse, n_pages):
+            if req.page_ids[i] >= 0:
+                targets[slot, i] = req.page_ids[i] % pool_pages
+        batch_tokens = np.zeros((self.max_batch, len(req.tokens)), np.int32)
+        batch_tokens[slot] = req.tokens
+        batch = {"tokens": jnp.asarray(batch_tokens)}
+        if self.arch.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (self.max_batch, self.arch.vision.num_image_tokens,
+                 self.arch.d_model), jnp.dtype(self.arch.activation_dtype))
+        if self.arch.family == "audio":
+            k = self.arch.audio.num_codebooks
+            bt = np.zeros((self.max_batch, k, len(req.tokens)), np.int32)
+            bt[slot, :] = np.asarray(req.tokens)[None, :]
+            batch = {"tokens": jnp.asarray(bt)}
+        _, self.cache = self._prefill(self.params, batch, self.cache,
+                                      jnp.asarray(targets))
+        # commit newly filled pages
+        fill_rows = [i for i in range(reuse, n_pages)
+                     if req.page_ids[i] >= 0]
+        if fill_rows:
+            self.kv.commit([keys[i][0] for i in fill_rows],
+                           [keys[i][1] for i in fill_rows], self.node,
+                           [PageLookup(0, req.page_ids[i], self.node, True,
+                                       False) for i in fill_rows])
+
+        self._sl[slot] = len(req.tokens)
+        self._ap[slot] = (req.page_ids[-1] % pool_pages if req.page_ids
+                          else 0)
+        self._sync_cache_tables()
+
+    def _decode_one(self, slot: int, token: int) -> np.ndarray:
+        """Push one (prompt-tail) token through the decode path for a single
+        slot, handling page-boundary allocation.  Returns last logits row."""
+        page = self.run.dpc.page_size
+        pool_pages = self.kv.dpc.pool_pages_per_shard
+        total = self._sl[slot]
+        if total % page == 0:
+            idx = total // page
+            if idx < self.max_pages and self._pt[slot, idx] < 0:
+                req = self.active[slot]
+                pid = self._alloc_page((0x7E57 ^ req.rid, int(idx)))
+                if pid >= 0:
+                    self._pt[slot, idx] = pid
+            if idx < self.max_pages and self._pt[slot, idx] >= 0:
+                self._ap[slot] = self._pt[slot, idx] % pool_pages
+        # mask every OTHER slot's append: only this slot writes real KV
+        ap_saved = self._ap.copy()
+        mask = np.full_like(self._ap, -1)
+        mask[slot] = self._ap[slot]
+        self._ap = mask
+        self._sync_cache_tables()
+        self._ap = ap_saved
+        tokens = np.zeros((self.max_batch,), np.int32)
+        tokens[slot] = token
+        tok = jnp.asarray(tokens)
+        if self.arch.family == "audio":
+            tok = jnp.broadcast_to(tok[:, None],
+                                   (self.max_batch,
+                                    self.arch.audio.num_codebooks))
+        logits, self.cache = self._decode(self.params, tok,
+                                          jnp.asarray(self._sl), self.cache)
+        pc = steps.paged_part(self.cache)
+        if pc is not None:
+            sl = np.asarray(pc.seq_lens).copy()
+            # only this slot's position advances; others were padding
+            self._sl[slot] = sl[slot]
+            self._sync_seq_lens()
+        else:
+            self._sl[slot] += 1
+        return np.asarray(logits)[slot]
+
+    def _sync_seq_lens(self):
+        pc = steps.paged_part(self.cache)
+        if pc is not None:
+            self.cache = steps.replace_paged(
+                self.cache, pc._replace(seq_lens=jnp.asarray(self._sl)))
+
+    def _sync_cache_tables(self):
+        pc = steps.paged_part(self.cache)
+        if pc is None:
+            return
+        pc = pc._replace(page_table=jnp.asarray(self._pt),
+                         seq_lens=jnp.asarray(self._sl),
+                         append_slot=jnp.asarray(self._ap))
+        self.cache = steps.replace_paged(self.cache, pc)
+
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine iteration: admit -> decode -> harvest.  Returns number
+        of active requests."""
+        for slot in range(self.max_batch):
+            if self.active[slot] is None and self.queue:
+                self._admit(slot, self.queue.popleft())
+
+        live = [r for r in self.active if r is not None]
+        if not live:
+            return 0
+
+        # page-boundary allocation for requests whose filling page is full
+        page = self.run.dpc.page_size
+        pool_pages = self.kv.dpc.pool_pages_per_shard
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            total = self._sl[slot]
+            if total % page == 0:
+                idx = total // page
+                if idx < self.max_pages and self._pt[slot, idx] < 0:
+                    pid = self._alloc_page((0x7E57 ^ req.rid, int(idx)))
+                    if pid >= 0:
+                        self._pt[slot, idx] = pid
+                        self._ap[slot] = pid % pool_pages
+                elif idx < self.max_pages:
+                    self._ap[slot] = self._pt[slot, idx] % pool_pages
+        self._sync_cache_tables()
+
+        tokens = np.zeros((self.max_batch,), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            last = (req.generated[-1] if req.generated
+                    else req.tokens[-1])
+            tokens[slot] = last
+        tok = jnp.asarray(tokens)
+        if self.arch.family == "audio":
+            tok = jnp.broadcast_to(tok[:, None],
+                                   (self.max_batch,
+                                    self.arch.audio.num_codebooks))
+        positions = jnp.asarray(self._sl)
+
+        logits, self.cache = self._decode(self.params, tok, positions,
+                                          self.cache)
+        nxt = np.asarray(registry.greedy_sample(logits))
+
+        pc = steps.paged_part(self.cache)
+        if pc is not None:
+            self._sl = np.asarray(pc.seq_lens).copy()
+        else:
+            self._sl = self._sl + 1
+
+        now = time.monotonic()
+        n_active = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = nxt[slot] if nxt.ndim == 1 else nxt[slot, 0]
+            if not req.generated:
+                req.t_first = now
+            req.generated.append(int(t))
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = now
+                self.active[slot] = None
+                self._sl[slot] = 0
+                self._pt[slot, :] = -1
+                self._ap[slot] = -1
+                self._sync_cache_tables()
+            else:
+                n_active += 1
+        return n_active + len(self.queue)
+
+    def run_to_completion(self, max_steps: int = 10000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return finished

@@ -1,0 +1,67 @@
+"""Content-addressed prefix index: token prefixes -> DPC page keys.
+
+DPC keys file pages by (inode, offset); the serving analog keys KV pages by
+(chain hash of the token prefix up to the page's end, page index), so two
+requests sharing a prompt prefix — on *any* replica — resolve to the same
+directory entries.  This is the "hot file shared by many nodes" case.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+FNV_PRIME = 0x01000193
+FNV_BASIS = 0x811C9DC5
+MASK = 0x7FFFFFFF
+
+
+def page_keys(tokens: Sequence[int], page_size: int,
+              modality_salt: int = 0) -> List[Tuple[int, int]]:
+    """Rolling chain hash per page: key_p = (H(tokens[:(p+1)*page]), p).
+
+    Partial trailing pages get keys too (they are only *shareable* once
+    full; the engine treats partial-page keys as private).
+    """
+    keys = []
+    h = (FNV_BASIS ^ (modality_salt & 0xFFFF)) & MASK
+    n = len(tokens)
+    n_pages = (n + page_size - 1) // page_size
+    for p in range(n_pages):
+        end = min((p + 1) * page_size, n)
+        for t in tokens[p * page_size:end]:
+            h = ((h ^ (int(t) & 0xFFFFFF)) * FNV_PRIME) & MASK
+        keys.append((h or 1, p))
+    return keys
+
+
+def shared_page_count(a: Sequence[int], b: Sequence[int],
+                      page_size: int) -> int:
+    """How many leading *full* pages two token streams share."""
+    ka = page_keys(a, page_size)
+    kb = page_keys(b, page_size)
+    n = 0
+    for (ha, _), (hb, _) in zip(ka, kb):
+        if ha != hb:
+            break
+        n += 1
+    # a trailing partial page never counts as shared
+    full_a = len(a) // page_size
+    full_b = len(b) // page_size
+    return min(n, full_a, full_b)
+
+
+class PrefixStats:
+    """Aggregate hit accounting for the engine."""
+
+    def __init__(self):
+        self.pages_needed = 0
+        self.pages_local = 0
+        self.pages_remote = 0
+        self.pages_filled = 0
+        self.prefill_tokens_saved = 0
+        self.prefill_tokens_run = 0
+
+    def as_dict(self):
+        return dict(vars(self))

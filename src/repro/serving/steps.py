@@ -1,0 +1,195 @@
+"""Jitted serving steps: prefill (with page install) + decode, local or DPC.
+
+``datapath``:
+  local         single-shard pools, LocalBackend (smoke tests, 1 replica)
+  ship_compute  DPC default (queries to owners, LSE combine)
+  ship_data     paper-faithful page fetch (remote_read.py)
+
+The cache sharding scheme (DESIGN.md §5): pool slot dims over every DPC axis,
+page tables / seq_lens / append slots over the batch axes, SSM states over
+batch, cross-attn KV over batch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shardlib
+from repro.configs.base import RunConfig
+from repro.core.remote_read import ShipDataBackend
+from repro.core.ship_compute import DPCBackend
+from repro.models import registry
+from repro.models.cache import (DPCPageWriter, HybridCache, LocalPageWriter,
+                                MLAPagedCache, PagedKVCache, RWKVCache,
+                                VLMCache)
+
+
+def paged_part(cache):
+    if isinstance(cache, (PagedKVCache, MLAPagedCache)):
+        return cache
+    if isinstance(cache, HybridCache):
+        return cache.attn
+    if isinstance(cache, VLMCache):
+        return cache.self_attn
+    return None
+
+
+def replace_paged(cache, pc):
+    if isinstance(cache, (PagedKVCache, MLAPagedCache)):
+        return pc
+    if isinstance(cache, HybridCache):
+        return cache._replace(attn=pc)
+    if isinstance(cache, VLMCache):
+        return cache._replace(self_attn=pc)
+    return cache
+
+
+def pick_batch_axes(mesh: Mesh, batch: int):
+    """Largest prefix of (pod, data) whose product divides the batch (a
+    global_batch of 1 — long_500k — replicates requests; the pool still
+    shards over every chip)."""
+    axes = []
+    prod = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names and batch % (prod * mesh.shape[ax]) == 0:
+            axes.append(ax)
+            prod *= mesh.shape[ax]
+    return tuple(axes)
+
+
+def _backend_for(run: RunConfig, mesh: Optional[Mesh], datapath: str, pc):
+    if pc is None or datapath == "local" or mesh is None:
+        return None  # models fall back to LocalBackend
+    kw = dict(
+        batch_axes=pick_batch_axes(mesh, pc.page_table.shape[0]),
+        head_axis="model",
+        pool_pages=run.dpc.pool_pages_per_shard,
+    )
+    if datapath == "ship_compute":
+        return DPCBackend(mesh, pc.page_table, pc.seq_lens, pc.append_slot,
+                          **kw)
+    if datapath == "ship_data":
+        return ShipDataBackend(mesh, pc.page_table, pc.seq_lens,
+                               pc.append_slot, **kw)
+    raise ValueError(datapath)
+
+
+def make_decode_step(run: RunConfig, api, mesh: Optional[Mesh] = None,
+                     datapath: str = "local"):
+    arch = run.arch
+
+    def decode(params, tokens, positions, cache):
+        backend = _backend_for(run, mesh, datapath, paged_part(cache))
+        return api.decode_step(params, arch, tokens, positions, cache,
+                               backend)
+
+    return decode
+
+
+def make_prefill_step(run: RunConfig, api, mesh: Optional[Mesh] = None,
+                      datapath: str = "local"):
+    """prefill(params, batch, cache, targets) -> (logits, cache').
+
+    ``targets``: [B, n_prefill_pages] page ids (global under DPC, local slot
+    ids otherwise) granted by the directory for the install.
+    """
+    arch = run.arch
+    page = run.dpc.page_size
+
+    def prefill(params, batch, cache, targets):
+        pc = paged_part(cache)
+        if pc is None:  # rwkv: state prefill, no pages
+            out = api.prefill(params, arch, batch, remat=False)
+            return out[0], cache
+        pools = (pc.latent_pools if isinstance(pc, MLAPagedCache)
+                 else (pc.k_pools, pc.v_pools))
+        if datapath == "local" or mesh is None:
+            writer = LocalPageWriter(targets, page)
+        else:
+            writer = DPCPageWriter(
+                mesh, targets, page, run.dpc.pool_pages_per_shard,
+                batch_axes=pick_batch_axes(mesh, targets.shape[0]))
+        out = api.prefill(params, arch, batch, remat=False, pools=pools,
+                          writer=writer)
+        logits, new_pools = out[0], out[1]
+        if isinstance(pc, MLAPagedCache):
+            pc = pc._replace(latent_pools=new_pools)
+        else:
+            pc = pc._replace(k_pools=new_pools[0], v_pools=new_pools[1])
+        seq = batch["tokens"].shape[-1]
+        pc = pc._replace(seq_lens=jnp.full_like(pc.seq_lens, seq))
+        cache = replace_paged(cache, pc)
+        # family extras: hybrid ssm state / vlm cross kv
+        if isinstance(cache, HybridCache):
+            conv, ssd = out[2]
+            cache = cache._replace(ssm=cache.ssm._replace(conv=conv,
+                                                          state=ssd))
+        if isinstance(cache, VLMCache):
+            ck, cv = out[2]
+            cache = cache._replace(cross_k=ck.astype(cache.cross_k.dtype),
+                                   cross_v=cv.astype(cache.cross_v.dtype))
+        return logits, cache
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# shardings for the serving state (dry-run + real launch)
+# ---------------------------------------------------------------------------
+
+
+def cache_shardings(cache, mesh: Mesh, run: RunConfig):
+    """NamedSharding tree for a decode cache on the production mesh."""
+    pc = paged_part(cache)
+    batch = (pc.seq_lens.shape[0] if pc is not None
+             else jax.tree.leaves(cache)[0].shape[1])
+    batch_axes = pick_batch_axes(mesh, batch)
+    dpc_axes = tuple(ax for ax in ("pod", "data", "model")
+                     if ax in mesh.axis_names)
+    bp = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+    dp = dpc_axes if len(dpc_axes) > 1 else dpc_axes[0]
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def paged(pc):
+        common = dict(page_table=ns(bp, None), seq_lens=ns(bp),
+                      append_slot=ns(bp))
+        if isinstance(pc, MLAPagedCache):
+            return MLAPagedCache(latent_pools=ns(None, dp, None, None),
+                                 **common)
+        return PagedKVCache(k_pools=ns(None, dp, None, None, None),
+                            v_pools=ns(None, dp, None, None, None), **common)
+
+    if isinstance(cache, (PagedKVCache, MLAPagedCache)):
+        return paged(cache)
+    if isinstance(cache, RWKVCache):
+        return RWKVCache(tm_shift=ns(None, bp, None),
+                         cm_shift=ns(None, bp, None),
+                         wkv=ns(None, bp, None, None, None))
+    if isinstance(cache, HybridCache):
+        from repro.models.cache import SSMCache
+        return HybridCache(
+            ssm=SSMCache(conv=ns(None, bp, None, None),
+                         state=ns(None, bp, None, None, None)),
+            attn=paged(cache.attn))
+    if isinstance(cache, VLMCache):
+        return VLMCache(self_attn=paged(cache.self_attn),
+                        cross_k=ns(None, bp, None, None, None),
+                        cross_v=ns(None, bp, None, None, None))
+    raise TypeError(type(cache))
+
+
+def token_shardings(run: RunConfig, mesh: Mesh, spec):
+    def one(s):
+        batch_axes = pick_batch_axes(mesh, s.shape[0])
+        bp = batch_axes if len(batch_axes) > 1 else (
+            batch_axes[0] if batch_axes else None)
+        return NamedSharding(mesh, P(bp, *([None] * (len(s.shape) - 1))))
+    return jax.tree.map(one, spec)

@@ -1,0 +1,161 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+A ``ParamSpec``/activation carries logical axis names; ``logical_to_pspec``
+resolves them to a ``PartitionSpec`` under the current ``ShardingConfig`` and
+mesh, dropping any rule whose dimension does not divide the assigned mesh axes
+(replicate instead of crash — e.g. kv_heads=4 on model=16).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ShardingConfig
+from repro.models.spec import ParamSpec, is_spec_leaf
+
+
+def _rules(sharding: ShardingConfig, mesh_axes: Sequence[str]):
+    """logical name -> tuple of mesh axes (in priority order)."""
+    fsdp_axes: Tuple[str, ...] = tuple(
+        ax for ax in ("pod", "data") if ax in mesh_axes) if sharding.fsdp else ()
+    batch_axes: Tuple[str, ...] = tuple(
+        ax for ax in sharding.shard_batch if ax in mesh_axes)
+    model = (sharding.shard_heads,) if "model" in mesh_axes else ()
+    return {
+        "embed": fsdp_axes,              # FSDP shards the embed dim of weights
+        "vocab": model,
+        "heads": model,
+        "kv_heads": model,
+        "q_lora": model,
+        "kv_lora": (),                   # MLA latent: replicated (small)
+        "mlp": model,
+        "experts": model,                # EP folded into the model axis
+        "batch": batch_axes,
+        # sequence parallelism: stashed activations (and norms) keep the seq
+        # dim sharded over `model`; XLA turns the TP all_reduce into
+        # reduce_scatter + all_gather pairs around the matmuls (same bytes)
+        # while dividing remat stash memory by the TP degree.
+        "seq": ((sharding.shard_heads,) if sharding.sequence_parallel
+                and "model" in mesh_axes else ()),
+        "layers": (),
+        "groups": (),
+        "stack": (),
+        "ssm_inner": model,
+        "ssm_state": (),
+        "conv": (),
+        "codebooks": (),
+        None: (),
+    }
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for ax in axes:
+        n *= mesh.shape[ax]
+    return n
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    sharding: ShardingConfig,
+) -> P:
+    rules = _rules(sharding, mesh.axis_names)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.get(name, ())
+        axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def specs_to_shardings(specs, mesh: Mesh, sharding: ShardingConfig):
+    """Spec tree -> NamedSharding tree (for in_shardings / constraints)."""
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, logical_to_pspec(s.logical_axes, s.shape, mesh, sharding))
+    return jax.tree.map(one, specs, is_leaf=is_spec_leaf)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]],
+              mesh: Mesh, sharding: ShardingConfig) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op outside a mesh ctx)."""
+    spec = logical_to_pspec(logical_axes, x.shape, mesh, sharding)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspec(mesh: Mesh, sharding: ShardingConfig, ndim: int,
+                batch_dim: int = 0) -> P:
+    axes = tuple(ax for ax in sharding.shard_batch if ax in mesh.axis_names)
+    parts: list = [None] * ndim
+    if axes:
+        parts[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+def make_mesh_from_config(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding context (models call ``act``; a no-op unless a trainer
+# or the dry-run installs a sharder around tracing)
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDER = None
+_TP_REDUCE_BF16 = False
+
+
+def tp_dot_dtype():
+    """Accumulation dtype for TP-reduced projections (o-proj / down-proj).
+
+    Inside an ``activation_sharding`` context this is bfloat16: the partial
+    products that immediately cross the TP all-reduce are kept in bf16, so
+    the collective moves half the bytes (Megatron reduces grads/activations
+    in bf16 too).  Outside distributed tracing (unit tests, CPU smoke) the
+    default f32 accumulation is kept.  §Perf iteration B4.
+    """
+    import jax.numpy as jnp
+    return jnp.bfloat16 if _TP_REDUCE_BF16 else None
+
+
+class activation_sharding:
+    """Context manager installing a logical-axis activation sharder.
+
+    Usage (at trace time):
+        with activation_sharding(mesh, sharding_cfg):
+            lowered = jax.jit(step).lower(...)
+    """
+
+    def __init__(self, mesh: Mesh, sharding: ShardingConfig):
+        self.sharder = lambda x, names: constrain(x, names, mesh, sharding)
+        self.tp_bf16 = getattr(sharding, "tp_reduce_bf16", False)
+
+    def __enter__(self):
+        global _ACT_SHARDER, _TP_REDUCE_BF16
+        self._prev = _ACT_SHARDER
+        self._prev_tp = _TP_REDUCE_BF16
+        _ACT_SHARDER = self.sharder
+        _TP_REDUCE_BF16 = self.tp_bf16
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_SHARDER, _TP_REDUCE_BF16
+        _ACT_SHARDER = self._prev
+        _TP_REDUCE_BF16 = self._prev_tp
+        return False
+
+
+def act(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation by logical axis names (no-op by default)."""
+    if _ACT_SHARDER is None:
+        return x
+    return _ACT_SHARDER(x, names)

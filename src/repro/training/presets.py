@@ -1,0 +1,88 @@
+"""Per-(arch × shape) tuned execution knobs for the production meshes.
+
+These are the memory-fitting levers a perf engineer would set per model:
+microbatch count (remat stash size), gradient-accumulation dtype, optimizer
+moment dtype, sequence parallelism, and the KV-pool dtype for decode.  Every
+choice is driven by the 16 GiB/chip HBM budget of v5e at 256/512 chips —
+derivations in DESIGN.md §5 and EXPERIMENTS.md §Dry-run.
+
+Keyed by arch id; ``None`` entries mean "use the global default".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig, DPCConfig, RunConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainKnobs:
+    n_micro: int = 1                  # grad-accum microbatches per step
+    accum_dtype: str = "float32"
+    moment_dtype: str = "float32"
+    sequence_parallel: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeKnobs:
+    kv_dtype: str = "bfloat16"
+    page_size: int = 64
+
+
+# --- training knobs (train_4k: global_batch=256, seq=4096, 1M tokens/step) --
+# stash/chip ≈ n_layers × (mb·4096/data_shards) × d_model × 2 B / (SP factor)
+# opt+params/chip ≈ params × (2 + 2·moment_bytes + accum_bytes) / 256
+# n_micro is capped at 8: the multi-pod mesh has 32 (pod, data) shards and
+# the 256-seq global batch must keep >= 1 sequence per shard per microbatch.
+_TRAIN: dict = {
+    # 340B dense, d=18432: bf16 moments + bf16 accum + SP are all required
+    "nemotron-4-340b": TrainKnobs(n_micro=8, accum_dtype="bfloat16",
+                                  moment_dtype="bfloat16",
+                                  sequence_parallel=True),
+    # 235B MoE: expert weights dominate; bf16 moments, SP for the 4k stash
+    "qwen3-moe-235b-a22b": TrainKnobs(n_micro=8, accum_dtype="bfloat16",
+                                      moment_dtype="bfloat16",
+                                      sequence_parallel=True),
+    # 90B VLM, 100 layers of d=8192 + image tokens
+    "llama-3.2-vision-90b": TrainKnobs(n_micro=8, accum_dtype="bfloat16",
+                                       moment_dtype="bfloat16",
+                                       sequence_parallel=True),
+    "minitron-8b": TrainKnobs(n_micro=8, sequence_parallel=True),
+    "deepseek-v2-lite-16b": TrainKnobs(n_micro=8),
+    "granite-3-2b": TrainKnobs(n_micro=8),
+    "qwen3-1.7b": TrainKnobs(n_micro=8),
+    "zamba2-1.2b": TrainKnobs(n_micro=8),   # mamba chunk tensors are wide
+    "rwkv6-3b": TrainKnobs(n_micro=8),      # O(Q^2 N) intra-chunk tensor
+    "musicgen-large": TrainKnobs(n_micro=8),
+}
+
+# --- serving knobs -----------------------------------------------------------
+# decode_32k KV/chip (bf16, 256 chips) for the two largest KV footprints:
+#   nemotron-4-340b: 96L·8H·192D·2·2B ≈ 590 KB/token ≈ 9.7 GB/chip -> OK bf16
+#   llama-vision-90b: 80 self-L·8H·128D·2·2B ≈ 328 KB/token ≈ 5.4 GB -> OK
+# long_500k (zamba2): 6 invocations × 32H·64D ≈ 8 GB total, B=1 -> trivial.
+_SERVE: dict = {
+    "deepseek-v2-lite-16b": ServeKnobs(page_size=64),   # MLA latent pages
+    "nemotron-4-340b": ServeKnobs(kv_dtype="bfloat16"),
+}
+
+
+def train_knobs(arch_id: str) -> TrainKnobs:
+    return _TRAIN.get(arch_id, TrainKnobs())
+
+
+def serve_knobs(arch_id: str) -> ServeKnobs:
+    return _SERVE.get(arch_id, ServeKnobs())
+
+
+def apply_presets(run: RunConfig) -> RunConfig:
+    """Fold per-arch knobs into a RunConfig (sharding + dpc fields)."""
+    tk = train_knobs(run.arch.name)
+    sk = serve_knobs(run.arch.name)
+    sharding = dataclasses.replace(
+        run.sharding, sequence_parallel=tk.sequence_parallel)
+    dpc = dataclasses.replace(run.dpc, kv_dtype=sk.kv_dtype,
+                              page_size=sk.page_size)
+    return run.replace(sharding=sharding, dpc=dpc)

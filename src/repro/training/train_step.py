@@ -1,0 +1,163 @@
+"""train_step factory: FSDP/TP/SP-sharded, microbatched, remat'd training.
+
+One jitted step = scan over ``n_micro`` microbatches accumulating gradients
+(+ the metrics mean), then AdamW.  Gradients accumulate in ``accum_dtype``
+(bf16 for the largest archs — see presets).  Weight FSDP sharding comes from
+the param specs + ShardingConfig rules; batch dims are sharded over
+(pod, data); activation/stash sharding (incl. sequence parallelism) is
+installed at trace time via ``sharding.activation_sharding``.
+
+Optional ``grad_compression="int8"`` applies error-feedback int8 compression
+to the accumulated gradients before the optimizer — modelling the
+reduce-scatter wire format of the DP reduction (optim/compression.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shardlib
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import registry
+from repro.models.spec import abstract_params, init_params
+from repro.optim import adamw, compression
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    ef: Optional[Any]           # error-feedback state (grad compression)
+    step: jax.Array
+
+
+def adamw_config(run: RunConfig, total_steps: int = 10000,
+                 moment_dtype: str = "float32") -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(
+        learning_rate=run.learning_rate, warmup_steps=run.warmup_steps,
+        total_steps=total_steps, b1=run.adam_b1, b2=run.adam_b2,
+        eps=run.adam_eps, weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip, moment_dtype=moment_dtype)
+
+
+def init_train_state(run: RunConfig, api, key, *, ocfg: adamw.AdamWConfig,
+                     grad_compression: str = "none") -> TrainState:
+    params = init_params(api.specs(run.arch), key)
+    ef = compression.init_ef(params) if grad_compression == "int8" else None
+    return TrainState(params=params, opt=adamw.init(params, ocfg), ef=ef,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(run: RunConfig, api, *, ocfg: adamw.AdamWConfig,
+                         grad_compression: str = "none") -> TrainState:
+    params = abstract_params(api.specs(run.arch))
+    ef = (jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+        if grad_compression == "int8" else None)
+    return TrainState(params=params, opt=adamw.abstract_state(params, ocfg),
+                      ef=ef, step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def state_shardings(run: RunConfig, api, mesh: Mesh,
+                    state: TrainState) -> TrainState:
+    """NamedSharding tree mirroring a TrainState (params/opt by spec rules)."""
+    pshard = shardlib.specs_to_shardings(api.specs(run.arch), mesh,
+                                         run.sharding)
+    scalar = NamedSharding(mesh, P())
+    like = lambda tree: jax.tree.map(lambda s: s, pshard)
+    return TrainState(
+        params=pshard,
+        opt=adamw.AdamWState(step=scalar, mu=like(pshard), nu=like(pshard)),
+        ef=None if state.ef is None else like(pshard),
+        step=scalar,
+    )
+
+
+def batch_shardings(run: RunConfig, mesh: Mesh, batch_spec) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, shardlib.batch_pspec(mesh, run.sharding, len(s.shape))),
+        batch_spec)
+
+
+def make_train_step(run: RunConfig, api, *, n_micro: int = 1,
+                    ocfg: adamw.AdamWConfig,
+                    accum_dtype: str = "float32",
+                    grad_compression: str = "none"):
+    """Returns step(state, batch) -> (state, metrics).  Pure; jit at the
+    call site with shardings (launch/train.py, launch/dryrun.py)."""
+    arch = run.arch
+    remat = run.sharding.remat != "none"
+
+    def loss_fn(params, mb):
+        loss, metrics = api.train_loss(params, arch, mb, remat=remat)
+        return loss, metrics
+
+    def step(state: TrainState, batch):
+        adt = jnp.dtype(accum_dtype)
+
+        def to_micro(x):
+            # [B, ...] -> [n_micro, B/n_micro, ...]; keep the microbatch dim
+            # sharded over the batch axes
+            xm = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+            return shardlib.act(xm, (None, "batch") + (None,) * (x.ndim - 1))
+
+        micro = jax.tree.map(to_micro, batch)
+
+        def mb_step(acc, mb):
+            g_acc, loss_acc = acc
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, mb)
+            g_acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(adt), g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+        (g_sum, loss_sum), _ = jax.lax.scan(
+            mb_step, (g0, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+        loss = loss_sum / n_micro
+
+        ef = state.ef
+        if grad_compression == "int8":
+            grads, ef = compression.compress_tree_with_ef(grads, ef)
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, ocfg)
+        metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, new_opt, ef, state.step + 1), metrics
+
+    return step
+
+
+def lower_train_step(run: RunConfig, api, mesh: Mesh, *, n_micro: int = 1,
+                     ocfg: Optional[adamw.AdamWConfig] = None,
+                     accum_dtype: str = "float32",
+                     moment_dtype: str = "float32",
+                     grad_compression: str = "none",
+                     donate: bool = True):
+    """Trace+lower the train step on abstract inputs (dry-run entry point)."""
+    ocfg = ocfg or adamw_config(run, moment_dtype=moment_dtype)
+    step = make_train_step(run, api, n_micro=n_micro, ocfg=ocfg,
+                           accum_dtype=accum_dtype,
+                           grad_compression=grad_compression)
+    state = abstract_train_state(run, api, ocfg=ocfg,
+                                 grad_compression=grad_compression)
+    st_sh = state_shardings(run, api, mesh, state)
+    batch_spec = registry.train_batch_spec(run.arch, run.shape.global_batch,
+                                           run.shape.seq_len)
+    b_sh = batch_shardings(run, mesh, batch_spec)
+
+    with shardlib.activation_sharding(mesh, run.sharding):
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, NamedSharding(mesh, P())),
+            donate_argnums=(0,) if donate else (),
+        )
+        lowered = jitted.lower(state, batch_spec)
+    return lowered

@@ -1,0 +1,137 @@
+"""SPMD correctness checks — run with 8 virtual CPU devices.
+
+Invoked by tests/test_distributed.py via subprocess (the device-count flag
+must be set before jax initializes).  Each check compares a distributed
+datapath against the single-device LocalBackend oracle over identical global
+state and prints OK lines that the test asserts on.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.remote_read import make_shipdata_attend
+from repro.core.ship_compute import make_dpc_attend, make_dpc_attend_mla
+from repro.models.cache import LocalBackend
+
+
+def make_case(seed=0, b=8, hq=4, hkv=2, d=16, pool_pages_total=32, page=4,
+              n_pages=3):
+    rng = np.random.RandomState(seed)
+    q = rng.randn(b, hq, d).astype(np.float32)
+    k_new = rng.randn(b, hkv, d).astype(np.float32)
+    v_new = rng.randn(b, hkv, d).astype(np.float32)
+    k_pool = rng.randn(pool_pages_total, page, hkv, d).astype(np.float32)
+    v_pool = rng.randn(pool_pages_total, page, hkv, d).astype(np.float32)
+
+    # unique global page ids per request; last valid page is the append page
+    pt = np.full((b, n_pages), -1, np.int32)
+    sl = np.zeros((b,), np.int32)
+    ap = np.zeros((b,), np.int32)
+    perm = rng.permutation(pool_pages_total)
+    ptr = 0
+    for i in range(b):
+        nv = 1 + (i % n_pages)
+        pt[i, :nv] = perm[ptr:ptr + nv]
+        ptr += nv
+        # seq fills all but the last page fully, last page partially
+        sl[i] = (nv - 1) * page + (i % page)
+        ap[i] = pt[i, nv - 1]
+    return (jnp.asarray(q), jnp.asarray(k_new), jnp.asarray(v_new),
+            jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(pt),
+            jnp.asarray(sl), jnp.asarray(ap))
+
+
+def oracle(q, k_new, v_new, k_pool, v_pool, pt, sl, ap):
+    be = LocalBackend(pt, sl, ap % k_pool.shape[0], impl="ref")
+    # LocalBackend appends at (append_slot, sl % page) then attends; the
+    # global-id table indexes the full pool directly on one device.
+    return be.attend(q, k_new, v_new, k_pool, v_pool)
+
+
+def check(name, got, want, atol=1e-4):
+    ok = np.allclose(np.asarray(got, np.float32),
+                     np.asarray(want, np.float32), atol=atol, rtol=1e-4)
+    print(f"{'OK' if ok else 'FAIL'} {name} "
+          f"max_err={np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32)).max():.2e}")
+    return ok
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    case = make_case()
+    q, k_new, v_new, k_pool, v_pool, pt, sl, ap = case
+    pool_pages_local = k_pool.shape[0] // 8  # 8 nodes = 4*2
+
+    want_out, want_k, want_v = oracle(*case)
+
+    all_ok = True
+
+    attend = make_dpc_attend(mesh, batch_axes=("data",), head_axis="model",
+                             pool_pages=pool_pages_local, impl="ref")
+    got_out, got_k, got_v = attend(q, k_new, v_new, k_pool, v_pool,
+                                   pt, sl, ap)
+    all_ok &= check("ship_compute.out", got_out, want_out)
+    all_ok &= check("ship_compute.k_pool", got_k, want_k)
+    all_ok &= check("ship_compute.v_pool", got_v, want_v)
+
+    attend_sd = make_shipdata_attend(mesh, batch_axes=("data",),
+                                     head_axis="model",
+                                     pool_pages=pool_pages_local, impl="ref")
+    got_out, got_k, got_v, ovf = attend_sd(q, k_new, v_new, k_pool,
+                                           v_pool, pt, sl, ap)
+    all_ok &= check("ship_data.out", got_out, want_out)
+    all_ok &= check("ship_data.k_pool", got_k, want_k)
+    all_ok &= check("ship_data.v_pool", got_v, want_v)
+    if int(ovf) != 0:
+        print(f"FAIL ship_data.overflow={int(ovf)}")
+        all_ok = False
+    else:
+        print("OK ship_data.overflow=0")
+
+    # --- MLA variant
+    rng = np.random.RandomState(1)
+    b, h, r, dr, page = 8, 4, 16, 8, 4
+    ql = jnp.asarray(rng.randn(b, h, r), jnp.float32)
+    qr = jnp.asarray(rng.randn(b, h, dr), jnp.float32)
+    lat_new = jnp.asarray(rng.randn(b, r + dr), jnp.float32)
+    pool = jnp.asarray(rng.randn(32, page, r + dr), jnp.float32)
+    be = LocalBackend(pt, sl, ap, impl="ref")
+    want_mla, want_pool = be.attend_mla(ql, qr, lat_new, pool, sm_scale=0.17)
+
+    attend_mla = make_dpc_attend_mla(
+        mesh, batch_axes=("data",), head_axis="model",
+        pool_pages=pool_pages_local, impl="ref", sm_scale=0.17)
+    got_mla, got_pool = attend_mla(ql, qr, lat_new, pool, pt, sl, ap)
+    all_ok &= check("ship_compute_mla.out", got_mla, want_mla)
+    all_ok &= check("ship_compute_mla.pool", got_pool, want_pool)
+
+    # --- 3-axis mesh (pod)
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    attend3 = make_dpc_attend(mesh3, batch_axes=("pod", "data"),
+                              head_axis="model",
+                              pool_pages=pool_pages_local, impl="ref")
+    got_out, got_k, got_v = attend3(q, k_new, v_new, k_pool, v_pool,
+                                    pt, sl, ap)
+    all_ok &= check("ship_compute_pod.out", got_out, want_out)
+
+    attend3_sd = make_shipdata_attend(mesh3, batch_axes=("pod", "data"),
+                                      head_axis="model",
+                                      pool_pages=pool_pages_local, impl="ref")
+    got_out, _, _, ovf = attend3_sd(q, k_new, v_new, k_pool, v_pool,
+                                    pt, sl, ap)
+    all_ok &= check("ship_data_pod.out", got_out, want_out)
+
+    print("ALL_OK" if all_ok else "SOME_FAILED")
+    sys.exit(0 if all_ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+Every assigned arch: one train step (loss finite, grads flow) + one decode
+step (logit shapes, no NaNs).  For representative archs we additionally check
+prefill->decode consistency through the paged cache: decoding token S+1 after
+installing prefill KV pages must match running prefill over S+1 tokens.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke_arch
+from repro.configs.base import DPCConfig
+from repro.models import registry
+from repro.models.cache import (HybridCache, MLAPagedCache, PagedKVCache,
+                                RWKVCache, VLMCache)
+from repro.models.spec import abstract_params, init_params
+
+SMOKE_DPC = DPCConfig(page_size=8, pool_pages_per_shard=64)
+
+
+def assert_decode_matches_prefill(logits_dec, logits_full, *, f32=False):
+    """Decode-through-the-paged-cache must reproduce prefill's last-token
+    logits.  In bf16 the two computation orders drift by accumulated rounding
+    (bounded), but greedy decisions must agree exactly; with f32 params the
+    comparison is tight (algorithmic equivalence)."""
+    a = np.asarray(logits_full, np.float32)
+    d = np.asarray(logits_dec, np.float32)
+    if f32:
+        np.testing.assert_allclose(d, a, atol=2e-3, rtol=2e-3)
+    else:
+        np.testing.assert_allclose(d, a, atol=0.5, rtol=0.1)
+    assert (a.argmax(-1) == d.argmax(-1)).all(), "greedy decisions diverged"
+
+
+
+def setup_arch(arch_id, seed=0):
+    cfg = get_smoke_arch(arch_id)
+    api = registry.get_model(cfg)
+    params = init_params(api.specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, api, params
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_finite(arch_id):
+    cfg, api, params = setup_arch(arch_id)
+    batch = registry.make_train_batch(cfg, 2, 24, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        loss, metrics = api.train_loss(p, cfg, batch, remat=False)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), f"{arch_id}: loss not finite"
+    flat = jax.tree.leaves(grads)
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in flat]
+    assert all(np.isfinite(n) for n in norms), f"{arch_id}: NaN grads"
+    assert sum(norms) > 0, f"{arch_id}: no gradient signal"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_remat_matches_no_remat(arch_id):
+    cfg, api, params = setup_arch(arch_id)
+    batch = registry.make_train_batch(cfg, 1, 16, jax.random.PRNGKey(2))
+    l1, _ = api.train_loss(params, cfg, batch, remat=False)
+    l2, _ = api.train_loss(params, cfg, batch, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_step_shapes(arch_id):
+    cfg, api, params = setup_arch(arch_id)
+    b, max_pages = 2, 8
+    cache = api.init_cache(cfg, SMOKE_DPC, b, max_pages)
+    # give paged caches a first page per request
+    cache = _assign_first_pages(cache, b)
+    tokens = (jnp.zeros((b, cfg.audio.num_codebooks), jnp.int32)
+              if cfg.family == "audio" else jnp.zeros((b,), jnp.int32))
+    positions = jnp.zeros((b,), jnp.int32)
+    logits, cache2 = api.decode_step(params, cfg, tokens, positions, cache)
+    v = (registry.greedy_sample(logits))
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch_id
+    if cfg.family == "audio":
+        assert logits.shape[0] == b and logits.shape[1] == 4
+    else:
+        assert logits.shape[0] == b
+    # seq_lens advanced for paged caches
+    pc = _paged_of(cache2)
+    if pc is not None:
+        assert (np.asarray(pc.seq_lens) == 1).all()
+
+
+def _paged_of(cache):
+    if isinstance(cache, (PagedKVCache, MLAPagedCache)):
+        return cache
+    if isinstance(cache, HybridCache):
+        return cache.attn
+    if isinstance(cache, VLMCache):
+        return cache.self_attn
+    return None
+
+
+def _assign_first_pages(cache, b):
+    pc = _paged_of(cache)
+    if pc is None:
+        return cache
+    pt = np.asarray(pc.page_table).copy()
+    pt[:, 0] = np.arange(b)
+    pc2 = pc._replace(page_table=jnp.asarray(pt),
+                      append_slot=jnp.arange(b, dtype=jnp.int32))
+    if isinstance(cache, HybridCache):
+        return cache._replace(attn=pc2)
+    if isinstance(cache, VLMCache):
+        return cache._replace(self_attn=pc2)
+    return pc2
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode consistency through the paged cache
+# ---------------------------------------------------------------------------
+
+
+def _install_prefill_kv(cfg, cache, kv, page_size):
+    """Pack prefill kv [L, 2, B, S, H, hd] (or latents [L, B, S, R]) into the
+    pool: request b's page p -> slot b * n_pages + p."""
+    pc = _paged_of(cache)
+    if isinstance(cache, VLMCache):
+        kv, cross = kv
+    if isinstance(pc, MLAPagedCache):
+        lat = kv                                  # [L, B, S, RD]
+        l, b, s, rd = lat.shape
+        n_pages = s // page_size
+        pages = lat.reshape(l, b * n_pages, page_size, rd)
+        pools = pc.latent_pools.at[:, :b * n_pages].set(
+            pages.astype(pc.latent_pools.dtype))
+        pc2 = pc._replace(latent_pools=pools)
+    else:
+        k, v = kv[:, 0], kv[:, 1]                 # [L, B, S, H, hd]
+        l, b, s, h, hd = k.shape
+        n_pages = s // page_size
+        kp = pc.k_pools.at[:, :b * n_pages].set(
+            k.reshape(l, b * n_pages, page_size, h, hd).astype(
+                pc.k_pools.dtype))
+        vp = pc.v_pools.at[:, :b * n_pages].set(
+            v.reshape(l, b * n_pages, page_size, h, hd).astype(
+                pc.v_pools.dtype))
+        pc2 = pc._replace(k_pools=kp, v_pools=vp)
+
+    pt = np.full(np.asarray(pc.page_table).shape, -1, np.int32)
+    for bb in range(b):
+        for p in range(n_pages + 1):              # +1: page for new tokens
+            if p < pt.shape[1]:
+                pt[bb, p] = bb * n_pages + p if p < n_pages else \
+                    b * n_pages + bb
+    pc2 = pc2._replace(
+        page_table=jnp.asarray(pt),
+        seq_lens=jnp.full((b,), s, jnp.int32),
+        append_slot=jnp.asarray(
+            [b * n_pages + bb for bb in range(b)], jnp.int32))
+    return pc2
+
+
+@pytest.mark.parametrize("arch_id", [
+    "granite-3-2b", "qwen3-1.7b", "deepseek-v2-lite-16b",
+    "qwen3-moe-235b-a22b", "musicgen-large",
+])
+def test_prefill_decode_consistency_lm(arch_id):
+    cfg, api, params = setup_arch(arch_id)
+    if cfg.moe is not None:
+        # expert-capacity drops legitimately differ between a 32-token
+        # prefill dispatch and a 1-token decode dispatch; disable drops so
+        # the comparison isolates the cache datapath
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+        params = init_params(api.specs(cfg), jax.random.PRNGKey(0))
+    b, s = 2, 16
+    page = SMOKE_DPC.page_size
+    batch = registry.make_train_batch(cfg, b, s + 1, jax.random.PRNGKey(3))
+    tokens_full = batch["tokens"]
+    tokens_pre = tokens_full[..., :s]
+
+    logits_pre, kv = api.prefill(params, cfg, {"tokens": tokens_pre},
+                                 remat=False)
+    logits_full, _ = api.prefill(params, cfg, {"tokens": tokens_full},
+                                 remat=False)
+
+    cache = api.init_cache(cfg, SMOKE_DPC, b, max_pages=4)
+    pc = _install_prefill_kv(cfg, cache, kv, page)
+    tok_last = tokens_full[..., s]
+    positions = jnp.full((b,), s, jnp.int32)
+    logits_dec, cache2 = api.decode_step(params, cfg, tok_last, positions, pc)
+
+    assert_decode_matches_prefill(logits_dec, logits_full)
+
+
+def test_prefill_decode_consistency_rwkv():
+    cfg, api, params = setup_arch("rwkv6-3b")
+    b, s = 2, 16
+    batch = registry.make_train_batch(cfg, b, s + 1, jax.random.PRNGKey(4))
+    tokens_full = batch["tokens"]
+    logits_full, _ = api.prefill(params, cfg, {"tokens": tokens_full},
+                                 remat=False)
+    # decode token-by-token from scratch; state carries everything
+    cache = api.init_cache(cfg, SMOKE_DPC, b, max_pages=4)
+    from repro.models import lm as lm_mod
+    from repro.models import layers as L
+    x = tokens_full
+    # run prefill for s tokens via forward, grabbing states
+    from repro.models import rwkv6 as r6
+    positions = jnp.broadcast_to(jnp.arange(s + 1, dtype=jnp.int32),
+                                 (b, s + 1))
+    logits = None
+    for i in range(s + 1):
+        logits, cache = api.decode_step(params, cfg, x[:, i],
+                                        jnp.full((b,), i, jnp.int32), cache)
+    assert_decode_matches_prefill(logits, logits_full)
+
+
+def test_prefill_decode_consistency_hybrid():
+    cfg, api, params = setup_arch("zamba2-1.2b")
+    b, s = 2, 16
+    page = SMOKE_DPC.page_size
+    batch = registry.make_train_batch(cfg, b, s + 1, jax.random.PRNGKey(5))
+    tokens_full = batch["tokens"]
+    logits_full, _, _ = api.prefill(params, cfg, {"tokens": tokens_full},
+                                    remat=False)
+    _, kv, (conv, ssd) = api.prefill(params, cfg,
+                                     {"tokens": tokens_full[:, :s]},
+                                     remat=False)
+    cache = api.init_cache(cfg, SMOKE_DPC, b, max_pages=4)
+    pc = _install_prefill_kv(cfg, cache._replace(), kv, page)
+    from repro.models.cache import SSMCache
+    cache = cache._replace(ssm=SSMCache(conv=conv, state=ssd), attn=pc)
+    logits_dec, _ = api.decode_step(params, cfg, tokens_full[:, s],
+                                    jnp.full((b,), s, jnp.int32), cache)
+    assert_decode_matches_prefill(logits_dec, logits_full)
+
+
+def test_prefill_decode_consistency_vlm():
+    cfg, api, params = setup_arch("llama-3.2-vision-90b")
+    b, s = 1, 16
+    page = SMOKE_DPC.page_size
+    key = jax.random.PRNGKey(6)
+    batch = registry.make_train_batch(cfg, b, s + 1, key)
+    tokens_full, img = batch["tokens"], batch["image_embeds"]
+    logits_full, _, _ = api.prefill(
+        params, cfg, {"tokens": tokens_full, "image_embeds": img},
+        remat=False)
+    _, kv, (ck, cv) = api.prefill(
+        params, cfg, {"tokens": tokens_full[:, :s], "image_embeds": img},
+        remat=False)
+    cache = api.init_cache(cfg, SMOKE_DPC, b, max_pages=4)
+    pc = _install_prefill_kv(cfg, cache, (kv, None), page)
+    cache = cache._replace(self_attn=pc,
+                           cross_k=ck.astype(cache.cross_k.dtype),
+                           cross_v=cv.astype(cache.cross_v.dtype))
+    logits_dec, _ = api.decode_step(params, cfg, tokens_full[:, s],
+                                    jnp.full((b,), s, jnp.int32), cache)
+    assert_decode_matches_prefill(logits_dec, logits_full)
+
+
+def test_prefill_decode_consistency_f32_exact():
+    """Algorithmic equivalence in f32 (no bf16 rounding): tight tolerance."""
+    import dataclasses
+    cfg = get_smoke_arch("granite-3-2b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              activation_dtype="float32")
+    api = registry.get_model(cfg)
+    params = init_params(api.specs(cfg), jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = registry.make_train_batch(cfg, b, s + 1, jax.random.PRNGKey(3))
+    tokens_full = batch["tokens"]
+    logits_pre, kv = api.prefill(params, cfg, {"tokens": tokens_full[:, :s]},
+                                 remat=False)
+    logits_full, _ = api.prefill(params, cfg, {"tokens": tokens_full},
+                                 remat=False)
+    import dataclasses as dc
+    dpc_f32 = dc.replace(SMOKE_DPC, kv_dtype="float32")
+    cache = api.init_cache(cfg, dpc_f32, b, max_pages=4)
+    pc = _install_prefill_kv(cfg, cache, kv, dpc_f32.page_size)
+    logits_dec, _ = api.decode_step(params, cfg, tokens_full[:, s],
+                                    jnp.full((b,), s, jnp.int32), pc)
+    assert_decode_matches_prefill(logits_dec, logits_full, f32=True)
+
+
+def test_abstract_params_match_concrete():
+    for arch_id in ARCH_IDS:
+        cfg, api, params = setup_arch(arch_id)
+        ab = abstract_params(api.specs(cfg))
+        concrete_shapes = jax.tree.map(lambda a: (a.shape, str(a.dtype)),
+                                       params)
+        abstract_shapes = jax.tree.map(lambda a: (a.shape, str(a.dtype)), ab)
+        assert concrete_shapes == abstract_shapes, arch_id

@@ -1,0 +1,404 @@
+"""Property + unit tests: JAX directory vs the pure-Python executable spec.
+
+The refimpl is the oracle; the array directory must agree on every observable
+(status codes, owner, pfn, derived per-node states) after arbitrary event
+sequences, and both must uphold the paper's invariants (single-copy, no
+sharers in E, deterministic teardown).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core import refimpl as R
+from repro.core.protocol import DPCProtocol, ProtocolConfig
+from repro.core.coherence import CoherenceManager
+
+CAP = 64
+NODES = 8
+CFG = dirx.DirectoryConfig(capacity=CAP, num_nodes=NODES, max_probe=CAP)
+
+
+def fresh():
+    return dirx.init_directory(CFG), R.RefDirectory(CAP, NODES)
+
+
+def batch(stream, page, node, aux=0):
+    return D.make_batch([stream], [page], [node], [aux])
+
+
+def li(d, s, p, n=0, *, node=None):
+    n = node if node is not None else n
+    d, res = dirx.lookup_and_install(d, batch(s, p, n), max_probe=CFG.max_probe)
+    return d, np.asarray(res)[0]
+
+
+# ---------------------------------------------------------------------------
+# unit tests: each Fig. 2 transition
+# ---------------------------------------------------------------------------
+
+
+class TestStateMachine:
+    def test_acc_miss_alloc_grants_e(self):
+        d, ref = fresh()
+        d, res = li(d, 7, 3, node=2)
+        want = ref.lookup_and_install(7, 3, 2)
+        assert res[0] == D.ST_GRANT_E == want[0]
+        assert ref.node_state((7, 3), 2) == "E"
+
+    def test_second_requester_blocked_while_e(self):
+        d, ref = fresh()
+        d, _ = li(d, 7, 3, 2)
+        ref.lookup_and_install(7, 3, 2)
+        d, res = li(d, 7, 3, 5)
+        want = ref.lookup_and_install(7, 3, 5)
+        assert res[0] == D.ST_BLOCKED == want[0]
+
+    def test_commit_publishes_owner(self):
+        d, ref = fresh()
+        d, _ = li(d, 7, 3, 2)
+        ref.lookup_and_install(7, 3, 2)
+        d, res = dirx.commit(d, batch(7, 3, 2, aux=42))
+        assert np.asarray(res)[0, 0] == D.ST_OK
+        assert ref.commit(7, 3, 2, 42) == D.ST_OK
+        d, res = li(d, 7, 3, 5)
+        want = ref.lookup_and_install(7, 3, 5)
+        assert res[0] == D.ST_MAP_S == want[0]
+        assert res[1] == 2 == want[1]      # owner
+        assert res[2] == 42 == want[2]     # pfn
+        assert ref.node_state((7, 3), 5) == "S"
+
+    def test_commit_without_e_is_bad(self):
+        d, ref = fresh()
+        d, res = dirx.commit(d, batch(9, 9, 1, aux=5))
+        assert np.asarray(res)[0, 0] == D.ST_BAD
+        assert ref.commit(9, 9, 1, 5) == D.ST_BAD
+
+    def test_owner_rehit(self):
+        d, ref = fresh()
+        d, _ = li(d, 1, 1, 0)
+        ref.lookup_and_install(1, 1, 0)
+        d, _ = dirx.commit(d, batch(1, 1, 0, aux=7))
+        ref.commit(1, 1, 0, 7)
+        d, res = li(d, 1, 1, 0)
+        want = ref.lookup_and_install(1, 1, 0)
+        assert res[0] == D.ST_HIT_OWNER == want[0]
+
+    def test_full_invalidation_round(self):
+        d, ref = fresh()
+        # install by node 0, map on nodes 1, 2
+        d, _ = li(d, 5, 0, 0)
+        ref.lookup_and_install(5, 0, 0)
+        d, _ = dirx.commit(d, batch(5, 0, 0, aux=11))
+        ref.commit(5, 0, 0, 11)
+        for n in (1, 2):
+            d, _ = li(d, 5, 0, n)
+            ref.lookup_and_install(5, 0, n)
+
+        # owner evicts: O -> TBI, sharers notified
+        d, res, masks = dirx.begin_invalidate(d, batch(5, 0, 0))
+        st, sharers = ref.begin_invalidate(5, 0, 0)
+        assert np.asarray(res)[0, 0] == D.ST_OK == st
+        got = int(np.asarray(masks)[0, 0])
+        assert got == (1 << 1) | (1 << 2)
+        assert sharers == {1, 2}
+        assert ref.node_state((5, 0), 0) == "TBI"
+
+        # new access while TBI is blocked (both impls)
+        d, res = li(d, 5, 0, 3)
+        assert res[0] == D.ST_BLOCKED == ref.lookup_and_install(5, 0, 3)[0]
+
+        # complete before ACKs -> BLOCKED
+        d, res = dirx.complete_invalidate(d, batch(5, 0, 0))
+        assert np.asarray(res)[0, 0] == D.ST_BLOCKED
+        assert ref.complete_invalidate(5, 0, 0)[0] == D.ST_BLOCKED
+
+        # sharer ACKs (node 2 observed it dirty)
+        d, _ = dirx.ack_invalidate(d, batch(5, 0, 1, aux=0))
+        ref.ack_invalidate(5, 0, 1, False)
+        d, _ = dirx.ack_invalidate(d, batch(5, 0, 2, aux=1))
+        ref.ack_invalidate(5, 0, 2, True)
+
+        # INVALIDATION_ACK: entry removed, writeback required
+        d, res = dirx.complete_invalidate(d, batch(5, 0, 0))
+        st, dirty = ref.complete_invalidate(5, 0, 0)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK == st
+        assert res[0, 2] == 1 and dirty
+        assert ref.node_state((5, 0), 0) == "I"
+
+        # page is installable again (all-I)
+        d, res = li(d, 5, 0, 3)
+        assert res[0] == D.ST_GRANT_E == ref.lookup_and_install(5, 0, 3)[0]
+
+    def test_sharer_drop(self):
+        d, ref = fresh()
+        d, _ = li(d, 2, 2, 0)
+        ref.lookup_and_install(2, 2, 0)
+        d, _ = dirx.commit(d, batch(2, 2, 0, aux=1))
+        ref.commit(2, 2, 0, 1)
+        d, _ = li(d, 2, 2, 4)
+        ref.lookup_and_install(2, 2, 4)
+        d, res = dirx.sharer_drop(d, batch(2, 2, 4))
+        assert np.asarray(res)[0, 0] == D.ST_OK == ref.sharer_drop(2, 2, 4)
+        # eviction now needs no DIR_INV
+        d, res, masks = dirx.begin_invalidate(d, batch(2, 2, 0))
+        _, sharers = ref.begin_invalidate(2, 2, 0)
+        assert int(np.asarray(masks)[0].sum()) == 0 and not sharers
+
+    def test_abort_install(self):
+        d, ref = fresh()
+        d, _ = li(d, 3, 3, 1)
+        ref.lookup_and_install(3, 3, 1)
+        d, res = dirx.abort_install(d, batch(3, 3, 1))
+        assert np.asarray(res)[0, 0] == D.ST_OK == ref.abort_install(3, 3, 1)
+        d, res = li(d, 3, 3, 2)
+        assert res[0] == D.ST_GRANT_E == ref.lookup_and_install(3, 3, 2)[0]
+
+    def test_same_batch_serialization(self):
+        """Two requests for the same absent page in ONE batch: first E,
+        second BLOCKED — descriptor order is transaction order."""
+        d, _ = fresh()
+        descs = D.make_batch([9, 9], [4, 4], [0, 1])
+        d, res = dirx.lookup_and_install(d, descs, max_probe=CFG.max_probe)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_GRANT_E
+        assert res[1, 0] == D.ST_BLOCKED
+
+    def test_padded_rows_skipped(self):
+        d, _ = fresh()
+        descs = D.pad_batch(D.make_batch([1], [1], [0]), 8)
+        d, res = dirx.lookup_and_install(d, descs, max_probe=CFG.max_probe)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_GRANT_E
+        assert (res[1:, 0] == dirx.STAT_SKIP).all()
+        assert int(dirx.occupancy(d)) == 1
+
+    def test_capacity_full(self):
+        small = dirx.DirectoryConfig(capacity=4, num_nodes=4, max_probe=4)
+        d = dirx.init_directory(small)
+        ref = R.RefDirectory(4, 4)
+        for i in range(4):
+            d, res = dirx.lookup_and_install(d, batch(1, i, 0),
+                                             max_probe=small.max_probe)
+            assert np.asarray(res)[0, 0] == D.ST_GRANT_E
+            assert ref.lookup_and_install(1, i, 0)[0] == D.ST_GRANT_E
+        d, res = dirx.lookup_and_install(d, batch(1, 99, 0),
+                                         max_probe=small.max_probe)
+        assert np.asarray(res)[0, 0] == D.ST_FULL
+        assert ref.lookup_and_install(1, 99, 0)[0] == D.ST_FULL
+
+    def test_fail_node_drops_ownership_and_shares(self):
+        d, ref = fresh()
+        # node 1 owns (1,0); node 2 shares it; node 2 owns (1,1)
+        for s, p, owner in [(1, 0, 1), (1, 1, 2)]:
+            d, _ = li(d, s, p, owner)
+            ref.lookup_and_install(s, p, owner)
+            d, _ = dirx.commit(d, batch(s, p, owner, aux=p))
+            ref.commit(s, p, owner, p)
+        d, _ = li(d, 1, 0, 2)
+        ref.lookup_and_install(1, 0, 2)
+
+        d, n_owned = dirx.fail_node(d, jnp.int32(2))
+        owned, shared = ref.fail_node(2)
+        assert int(n_owned) == 1 == len(owned)
+        assert shared == [(1, 0)]
+        # (1,1) is gone: reinstallable; (1,0) has no sharers left
+        d, res = li(d, 1, 1, 0)
+        assert res[0] == D.ST_GRANT_E == ref.lookup_and_install(1, 1, 0)[0]
+        host = dirx.to_host_dict(d, CFG)
+        assert host[(1, 0)][2] == set()
+
+
+# ---------------------------------------------------------------------------
+# property test: random event sequences, array impl ≡ refimpl
+# ---------------------------------------------------------------------------
+
+
+EVENTS = st.lists(
+    st.tuples(
+        st.sampled_from(["lookup", "commit", "begin_inv", "ack_inv",
+                         "complete_inv", "drop", "fail"]),
+        st.integers(0, 3),    # stream
+        st.integers(0, 5),    # page
+        st.integers(0, NODES - 1),
+        st.booleans(),        # dirty
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(EVENTS)
+def test_directory_matches_refimpl(events):
+    d = dirx.init_directory(CFG)
+    ref = R.RefDirectory(CAP, NODES)
+    failed = set()
+    for op, s, p, n, dirty in events:
+        if op == "lookup":
+            d, res = li(d, s, p, n)
+            want = ref.lookup_and_install(s, p, n)
+            assert tuple(res) == want, (op, s, p, n)
+        elif op == "commit":
+            d, res = dirx.commit(d, batch(s, p, n, aux=17))
+            assert np.asarray(res)[0, 0] == ref.commit(s, p, n, 17)
+        elif op == "begin_inv":
+            d, res, masks = dirx.begin_invalidate(d, batch(s, p, n))
+            st_ref, sharers = ref.begin_invalidate(s, p, n)
+            assert np.asarray(res)[0, 0] == st_ref
+            if st_ref == D.ST_OK:
+                got = set()
+                for w, bits in enumerate(np.asarray(masks)[0].tolist()):
+                    for b in range(32):
+                        if int(bits) & (1 << b):
+                            got.add(w * 32 + b)
+                assert got == sharers
+        elif op == "ack_inv":
+            d, res = dirx.ack_invalidate(d, batch(s, p, n, aux=int(dirty)))
+            assert np.asarray(res)[0, 0] == ref.ack_invalidate(s, p, n, dirty)
+        elif op == "complete_inv":
+            d, res = dirx.complete_invalidate(d, batch(s, p, n))
+            st_ref, dirty_ref = ref.complete_invalidate(s, p, n)
+            res = np.asarray(res)
+            assert res[0, 0] == st_ref
+            if st_ref == D.ST_OK:
+                assert bool(res[0, 2]) == dirty_ref
+        elif op == "drop":
+            d, res = dirx.sharer_drop(d, batch(s, p, n, aux=int(dirty)))
+            assert np.asarray(res)[0, 0] == ref.sharer_drop(s, p, n, dirty)
+        elif op == "fail":
+            if n in failed:
+                continue
+            failed.add(n)
+            d, _ = dirx.fail_node(d, jnp.int32(n))
+            ref.fail_node(n)
+        ref.check_invariants()
+
+    # final full-state equivalence
+    host = dirx.to_host_dict(d, CFG)
+    want = {k: (e.state, e.owner, set(e.sharers), e.pfn)
+            for k, e in ref.entries.items()}
+    got = {k: (v[0], v[1], v[2], v[3]) for k, v in host.items()}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# protocol-level: full read/commit/reclaim flows with pools
+# ---------------------------------------------------------------------------
+
+
+class TestProtocolFlows:
+    def make(self, placement="sharded", pool_pages=8):
+        cfg = ProtocolConfig(num_nodes=4, pool_pages=pool_pages,
+                             directory_capacity=256, placement=placement)
+        return DPCProtocol(cfg)
+
+    @pytest.mark.parametrize("placement", ["sharded", "central"])
+    def test_read_grant_commit_then_remote_hit(self, placement):
+        proto = self.make(placement)
+        res = proto.read_pages([1, 1, 1], [0, 1, 2], node=0)
+        assert (res.status == D.ST_GRANT_E).all()
+        assert (res.slot >= 0).all()
+        proto.commit_pages([1, 1, 1], [0, 1, 2], 0, res.slot)
+
+        res2 = proto.read_pages([1, 1, 1], [0, 1, 2], node=1)
+        assert (res2.status == D.ST_MAP_S).all()
+        assert (res2.owner == 0).all()
+        # pfn encodes (owner node, slot)
+        assert (res2.pfn // proto.cfg.pool_pages == 0).all()
+        assert proto.hit_rate() == 0.5
+
+    def test_single_copy_invariant_cluster_wide(self):
+        proto = self.make()
+        # all four nodes read the same 3 pages; exactly one owner each
+        for node in range(4):
+            res = proto.read_pages([9] * 3, [0, 1, 2], node)
+            g = res.granted()
+            if len(g):
+                proto.commit_pages(np.asarray([9] * 3)[g],
+                                   np.asarray([0, 1, 2])[g], node, res.slot[g])
+        view = proto.directory_view()
+        assert len(view) == 3
+        owners = [v[1] for v in view.values()]
+        assert all(o == 0 for o in owners)  # first reader installed them
+        # later readers are sharers, no second copy anywhere
+        total_installed = sum(
+            int(np.asarray(p.slot_state == 2).sum()) for p in proto.state.pools)
+        assert total_installed == 3
+
+    def test_reclaim_full_round(self):
+        proto = self.make(pool_pages=4)
+        streams, pages = [3] * 4, list(range(4))
+        res = proto.read_pages(streams, pages, 0)
+        proto.commit_pages(streams, pages, 0, res.slot)
+        proto.read_pages(streams, pages, 1)  # node 1 maps all 4 remotely
+
+        # pool full: next grant fails until reclaim
+        r2 = proto.read_pages([4], [0], 0)
+        assert r2.status[0] == D.ST_FULL
+
+        freed, wb = proto.reclaim_sync(0, want=2)
+        assert freed == 2 and wb == 0
+        assert int(proto.state.pools[0].free_top) == 2
+
+        # sharer node 1 no longer maps the torn-down pages
+        view = proto.directory_view()
+        assert len(view) == 2
+        for v in view.values():
+            assert v[2] == {1}
+
+        # and the freed frames are reusable
+        r3 = proto.read_pages([4, 4], [0, 1], 0)
+        assert (r3.status == D.ST_GRANT_E).all()
+
+    def test_deterministic_reclaim_blocks_until_acks(self):
+        proto = self.make(pool_pages=4)
+        res = proto.read_pages([5], [0], 0)
+        proto.commit_pages([5], [0], 0, res.slot)
+        proto.read_pages([5], [0], 2)
+
+        victims, notify = proto.reclaim_begin(0, want=1)
+        assert len(victims) == 1 and notify == {(5, 0): [2]}
+        # not freed yet — deterministic sequence requires the ACK
+        freed, _ = proto.reclaim_finish(0)
+        assert freed == 0
+        proto.reclaim_ack(5, 0, 2)
+        freed, _ = proto.reclaim_finish(0)
+        assert freed == 1
+
+    def test_failed_node_unblocks_eviction(self):
+        """Paper §5 liveness: a dead sharer must not pin the owner's memory."""
+        proto = self.make(pool_pages=4)
+        res = proto.read_pages([6], [0], 0)
+        proto.commit_pages([6], [0], 0, res.slot)
+        proto.read_pages([6], [0], 3)
+
+        _, notify = proto.reclaim_begin(0, want=1)
+        assert notify == {(6, 0): [3]}
+        proto.fail_node(3)  # node 3 never ACKs
+        freed, _ = proto.reclaim_finish(0)
+        assert freed == 1
+
+    def test_strong_write_two_step(self):
+        proto = self.make()
+        coh = CoherenceManager(proto, "dpc_sc")
+        t = coh.prepare([7, 7], [0, 1], node=1)
+        assert len(t.locked_rows) == 2
+        assert coh.commit(t) == 2
+        # a second writer on another node maps the pages (write-through)
+        t2 = coh.prepare([7, 7], [0, 1], node=2)
+        assert len(t2.remote_rows) == 2
+        coh.commit(t2)
+        view = proto.directory_view()
+        assert all(v[4] for v in view.values())  # dirty
+
+    def test_relaxed_write_no_roundtrip(self):
+        proto = self.make()
+        coh = CoherenceManager(proto, "dpc")
+        t = coh.prepare([7], [0], node=1)
+        assert len(t.locked_rows) == 0 and len(t.remote_rows) == 0
+        assert proto.counters["reads"] == 0

@@ -1,0 +1,41 @@
+"""Distributed datapath correctness: runs spmd_check.py in a subprocess with
+8 virtual CPU devices (the device-count flag must precede jax init)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_script(name, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    return proc
+
+
+def test_spmd_datapaths_match_local_oracle():
+    proc = run_script("spmd_check.py")
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-2000:]}"
+    assert "ALL_OK" in proc.stdout
+    # every individual check line must be OK
+    for line in proc.stdout.splitlines():
+        if line.startswith("FAIL"):
+            pytest.fail(line)
+
+
+def test_elastic_remesh_checkpoint_restart():
+    """Node failure -> epoch bump -> smaller mesh -> restore -> continue."""
+    proc = run_script("spmd_elastic.py")
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-2000:]}"
+    assert "ELASTIC_OK" in proc.stdout

@@ -1,0 +1,292 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,sq,sk,hq,hkv,d,causal", [
+        (1, 128, 128, 4, 4, 64, True),      # MHA square
+        (2, 256, 256, 8, 2, 64, True),      # GQA 4x
+        (1, 200, 200, 4, 1, 32, True),      # MQA, ragged seq (padding path)
+        (1, 64, 256, 4, 4, 64, True),       # Sq < Sk (chunked prefill)
+        (2, 128, 96, 4, 2, 64, False),      # cross attention
+    ])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_vs_naive_oracle(self, b, sq, sk, hq, hkv, d, causal, dtype):
+        from repro.kernels.flash_attention import ops, ref
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        dt = jnp.dtype(dtype)
+        q = rand(k1, (b, sq, hq, d), dt)
+        k = rand(k2, (b, sk, hkv, d), dt)
+        v = rand(k3, (b, sk, hkv, d), dt)
+        got = ops.flash_attention(q, k, v, causal=causal, block_q=64,
+                                  block_k=64, interpret=True)
+        want = ref.reference_attention(q, k, v, causal=causal)
+        tol = 2e-2 if dtype == "bfloat16" else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_dv_neq_dk(self):
+        """MLA prefill shape: qk dim 64, v dim 32."""
+        from repro.kernels.flash_attention import ops, ref
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = rand(k1, (1, 128, 4, 64), jnp.float32)
+        k = rand(k2, (1, 128, 4, 64), jnp.float32)
+        v = rand(k3, (1, 128, 4, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                                  block_k=64, interpret=True)
+        want = ref.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_tiled_ref_matches_naive(self):
+        from repro.kernels.flash_attention import ref
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = rand(k1, (2, 300, 8, 64), jnp.float32)
+        k = rand(k2, (2, 300, 2, 64), jnp.float32)
+        v = rand(k3, (2, 300, 2, 64), jnp.float32)
+        got = ref.tiled_causal_attention(q, k, v, chunk=128)
+        want = ref.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+
+def make_paged_case(key, b, hq, hkv, d, p_phys, page, n_pages, dtype,
+                    frac_valid=0.8):
+    ks = jax.random.split(key, 5)
+    q = rand(ks[0], (b, hq, d), dtype)
+    k_pool = rand(ks[1], (p_phys, page, hkv, d), dtype)
+    v_pool = rand(ks[2], (p_phys, page, hkv, d), dtype)
+    # unique physical slots per request, some invalid
+    rng = np.random.RandomState(0)
+    pt = np.full((b, n_pages), -1, np.int32)
+    seq_lens = np.zeros((b,), np.int32)
+    for i in range(b):
+        n_valid = max(1, int(n_pages * frac_valid) - (i % 2))
+        pt[i, :n_valid] = rng.choice(p_phys, n_valid, replace=False)
+        seq_lens[i] = (n_valid - 1) * page + rng.randint(1, page + 1)
+    return q, k_pool, v_pool, jnp.asarray(pt), jnp.asarray(seq_lens)
+
+
+def paged_oracle(q, k_pool, v_pool, pt, seq_lens):
+    """Dense gather + masked softmax (independent of both impls)."""
+    b, hq, d = q.shape
+    p, page, hkv, _ = k_pool.shape
+    n = pt.shape[1]
+    n_rep = hq // hkv
+    safe = jnp.maximum(pt, 0)
+    k = k_pool[safe].reshape(b, n * page, hkv, d).astype(jnp.float32)
+    v = v_pool[safe].reshape(b, n * page, hkv, d).astype(jnp.float32)
+    k = jnp.repeat(k, n_rep, 2)
+    v = jnp.repeat(v, n_rep, 2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), k) / np.sqrt(d)
+    pos = jnp.arange(n * page)
+    ok = (jnp.repeat(pt >= 0, page, 1)) & (pos[None] < seq_lens[:, None])
+    s = jnp.where(ok[:, None], s, -1e30)
+    p_ = jax.nn.softmax(s, -1)
+    return jnp.einsum("bht,bthd->bhd", p_, v)
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("b,hq,hkv,d,page,n_pages", [
+        (2, 4, 4, 64, 16, 8),
+        (3, 8, 2, 64, 32, 4),     # GQA 4x
+        (1, 4, 1, 32, 8, 16),     # MQA
+    ])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_pallas_vs_oracle(self, b, hq, hkv, d, page, n_pages, dtype):
+        from repro.kernels.paged_attention import ops
+        dt = jnp.dtype(dtype)
+        q, kp, vp, pt, sl = make_paged_case(
+            jax.random.PRNGKey(3), b, hq, hkv, d, 64, page, n_pages, dt)
+        got, (m, l) = ops.paged_attention(q, kp, vp, pt, sl, interpret=True)
+        want = paged_oracle(q, kp, vp, pt, sl)
+        tol = 3e-2 if dtype == "bfloat16" else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=tol, rtol=tol)
+        assert np.isfinite(np.asarray(m)).all()
+        assert (np.asarray(l) > 0).all()
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_ref_vs_oracle(self, dtype):
+        from repro.kernels.paged_attention import ref
+        dt = jnp.dtype(dtype)
+        q, kp, vp, pt, sl = make_paged_case(
+            jax.random.PRNGKey(4), 2, 8, 2, 64, 64, 16, 8, dt)
+        got, _ = ref.paged_attention(q, kp, vp, pt, sl, pages_per_step=3)
+        want = paged_oracle(q, kp, vp, pt, sl)
+        tol = 3e-2 if dtype == "bfloat16" else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=tol, rtol=tol)
+
+    def test_pallas_matches_ref_stats(self):
+        """ship_compute needs (m, l): both impls must agree on them."""
+        from repro.kernels.paged_attention import ops, ref
+        q, kp, vp, pt, sl = make_paged_case(
+            jax.random.PRNGKey(5), 2, 4, 2, 32, 32, 8, 6, jnp.float32)
+        got, (m1, l1) = ops.paged_attention(q, kp, vp, pt, sl, interpret=True)
+        want, (m2, l2) = ref.paged_attention(q, kp, vp, pt, sl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5)
+
+
+class TestMLAPagedAttention:
+    def mla_oracle(self, ql, qr, pool, pt, sl):
+        b, h, r = ql.shape
+        dr = qr.shape[-1]
+        p, page, rd = pool.shape
+        n = pt.shape[1]
+        lat = pool[jnp.maximum(pt, 0)].reshape(b, n * page, rd)
+        lat = lat.astype(jnp.float32)
+        s = (jnp.einsum("bhr,btr->bht", ql.astype(jnp.float32), lat[..., :r])
+             + jnp.einsum("bhr,btr->bht", qr.astype(jnp.float32), lat[..., r:])
+             ) / np.sqrt(r + dr)
+        pos = jnp.arange(n * page)
+        ok = jnp.repeat(pt >= 0, page, 1) & (pos[None] < sl[:, None])
+        s = jnp.where(ok[:, None], s, -1e30)
+        p_ = jax.nn.softmax(s, -1)
+        return jnp.einsum("bht,btr->bhr", p_, lat[..., :r])
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("impl", ["pallas", "ref"])
+    def test_vs_oracle(self, dtype, impl):
+        from repro.kernels.paged_attention import ops, ref
+        dt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        b, h, r, dr, page, n_pages, p_phys = 2, 4, 64, 16, 8, 6, 32
+        ql = rand(ks[0], (b, h, r), dt)
+        qr = rand(ks[1], (b, h, dr), dt)
+        pool = rand(ks[2], (p_phys, page, r + dr), dt)
+        rng = np.random.RandomState(1)
+        pt = np.full((b, n_pages), -1, np.int32)
+        sl = np.zeros((b,), np.int32)
+        for i in range(b):
+            nv = 3 + i
+            pt[i, :nv] = rng.choice(p_phys, nv, replace=False)
+            sl[i] = (nv - 1) * page + 3
+        pt, sl = jnp.asarray(pt), jnp.asarray(sl)
+        if impl == "pallas":
+            got, _ = ops.mla_paged_attention(ql, qr, pool, pt, sl,
+                                             interpret=True)
+        else:
+            got, _ = ref.mla_paged_attention(ql, qr, pool, pt, sl,
+                                             pages_per_step=2)
+        want = self.mla_oracle(ql, qr, pool, pt, sl)
+        tol = 3e-2 if dtype == "bfloat16" else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# page gather / scatter
+# ---------------------------------------------------------------------------
+
+
+class TestPageGatherScatter:
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+    @pytest.mark.parametrize("feat", [(4,), (2, 8)])
+    def test_gather(self, dtype, feat):
+        from repro.kernels.page_gather import ops, ref
+        dt = jnp.dtype(dtype)
+        pool = jnp.arange(np.prod((16, 8) + feat)).reshape(
+            (16, 8) + feat).astype(dt)
+        ids = jnp.asarray([3, -1, 0, 15, 7], jnp.int32)
+        got = ops.page_gather(pool, ids, interpret=True)
+        want = ref.page_gather(pool, ids)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_scatter(self, dtype):
+        from repro.kernels.page_gather import ops, ref
+        dt = jnp.dtype(dtype)
+        pool = jnp.zeros((16, 8, 4), dt)
+        ids = jnp.asarray([2, -1, 9], jnp.int32)
+        pages = jnp.arange(3 * 8 * 4).reshape(3, 8, 4).astype(dt)
+        got = ops.page_scatter(pool, ids, pages, interpret=True)
+        want = ref.page_scatter(pool, ids, pages)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_roundtrip(self):
+        from repro.kernels.page_gather import ops
+        pool = jnp.zeros((8, 4, 2), jnp.float32)
+        pages = jnp.ones((2, 4, 2), jnp.float32) * jnp.asarray(
+            [[[3.0]], [[5.0]]])
+        ids = jnp.asarray([1, 6], jnp.int32)
+        pool = ops.page_scatter(pool, ids, pages, interpret=True)
+        back = ops.page_gather(pool, ids, interpret=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(pages))
+
+
+# ---------------------------------------------------------------------------
+# directory probe
+# ---------------------------------------------------------------------------
+
+
+class TestDirectoryProbe:
+    def test_probe_matches_directory_and_ref(self):
+        from repro.kernels.directory_probe import ops
+        cfg = dirx.DirectoryConfig(capacity=64, num_nodes=4, max_probe=64)
+        d = dirx.init_directory(cfg)
+        # install 20 pages, remove 5 (tombstones in probe chains)
+        descs = D.make_batch(np.arange(20) % 3 + 1, np.arange(20), 0)
+        d, _ = dirx.lookup_and_install(d, descs, max_probe=64)
+        kill = D.make_batch(np.arange(5) % 3 + 1, np.arange(5), 0)
+        d, _ = dirx.abort_install(d, kill, max_probe=64)
+
+        queries = jnp.asarray(
+            [[s % 3 + 1, s] for s in range(25)], jnp.int32)
+        got = ops.probe_batch(d.keys, queries, max_probe=64, interpret=True)
+        want = ops.probe_batch_ref(d.keys, queries, max_probe=64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        got = np.asarray(got)
+        # removed keys must not be found; live keys must be
+        for i in range(25):
+            if 5 <= i < 20:
+                assert got[i, 0] >= 0, f"live key {i} not found"
+            else:
+                assert got[i, 0] == -1, f"dead/absent key {i} found"
+                assert got[i, 1] >= 0, "insert slot expected"
+
+    def test_probe_agrees_with_install_slots(self):
+        """Probe must return exactly the slot lookup_and_install used."""
+        from repro.kernels.directory_probe import ops
+        cfg = dirx.DirectoryConfig(capacity=32, num_nodes=2, max_probe=32)
+        d = dirx.init_directory(cfg)
+        streams = np.asarray([7, 7, 7, 9, 9], np.int32)
+        pages = np.asarray([0, 1, 2, 0, 1], np.int32)
+        d, _ = dirx.lookup_and_install(
+            d, D.make_batch(streams, pages, 1), max_probe=32)
+        q = jnp.stack([jnp.asarray(streams), jnp.asarray(pages)], -1)
+        res = np.asarray(ops.probe_batch(d.keys, q, max_probe=32,
+                                         interpret=True))
+        keys = np.asarray(d.keys)
+        for i in range(5):
+            slot = res[i, 0]
+            assert slot >= 0
+            assert keys[slot, 0] == streams[i] and keys[slot, 1] == pages[i]

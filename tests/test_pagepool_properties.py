@@ -1,0 +1,107 @@
+"""Property tests: the JAX page pool against the Python RefPagePool spec.
+
+Random op sequences (alloc / install / touch / drain / release / clock_scan)
+must preserve the pool invariants on both implementations: free slots and
+installed slots partition the pool, no slot is double-allocated, CLOCK only
+victimizes installed-and-unreferenced slots, and released slots become
+allocatable again.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import pagepool as pp
+from repro.core.refimpl import RefPagePool
+
+N_PAGES = 8
+
+OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["alloc", "release", "touch", "scan"]),
+        st.integers(0, N_PAGES - 1),   # slot-ish argument
+        st.integers(1, 3),             # want
+    ),
+    min_size=1, max_size=40)
+
+
+def pool_invariants(pool: pp.PoolState):
+    key_of = np.asarray(pool.key_of)
+    state = np.asarray(pool.slot_state)
+    top = int(pool.free_top)
+    stack = np.asarray(pool.free_stack)[:top]
+    assert len(set(stack.tolist())) == top, "free stack has duplicates"
+    for s in stack:
+        assert state[s] == pp.S_FREE, f"slot {s} on free stack but not FREE"
+    n_free = (state == pp.S_FREE).sum()
+    assert n_free == top, "FREE count != stack size"
+    installed = state == pp.S_INSTALLED
+    assert (key_of[installed, 0] >= 0).all(), "installed slot without key"
+
+
+@settings(max_examples=30, deadline=None)
+@given(OPS)
+def test_pool_matches_refimpl(ops):
+    pool = pp.init_pool(N_PAGES)
+    ref = RefPagePool(N_PAGES)
+    live = []  # slots we believe are installed
+
+    for op, arg, want in ops:
+        if op == "alloc":
+            pool, slots = pp.alloc(pool, jnp.ones((1,), bool))
+            r = ref.alloc()
+            got = int(np.asarray(slots)[0])
+            # both must agree on whether allocation succeeded
+            assert (got >= 0) == (r >= 0)
+            if got >= 0:
+                key = jnp.asarray([[1, arg]], jnp.int32)
+                pool = pp.install(pool, slots, key)
+                ref.install(r, (1, arg))
+                live.append((got, r))
+        elif op == "release" and live:
+            (g, r) = live.pop(arg % len(live))
+            pool = pp.begin_drain(pool, jnp.asarray([g], jnp.int32))
+            pool = pp.release(pool, jnp.asarray([g], jnp.int32))
+            ref.release(r)
+        elif op == "touch" and live:
+            (g, r) = live[arg % len(live)]
+            pool = pp.touch(pool, jnp.asarray([g], jnp.int32))
+            ref.touch(r)
+        elif op == "scan":
+            pool, victims = pp.clock_scan(pool, want)
+            victims = [int(v) for v in np.asarray(victims) if v >= 0]
+            for v in victims:
+                # CLOCK may only pick installed slots
+                assert int(np.asarray(pool.slot_state)[v]) == pp.S_INSTALLED
+        pool_invariants(pool)
+        ref.check_invariants()
+
+    # final agreement on occupancy
+    assert int(pp.num_free(pool)) == ref.num_free
+
+
+def test_clock_second_chance():
+    """A touched slot survives one scan pass; an untouched one is victimized."""
+    pool = pp.init_pool(4)
+    pool, slots = pp.alloc(pool, jnp.ones((2,), bool))
+    pool = pp.install(pool, slots, jnp.asarray([[1, 0], [1, 1]], jnp.int32))
+    # both have ref=1 from alloc: first scan clears bits, no victims...
+    pool, v1 = pp.clock_scan(pool, 1)
+    s0, s1 = int(np.asarray(slots)[0]), int(np.asarray(slots)[1])
+    # keep s0 hot
+    pool = pp.touch(pool, jnp.asarray([s0], jnp.int32))
+    pool, v2 = pp.clock_scan(pool, 1)
+    picked = [int(v) for v in np.asarray(v2) if v >= 0]
+    assert picked and picked[0] == s1, "cold slot must be victimized first"
+
+
+def test_exhaustion_and_reuse():
+    pool = pp.init_pool(3)
+    pool, slots = pp.alloc(pool, jnp.ones((4,), bool))
+    got = np.asarray(slots)
+    assert (got >= 0).sum() == 3 and got[3] == -1
+    pool = pp.release(pool, jnp.asarray(got[:2], jnp.int32))
+    pool, again = pp.alloc(pool, jnp.ones((3,), bool))
+    again = np.asarray(again)
+    assert (again >= 0).sum() == 2 and again[2] == -1
