@@ -1,13 +1,16 @@
 """Benchmark driver: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only name]
+    PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke]
 
+``--smoke`` asks each suite that supports it for a seconds-scale run — CI
+executes every entrypoint this way to catch import/API drift early.
 Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -16,10 +19,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run of every suite (CI drift check)")
     args = ap.parse_args()
 
     from benchmarks import (app_serving, control_plane, microbench_read,
-                            microbench_write, reclamation, roofline)
+                            microbench_write, migration, reclamation,
+                            roofline)
     suites = [
         ("microbench_read", microbench_read.run),     # paper Fig. 6/7
         ("microbench_write", microbench_write.run),   # paper Fig. 8/9
@@ -27,6 +33,7 @@ def main() -> None:
         ("control_plane", control_plane.run),         # paper Table 1
         ("app_serving", app_serving.run),             # paper Fig. 10
         ("roofline", roofline.run),                   # brief §Roofline
+        ("migration", migration.run),                 # ownership hand-off
     ]
     failures = 0
     for name, fn in suites:
@@ -35,7 +42,16 @@ def main() -> None:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            fn()
+            if args.smoke:
+                if "smoke" in inspect.signature(fn).parameters:
+                    fn(smoke=True)
+                else:
+                    # no seconds-scale mode yet: the import + signature
+                    # resolution above already catches module-level drift
+                    print(f"# {name}: no smoke mode — import-checked only",
+                          flush=True)
+            else:
+                fn()
         except Exception:  # noqa
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",

@@ -1,0 +1,36 @@
+"""Repo-root pytest configuration: src on the path, test tiers, hypothesis
+profiles.
+
+Tiers (see pytest.ini / README):
+  tier 1 (default)      ``pytest`` / ``pytest -m "not slow"`` — fast guard,
+                        runs on every push, well under two minutes
+  tier 2 (non-blocking) ``pytest -m "slow or property"`` — distributed
+                        subprocess suites, full-arch train sweeps, and the
+                        hypothesis property searches
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    # property suites always belong to the slow tier: one marker to filter on
+    for item in items:
+        if "property" in item.keywords:
+            item.add_marker(pytest.mark.slow)
+
+
+try:
+    from hypothesis import settings
+
+    # example counts live here, not on the tests: CI shrinks the searches so
+    # the non-blocking tier stays minutes-scale, dev keeps them thorough
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.register_profile("dev", max_examples=40, deadline=None)
+    settings.load_profile("ci" if os.environ.get("CI") else "dev")
+except ImportError:  # dev-only dep — tests guard their own imports
+    pass

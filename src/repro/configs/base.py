@@ -357,10 +357,21 @@ class DPCConfig:
     kv_dtype: str = "bfloat16"          # int8 enables quantized pool
     # directory placement: sharded (hash-partitioned) | central (shard 0)
     directory_placement: str = "sharded"
+    # --- ownership migration (core/migration.py; 0 threshold disables) ---
+    migrate_threshold: int = 4          # decayed remote accesses that promote
+    migrate_batch: int = 32             # max MIGRATEs per round
+    migrate_interval_steps: int = 8     # engine steps between rounds
+    migrate_decay_every: int = 4        # rounds between hotness halvings
+    migrate_cooldown: int = 2           # rounds a migrated page is immune
 
     @property
     def enabled(self) -> bool:
         return self.mode in ("dpc", "dpc_sc")
+
+    @property
+    def migration_enabled(self) -> bool:
+        return self.enabled and self.migrate_threshold > 0 \
+            and self.migrate_interval_steps > 0
 
 
 # ---------------------------------------------------------------------------

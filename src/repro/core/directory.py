@@ -35,8 +35,13 @@ from jax import lax
 
 from repro.core import descriptors as D
 
-# entry states
-FREE, E, O, TBI = 0, 1, 2, 3
+# entry states.  TBM is the migration-flavored TBI from the MIGRATE
+# transaction (O -> TBM -> E@new_owner): it reuses the invalidation fan-out
+# (sharers must tear down mappings into the moving frame and ACK) but keeps a
+# distinct code so a concurrent reclaim (O -> TBI) and a concurrent migrate
+# can never complete each other's transaction — whichever transition lands
+# first wins and the loser observes BLOCKED/BAD.
+FREE, E, O, TBI, TBM = 0, 1, 2, 3, 4
 
 EMPTY = -1   # slot never used (probe chains stop here)
 TOMB = -2    # slot deleted (probe chains continue past)
@@ -187,7 +192,7 @@ def lookup_and_install(d: DirectoryState, descs: jax.Array,
         row = d.sharers[jnp.maximum(found, 0)]
         cur_pfn = d.pfn[jnp.maximum(found, 0)]
 
-        is_blocked = present & ((st == E) | (st == TBI))
+        is_blocked = present & ((st == E) | (st == TBI) | (st == TBM))
         is_owner = present & (st == O) & (own == node)
         already_s = present & (st == O) & (own != node) & has_bit(row, node)
         new_s = present & (st == O) & (own != node) & ~has_bit(row, node)
@@ -325,7 +330,10 @@ def begin_invalidate(d: DirectoryState, descs: jax.Array,
 @functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
 def ack_invalidate(d: DirectoryState, descs: jax.Array,
                    *, max_probe: int = 128):
-    """FUSE_DPC_INV_ACK: a sharer tore down its mapping (aux lane = dirty)."""
+    """FUSE_DPC_INV_ACK: a sharer tore down its mapping (aux lane = dirty).
+
+    Accepted in TBI (reclamation) and TBM (migration) — both transactions
+    fan DIR_INV out to the same sharer set and drain the same bits."""
     n_words = d.sharers.shape[1]
     _, clear_bit, has_bit, _ = _sharer_row_ops(n_words)
 
@@ -337,7 +345,8 @@ def ack_invalidate(d: DirectoryState, descs: jax.Array,
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         row = d.sharers[slot]
-        ok = valid & (found >= 0) & (d.state[slot] == TBI) & has_bit(row, node)
+        in_teardown = (d.state[slot] == TBI) | (d.state[slot] == TBM)
+        ok = valid & (found >= 0) & in_teardown & has_bit(row, node)
 
         sharers = _cond_write(d.sharers, found, clear_bit(row, node), ok)
         dirty = _cond_write(d.dirty, found,
@@ -390,6 +399,105 @@ def complete_invalidate(d: DirectoryState, descs: jax.Array,
         stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
         return (d._replace(keys=keys, state=state, dirty=dirty, pfn=pfn,
                            stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def begin_migrate(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """FUSE_DPC_MIGRATE: hand ownership to the descriptor's node (lane 2).
+
+    O -> TBM when the destination differs from the current owner.  Returns
+    (state, results, sharer_masks [N, W]): results carry (status, old_owner,
+    old_pfn) — the frame the destination must copy from — and the masks are
+    the DIR_INV fan-out (every sharer maps the *moving* frame and must tear
+    down + ACK before the hand-off completes; the destination itself is
+    usually in that set — that is exactly the hot-page case).
+
+      absent                  -> BAD        (nothing to migrate)
+      O, owner == dst         -> HIT_OWNER  (no-op: already home)
+      O, owner != dst         -> OK         (transition to TBM)
+      E / TBI / TBM           -> BLOCKED    (transaction in flight; retry)
+    """
+    n_words = d.sharers.shape[1]
+
+    def step(i, carry):
+        d, res, masks = carry
+        stream, page, dst = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        st = d.state[slot]
+        own = d.owner[slot]
+
+        present = valid & (found >= 0)
+        is_noop = present & (st == O) & (own == dst)
+        ok = present & (st == O) & (own != dst)
+        busy = present & ((st == E) | (st == TBI) | (st == TBM))
+
+        state = _cond_write(d.state, found, jnp.int32(TBM), ok)
+
+        row = jnp.where(ok, d.sharers[slot], jnp.zeros((n_words,), jnp.uint32))
+        masks = masks.at[i].set(row)
+
+        status = jnp.where(~valid, jnp.int32(STAT_SKIP),
+                 jnp.where(ok, D.ST_OK,
+                 jnp.where(is_noop, D.ST_HIT_OWNER,
+                 jnp.where(busy, D.ST_BLOCKED, D.ST_BAD))))
+        res = res.at[i].set(jnp.stack([status, own, d.pfn[slot]]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(state=state, stats=stats), res, masks)
+
+    n = descs.shape[0]
+    masks0 = jnp.zeros((n, n_words), jnp.uint32)
+    d, res, masks = lax.fori_loop(
+        0, n, step, (d, jnp.zeros((n, 3), jnp.int32), masks0))
+    return d, res, masks
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def complete_migrate(d: DirectoryState, descs: jax.Array,
+                     *, max_probe: int = 128):
+    """MIGRATION_ACK: all sharer ACKs in -> TBM -> E@new_owner.
+
+    Descriptor: lane 2 = new owner, aux lane = expected old owner (the host
+    transaction token — a completion races nothing because TBM entries only
+    ever belong to one in-flight MIGRATE).  The entry re-enters E exactly as
+    a fresh install would (pfn unpublished): the new owner materializes the
+    copy from the old frame and then runs the ordinary COMMIT (E -> O).
+    Passing new_owner == old_owner is the abort path (ownership stays put).
+    The result pfn lane carries the accumulated dirty bit so writeback
+    obligations travel with ownership.  BLOCKED while ACKs are outstanding.
+    """
+    n_words = d.sharers.shape[1]
+    _, _, _, empty = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, dst, old = (descs[i, 0], descs[i, 1],
+                                  descs[i, 2], descs[i, 3])
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        in_tbm = valid & (found >= 0) & (d.state[slot] == TBM) & \
+            (d.owner[slot] == old)
+        done = in_tbm & empty(d.sharers[slot])
+
+        was_dirty = jnp.where(done & d.dirty[slot], jnp.int32(1),
+                              jnp.int32(0))
+        state = _cond_write(d.state, found, jnp.int32(E), done)
+        owner = _cond_write(d.owner, found, dst, done)
+        pfn = _cond_write(d.pfn, found, jnp.int32(-1), done)
+
+        status = jnp.where(~valid, jnp.int32(STAT_SKIP),
+                 jnp.where(done, D.ST_OK,
+                 jnp.where(in_tbm, D.ST_BLOCKED, D.ST_BAD)))
+        res = res.at[i].set(jnp.stack([status, dst, was_dirty]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(state=state, owner=owner, pfn=pfn, stats=stats),
+                res)
 
     n = descs.shape[0]
     d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))

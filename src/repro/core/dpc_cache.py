@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import DPCConfig
 from repro.core import descriptors as D
+from repro.core.migration import MigrationConfig, OwnershipMigrator
 from repro.core.protocol import DPCProtocol, ProtocolConfig
 
 
@@ -58,8 +59,16 @@ class DistributedKVCache:
         self._replica_free: List[List[int]] = [
             list(range(dpc.pool_pages_per_shard - 1, -1, -1))
             for _ in range(num_nodes)]
+        # promotion policy: every remote hit feeds the hotness ledger; the
+        # engine drains it periodically through run_migrations()
+        self.migrator = OwnershipMigrator(self.proto, MigrationConfig(
+            threshold=dpc.migrate_threshold,
+            batch_size=dpc.migrate_batch,
+            decay_every=dpc.migrate_decay_every,
+            cooldown_rounds=dpc.migrate_cooldown,
+        ))
         self.stats = {"lookups": 0, "fills": 0, "remote_hits": 0,
-                      "local_hits": 0, "evictions": 0}
+                      "local_hits": 0, "evictions": 0, "migrations": 0}
 
     # ------------------------------------------------------------------
     # shared-mode path (dpc / dpc_sc)
@@ -87,6 +96,9 @@ class DistributedKVCache:
                 out.append(PageLookup(st, int(res.pfn[i]),
                                       int(res.owner[i]), False, True))
                 self.stats["remote_hits"] += 1
+                if self.dpc.migration_enabled:  # else the ledger never drains
+                    self.migrator.note_remote_access(
+                        (int(streams[i]), int(pages[i])), node)
             elif st == D.ST_HIT_OWNER:
                 out.append(PageLookup(st, int(res.pfn[i]), node, False,
                                       False))
@@ -111,6 +123,18 @@ class DistributedKVCache:
         freed, _ = self.proto.reclaim_sync(node, want)
         self.stats["evictions"] += freed
         return freed
+
+    def run_migrations(self, copy_fn=None) -> List[Tuple[Tuple[int, int],
+                                                         int, int]]:
+        """One ownership-migration round (engine calls off the critical
+        path).  Promotes pages whose decayed remote-access count crossed the
+        threshold; returns [(key, old_page_id, new_page_id)] so the caller
+        can rewrite its page tables.  No-op for uncoordinated modes."""
+        if not self.dpc.migration_enabled:
+            return []
+        moved = self.migrator.run_round(copy_fn=copy_fn)
+        self.stats["migrations"] += len(moved)
+        return moved
 
     def fail_node(self, node: int) -> int:
         lost = self.proto.fail_node(node)

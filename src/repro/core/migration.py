@@ -1,0 +1,162 @@
+"""Hotness-driven page-ownership migration — the beyond-paper tentpole.
+
+DPC's single-copy invariant (paper §4) pins a page's sole DRAM copy on the
+node that first touched it.  When the traffic moves — a prefix goes viral on
+another replica, a tenant rebalances — every access from the new hot node
+pays the remote-read penalty forever.  This module makes ownership follow the
+workload: a decaying per-(page, node) remote-access ledger feeds a promotion
+policy, and promotions execute as batched MIGRATE transactions through the
+directory, off the serving critical path.
+
+State machine (per page key; directory codes in core/directory.py):
+
+    O@src --MIGRATE--> TBM --all sharer INV_ACKs--> E@dst --COMMIT--> O@dst
+                        |                                              |
+                        +---- abort (dst pool full / dst died) --------+
+                                   TBM -> E@src -> COMMIT -> O@src
+
+TBM ("to-be-migrated") reuses the invalidation fan-out of reclamation's TBI:
+every sharer maps the *moving* frame, so each must tear its mapping down and
+ACK before the hand-off lands — the destination is usually among them (that
+is precisely the hot-page case).  Because TBM and TBI are distinct states, a
+concurrent reclaim and migrate of the same page can never complete each
+other's transaction: whichever begin lands first wins, the loser observes
+BLOCKED/BAD and retries.  The single-copy invariant therefore holds at every
+step: the source frame stays DRAINING (retained, reclaim-proof) until the
+destination's COMMIT publishes the new frame, and only then is it freed.
+
+Policy: ``note_remote_access`` bumps the requester's counter for the page;
+counters halve every ``decay_every`` rounds (an exponentially-weighted
+frequency, mirroring the pool-side hotness counter in core/pagepool.py).  A
+round promotes up to ``batch_size`` pages whose hottest remote node crossed
+``threshold``, hottest first; a migrated page is immune for
+``cooldown_rounds`` rounds so two competing nodes cannot ping-pong a page
+back and forth every round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.protocol import DPCProtocol
+
+Key = Tuple[int, int]  # (stream_id, page_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    threshold: int = 4        # decayed remote-access count that promotes
+    batch_size: int = 32      # max MIGRATEs per round (batched, §4.3-style)
+    decay_every: int = 4      # rounds between ledger/pool hotness halvings
+    cooldown_rounds: int = 2  # rounds a freshly migrated page is immune
+
+
+class HotnessLedger:
+    """Decaying per-(page, node) remote-access counts.
+
+    This is the directory-side complement of the pool's per-slot hotness
+    counter: remote reads never touch the owner's pool, so the signal that
+    actually justifies moving ownership has to be collected where the
+    requests are seen — at lookup time."""
+
+    def __init__(self) -> None:
+        self.counts: Dict[Key, Dict[int, int]] = {}
+
+    def note(self, key: Key, node: int, weight: int = 1) -> None:
+        self.counts.setdefault(key, {})[node] = \
+            self.counts.get(key, {}).get(node, 0) + weight
+
+    def decay(self) -> None:
+        """Halve every counter; forget pages that cooled to zero."""
+        for key in list(self.counts):
+            per_node = {n: c >> 1 for n, c in self.counts[key].items()
+                        if c >> 1 > 0}
+            if per_node:
+                self.counts[key] = per_node
+            else:
+                del self.counts[key]
+
+    def hottest(self, key: Key) -> Tuple[int, int]:
+        """(node, count) of the heaviest remote accessor; (-1, 0) if none."""
+        per_node = self.counts.get(key)
+        if not per_node:
+            return -1, 0
+        node = max(per_node, key=lambda n: (per_node[n], -n))
+        return node, per_node[node]
+
+    def forget(self, key: Key) -> None:
+        self.counts.pop(key, None)
+
+
+class OwnershipMigrator:
+    """Promotion policy + batched MIGRATE execution over a DPCProtocol.
+
+    The serving engine (or any protocol driver) calls ``note_remote_access``
+    on every remote hit and ``run_round`` periodically off the critical
+    path; everything else — candidate ranking, batching, cooldown, the
+    directory transaction, frame accounting — happens here."""
+
+    def __init__(self, proto: DPCProtocol,
+                 cfg: Optional[MigrationConfig] = None):
+        self.proto = proto
+        self.cfg = cfg or MigrationConfig()
+        self.ledger = HotnessLedger()
+        self.round = 0
+        # key -> round number until which it may not migrate again
+        self._cooldown: Dict[Key, int] = {}
+        self.stats = {"rounds": 0, "candidates": 0, "migrated": 0,
+                      "cooldown_skips": 0}
+
+    # -- signal ---------------------------------------------------------------
+
+    def note_remote_access(self, key: Key, node: int) -> None:
+        self.ledger.note(key, node)
+
+    # -- policy ---------------------------------------------------------------
+
+    def candidates(self) -> List[Tuple[Key, int]]:
+        """Up to ``batch_size`` (key, dst) pairs whose hottest remote node
+        crossed the threshold, hottest first."""
+        out: List[Tuple[int, Key, int]] = []
+        for key in self.ledger.counts:
+            if self._cooldown.get(key, 0) > self.round:
+                self.stats["cooldown_skips"] += 1
+                continue
+            node, count = self.ledger.hottest(key)
+            if node >= 0 and count >= self.cfg.threshold:
+                out.append((count, key, node))
+        out.sort(key=lambda t: (-t[0], t[1]))
+        return [(key, node) for _, key, node in out[:self.cfg.batch_size]]
+
+    # -- execution ------------------------------------------------------------
+
+    def run_round(self, ack_fn=None, copy_fn=None
+                  ) -> List[Tuple[Key, int, int]]:
+        """One migration round: decay tick, pick candidates, run the batched
+        MIGRATE transaction.  Returns [(key, old_pfn, new_pfn)] so callers
+        can rewrite page tables.  Safe to call every engine step — rounds
+        with no candidates cost one dict scan and no directory traffic."""
+        self.round += 1
+        self.stats["rounds"] += 1
+        if self.cfg.decay_every and self.round % self.cfg.decay_every == 0:
+            self.ledger.decay()
+            self._decay_pools()
+            self._cooldown = {k: r for k, r in self._cooldown.items()
+                              if r > self.round}
+        pairs = self.candidates()
+        if not pairs:
+            return []
+        self.stats["candidates"] += len(pairs)
+        moved = self.proto.migrate_sync(pairs, ack_fn=ack_fn, copy_fn=copy_fn)
+        for key, _, _ in moved:
+            self._cooldown[key] = self.round + self.cfg.cooldown_rounds
+            self.ledger.forget(key)
+        self.stats["migrated"] += len(moved)
+        return moved
+
+    def _decay_pools(self) -> None:
+        from repro.core import pagepool as pp
+        for node in range(self.proto.cfg.num_nodes):
+            self.proto._pool_update(node,
+                                    pp.decay_hot(self.proto.state.pools[node]))

@@ -3,9 +3,22 @@
 Each DPC node owns a pool of physical page frames (pool slots).  The pool
 tracks, per slot, the logical key installed there (reverse map for
 invalidation), a CLOCK reference bit (second-chance LRU, standing in for the
-kernel's LRU lists), and a free stack.  "Local reclaim" = CLOCK scan picks
-victims -> protocol issues LOCAL_INV batches -> frames freed only after the
-directory's INVALIDATION_ACK — never unilaterally (deterministic reclamation).
+kernel's LRU lists), a decaying hotness counter (access frequency feeding the
+ownership-migration policy), and a free stack.  "Local reclaim" = CLOCK scan
+picks victims -> protocol issues LOCAL_INV batches -> frames freed only after
+the directory's INVALIDATION_ACK — never unilaterally (deterministic
+reclamation).
+
+Hotness: ``touch`` both sets the CLOCK ref bit and bumps a saturating per-slot
+counter; ``decay_hot`` halves every counter (called on a period by the
+migration manager).  ``clock_scan`` consumes it GCLOCK-style: a slot whose
+ref bit is clear but whose counter is still high is aged (halved) and spared
+for the pass, so frequently-hit frames resist eviction beyond the one-bit
+second chance.  The cap is kept small (HOT_MAX) so a formerly-hot slot ages
+out within a couple of scan revolutions — reclamation can never be starved
+by stale heat.  The counter is the *local* access-frequency signal; the
+remote-access signal that actually drives promotion lives in the hotness
+ledger (core/migration.py) because remote reads never touch the owner's pool.
 
 All ops are functional and jitted; slot state lives on device next to the KV
 pool it indexes.
@@ -29,10 +42,14 @@ EMPTY = -1
 S_FREE, S_RESERVED, S_INSTALLED, S_DRAINING = 0, 1, 2, 3
 
 
+HOT_MAX = 8  # hotness saturation: log2(HOT_MAX) scan passes age any slot out
+
+
 class PoolState(NamedTuple):
     key_of: jax.Array     # [P, 2] int32 (stream, page) or EMPTY
     slot_state: jax.Array  # [P] int32 (S_*)
     ref: jax.Array        # [P] int8 CLOCK reference bit
+    hot: jax.Array        # [P] int32 decaying access-frequency counter
     free_stack: jax.Array  # [P] int32
     free_top: jax.Array   # scalar int32: stack[0:top] are free slots
     hand: jax.Array       # scalar int32 CLOCK hand
@@ -43,6 +60,7 @@ def init_pool(num_pages: int) -> PoolState:
         key_of=jnp.full((num_pages, 2), EMPTY, jnp.int32),
         slot_state=jnp.zeros((num_pages,), jnp.int32),
         ref=jnp.zeros((num_pages,), jnp.int8),
+        hot=jnp.zeros((num_pages,), jnp.int32),
         free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
         free_top=jnp.int32(num_pages),
         hand=jnp.int32(0),
@@ -71,8 +89,10 @@ def alloc(pool: PoolState, want: jax.Array) -> Tuple[PoolState, jax.Array]:
         ss = jnp.where(can, pool.slot_state.at[jnp.maximum(slot, 0)]
                        .set(S_RESERVED), pool.slot_state)
         ref = jnp.where(can, pool.ref.at[jnp.maximum(slot, 0)].set(1), pool.ref)
+        hot = jnp.where(can, pool.hot.at[jnp.maximum(slot, 0)].set(1), pool.hot)
         out = out.at[i].set(slot)
-        return pool._replace(slot_state=ss, ref=ref, free_top=free_top), out
+        return pool._replace(slot_state=ss, ref=ref, hot=hot,
+                             free_top=free_top), out
 
     out0 = jnp.full((n,), -1, jnp.int32)
     return lax.fori_loop(0, n, step, (pool, out0))
@@ -94,12 +114,25 @@ def install(pool: PoolState, slots: jax.Array, keys: jax.Array) -> PoolState:
 
 @functools.partial(jax.jit, donate_argnums=0)
 def touch(pool: PoolState, slots: jax.Array) -> PoolState:
-    """Set CLOCK ref bits on access (negative slots skipped)."""
+    """Set CLOCK ref bits and bump hotness on access (negative slots skipped).
+
+    The hotness counter saturates at HOT_MAX; ``decay_hot`` halves it on a
+    period, so it approximates an exponentially-weighted access frequency
+    (the migration policy's local-traffic signal)."""
     ok = slots >= 0
     safe = jnp.maximum(slots, 0)
     ref = pool.ref.at[safe].set(
         jnp.where(ok, jnp.int8(1), pool.ref[safe]))
-    return pool._replace(ref=ref)
+    hot = pool.hot.at[safe].set(
+        jnp.where(ok, jnp.minimum(pool.hot[safe] + 1, HOT_MAX),
+                  pool.hot[safe]))
+    return pool._replace(ref=ref, hot=hot)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def decay_hot(pool: PoolState) -> PoolState:
+    """Halve every hotness counter (exponential decay tick)."""
+    return pool._replace(hot=pool.hot >> 1)
 
 
 @functools.partial(jax.jit, donate_argnums=0)
@@ -111,6 +144,19 @@ def begin_drain(pool: PoolState, slots: jax.Array) -> PoolState:
     cur = pool.slot_state[safe]
     slot_state = pool.slot_state.at[safe].set(
         jnp.where(ok & (cur == S_INSTALLED), jnp.int32(S_DRAINING), cur))
+    return pool._replace(slot_state=slot_state)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def reinstate(pool: PoolState, slots: jax.Array) -> PoolState:
+    """DRAINING -> INSTALLED: back out of a drain that never completed (the
+    directory rejected the transition, or a migration aborted).  Negative
+    slots skipped."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    cur = pool.slot_state[safe]
+    slot_state = pool.slot_state.at[safe].set(
+        jnp.where(ok & (cur == S_DRAINING), jnp.int32(S_INSTALLED), cur))
     return pool._replace(slot_state=slot_state)
 
 
@@ -129,11 +175,13 @@ def release(pool: PoolState, slots: jax.Array) -> PoolState:
         ss = pool.slot_state.at[safe].set(
             jnp.where(ok, jnp.int32(S_FREE), pool.slot_state[safe]))
         ref = pool.ref.at[safe].set(jnp.where(ok, jnp.int8(0), pool.ref[safe]))
+        hot = pool.hot.at[safe].set(jnp.where(ok, jnp.int32(0),
+                                              pool.hot[safe]))
         top = pool.free_top
         stack = pool.free_stack.at[jnp.where(ok, top, 0)].set(
             jnp.where(ok, slot, pool.free_stack[0]))
         top = jnp.where(ok, top + 1, top)
-        return pool._replace(key_of=key_of, slot_state=ss, ref=ref,
+        return pool._replace(key_of=key_of, slot_state=ss, ref=ref, hot=hot,
                              free_stack=stack, free_top=top)
 
     return lax.fori_loop(0, n, step, pool)
@@ -141,14 +189,18 @@ def release(pool: PoolState, slots: jax.Array) -> PoolState:
 
 @functools.partial(jax.jit, static_argnames=("want",), donate_argnums=0)
 def clock_scan(pool: PoolState, want: int) -> Tuple[PoolState, jax.Array]:
-    """Second-chance CLOCK over INSTALLED slots: pick up to ``want`` victims.
+    """GCLOCK over INSTALLED slots: pick up to ``want`` victims.
 
     Referenced slots get their bit cleared and are skipped (one more pass of
-    life); unreferenced INSTALLED slots become victims.  Scans at most two
-    full revolutions.  Returns (pool, victim_slots [want] int32, -1 padded).
+    life); unreferenced-but-hot slots are aged (counter halved) and spared
+    for the pass; unreferenced cold slots become victims.  Scans at most
+    enough revolutions to age any slot fully, so a pool of uniformly hot
+    frames still yields victims within one call.  Returns
+    (pool, victim_slots [want] int32, -1 padded).
     """
     p = pool.key_of.shape[0]
-    max_steps = 2 * p
+    # 2 revolutions for classic second chance + log2(HOT_MAX) to age heat out
+    max_steps = (2 + HOT_MAX.bit_length()) * p
 
     def cond(c):
         pool, victims, n_found, steps = c
@@ -160,14 +212,20 @@ def clock_scan(pool: PoolState, want: int) -> Tuple[PoolState, jax.Array]:
         hand = jnp.where(slot + 1 >= p, 0, slot + 1)
         installed = pool.slot_state[slot] == S_INSTALLED
         referenced = pool.ref[slot] > 0
+        still_hot = pool.hot[slot] > 1
         # second chance: clear the bit
         ref = pool.ref.at[slot].set(
             jnp.where(installed & referenced, jnp.int8(0), pool.ref[slot]))
-        is_victim = installed & ~referenced
+        # frequency chance: age the counter instead of victimizing
+        hot = pool.hot.at[slot].set(
+            jnp.where(installed & ~referenced & still_hot,
+                      pool.hot[slot] >> 1, pool.hot[slot]))
+        is_victim = installed & ~referenced & ~still_hot
         victims = victims.at[jnp.where(is_victim, n_found, want)].set(
             jnp.where(is_victim, slot, jnp.int32(-1)))
         n_found = n_found + is_victim.astype(jnp.int32)
-        return (pool._replace(ref=ref, hand=hand), victims, n_found, steps + 1)
+        return (pool._replace(ref=ref, hot=hot, hand=hand), victims,
+                n_found, steps + 1)
 
     victims0 = jnp.full((want + 1,), -1, jnp.int32)  # +1 scratch row
     pool, victims, _, _ = lax.while_loop(

@@ -10,6 +10,11 @@ these composite flows; each flow is the faithful sequence from the paper:
   reclamation  (§4.3)  CLOCK victims -> LOCAL_INV batch (frames retained,
                         DRAINING) -> DIR_INV fan-out -> INV_ACKs (dirty bits)
                         -> INVALIDATION_ACK -> writeback if dirty -> free
+  migration    (beyond-paper)  hot remote page -> MIGRATE batch
+                        (O -> TBM, sharers torn down exactly like an
+                        invalidation round) -> complete (TBM -> E@dst) ->
+                        copy + COMMIT at dst -> source frame freed.
+                        See core/migration.py for the policy side.
 
 The *directory placement* mirrors DESIGN.md §2: ``central`` keeps one
 directory consulted by every node (the paper's storage-server placement);
@@ -117,11 +122,16 @@ class DPCProtocol:
         self.state = state or init_state(cfg)
         # pages in TBI with outstanding sharer ACKs: (stream, page) -> set(nodes)
         self.pending_inv: Dict[Tuple[int, int], Dict] = {}
+        # pages in TBM (ownership hand-off in flight):
+        # (stream, page) -> {src, dst, src_slot, old_pfn, waiting: set(nodes)}
+        self.pending_mig: Dict[Tuple[int, int], Dict] = {}
         # counters for the microbenchmarks
         self.counters = {
             "reads": 0, "grants": 0, "remote_hits": 0, "local_hits": 0,
             "blocked": 0, "commits": 0, "reclaims": 0, "dir_invs": 0,
             "inv_acks": 0, "writebacks": 0, "dropped_nodes": 0,
+            "migrations": 0, "migration_noops": 0, "migration_aborts": 0,
+            "migration_acks": 0,
         }
 
     # -- helpers -------------------------------------------------------------
@@ -146,10 +156,14 @@ class DPCProtocol:
         for shard, idxs in _group_by_shard(self.cfg, streams, pages).items():
             batch = D.make_batch(streams[idxs], pages[idxs], nodes[idxs],
                                  aux[idxs])
+            # pad to the next power of two: opcode programs recompile per
+            # batch shape, so this bounds jit variants to log2(n) per opcode
+            n_real = batch.shape[0]
+            batch = D.pad_batch(batch, 1 << (n_real - 1).bit_length())
             out = self._dir_op(op, shard, batch)
-            res[idxs] = np.asarray(out[0])
-            if len(out) > 1:  # begin_invalidate returns sharer masks
-                extra[shard] = (idxs, np.asarray(out[1]))
+            res[idxs] = np.asarray(out[0])[:n_real]
+            if len(out) > 1:  # begin_invalidate/migrate return sharer masks
+                extra[shard] = (idxs, np.asarray(out[1])[:n_real])
         return res, extra
 
     def _pool_update(self, node: int, new_pool: pp.PoolState):
@@ -265,6 +279,12 @@ class DPCProtocol:
                                   keys[:, 0], keys[:, 1], node)
         notify: Dict[Tuple[int, int], List[int]] = {}
         ok_rows = set(np.nonzero(res[:, 0] == D.ST_OK)[0].tolist())
+        # rows the directory refused (e.g. the page is mid-MIGRATE, in TBM):
+        # back the drain out so the frame stays usable and CLOCK-visible
+        refused = victims_np[res[:, 0] != D.ST_OK]
+        if len(refused):
+            self._pool_update(node, pp.reinstate(
+                self.state.pools[node], jnp.asarray(refused, jnp.int32)))
         for shard, (idxs, masks) in extra.items():
             for j, row in enumerate(idxs):
                 if row not in ok_rows:
@@ -326,6 +346,141 @@ class DPCProtocol:
                 self.reclaim_ack(key[0], key[1], s)
         return self.reclaim_finish(node)
 
+    # -- ownership migration (hotness-driven hand-off; core/migration.py) -------
+
+    def migrate_begin(self, pairs: Sequence[Tuple[Tuple[int, int], int]]
+                      ) -> Tuple[np.ndarray,
+                                 Dict[Tuple[int, int], List[int]]]:
+        """Batched MIGRATE step 1: O -> TBM for each ((stream, page), dst).
+
+        Returns (statuses [N], {key: [sharer nodes to DIR_INV]}).  The source
+        frame moves to DRAINING (retained — it is still the only valid copy
+        and serves reads-in-flight) and the directory fans DIR_INV to every
+        sharer; the hand-off completes in ``migrate_finish`` only after all
+        ACKs, exactly like deterministic reclamation.  Keys already in an
+        invalidation or migration round are skipped (BLOCKED)."""
+        n = len(pairs)
+        statuses = np.full((n,), D.ST_BLOCKED, np.int32)
+        rows = [i for i, (key, _) in enumerate(pairs)
+                if key not in self.pending_inv and key not in self.pending_mig]
+        # a key may appear twice in one batch: the directory serializes them
+        # (first wins, second BLOCKED), mirroring same-batch read semantics
+        if not rows:
+            return statuses, {}
+        streams = [pairs[i][0][0] for i in rows]
+        pages = [pairs[i][0][1] for i in rows]
+        dsts = np.asarray([pairs[i][1] for i in rows], np.int32)
+        res, extra = self._routed(dirx.begin_migrate, streams, pages, dsts)
+        statuses[rows] = res[:, 0]
+
+        notify: Dict[Tuple[int, int], List[int]] = {}
+        ok = res[:, 0] == D.ST_OK
+        self.counters["migration_noops"] += int(
+            (res[:, 0] == D.ST_HIT_OWNER).sum())
+        masks_by_row: Dict[int, np.ndarray] = {}
+        for shard, (idxs, masks) in extra.items():
+            for j, row in enumerate(idxs):
+                masks_by_row[row] = masks[j]
+        for j, row_ok in enumerate(ok):
+            if not row_ok:
+                continue
+            key = (int(streams[j]), int(pages[j]))
+            src, old_pfn = int(res[j, 1]), int(res[j, 2])
+            src_slot = old_pfn % self.cfg.pool_pages
+            sharer_nodes = _mask_to_nodes(masks_by_row[j])
+            self._pool_update(src, pp.begin_drain(
+                self.state.pools[src], jnp.asarray([src_slot], jnp.int32)))
+            notify[key] = sharer_nodes
+            self.pending_mig[key] = {
+                "src": src, "dst": int(dsts[j]), "src_slot": src_slot,
+                "old_pfn": old_pfn, "waiting": set(sharer_nodes),
+            }
+            self.counters["dir_invs"] += len(sharer_nodes)
+        return statuses, notify
+
+    def migrate_ack(self, stream: int, page: int, node: int,
+                    dirty: bool = False) -> int:
+        """Sharer ACK for a migration DIR_INV (same opcode as reclamation)."""
+        res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
+                              [1 if dirty else 0])
+        key = (stream, page)
+        if key in self.pending_mig:
+            self.pending_mig[key]["waiting"].discard(node)
+        self.counters["migration_acks"] += 1
+        return int(res[0, 0])
+
+    def _migrate_abort(self, key: Tuple[int, int], info: Dict) -> None:
+        """Back a migration out: TBM -> E@src -> COMMIT restores O@src with
+        the original frame (commit re-installs the key over the retained
+        DRAINING slot, which doubles as the reinstate)."""
+        res, _ = self._routed(dirx.complete_migrate, [key[0]], [key[1]],
+                              info["src"], [info["src"]])
+        if res[0, 0] == D.ST_OK:
+            self.commit_pages([key[0]], [key[1]], info["src"],
+                              [info["src_slot"]])
+        self.counters["migration_aborts"] += 1
+
+    def migrate_finish(self, copy_fn=None
+                       ) -> List[Tuple[Tuple[int, int], int, int]]:
+        """Complete every migration whose sharer ACKs are all in.
+
+        Per ready key: allocate a frame at the destination, TBM -> E@dst,
+        copy the page (``copy_fn(key, src_pfn, dst_pfn)`` is the data-plane
+        hook), COMMIT at the destination (publishes the new PFN), then free
+        the source frame.  Destination pool exhaustion aborts that hand-off
+        (ownership stays at the source — migration is best-effort and must
+        never lose the only copy).  Returns [(key, src_pfn, dst_pfn)] for
+        page-table rewriting by the caller."""
+        ready = [(k, v) for k, v in self.pending_mig.items()
+                 if not v["waiting"]]
+        moved: List[Tuple[Tuple[int, int], int, int]] = []
+        for key, info in ready:
+            del self.pending_mig[key]
+            src, dst = info["src"], info["dst"]
+            if dst == src:  # retargeted after a destination failure
+                self._migrate_abort(key, info)
+                continue
+            pool, got = pp.alloc(self.state.pools[dst],
+                                 jnp.ones((1,), bool))
+            self._pool_update(dst, pool)
+            dst_slot = int(np.asarray(got)[0])
+            if dst_slot < 0:
+                self._migrate_abort(key, info)
+                continue
+            res, _ = self._routed(dirx.complete_migrate, [key[0]], [key[1]],
+                                  dst, [src])
+            if res[0, 0] != D.ST_OK:
+                # src died mid-round (entry gone) or state changed under us:
+                # give the reserved frame back and drop the transaction
+                self._pool_update(dst, pp.release(
+                    self.state.pools[dst],
+                    jnp.asarray([dst_slot], jnp.int32)))
+                self.counters["migration_aborts"] += 1
+                continue
+            dst_pfn = dst * self.cfg.pool_pages + dst_slot
+            if copy_fn is not None:
+                copy_fn(key, info["old_pfn"], dst_pfn)
+            self.commit_pages([key[0]], [key[1]], dst, [dst_slot])
+            self._pool_update(src, pp.release(
+                self.state.pools[src],
+                jnp.asarray([info["src_slot"]], jnp.int32)))
+            self.counters["migrations"] += 1
+            moved.append((key, info["old_pfn"], dst_pfn))
+        return moved
+
+    def migrate_sync(self, pairs: Sequence[Tuple[Tuple[int, int], int]],
+                     ack_fn=None, copy_fn=None
+                     ) -> List[Tuple[Tuple[int, int], int, int]]:
+        """One full synchronous MIGRATE round: begin -> deliver DIR_INVs
+        (``ack_fn`` lets the engine tear down real mappings) -> finish."""
+        _, notify = self.migrate_begin(pairs)
+        for key, sharer_nodes in notify.items():
+            for s in sharer_nodes:
+                if ack_fn is not None:
+                    ack_fn(key, s)
+                self.migrate_ack(key[0], key[1], s)
+        return self.migrate_finish(copy_fn=copy_fn)
+
     # -- sharer-side voluntary drop ---------------------------------------------
 
     def drop_mapping(self, streams, pages, node: int, dirty=None) -> np.ndarray:
@@ -349,6 +504,17 @@ class DPCProtocol:
             info["waiting"].discard(node)
             if info["owner"] == node:
                 del self.pending_inv[key]
+        for key, info in list(self.pending_mig.items()):
+            info["waiting"].discard(node)
+            if info["src"] == node:
+                # the only copy died with its owner: the directory entry is
+                # gone (dirx.fail_node) — nothing to hand over
+                del self.pending_mig[key]
+            elif info["dst"] == node:
+                # destination died: retarget the hand-off at the source —
+                # migrate_finish treats dst == src as the abort path once
+                # the remaining sharer ACKs drain
+                info["dst"] = info["src"]
         self.counters["dropped_nodes"] += 1
         return lost
 

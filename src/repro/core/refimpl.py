@@ -21,9 +21,11 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core import descriptors as D
 
-# entry states (global view; per-node states are derived)
-FREE, E, O, TBI = 0, 1, 2, 3
-STATE_NAMES = {FREE: "FREE", E: "E", O: "O", TBI: "TBI"}
+# entry states (global view; per-node states are derived).  TBM is the
+# migration-flavored TBI: same sharer-teardown semantics, distinct code so
+# reclaim and migrate transactions can never complete each other.
+FREE, E, O, TBI, TBM = 0, 1, 2, 3, 4
+STATE_NAMES = {FREE: "FREE", E: "E", O: "O", TBI: "TBI", TBM: "TBM"}
 
 Key = Tuple[int, int]  # (stream_id, page_idx)
 
@@ -88,7 +90,7 @@ class RefDirectory:
             self.entries[key] = Entry(state=E, owner=node)
             self.stats.grants_e += 1
             return D.ST_GRANT_E, node, -1
-        if e.state in (E, TBI):
+        if e.state in (E, TBI, TBM):
             self.stats.blocked += 1
             return D.ST_BLOCKED, -1, -1
         # state == O
@@ -142,7 +144,7 @@ class RefDirectory:
     def ack_invalidate(self, stream: int, page: int, node: int,
                        dirty: bool) -> int:
         e = self.entries.get((stream, page))
-        if e is None or e.state != TBI or node not in e.sharers:
+        if e is None or e.state not in (TBI, TBM) or node not in e.sharers:
             self.stats.bad += 1
             return D.ST_BAD
         e.sharers.discard(node)
@@ -164,6 +166,50 @@ class RefDirectory:
             return D.ST_BLOCKED, False  # ACKs outstanding
         dirty = e.inv_dirty
         del self.entries[key]
+        self.stats.completions += 1
+        return D.ST_OK, dirty
+
+    # -- opcode: FUSE_DPC_MIGRATE (hotness-driven ownership hand-off) ---------
+
+    def begin_migrate(self, stream: int, page: int, dst: int
+                      ) -> Tuple[int, int, int, Set[int]]:
+        """O -> TBM.  Returns (status, old_owner, old_pfn, sharers to DIR_INV).
+
+        dst == current owner is a no-op (ST_HIT_OWNER); a page already in a
+        teardown/install transition is BLOCKED; an absent page is BAD."""
+        e = self.entries.get((stream, page))
+        if e is None:
+            self.stats.bad += 1
+            return D.ST_BAD, -1, -1, set()
+        if e.state != O:
+            self.stats.blocked += 1
+            return D.ST_BLOCKED, -1, -1, set()
+        if e.owner == dst:
+            return D.ST_HIT_OWNER, e.owner, e.pfn, set()
+        old_owner, old_pfn = e.owner, e.pfn
+        e.state = TBM
+        e.inv_dirty = e.dirty
+        self.stats.invalidations += 1
+        return D.ST_OK, old_owner, old_pfn, set(e.sharers)
+
+    def complete_migrate(self, stream: int, page: int, dst: int, old: int
+                         ) -> Tuple[int, bool]:
+        """TBM -> E@dst once every sharer ACKed.  Returns (status, dirty).
+
+        dst == old is the abort path (ownership returns to the source).  The
+        entry re-enters E with pfn unpublished: the new owner copies the page
+        and runs the ordinary COMMIT (E -> O)."""
+        e = self.entries.get((stream, page))
+        if e is None or e.state != TBM or e.owner != old:
+            self.stats.bad += 1
+            return D.ST_BAD, False
+        if e.sharers:
+            return D.ST_BLOCKED, False
+        dirty = e.dirty or e.inv_dirty
+        e.state = E
+        e.owner = dst
+        e.pfn = -1
+        e.dirty = dirty
         self.stats.completions += 1
         return D.ST_OK, dirty
 
@@ -208,7 +254,7 @@ class RefDirectory:
 
     def check_invariants(self) -> None:
         for key, e in self.entries.items():
-            assert e.state in (E, O, TBI), f"{key}: bad state {e.state}"
+            assert e.state in (E, O, TBI, TBM), f"{key}: bad state {e.state}"
             assert 0 <= e.owner < self.num_nodes, f"{key}: bad owner {e.owner}"
             # single-copy invariant: exactly one owner, owner not in sharers
             assert e.owner not in e.sharers, f"{key}: owner in sharers"
@@ -222,20 +268,23 @@ class RefDirectory:
 
     def resident_pages(self, node: int) -> List[Key]:
         return [k for k, e in self.entries.items()
-                if e.owner == node and e.state in (O, E, TBI)]
+                if e.owner == node and e.state in (O, E, TBI, TBM)]
 
     def __len__(self) -> int:
         return len(self.entries)
 
 
 class RefPagePool:
-    """Executable spec of one node's physical page pool (+ CLOCK reclaim)."""
+    """Executable spec of one node's physical page pool (+ GCLOCK reclaim)."""
+
+    HOT_MAX = 8  # mirror of pagepool.HOT_MAX
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.key_of: Dict[int, Optional[Key]] = {i: None for i in range(num_pages)}
         self.ref_bit: List[int] = [0] * num_pages
+        self.hot: List[int] = [0] * num_pages
         self.clock_hand = 0
 
     def alloc(self) -> int:
@@ -244,6 +293,7 @@ class RefPagePool:
             return -1
         slot = self.free.pop()
         self.ref_bit[slot] = 1
+        self.hot[slot] = 1
         return slot
 
     def install(self, slot: int, key: Key) -> None:
@@ -252,19 +302,25 @@ class RefPagePool:
 
     def touch(self, slot: int) -> None:
         self.ref_bit[slot] = 1
+        self.hot[slot] = min(self.hot[slot] + 1, self.HOT_MAX)
+
+    def decay_hot(self) -> None:
+        self.hot = [h >> 1 for h in self.hot]
 
     def release(self, slot: int) -> Optional[Key]:
         key = self.key_of[slot]
         self.key_of[slot] = None
         self.ref_bit[slot] = 0
+        self.hot[slot] = 0
         self.free.append(slot)
         return key
 
     def clock_scan(self, want: int) -> List[int]:
-        """Second-chance CLOCK: pick up to ``want`` victims among installed slots."""
+        """GCLOCK: ref bit is the second chance, the hotness counter buys
+        further passes (halved each time) — cold slots are victimized."""
         victims: List[int] = []
         scanned = 0
-        limit = 2 * self.num_pages
+        limit = (2 + self.HOT_MAX.bit_length()) * self.num_pages
         while len(victims) < want and scanned < limit:
             slot = self.clock_hand
             self.clock_hand = (self.clock_hand + 1) % self.num_pages
@@ -273,6 +329,8 @@ class RefPagePool:
                 continue
             if self.ref_bit[slot]:
                 self.ref_bit[slot] = 0
+            elif self.hot[slot] > 1:
+                self.hot[slot] >>= 1
             else:
                 victims.append(slot)
         return victims

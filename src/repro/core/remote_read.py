@@ -69,7 +69,7 @@ def _a2a(x: jax.Array, axes) -> jax.Array:
     x: [n_nodes, ...] with n_nodes = prod(axis sizes), row-major over
     ``axes`` (matching ``_my_node``); returns the transposed exchange
     (row r of the result came from node r)."""
-    sizes = [jax.lax.axis_size(a) for a in axes]
+    sizes = [jax.lax.psum(1, a) for a in axes]
     lead = x.shape[0]
     x = x.reshape(tuple(sizes) + x.shape[1:])
     for i, ax in enumerate(axes):

@@ -31,15 +31,17 @@ NEG_INF = -1e30
 
 
 def _axis_size(axes) -> int:
+    # psum of a literal constant-folds to a python int under shard_map —
+    # the portable axis-size idiom (lax.axis_size needs jax >= 0.5)
     import numpy as np
-    return int(np.prod([jax.lax.axis_size(a) for a in axes]))
+    return int(np.prod([jax.lax.psum(1, a) for a in axes]))
 
 
 def _my_node(dpc_axes: Sequence[str]) -> jax.Array:
     """Linearized DPC node id of this shard (row-major over dpc_axes)."""
     node = jnp.int32(0)
     for ax in dpc_axes:
-        node = node * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        node = node * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
     return node
 
 
@@ -141,7 +143,7 @@ def make_dpc_attend(mesh: Mesh, *, batch_axes=("pod", "data"),
         h_loc = q.shape[1]
         b_idx = jnp.int32(0)
         for ax in b_axes:
-            b_idx = b_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            b_idx = b_idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
         o = jax.lax.dynamic_slice_in_dim(o, b_idx * b_loc, b_loc, 0)
         if head_axis in mesh.axis_names:
             h_idx = jax.lax.axis_index(head_axis)
@@ -223,7 +225,7 @@ def make_dpc_attend_mla(mesh: Mesh, *, batch_axes=("pod", "data"),
         b_loc, h_loc = q_latent.shape[0], q_latent.shape[1]
         b_idx = jnp.int32(0)
         for ax in b_axes:
-            b_idx = b_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            b_idx = b_idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
         o = jax.lax.dynamic_slice_in_dim(o, b_idx * b_loc, b_loc, 0)
         if head_axis in mesh.axis_names:
             h_idx = jax.lax.axis_index(head_axis)

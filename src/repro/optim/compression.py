@@ -70,7 +70,7 @@ def make_compressed_allreduce(mesh: Mesh, axes=("pod", "data")):
         parts_q = q
         parts_s = jnp.broadcast_to(scale, (n_shards,))
         for ax in axes:
-            na = jax.lax.axis_size(ax)
+            na = jax.lax.psum(1, ax)
             parts_q = parts_q.reshape((na, parts_q.shape[0] // na)
                                       + parts_q.shape[1:])
             parts_q = jax.lax.all_to_all(parts_q, ax, 0, 0, tiled=False)

@@ -82,6 +82,7 @@ class ServingEngine:
         # -1 = no append target: inactive slots never write KV (backends
         # drop negative append slots)
         self._ap = np.full((max_batch,), -1, np.int32)
+        self._step_count = 0
 
     # ------------------------------------------------------------------
 
@@ -320,7 +321,54 @@ class ServingEngine:
                 self._sync_cache_tables()
             else:
                 n_active += 1
+
+        # ownership migration rides the step boundary — batched, never inside
+        # the per-token decode (the paper's "off the critical path" batching)
+        self._step_count += 1
+        dpc = self.run.dpc
+        if dpc.migration_enabled and \
+                self._step_count % dpc.migrate_interval_steps == 0:
+            self._run_migrations()
         return n_active + len(self.queue)
+
+    # -- ownership migration (core/migration.py) ------------------------------
+
+    def _run_migrations(self) -> int:
+        """Drain the hotness ledger: migrate hot pages toward their traffic,
+        copy the KV rows, and rewrite every table that named the old frame."""
+        moved = self.kv.run_migrations(copy_fn=self._copy_page)
+        if not moved:
+            return 0
+        remap = {old: new for _, old, new in moved}
+        for old, new in remap.items():
+            self._pt[self._pt == old] = new
+        for req in self.active:
+            if req is not None:
+                req.page_ids = [remap.get(p, p) for p in req.page_ids]
+        self._sync_cache_tables()
+        return len(moved)
+
+    def _copy_page(self, key, src_pfn: int, dst_pfn: int) -> None:
+        """Data-plane hook for migrate_finish: move one page's KV rows.
+
+        At smoke scale the engine holds one pool array indexed by local slot
+        (global ids alias mod P); the distributed datapaths do this copy as a
+        ship_data fetch instead."""
+        pc = steps.paged_part(self.cache)
+        if pc is None:
+            return
+        P = self.kv.dpc.pool_pages_per_shard
+        src, dst = src_pfn % P, dst_pfn % P
+        if src == dst:
+            return
+        if isinstance(pc, MLAPagedCache):
+            pc = pc._replace(latent_pools=pc.latent_pools.at[:, dst]
+                             .set(pc.latent_pools[:, src]))
+        else:
+            pc = pc._replace(
+                k_pools=pc.k_pools.at[:, dst].set(pc.k_pools[:, src]),
+                v_pools=pc.v_pools.at[:, dst].set(pc.v_pools[:, src]))
+        self.cache = steps.replace_paged(self.cache, pc)
 
     def run_to_completion(self, max_steps: int = 10000) -> List[Request]:
         finished: List[Request] = []

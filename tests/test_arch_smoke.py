@@ -46,6 +46,7 @@ def setup_arch(arch_id, seed=0):
     return cfg, api, params
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_train_step_finite(arch_id):
     cfg, api, params = setup_arch(arch_id)
@@ -63,6 +64,7 @@ def test_train_step_finite(arch_id):
     assert sum(norms) > 0, f"{arch_id}: no gradient signal"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_remat_matches_no_remat(arch_id):
     cfg, api, params = setup_arch(arch_id)
@@ -198,6 +200,7 @@ def test_prefill_decode_consistency_lm(arch_id):
     assert_decode_matches_prefill(logits_dec, logits_full)
 
 
+@pytest.mark.slow
 def test_prefill_decode_consistency_rwkv():
     cfg, api, params = setup_arch("rwkv6-3b")
     b, s = 2, 16
@@ -221,6 +224,7 @@ def test_prefill_decode_consistency_rwkv():
     assert_decode_matches_prefill(logits, logits_full)
 
 
+@pytest.mark.slow
 def test_prefill_decode_consistency_hybrid():
     cfg, api, params = setup_arch("zamba2-1.2b")
     b, s = 2, 16

@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# whole-module tier-2: each test boots a subprocess JAX with 8 host devices
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

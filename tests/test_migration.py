@@ -1,0 +1,586 @@
+"""Ownership-migration tests: MIGRATE state machine vs the refimpl oracle,
+the MIGRATE/TBI race with reclamation, abort paths, and the single-copy
+invariant across randomized read/write/reclaim/migrate interleavings.
+
+Tier map: unit + protocol tests run in tier 1; the hypothesis interleaving
+test carries the ``property`` marker (slow tier, shrunk under the CI
+profile — see conftest.py).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core import pagepool as pp
+from repro.core import refimpl as R
+from repro.core.migration import (HotnessLedger, MigrationConfig,
+                                  OwnershipMigrator)
+from repro.core.protocol import DPCProtocol, ProtocolConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tier degrades to the seeded variant
+    HAVE_HYPOTHESIS = False
+
+CAP = 64
+NODES = 4
+CFG = dirx.DirectoryConfig(capacity=CAP, num_nodes=NODES, max_probe=CAP)
+
+
+def batch(stream, page, node, aux=0):
+    return D.make_batch([stream], [page], [node], [aux])
+
+
+def _install(d, ref, s, p, owner, pfn):
+    d, _ = dirx.lookup_and_install(d, batch(s, p, owner), max_probe=CAP)
+    ref.lookup_and_install(s, p, owner)
+    d, _ = dirx.commit(d, batch(s, p, owner, aux=pfn))
+    ref.commit(s, p, owner, pfn)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# directory-level state machine (array impl ≡ refimpl)
+# ---------------------------------------------------------------------------
+
+
+class TestMigrateStateMachine:
+    def fresh(self):
+        return dirx.init_directory(CFG), R.RefDirectory(CAP, NODES)
+
+    def test_begin_migrate_absent_is_bad(self):
+        d, ref = self.fresh()
+        d, res, _ = dirx.begin_migrate(d, batch(1, 1, 2))
+        assert np.asarray(res)[0, 0] == D.ST_BAD == \
+            ref.begin_migrate(1, 1, 2)[0]
+
+    def test_begin_migrate_noop_when_already_owner(self):
+        d, ref = self.fresh()
+        d = _install(d, ref, 1, 0, owner=2, pfn=7)
+        d, res, masks = dirx.begin_migrate(d, batch(1, 0, 2))
+        want = ref.begin_migrate(1, 0, 2)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_HIT_OWNER == want[0]
+        assert int(np.asarray(masks)[0].sum()) == 0
+        # state untouched: still O@2 and readable
+        d, r2 = dirx.lookup_and_install(d, batch(1, 0, 2), max_probe=CAP)
+        assert np.asarray(r2)[0, 0] == D.ST_HIT_OWNER
+
+    def test_full_migration_round_with_sharers(self):
+        d, ref = self.fresh()
+        d = _install(d, ref, 5, 0, owner=0, pfn=11)
+        for n in (1, 2):  # nodes 1, 2 map it remotely
+            d, _ = dirx.lookup_and_install(d, batch(5, 0, n), max_probe=CAP)
+            ref.lookup_and_install(5, 0, n)
+
+        # hand ownership to node 1 (itself a sharer — the hot case)
+        d, res, masks = dirx.begin_migrate(d, batch(5, 0, 1))
+        st_ref, old_owner, old_pfn, sharers = ref.begin_migrate(5, 0, 1)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK == st_ref
+        assert res[0, 1] == 0 == old_owner       # copy source
+        assert res[0, 2] == 11 == old_pfn
+        assert int(np.asarray(masks)[0, 0]) == (1 << 1) | (1 << 2)
+        assert sharers == {1, 2}
+        assert ref.node_state((5, 0), 0) == "TBM"
+
+        # reads block mid-transaction
+        d, r = dirx.lookup_and_install(d, batch(5, 0, 3), max_probe=CAP)
+        assert np.asarray(r)[0, 0] == D.ST_BLOCKED == \
+            ref.lookup_and_install(5, 0, 3)[0]
+
+        # completion blocked until both sharers ACK
+        d, r = dirx.complete_migrate(d, batch(5, 0, 1, aux=0))
+        assert np.asarray(r)[0, 0] == D.ST_BLOCKED
+        assert ref.complete_migrate(5, 0, 1, 0)[0] == D.ST_BLOCKED
+        for n in (1, 2):
+            d, _ = dirx.ack_invalidate(d, batch(5, 0, n))
+            ref.ack_invalidate(5, 0, n, False)
+
+        d, r = dirx.complete_migrate(d, batch(5, 0, 1, aux=0))
+        st_ref, _ = ref.complete_migrate(5, 0, 1, 0)
+        assert np.asarray(r)[0, 0] == D.ST_OK == st_ref
+        assert ref.node_state((5, 0), 1) == "E"
+
+        # ordinary COMMIT publishes the new frame: E@1 -> O@1
+        d, r = dirx.commit(d, batch(5, 0, 1, aux=42))
+        assert np.asarray(r)[0, 0] == D.ST_OK == ref.commit(5, 0, 1, 42)
+        host = dirx.to_host_dict(d, CFG)
+        assert host[(5, 0)][:2] == (dirx.O, 1)
+        assert host[(5, 0)][3] == 42
+
+    def test_migrate_blocked_while_reclaim_tbi(self):
+        """Reclaim wins the race: its TBI blocks the MIGRATE begin."""
+        d, ref = self.fresh()
+        d = _install(d, ref, 2, 0, owner=0, pfn=3)
+        d, _, _ = dirx.begin_invalidate(d, batch(2, 0, 0))
+        ref.begin_invalidate(2, 0, 0)
+        d, res, _ = dirx.begin_migrate(d, batch(2, 0, 1))
+        assert np.asarray(res)[0, 0] == D.ST_BLOCKED == \
+            ref.begin_migrate(2, 0, 1)[0]
+        # and the reclaim can't be completed by a migration completion
+        d, res = dirx.complete_migrate(d, batch(2, 0, 1, aux=0))
+        assert np.asarray(res)[0, 0] == D.ST_BAD
+        assert ref.complete_migrate(2, 0, 1, 0)[0] == D.ST_BAD
+
+    def test_reclaim_blocked_while_migrate_tbm(self):
+        """Migration wins the race: its TBM refuses the invalidation begin."""
+        d, ref = self.fresh()
+        d = _install(d, ref, 2, 0, owner=0, pfn=3)
+        d, _, _ = dirx.begin_migrate(d, batch(2, 0, 1))
+        ref.begin_migrate(2, 0, 1)
+        d, res, _ = dirx.begin_invalidate(d, batch(2, 0, 0))
+        assert np.asarray(res)[0, 0] == D.ST_BAD == \
+            ref.begin_invalidate(2, 0, 0)[0]
+        d, res = dirx.complete_invalidate(d, batch(2, 0, 0))
+        assert np.asarray(res)[0, 0] == D.ST_BAD
+        assert ref.complete_invalidate(2, 0, 0)[0] == D.ST_BAD
+
+    def test_same_batch_migrate_serialization(self):
+        """Two destinations claim the same page in ONE batch: first wins,
+        second observes the in-flight transaction (BLOCKED)."""
+        d, ref = self.fresh()
+        d = _install(d, ref, 9, 4, owner=0, pfn=1)
+        descs = D.make_batch([9, 9], [4, 4], [1, 2])
+        d, res, _ = dirx.begin_migrate(d, descs, max_probe=CAP)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK
+        assert res[1, 0] == D.ST_BLOCKED
+
+    def test_abort_returns_ownership_to_source(self):
+        d, ref = self.fresh()
+        d = _install(d, ref, 3, 0, owner=2, pfn=9)
+        d, _, _ = dirx.begin_migrate(d, batch(3, 0, 1))
+        ref.begin_migrate(3, 0, 1)
+        # abort: complete back to the source, recommit the original frame
+        d, res = dirx.complete_migrate(d, batch(3, 0, 2, aux=2))
+        assert np.asarray(res)[0, 0] == D.ST_OK == \
+            ref.complete_migrate(3, 0, 2, 2)[0]
+        d, res = dirx.commit(d, batch(3, 0, 2, aux=9))
+        assert np.asarray(res)[0, 0] == D.ST_OK == ref.commit(3, 0, 2, 9)
+        host = dirx.to_host_dict(d, CFG)
+        assert host[(3, 0)][:2] == (dirx.O, 2) and host[(3, 0)][3] == 9
+
+    def test_dirty_travels_with_ownership(self):
+        d, ref = self.fresh()
+        d = _install(d, ref, 4, 0, owner=0, pfn=5)
+        d, _ = dirx.mark_dirty(d, batch(4, 0, 0))
+        ref.mark_dirty(4, 0, 0)
+        d, _, _ = dirx.begin_migrate(d, batch(4, 0, 1))
+        ref.begin_migrate(4, 0, 1)
+        d, res = dirx.complete_migrate(d, batch(4, 0, 1, aux=0))
+        st_ref, dirty_ref = ref.complete_migrate(4, 0, 1, 0)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK == st_ref
+        assert bool(res[0, 2]) and dirty_ref  # writeback obligation moved
+
+
+# ---------------------------------------------------------------------------
+# protocol-level flows (directory + pools + pending-transaction bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+def assert_single_copy(proto: DPCProtocol):
+    """The paper's core invariant, checked cluster-wide: every key resident
+    in any pool has exactly one frame holding it, and every O entry's PFN
+    points at that frame on the recorded owner."""
+    pool_copies = {}
+    for node, pool in enumerate(proto.state.pools):
+        key_of = np.asarray(pool.key_of)
+        slot_state = np.asarray(pool.slot_state)
+        for slot in range(key_of.shape[0]):
+            if slot_state[slot] in (pp.S_INSTALLED, pp.S_DRAINING) \
+                    and key_of[slot, 0] >= 0:
+                key = (int(key_of[slot, 0]), int(key_of[slot, 1]))
+                pool_copies.setdefault(key, []).append((node, slot))
+    for key, copies in pool_copies.items():
+        assert len(copies) == 1, f"{key}: multiple copies {copies}"
+    for key, ent in proto.directory_view().items():
+        state, owner, _, pfn, _ = ent
+        if state == dirx.O:
+            assert pfn // proto.cfg.pool_pages == owner, (key, ent)
+            assert pool_copies.get(key) == [(owner, pfn %
+                                             proto.cfg.pool_pages)], (key, ent)
+
+
+class TestProtocolMigration:
+    def make(self, pool_pages=8):
+        return DPCProtocol(ProtocolConfig(
+            num_nodes=NODES, pool_pages=pool_pages, directory_capacity=256))
+
+    def seed(self, proto, n=3, owner=0):
+        streams, pages = [7] * n, list(range(n))
+        res = proto.read_pages(streams, pages, owner)
+        proto.commit_pages(streams, pages, owner, res.slot)
+        return streams, pages
+
+    def test_migrate_moves_frames_and_sharers_torn_down(self):
+        proto = self.make()
+        streams, pages = self.seed(proto)
+        proto.read_pages(streams, pages, 1)   # node 1 shares everything
+        copies = []
+        moved = proto.migrate_sync(
+            [((7, p), 1) for p in pages],
+            copy_fn=lambda key, src, dst: copies.append((key, src, dst)))
+        assert len(moved) == 3 == len(copies)
+        assert_single_copy(proto)
+        view = proto.directory_view()
+        assert all(v[0] == dirx.O and v[1] == 1 and v[2] == set()
+                   for v in view.values())
+        # frames physically moved: source pool drained, destination filled
+        assert int(proto.state.pools[0].free_top) == 8
+        assert int(proto.state.pools[1].free_top) == 5
+        # the mover now local-hits; the old owner becomes the sharer
+        r = proto.read_pages(streams, pages, 1)
+        assert (r.status == D.ST_HIT_OWNER).all()
+        r = proto.read_pages(streams, pages, 0)
+        assert (r.status == D.ST_MAP_S).all()
+
+    def test_migrate_noop_same_owner(self):
+        proto = self.make()
+        self.seed(proto, n=1)
+        st, notify = proto.migrate_begin([((7, 0), 0)])
+        assert st[0] == D.ST_HIT_OWNER and not notify
+        assert not proto.pending_mig
+        assert proto.migrate_finish() == []
+        assert proto.counters["migrations"] == 0
+        assert proto.counters["migration_noops"] == 1
+        assert_single_copy(proto)
+
+    def test_migrate_vs_reclaim_same_round_single_copy(self):
+        """The MIGRATE/TBI race: both transactions target the same page in
+        one round; exactly one wins, the invariant holds throughout, and the
+        loser's drain is backed out (no leaked DRAINING frame)."""
+        proto = self.make(pool_pages=4)
+        streams, pages = self.seed(proto, n=1)
+        proto.read_pages(streams, pages, 1)
+
+        # reclaim begins first (O -> TBI) ...
+        victims, notify = proto.reclaim_begin(0, want=1)
+        assert notify == {(7, 0): [1]}
+        # ... migration of the same page in the same round is refused
+        st, mnotify = proto.migrate_begin([((7, 0), 1)])
+        assert st[0] == D.ST_BLOCKED and not mnotify
+        assert_single_copy(proto)
+        proto.reclaim_ack(7, 0, 1)
+        freed, _ = proto.reclaim_finish(0)
+        assert freed == 1
+        assert_single_copy(proto)
+
+        # now the other order: migrate first, reclaim refused + backed out
+        streams, pages = self.seed(proto, n=1, owner=0)
+        proto.read_pages(streams, pages, 1)
+        st, mnotify = proto.migrate_begin([((7, 0), 1)])
+        assert st[0] == D.ST_OK and mnotify == {(7, 0): [1]}
+        n_draining = int((np.asarray(proto.state.pools[0].slot_state)
+                          == pp.S_DRAINING).sum())
+        assert n_draining == 1
+        victims, notify = proto.reclaim_begin(0, want=1)
+        assert notify == {}          # nothing reclaimable: page is mid-move
+        # no extra frame got stuck in DRAINING on the losing side
+        n_draining = int((np.asarray(proto.state.pools[0].slot_state)
+                          == pp.S_DRAINING).sum())
+        assert n_draining == 1
+        assert_single_copy(proto)
+        proto.migrate_ack(7, 0, 1)
+        moved = proto.migrate_finish()
+        assert len(moved) == 1
+        assert_single_copy(proto)
+
+    def test_migrate_aborts_when_destination_full(self):
+        proto = self.make(pool_pages=2)
+        streams, pages = self.seed(proto, n=1)
+        # fill node 1's pool completely
+        r = proto.read_pages([8, 8], [0, 1], 1)
+        proto.commit_pages([8, 8], [0, 1], 1, r.slot)
+        moved = proto.migrate_sync([((7, 0), 1)])
+        assert moved == []
+        assert proto.counters["migration_aborts"] == 1
+        assert_single_copy(proto)
+        # ownership stayed home and the page still serves reads
+        r = proto.read_pages([7], [0], 0)
+        assert r.status[0] == D.ST_HIT_OWNER
+
+    def test_destination_failure_aborts_handoff(self):
+        proto = self.make()
+        streams, pages = self.seed(proto, n=1)
+        proto.read_pages(streams, pages, 1)
+        proto.read_pages(streams, pages, 2)
+        st, notify = proto.migrate_begin([((7, 0), 1)])
+        assert st[0] == D.ST_OK
+        proto.fail_node(1)           # destination dies mid-round
+        proto.migrate_ack(7, 0, 2)   # surviving sharer still ACKs
+        moved = proto.migrate_finish()
+        assert moved == [] and proto.counters["migration_aborts"] == 1
+        assert_single_copy(proto)
+        view = proto.directory_view()
+        assert view[(7, 0)][:2] == (dirx.O, 0)
+
+    def test_source_failure_drops_transaction(self):
+        proto = self.make()
+        streams, pages = self.seed(proto, n=1)
+        proto.read_pages(streams, pages, 1)
+        proto.migrate_begin([((7, 0), 1)])
+        proto.fail_node(0)           # the only copy dies with its owner
+        assert not proto.pending_mig
+        assert proto.migrate_finish() == []
+        # page is gone but reinstallable
+        r = proto.read_pages([7], [0], 2)
+        assert r.status[0] == D.ST_GRANT_E
+
+
+# ---------------------------------------------------------------------------
+# policy layer
+# ---------------------------------------------------------------------------
+
+
+class TestPolicy:
+    def test_ledger_decay_forgets_cold_pages(self):
+        led = HotnessLedger()
+        for _ in range(3):
+            led.note((1, 0), 2)
+        led.note((1, 1), 3)
+        led.decay()
+        assert led.hottest((1, 0)) == (2, 1)
+        assert led.hottest((1, 1)) == (-1, 0)   # cooled to zero: forgotten
+        assert (1, 1) not in led.counts
+
+    def test_promotion_threshold_and_cooldown(self):
+        proto = DPCProtocol(ProtocolConfig(num_nodes=NODES, pool_pages=8,
+                                           directory_capacity=256))
+        res = proto.read_pages([7], [0], 0)
+        proto.commit_pages([7], [0], 0, res.slot)
+        mig = OwnershipMigrator(proto, MigrationConfig(
+            threshold=3, batch_size=8, decay_every=0, cooldown_rounds=4))
+        proto.read_pages([7], [0], 1)
+        for _ in range(2):
+            mig.note_remote_access((7, 0), 1)
+        assert mig.run_round() == []            # below threshold
+        mig.note_remote_access((7, 0), 1)
+        moved = mig.run_round()                 # crossed it
+        assert len(moved) == 1
+        assert proto.directory_view()[(7, 0)][1] == 1
+        # cooldown: the old owner hammering it back is ignored for now
+        proto.read_pages([7], [0], 0)
+        for _ in range(5):
+            mig.note_remote_access((7, 0), 0)
+        assert mig.run_round() == []
+        assert mig.stats["cooldown_skips"] >= 1
+
+    def test_pool_hotness_counter_decays(self):
+        pool = pp.init_pool(4)
+        pool, slots = pp.alloc(pool, jnp.ones((1,), bool))
+        for _ in range(4):
+            pool = pp.touch(pool, slots)
+        s = int(np.asarray(slots)[0])
+        assert int(np.asarray(pool.hot)[s]) == 5   # 1 from alloc + 4 touches
+        pool = pp.decay_hot(pool)
+        assert int(np.asarray(pool.hot)[s]) == 2
+        pool = pp.begin_drain(pool, slots)
+        pool = pp.release(pool, slots)
+        assert int(np.asarray(pool.hot)[s]) == 0
+
+
+# ---------------------------------------------------------------------------
+# convergence (the acceptance bar for the skewed-workload benchmark)
+# ---------------------------------------------------------------------------
+
+
+def test_skewed_workload_remote_fraction_drops_2x():
+    """The benchmark's smoke workload must converge: the remote-read
+    fraction after migration settles is at least 2x below the shifted
+    traffic's starting point (it lands near zero in practice)."""
+    from benchmarks import migration as bench
+    ratio = bench.run(smoke=True)
+    assert ratio >= 2.0, f"remote-read fraction only dropped {ratio:.2f}x"
+
+
+# ---------------------------------------------------------------------------
+# serving-engine wiring
+# ---------------------------------------------------------------------------
+
+
+class TestEngineIntegration:
+    def _mk_engines(self, migrate=True):
+        import jax
+        from repro.configs import get_smoke_arch
+        from repro.configs.base import (DPCConfig, MeshConfig, RunConfig,
+                                        ShapeConfig)
+        from repro.core.dpc_cache import DistributedKVCache
+        from repro.models import registry
+        from repro.models.spec import init_params
+        from repro.serving.engine import ServingEngine
+        cfg = get_smoke_arch("granite-3-2b")
+        api = registry.get_model(cfg)
+        params = init_params(api.specs(cfg), jax.random.PRNGKey(0))
+        dpc = DPCConfig(page_size=8, pool_pages_per_shard=128,
+                        migrate_threshold=2,
+                        migrate_interval_steps=1 if migrate else 0,
+                        migrate_decay_every=0, migrate_cooldown=1)
+        run = RunConfig(arch=cfg, shape=ShapeConfig("s", 64, 4, "decode"),
+                        mesh=MeshConfig((1,), ("data",)), dpc=dpc)
+        kv = DistributedKVCache(run.dpc, 2)
+        e0 = ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
+                           node=0, num_nodes=2, kv_cache=kv)
+        e1 = ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
+                           node=1, num_nodes=2, kv_cache=kv)
+        return kv, e0, e1
+
+    @staticmethod
+    def _drain(engine):
+        for _ in range(40):
+            if engine.step() == 0:
+                break
+
+    def test_hot_prefix_ownership_follows_replica_traffic(self):
+        from repro.serving import prefix_index
+        kv, e0, e1 = self._mk_engines()
+        prompt = list(range(7, 31))            # 3 full pages
+        keys = prefix_index.page_keys(prompt, 8)[:3]
+
+        e0.submit(prompt, max_new_tokens=2)    # node 0 first-touches
+        self._drain(e0)
+        view = kv.proto.directory_view()
+        assert all(view[tuple(k)][1] == 0 for k in keys)
+
+        # the prefix goes hot on replica 1: repeated admissions hit remotely
+        # until the promotion threshold trips, then ownership walks over
+        for _ in range(3):
+            e1.submit(prompt, max_new_tokens=2)
+            self._drain(e1)
+        assert kv.stats["migrations"] >= 3
+        view = kv.proto.directory_view()
+        assert all(view[tuple(k)][1] == 1 for k in keys)
+        assert_single_copy(kv.proto)
+
+        # replica 1 now admits the prefix as LOCAL pages
+        before_local, before_remote = (e1.stats.pages_local,
+                                       e1.stats.pages_remote)
+        e1.submit(prompt, max_new_tokens=2)
+        self._drain(e1)
+        assert e1.stats.pages_local > before_local
+        assert e1.stats.pages_remote == before_remote
+        # and the old owner can still serve it (as a sharer now)
+        e0.submit(prompt, max_new_tokens=2)
+        self._drain(e0)
+
+    def test_copy_page_moves_kv_rows_and_remap_rewrites_tables(self):
+        import jax.numpy as jnp
+        from repro.serving import steps
+        kv, e0, _ = self._mk_engines(migrate=False)
+        pc = steps.paged_part(e0.cache)
+        P = kv.dpc.pool_pages_per_shard
+        marked = pc._replace(
+            k_pools=pc.k_pools.at[:, 3].set(1.5),
+            v_pools=pc.v_pools.at[:, 3].set(-2.5))
+        e0.cache = steps.replace_paged(e0.cache, marked)
+
+        e0._copy_page((9, 0), src_pfn=3, dst_pfn=P + 5)   # slot 3 -> slot 5
+        pc = steps.paged_part(e0.cache)
+        assert bool(jnp.all(pc.k_pools[:, 5] == 1.5))
+        assert bool(jnp.all(pc.v_pools[:, 5] == -2.5))
+
+        e0._pt[0, :2] = [3, 7]
+        moved = [((9, 0), 3, P + 5)]
+        remap = {old: new for _, old, new in moved}
+        for old, new in remap.items():
+            e0._pt[e0._pt == old] = new
+        assert e0._pt[0, 0] == P + 5 and e0._pt[0, 1] == 7
+
+
+# ---------------------------------------------------------------------------
+# property test: single-copy invariant under randomized interleavings
+# ---------------------------------------------------------------------------
+
+
+N_KEYS = 6
+OPS = ["read", "write", "reclaim_begin", "migrate_begin",
+       "ack_one", "reclaim_finish", "migrate_finish"]
+
+
+def _run_interleaving(events):
+    """Drive an arbitrary event interleaving — reads, writes, reclamation,
+    and migration with ACK delivery and completion reordered against new
+    traffic — asserting after every event that no page ever has a second
+    resident copy."""
+    proto = DPCProtocol(ProtocolConfig(num_nodes=NODES, pool_pages=4,
+                                       directory_capacity=256))
+    keys = [(11, p) for p in range(N_KEYS)]
+
+    def deliver_one_ack():
+        for pend in (proto.pending_inv, proto.pending_mig):
+            for key, info in pend.items():
+                if info["waiting"]:
+                    node = min(info["waiting"])
+                    if pend is proto.pending_inv:
+                        proto.reclaim_ack(key[0], key[1], node)
+                    else:
+                        proto.migrate_ack(key[0], key[1], node)
+                    return
+
+    for op, ki, node in events:
+        s, p = keys[ki]
+        if op == "read":
+            res = proto.read_pages([s], [p], node)
+            if res.status[0] == D.ST_GRANT_E:
+                proto.commit_pages([s], [p], node, res.slot)
+        elif op == "write":
+            proto.mark_dirty([s], [p], node)
+        elif op == "reclaim_begin":
+            proto.reclaim_begin(node, want=1)
+        elif op == "migrate_begin":
+            proto.migrate_begin([((s, p), node)])
+        elif op == "ack_one":
+            deliver_one_ack()
+        elif op == "reclaim_finish":
+            proto.reclaim_finish(node)
+        elif op == "migrate_finish":
+            proto.migrate_finish()
+        assert_single_copy(proto)
+
+    # drain every in-flight transaction and check the settled state
+    for _ in range(NODES * N_KEYS):
+        if not any(i["waiting"] for i in proto.pending_inv.values()) and \
+                not any(i["waiting"] for i in proto.pending_mig.values()):
+            break
+        deliver_one_ack()
+    for node in range(NODES):
+        proto.reclaim_finish(node)
+    proto.migrate_finish()
+    assert not proto.pending_mig
+    assert_single_copy(proto)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_single_copy_under_seeded_interleavings(seed):
+    """Tier-1 randomized variant: fixed-seed interleavings so the invariant
+    is exercised even where hypothesis isn't installed."""
+    rng = np.random.default_rng(seed)
+    events = [(OPS[rng.integers(len(OPS))],
+               int(rng.integers(N_KEYS)), int(rng.integers(NODES)))
+              for _ in range(60)]
+    _run_interleaving(events)
+
+
+if HAVE_HYPOTHESIS:
+    EVENTS = st.lists(
+        st.tuples(
+            st.sampled_from(OPS),
+            st.integers(0, N_KEYS - 1),     # key index
+            st.integers(0, NODES - 1),      # node
+        ),
+        min_size=1, max_size=50,
+    )
+
+    @pytest.mark.property
+    @settings(deadline=None)  # example count comes from the profile
+    @given(EVENTS)
+    def test_single_copy_under_interleavings(events):
+        """Hypothesis-driven search over the same interleaving space (with
+        shrinking) — the slow/property tier's stronger version of the seeded
+        test above."""
+        _run_interleaving(events)
