@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: timing, CSV emission, smoke-scale fixtures."""
+"""Shared benchmark utilities: timing, CSV + JSON emission, smoke fixtures."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List
 
@@ -17,6 +19,24 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def dump_json(suite: str, first_row: int = 0, out_dir: str = "") -> str:
+    """Write rows [first_row:] as ``BENCH_<suite>.json`` (CI uploads these
+    as workflow artifacts so the perf trajectory is tracked across PRs).
+    Returns the path."""
+    out_dir = out_dir or os.environ.get("BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for row in ROWS[first_row:]:
+        name, us, derived = row.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": suite, "unix_time": time.time(), "rows": rows},
+                  f, indent=1)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,

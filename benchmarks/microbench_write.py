@@ -23,16 +23,22 @@ PAGE = 16
 NODES = 4
 
 
-def run():
-    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=1024)
+def run(smoke: bool = False):
+    """``smoke=True``: seconds-scale run (smaller pool/batches, fewer
+    iters) that CI exercises end-to-end instead of import-checking."""
+    pool_pages = 256 if smoke else 1024
+    batch_list = (1, 32) if smoke else (1, 32, 128)
+    iters = 2 if smoke else 3
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=pool_pages)
 
     # the data copy itself (page install via scatter kernel)
     pool = jnp.zeros((256, PAGE, 4, 16), jnp.bfloat16)
     pages = jnp.ones((1, PAGE, 4, 16), jnp.bfloat16)
     t_copy = time_fn(lambda *a: dispatch.page_scatter(*a, impl="ref"),
-                     pool, jnp.zeros((1,), jnp.int32), pages)
+                     pool, jnp.zeros((1,), jnp.int32), pages,
+                     iters=max(iters * 3, 4))
 
-    for batch_pages in (1, 32, 128):
+    for batch_pages in batch_list:
         streams = list(range(1, batch_pages + 1))
         pages_idx = [0] * batch_pages
 
@@ -41,7 +47,7 @@ def run():
         coh = CoherenceManager(kv.proto, "dpc")
         t_relaxed = time_host(
             lambda: coh.commit(coh.prepare(streams, pages_idx, 1)),
-            iters=3) / batch_pages + t_copy
+            iters=iters) / batch_pages + t_copy
         emit(f"write.relaxed.b{batch_pages}", t_relaxed,
              f"copy={t_copy:.1f}us dir=0us")
 
@@ -55,7 +61,8 @@ def run():
             t = coh.prepare(streams, pages_idx, 1)
             coh.commit(t)
 
-        t_sc = time_fresh(fresh_sc, sc_write) / batch_pages + t_copy
+        t_sc = time_fresh(fresh_sc, sc_write, iters=iters) / batch_pages \
+            + t_copy
         emit(f"write.dpc_sc.b{batch_pages}", t_sc,
              f"copy={t_copy:.1f}us overhead_vs_relaxed="
              f"{t_sc / max(t_relaxed, 1e-9):.2f}x")
@@ -65,4 +72,7 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

@@ -2,10 +2,15 @@
 
 Measures (a) local-only frame release (no cross-node state: the baseline
 "11 us" path), (b) synchronous single-page invalidation with a remote sharer
-(directory round trip + DIR_INV + ACK + completion: the "99.7 us" path), and
-(c) the batched asynchronous flow (LOCAL_INV batch of 32 -> overlapped ACKs
--> single completion pass), whose per-page cost approaches the local one —
-the paper's claim that batching removes invalidation from the critical path.
+(directory round trip + DIR_INV + ACK + completion: the "99.7 us" path),
+(c) the batched asynchronous flow (LOCAL_INV batch -> overlapped ACKs ->
+single completion pass), whose per-page cost approaches the local one —
+the paper's claim that batching removes invalidation from the critical path
+— and (d) the same batched flow for *dirty* pages through the storage tier
+(retire -> batched flush -> release), the full writeback pipeline cost.
+
+``smoke=True`` shrinks pools/batches/iters to a seconds-scale run that CI
+exercises end-to-end (instead of import-checking).
 """
 
 from __future__ import annotations
@@ -23,50 +28,80 @@ PAGE = 16
 NODES = 4
 
 
-def _warm_cache(n_pages: int, sharer: bool = True) -> DistributedKVCache:
-    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=4096)
+def _warm_cache(n_pages: int, pool_pages: int, sharer: bool = True,
+                storage: bool = False, dirty: bool = False
+                ) -> DistributedKVCache:
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=pool_pages,
+                    storage_backend="memory" if storage else "none",
+                    writeback_async=False, writeback_batch=32)
     kv = DistributedKVCache(dpc, NODES)
+    if storage:
+        payload = np.zeros((PAGE, 4), np.float32)
+        kv.set_page_bytes_fn(lambda key, pfn: payload)
     streams = list(range(1, n_pages + 1))
     pages = [0] * n_pages
     lks = kv.lookup(streams, pages, 0)
-    kv.commit(streams, pages, 0, lks)
+    kv.commit(streams, pages, 0, lks, dirty=dirty if storage else None)
     if sharer:
         kv.lookup(streams, pages, 2)   # node 2 maps everything remotely
     return kv
 
 
-def run():
+def run(smoke: bool = False):
+    pool_pages = 512 if smoke else 4096
+    batch = 16 if smoke else 32
+    iters = 2 if smoke else 5
+
     # (a) local-only release: pool ops without any directory involvement
     # (ops donate their buffers, so each sample runs the full
     # alloc -> install -> release cycle on a fresh pool)
     def local_cycle():
-        pool = pp.init_pool(4096)
+        pool = pp.init_pool(pool_pages)
         pool, slots = pp.alloc(pool, jnp.ones((1,), bool))
         pool = pp.install(pool, slots, jnp.ones((1, 2), jnp.int32))
         pool = pp.release(pool, slots)
         pool.free_top.block_until_ready()
 
-    t_local = time_host(local_cycle, iters=5)
+    t_local = time_host(local_cycle, iters=iters)
     emit("reclaim.local_only.1pg", t_local, "no directory (full cycle)")
 
     # (b) synchronous single-page invalidation with a live sharer
-    t_sync = time_fresh(lambda: _warm_cache(1),
-                        lambda kv: kv.proto.reclaim_sync(0, want=1))
+    t_sync = time_fresh(lambda: _warm_cache(1, pool_pages),
+                        lambda kv: kv.proto.reclaim_sync(0, want=1),
+                        iters=iters)
     emit("reclaim.sync_remote.1pg", t_sync,
          f"vs_local={t_sync / max(t_local, 1e-9):.1f}x")
 
     # (c) batched asynchronous invalidation (threshold 32, paper §4.3)
     def batched(kv):
-        _, notify = kv.proto.reclaim_begin(0, want=32)
+        _, notify = kv.proto.reclaim_begin(0, want=batch)
         for key, sharers in notify.items():
             for s in sharers:
                 kv.proto.reclaim_ack(key[0], key[1], s)
         kv.proto.reclaim_finish(0)
 
-    t_batch = time_fresh(lambda: _warm_cache(64), batched) / 32
+    t_batch = time_fresh(lambda: _warm_cache(batch * 2, pool_pages),
+                         batched, iters=iters) / batch
     emit("reclaim.batched_async.per_pg", t_batch,
-         f"batch=32 amortization={t_sync / max(t_batch, 1e-9):.1f}x")
+         f"batch={batch} amortization={t_sync / max(t_batch, 1e-9):.1f}x")
+
+    # (d) dirty pages: the same batch pays retire -> batched flush ->
+    # release through the writeback queue (the storage-tier price of the
+    # single-copy invariant — an evicted dirty page must be durable
+    # before its frame is reusable)
+    def batched_dirty(kv):
+        batched(kv)
+        kv.flush()
+
+    t_wb = time_fresh(
+        lambda: _warm_cache(batch * 2, pool_pages, storage=True, dirty=True),
+        batched_dirty, iters=iters) / batch
+    emit("reclaim.batched_writeback.per_pg", t_wb,
+         f"batch={batch} vs_clean={t_wb / max(t_batch, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

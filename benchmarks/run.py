@@ -23,9 +23,9 @@ def main() -> None:
                     help="seconds-scale run of every suite (CI drift check)")
     args = ap.parse_args()
 
-    from benchmarks import (app_serving, control_plane, microbench_read,
-                            microbench_write, migration, reclamation,
-                            roofline)
+    from benchmarks import (app_serving, common, control_plane,
+                            microbench_read, microbench_write, migration,
+                            reclamation, roofline, writeback)
     suites = [
         ("microbench_read", microbench_read.run),     # paper Fig. 6/7
         ("microbench_write", microbench_write.run),   # paper Fig. 8/9
@@ -34,6 +34,7 @@ def main() -> None:
         ("app_serving", app_serving.run),             # paper Fig. 10
         ("roofline", roofline.run),                   # brief §Roofline
         ("migration", migration.run),                 # ownership hand-off
+        ("writeback", writeback.run),                 # storage tier (flush)
     ]
     failures = 0
     for name, fn in suites:
@@ -41,6 +42,7 @@ def main() -> None:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        first_row = len(common.ROWS)
         try:
             if args.smoke:
                 if "smoke" in inspect.signature(fn).parameters:
@@ -52,6 +54,8 @@ def main() -> None:
                           flush=True)
             else:
                 fn()
+            # persist this suite's rows for the CI artifact trail
+            common.dump_json(name, first_row=first_row)
         except Exception:  # noqa
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",

@@ -363,10 +363,24 @@ class DPCConfig:
     migrate_interval_steps: int = 8     # engine steps between rounds
     migrate_decay_every: int = 4        # rounds between hotness halvings
     migrate_cooldown: int = 2           # rounds a migrated page is immune
+    # --- durable backing store + async writeback (repro/storage) ---
+    storage_backend: str = "none"       # none | memory | file
+    storage_dir: str = ""               # file-backend root ("" = temp dir)
+    storage_extent_pages: int = 8       # pages per npy extent file
+    writeback_batch: int = 32           # flush obligations per store sync
+    writeback_interval_s: float = 0.002  # async flusher wake period
+    writeback_async: bool = True        # background thread; False = pumped
+    # run the refimpl directory in lockstep and assert dirty-bit agreement
+    # on every completed invalidation/migration (tests/debug)
+    shadow_oracle: bool = False
 
     @property
     def enabled(self) -> bool:
         return self.mode in ("dpc", "dpc_sc")
+
+    @property
+    def storage_enabled(self) -> bool:
+        return self.storage_backend not in ("", "none")
 
     @property
     def migration_enabled(self) -> bool:

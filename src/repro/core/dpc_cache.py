@@ -18,14 +18,16 @@ Coherence mode mapping (paper §6 configurations):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import DPCConfig
 from repro.core import descriptors as D
+from repro.core import pagepool as pp
 from repro.core.migration import MigrationConfig, OwnershipMigrator
 from repro.core.protocol import DPCProtocol, ProtocolConfig
+from repro.storage import make_storage
 
 
 @dataclasses.dataclass
@@ -36,6 +38,10 @@ class PageLookup:
     owner: int
     needs_fill: bool      # True -> caller must materialize (prefill) + commit
     remote: bool          # True -> served from a peer's pool slice
+    # bytes recovered from the backing store (or the still-pending writeback
+    # queue) for an evicted page: the caller installs these instead of
+    # recomputing — the refault half of the evict -> refault loop
+    refill: Optional[np.ndarray] = None
 
 
 class DistributedKVCache:
@@ -46,13 +52,22 @@ class DistributedKVCache:
     def __init__(self, dpc: DPCConfig, num_nodes: int):
         self.dpc = dpc
         self.num_nodes = num_nodes
+        # durable tier: built from config, shared by every node's control
+        # plane (the storage server of the paper's testbed)
+        self.store, self.writeback = make_storage(
+            dpc.storage_backend, root=dpc.storage_dir,
+            extent_pages=dpc.storage_extent_pages,
+            batch_size=dpc.writeback_batch,
+            flush_interval_s=dpc.writeback_interval_s,
+            async_mode=dpc.writeback_async)
         self.proto = DPCProtocol(ProtocolConfig(
             num_nodes=num_nodes,
             pool_pages=dpc.pool_pages_per_shard,
             directory_capacity=dpc.directory_capacity,
             inv_batch_threshold=dpc.inv_batch_threshold,
             placement=dpc.directory_placement,
-        ))
+            shadow_oracle=dpc.shadow_oracle,
+        ), store=self.store, writeback=self.writeback)
         # replicated-mode bookkeeping: per-node private caches
         self._replica_maps: List[Dict[Tuple[int, int], int]] = [
             {} for _ in range(num_nodes)]
@@ -68,7 +83,54 @@ class DistributedKVCache:
             cooldown_rounds=dpc.migrate_cooldown,
         ))
         self.stats = {"lookups": 0, "fills": 0, "remote_hits": 0,
-                      "local_hits": 0, "evictions": 0, "migrations": 0}
+                      "local_hits": 0, "evictions": 0, "migrations": 0,
+                      "refills": 0, "sync_flushes": 0}
+
+    # ------------------------------------------------------------------
+    # storage tier
+    # ------------------------------------------------------------------
+
+    def set_page_bytes_fn(self, fn: Callable) -> None:
+        """Data-plane hook: ``fn(key, pfn) -> np.ndarray | None`` captures a
+        frame's bytes when a dirty eviction enqueues its flush obligation."""
+        self.proto.attach_storage(page_bytes_fn=fn)
+
+    def _storage_read(self, key: Tuple[int, int]) -> Optional[np.ndarray]:
+        """Read-your-writes refill: pending queue copy first, then durable."""
+        if self.writeback is not None:
+            data = self.writeback.peek(key)
+            if data is not None:
+                return data
+        if self.store is not None:
+            return self.store.read(key[0], key[1])
+        return None
+
+    def pump_storage(self, max_batches: Optional[int] = 1) -> int:
+        """Step-boundary pump: drive flushes (sync mode) and release frames
+        whose writeback committed.  Returns frames freed."""
+        return self.proto.pump_writeback(max_batches)
+
+    def flush(self, upto_epoch: Optional[int] = None) -> int:
+        """Flush barrier over the whole queue (+ frame harvest)."""
+        return self.proto.flush(upto_epoch=upto_epoch)
+
+    def fsync_stream(self, stream: int) -> int:
+        """Per-stream durability barrier (the engine's request-completion
+        fsync).  No-op when the stream has nothing pending."""
+        if self.writeback is None or \
+                not self.writeback.has_pending_stream(stream):
+            return 0
+        return self.proto.flush(stream=stream)
+
+    def advance_epoch(self) -> int:
+        return 0 if self.writeback is None else self.writeback.advance_epoch()
+
+    def close(self) -> None:
+        if self.writeback is not None:
+            self.writeback.close()
+            self.proto.harvest_writebacks()
+        if self.store is not None:
+            self.store.close()
 
     # ------------------------------------------------------------------
     # shared-mode path (dpc / dpc_sc)
@@ -89,8 +151,13 @@ class DistributedKVCache:
             st = int(res.status[i])
             if st == D.ST_GRANT_E:
                 slot = int(res.slot[i])
+                key = (int(streams[i]), int(pages[i]))
+                refill = self._storage_read(key)
+                if refill is not None:
+                    self.stats["refills"] += 1
                 out.append(PageLookup(st, node * pool_pages + slot, node,
-                                      needs_fill=True, remote=False))
+                                      needs_fill=True, remote=False,
+                                      refill=refill))
                 self.stats["fills"] += 1
             elif st in (D.ST_MAP_S, D.ST_HIT_SHARER):
                 out.append(PageLookup(st, int(res.pfn[i]),
@@ -107,21 +174,45 @@ class DistributedKVCache:
                 out.append(PageLookup(st, -1, -1, True, False))
         return out
 
-    def commit(self, streams, pages, node: int, lookups: List[PageLookup]):
-        """Publish filled pages (E -> O)."""
+    def commit(self, streams, pages, node: int, lookups: List[PageLookup],
+               dirty=None):
+        """Publish filled pages (E -> O).
+
+        With a backing store attached, freshly materialized pages commit
+        *dirty* (their only copy is the frame — eviction owes a writeback)
+        while pages installed from a ``refill`` commit clean (a durable copy
+        already exists).  ``dirty`` overrides per-row when given.
+        """
         rows = [i for i, lk in enumerate(lookups)
                 if lk.needs_fill and lk.page_id >= 0]
         if not rows or self.dpc.mode in ("replicated", "local_only"):
             return
         pool_pages = self.dpc.pool_pages_per_shard
+        if dirty is None:
+            dirty = ([lookups[i].refill is None for i in rows]
+                     if self.store is not None else None)
+        else:
+            dirty = np.broadcast_to(np.asarray(dirty, bool),
+                                    (len(lookups),))[rows]
         self.proto.commit_pages(
             [streams[i] for i in rows], [pages[i] for i in rows], node,
-            [lookups[i].page_id % pool_pages for i in rows])
+            [lookups[i].page_id % pool_pages for i in rows], dirty=dirty)
 
     def reclaim(self, node: int, want: int) -> int:
-        """Synchronous reclaim round (engine calls under pool pressure)."""
-        freed, _ = self.proto.reclaim_sync(node, want)
+        """Synchronous reclaim round (engine calls under pool pressure).
+
+        Dirty victims are pinned behind their flush obligations; if clean
+        frames (or already-durable harvests) satisfied the pressure the
+        async pipeline stays off the critical path, otherwise we wait the
+        barrier out (the synchronous-writeback fallback) so the caller's
+        retry sees free frames instead of spinning."""
+        freed, wb = self.proto.reclaim_sync(node, want)
         self.stats["evictions"] += freed
+        if self.writeback is not None and wb:
+            self.proto.pump_writeback()     # harvest whatever is durable
+            if int(pp.num_free(self.proto.state.pools[node])) == 0:
+                self.stats["sync_flushes"] += 1
+                self.proto.flush()
         return freed
 
     def run_migrations(self, copy_fn=None) -> List[Tuple[Tuple[int, int],

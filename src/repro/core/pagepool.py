@@ -38,8 +38,12 @@ from repro.core import descriptors as D
 EMPTY = -1
 
 # slot lifecycle: FREE -> RESERVED (E grant, being installed) -> INSTALLED
-# -> DRAINING (TBI, invalidation in flight) -> FREE
-S_FREE, S_RESERVED, S_INSTALLED, S_DRAINING = 0, 1, 2, 3
+# -> DRAINING (TBI, invalidation in flight) -> FREE for clean frames, or
+# -> WRITEBACK (flush obligation enqueued, frame pinned) -> FREE for dirty
+# ones.  The WRITEBACK hop is the flush-before-free invariant: a dirty
+# frame's only copy is being persisted and the slot must not be reusable
+# until the WritebackQueue's batch sync commits (repro/storage).
+S_FREE, S_RESERVED, S_INSTALLED, S_DRAINING, S_WRITEBACK = 0, 1, 2, 3, 4
 
 
 HOT_MAX = 8  # hotness saturation: log2(HOT_MAX) scan passes age any slot out
@@ -161,8 +165,23 @@ def reinstate(pool: PoolState, slots: jax.Array) -> PoolState:
 
 
 @functools.partial(jax.jit, donate_argnums=0)
+def retire(pool: PoolState, slots: jax.Array) -> PoolState:
+    """DRAINING -> WRITEBACK: the invalidation round completed with the
+    dirty bit set and a flush obligation was enqueued.  The frame is pinned
+    (not reusable, invisible to CLOCK) until the flush commits and the
+    protocol calls ``release``.  Negative slots skipped."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    cur = pool.slot_state[safe]
+    slot_state = pool.slot_state.at[safe].set(
+        jnp.where(ok & (cur == S_DRAINING), jnp.int32(S_WRITEBACK), cur))
+    return pool._replace(slot_state=slot_state)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
 def release(pool: PoolState, slots: jax.Array) -> PoolState:
-    """DRAINING/RESERVED -> FREE after INVALIDATION_ACK (+writeback if dirty).
+    """DRAINING/WRITEBACK/RESERVED -> FREE after INVALIDATION_ACK (clean) or
+    after the writeback flush commits (dirty: flush-before-free).
     Pushes slots back on the free stack.  Negative slots skipped."""
     n = slots.shape[0]
 
@@ -203,11 +222,11 @@ def clock_scan(pool: PoolState, want: int) -> Tuple[PoolState, jax.Array]:
     max_steps = (2 + HOT_MAX.bit_length()) * p
 
     def cond(c):
-        pool, victims, n_found, steps = c
+        pool, victims, vmask, n_found, steps = c
         return jnp.logical_and(n_found < want, steps < max_steps)
 
     def body(c):
-        pool, victims, n_found, steps = c
+        pool, victims, vmask, n_found, steps = c
         slot = pool.hand
         hand = jnp.where(slot + 1 >= p, 0, slot + 1)
         installed = pool.slot_state[slot] == S_INSTALLED
@@ -220,16 +239,21 @@ def clock_scan(pool: PoolState, want: int) -> Tuple[PoolState, jax.Array]:
         hot = pool.hot.at[slot].set(
             jnp.where(installed & ~referenced & still_hot,
                       pool.hot[slot] >> 1, pool.hot[slot]))
-        is_victim = installed & ~referenced & ~still_hot
+        # a slot already picked this call must not be picked again when the
+        # hand comes back around (want > eligible frames): a duplicate
+        # victim would double-drain one frame and corrupt the LOCAL_INV
+        is_victim = installed & ~referenced & ~still_hot & ~vmask[slot]
+        vmask = vmask.at[slot].set(vmask[slot] | is_victim)
         victims = victims.at[jnp.where(is_victim, n_found, want)].set(
             jnp.where(is_victim, slot, jnp.int32(-1)))
         n_found = n_found + is_victim.astype(jnp.int32)
         return (pool._replace(ref=ref, hot=hot, hand=hand), victims,
-                n_found, steps + 1)
+                vmask, n_found, steps + 1)
 
     victims0 = jnp.full((want + 1,), -1, jnp.int32)  # +1 scratch row
-    pool, victims, _, _ = lax.while_loop(
-        cond, body, (pool, victims0, jnp.int32(0), jnp.int32(0)))
+    vmask0 = jnp.zeros((p,), bool)
+    pool, victims, _, _, _ = lax.while_loop(
+        cond, body, (pool, victims0, vmask0, jnp.int32(0), jnp.int32(0)))
     return pool, victims[:want]
 
 
@@ -239,3 +263,8 @@ def num_free(pool: PoolState) -> jax.Array:
 
 def num_installed(pool: PoolState) -> jax.Array:
     return jnp.sum(pool.slot_state == S_INSTALLED)
+
+
+def num_writeback(pool: PoolState) -> jax.Array:
+    """Frames pinned awaiting their flush commit (not yet reusable)."""
+    return jnp.sum(pool.slot_state == S_WRITEBACK)

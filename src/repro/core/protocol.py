@@ -26,7 +26,7 @@ an opcode batch lands on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ import numpy as np
 from repro.core import descriptors as D
 from repro.core import directory as dirx
 from repro.core import pagepool as pp
+from repro.core import refimpl
 
 
 @dataclasses.dataclass
@@ -45,6 +46,11 @@ class ProtocolConfig:
     inv_batch_threshold: int = 32    # paper §4.3
     max_probe: int = 128
     placement: str = "sharded"       # sharded | central
+    # run the pure-Python RefDirectory in lockstep and assert the dirty bit
+    # returned on every completed invalidation/migration matches the
+    # oracle's needs_writeback — protocol/oracle divergence fails loudly
+    # instead of silently dropping (or double-writing) page data
+    shadow_oracle: bool = False
 
     def dir_config(self) -> dirx.DirectoryConfig:
         return dirx.DirectoryConfig(self.directory_capacity, self.num_nodes,
@@ -117,7 +123,9 @@ class DPCProtocol:
     reclamation sequence.  All heavy state stays in device arrays.
     """
 
-    def __init__(self, cfg: ProtocolConfig, state: Optional[DPCState] = None):
+    def __init__(self, cfg: ProtocolConfig, state: Optional[DPCState] = None,
+                 *, store=None, writeback=None,
+                 page_bytes_fn: Optional[Callable] = None):
         self.cfg = cfg
         self.state = state or init_state(cfg)
         # pages in TBI with outstanding sharer ACKs: (stream, page) -> set(nodes)
@@ -125,14 +133,43 @@ class DPCProtocol:
         # pages in TBM (ownership hand-off in flight):
         # (stream, page) -> {src, dst, src_slot, old_pfn, waiting: set(nodes)}
         self.pending_mig: Dict[Tuple[int, int], Dict] = {}
+        # --- storage tier (repro/storage): durable backing + async flushes.
+        # page_bytes_fn(key, pfn) is the data-plane hook that captures the
+        # frame's bytes at enqueue time (the engine reads its KV pools; tests
+        # and benchmarks supply synthetic payloads).
+        self.store = store
+        self.writeback = writeback
+        self.page_bytes_fn = page_bytes_fn
+        # frames pinned in S_WRITEBACK until their flush commits:
+        # (node, slot) -> key.  release refuses these (flush-before-free).
+        self._wb_outstanding: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # executable-spec shadow (satellite: divergence must fail loudly)
+        self.oracle: Optional[refimpl.RefDirectory] = None
+        if cfg.shadow_oracle:
+            n_dirs = 1 if cfg.placement == "central" else cfg.num_nodes
+            self.oracle = refimpl.RefDirectory(
+                cfg.directory_capacity * n_dirs, cfg.num_nodes)
         # counters for the microbenchmarks
         self.counters = {
             "reads": 0, "grants": 0, "remote_hits": 0, "local_hits": 0,
             "blocked": 0, "commits": 0, "reclaims": 0, "dir_invs": 0,
             "inv_acks": 0, "writebacks": 0, "dropped_nodes": 0,
             "migrations": 0, "migration_noops": 0, "migration_aborts": 0,
-            "migration_acks": 0,
+            "migration_acks": 0, "writebacks_committed": 0,
+            "migration_writebacks": 0, "flush_before_free_violations": 0,
+            "oracle_mismatches": 0,
         }
+
+    def attach_storage(self, store=None, writeback=None,
+                       page_bytes_fn: Optional[Callable] = None) -> None:
+        """Late-bind the durable tier (the engine attaches its KV-pool byte
+        fetcher after construction)."""
+        if store is not None:
+            self.store = store
+        if writeback is not None:
+            self.writeback = writeback
+        if page_bytes_fn is not None:
+            self.page_bytes_fn = page_bytes_fn
 
     # -- helpers -------------------------------------------------------------
 
@@ -171,6 +208,110 @@ class DPCProtocol:
         pools[node] = new_pool
         self.state = self.state._replace(pools=tuple(pools))
 
+    # -- storage-tier plumbing -------------------------------------------------
+
+    def _release_frames(self, node: int, slots: Sequence[int]) -> int:
+        """Free frames, refusing any with an uncommitted flush obligation —
+        the flush-before-free invariant is enforced here, not trusted."""
+        ok = []
+        for s in slots:
+            if (node, int(s)) in self._wb_outstanding:
+                self.counters["flush_before_free_violations"] += 1
+                continue
+            ok.append(int(s))
+        if ok:
+            self._pool_update(node, pp.release(
+                self.state.pools[node], jnp.asarray(ok, jnp.int32)))
+        return len(ok)
+
+    def _enqueue_writeback(self, key: Tuple[int, int], node: int,
+                           slot: int) -> None:
+        """Capture the frame's bytes and hand the flush obligation to the
+        queue; the frame is pinned (S_WRITEBACK) until the batch sync."""
+        pfn = node * self.cfg.pool_pages + slot
+        data = None
+        if self.page_bytes_fn is not None:
+            data = self.page_bytes_fn(key, pfn)
+        if data is None:
+            # control-plane-only run (no data plane attached): the
+            # obligation still flows so ordering/accounting stay honest
+            data = np.zeros((0,), np.uint8)
+        token = (node, slot)
+        self._wb_outstanding[token] = key
+        self.writeback.enqueue(key, np.asarray(data), token=token)
+
+    def harvest_writebacks(self) -> int:
+        """Release every frame whose flush committed since the last call
+        (the engine runs this at step boundaries).  Returns frames freed."""
+        if self.writeback is None:
+            return 0
+        done = self.writeback.drain_completions()
+        by_node: Dict[int, List[int]] = {}
+        for token, _key in done:
+            self._wb_outstanding.pop(token, None)
+            by_node.setdefault(token[0], []).append(token[1])
+        for node, slots in by_node.items():
+            self._release_frames(node, slots)
+        self.counters["writebacks_committed"] += len(done)
+        return len(done)
+
+    def pump_writeback(self, max_batches: Optional[int] = 1) -> int:
+        """Step-boundary pump: in sync mode drain up to ``max_batches``
+        inline, then harvest completions.  Returns frames freed."""
+        if self.writeback is None:
+            return 0
+        if not self.writeback.cfg.async_mode:
+            self.writeback.pump(max_batches)
+        return self.harvest_writebacks()
+
+    def flush(self, upto_epoch: Optional[int] = None,
+              stream: Optional[int] = None) -> int:
+        """Flush barrier: block until obligations (all, one epoch prefix, or
+        one stream's) are durable, then release their frames."""
+        if self.writeback is None:
+            return 0
+        if stream is not None:
+            self.writeback.fsync_stream(stream)
+        else:
+            self.writeback.flush_barrier(upto_epoch)
+        return self.harvest_writebacks()
+
+    # -- shadow oracle (refimpl run in lockstep; divergence fails loudly) ------
+
+    def _oracle_lookup(self, streams, pages, node: int, statuses) -> None:
+        if self.oracle is None:
+            return
+        for s, p, st in zip(streams, pages, statuses):
+            s, p, st = int(s), int(p), int(st)
+            ref_st = self.oracle.lookup_and_install(s, p, int(node))[0]
+            if st == D.ST_FULL and ref_st == D.ST_GRANT_E:
+                # array shard / pool hit capacity before the oracle did:
+                # back the oracle's install out to stay in lockstep
+                self.oracle.abort_install(s, p, int(node))
+            elif ref_st != st:
+                self.counters["oracle_mismatches"] += 1
+
+    def _oracle_op(self, fn: str, *args, expect: Optional[int] = None) -> None:
+        if self.oracle is None:
+            return
+        out = getattr(self.oracle, fn)(*args)
+        st = out[0] if isinstance(out, tuple) else out
+        if expect is not None and st != expect:
+            self.counters["oracle_mismatches"] += 1
+
+    def _oracle_completion(self, fn: str, key: Tuple[int, int], args,
+                           dirty: bool) -> None:
+        """The satellite's loud assert: a completed invalidation/migration's
+        dirty bit (pfn lane) must equal the oracle's needs_writeback."""
+        if self.oracle is None:
+            return
+        st_ref, dirty_ref = getattr(self.oracle, fn)(key[0], key[1], *args)
+        assert st_ref == D.ST_OK and bool(dirty_ref) == bool(dirty), (
+            f"protocol/oracle divergence on {fn}{key}: oracle returned "
+            f"(status={st_ref}, needs_writeback={dirty_ref}) but the "
+            f"directory's pfn lane said dirty={dirty} — a writeback would "
+            f"be dropped or double-issued")
+
     # -- read path (FUSE_DPC_READ) --------------------------------------------
 
     def read_pages(self, streams, pages, node: int) -> ReadResult:
@@ -207,6 +348,8 @@ class DPCProtocol:
             self._pool_update(node, pp.touch(self.state.pools[node],
                                              jnp.asarray(lslots, jnp.int32)))
 
+        self._oracle_lookup(streams, pages, node, res[:, 0])
+
         c = self.counters
         c["reads"] += n
         c["grants"] += int((res[:, 0] == D.ST_GRANT_E).sum())
@@ -219,17 +362,35 @@ class DPCProtocol:
 
     # -- commit (FUSE_DPC_UNLOCK) ----------------------------------------------
 
-    def commit_pages(self, streams, pages, node: int, slots) -> np.ndarray:
-        """E -> O: publish global PFNs, bind keys to pool slots."""
+    def commit_pages(self, streams, pages, node: int, slots,
+                     dirty=None) -> np.ndarray:
+        """E -> O: publish global PFNs, bind keys to pool slots.
+
+        ``dirty`` (bool or per-row sequence) marks rows whose contents exist
+        *only* in the committed frame — a page materialized by prefill or a
+        write has no durable copy, so its eventual eviction owes a writeback.
+        Pages refilled *from* the backing store commit clean.
+        """
         slots = np.asarray(slots, np.int32)
         pfns = np.where(slots >= 0,
                         node * self.cfg.pool_pages + slots, -1).astype(np.int32)
         res, _ = self._routed(dirx.commit, streams, pages, node, pfns)
+        if self.oracle is not None:
+            for s, p, pfn, st in zip(streams, pages, pfns, res[:, 0]):
+                self._oracle_op("commit", int(s), int(p), int(node), int(pfn),
+                                expect=int(st))
         keys = np.stack([np.asarray(streams, np.int32),
                          np.asarray(pages, np.int32)], -1)
         self._pool_update(node, pp.install(
             self.state.pools[node], jnp.asarray(slots), jnp.asarray(keys)))
         self.counters["commits"] += int((res[:, 0] == D.ST_OK).sum())
+        if dirty is not None:
+            dirty = np.broadcast_to(np.asarray(dirty, bool),
+                                    np.asarray(streams).shape)
+            rows = np.nonzero(dirty & (res[:, 0] == D.ST_OK))[0]
+            if len(rows):
+                self.mark_dirty(np.asarray(streams, np.int32)[rows],
+                                np.asarray(pages, np.int32)[rows], node)
         return res[:, 0]
 
     # -- write path ------------------------------------------------------------
@@ -253,6 +414,10 @@ class DPCProtocol:
 
     def mark_dirty(self, streams, pages, node: int) -> np.ndarray:
         res, _ = self._routed(dirx.mark_dirty, streams, pages, node)
+        if self.oracle is not None:
+            for s, p, st in zip(streams, pages, res[:, 0]):
+                self._oracle_op("mark_dirty", int(s), int(p), int(node),
+                                expect=int(st))
         return res[:, 0]
 
     # -- reclamation (§4.3) ------------------------------------------------------
@@ -277,6 +442,10 @@ class DPCProtocol:
 
         res, extra = self._routed(dirx.begin_invalidate,
                                   keys[:, 0], keys[:, 1], node)
+        if self.oracle is not None:
+            for (s, p), st in zip(keys, res[:, 0]):
+                self._oracle_op("begin_invalidate", int(s), int(p), int(node),
+                                expect=int(st))
         notify: Dict[Tuple[int, int], List[int]] = {}
         ok_rows = set(np.nonzero(res[:, 0] == D.ST_OK)[0].tolist())
         # rows the directory refused (e.g. the page is mid-MIGRATE, in TBM):
@@ -305,6 +474,8 @@ class DPCProtocol:
         """FUSE_DPC_INV_ACK from sharer ``node`` (notification manager path)."""
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
+        self._oracle_op("ack_invalidate", stream, page, node, dirty,
+                        expect=int(res[0, 0]))
         key = (stream, page)
         if key in self.pending_inv:
             self.pending_inv[key]["waiting"].discard(node)
@@ -313,7 +484,14 @@ class DPCProtocol:
 
     def reclaim_finish(self, node: int) -> Tuple[int, int]:
         """Complete all ready invalidations for ``node``: INVALIDATION_ACK ->
-        writeback-if-dirty -> frames freed.  Returns (freed, writebacks)."""
+        writeback-if-dirty -> frames freed.  Returns (completed, writebacks).
+
+        With a ``WritebackQueue`` attached, a dirty frame is NOT freed here:
+        its bytes are captured into a flush obligation and the frame moves to
+        S_WRITEBACK, reusable only after ``harvest_writebacks`` observes the
+        batch sync (flush-before-free).  Clean frames keep the fast path.
+        Without a queue the dirty bit is only counted — the seed behavior.
+        """
         ready = [(k, v) for k, v in self.pending_inv.items()
                  if v["owner"] == node and not v["waiting"]]
         if not ready:
@@ -321,17 +499,28 @@ class DPCProtocol:
         streams = [k[0] for k, _ in ready]
         pages = [k[1] for k, _ in ready]
         res, _ = self._routed(dirx.complete_invalidate, streams, pages, node)
-        freed_slots, writebacks = [], 0
+        freed_slots, retired_slots, writebacks = [], [], 0
         for (key, info), row in zip(ready, res):
-            if row[0] == D.ST_OK:
+            if row[0] != D.ST_OK:
+                continue
+            is_dirty = bool(row[2])   # pfn lane = writeback flag
+            self._oracle_completion("complete_invalidate", key, (node,),
+                                    is_dirty)
+            del self.pending_inv[key]
+            writebacks += int(is_dirty)
+            if is_dirty and self.writeback is not None:
+                self._enqueue_writeback(key, node, info["slot"])
+                retired_slots.append(info["slot"])
+            else:
                 freed_slots.append(info["slot"])
-                writebacks += int(row[2])  # pfn lane = writeback flag
-                del self.pending_inv[key]
+        if retired_slots:
+            self._pool_update(node, pp.retire(
+                self.state.pools[node],
+                jnp.asarray(retired_slots, jnp.int32)))
         if freed_slots:
-            self._pool_update(node, pp.release(
-                self.state.pools[node], jnp.asarray(freed_slots, jnp.int32)))
+            self._release_frames(node, freed_slots)
         self.counters["writebacks"] += writebacks
-        return len(freed_slots), writebacks
+        return len(freed_slots) + len(retired_slots), writebacks
 
     def reclaim_sync(self, node: int, want: int,
                      ack_fn=None) -> Tuple[int, int]:
@@ -372,6 +561,10 @@ class DPCProtocol:
         dsts = np.asarray([pairs[i][1] for i in rows], np.int32)
         res, extra = self._routed(dirx.begin_migrate, streams, pages, dsts)
         statuses[rows] = res[:, 0]
+        if self.oracle is not None:
+            for s, p, dst, st in zip(streams, pages, dsts, res[:, 0]):
+                self._oracle_op("begin_migrate", int(s), int(p), int(dst),
+                                expect=int(st))
 
         notify: Dict[Tuple[int, int], List[int]] = {}
         ok = res[:, 0] == D.ST_OK
@@ -403,6 +596,8 @@ class DPCProtocol:
         """Sharer ACK for a migration DIR_INV (same opcode as reclamation)."""
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
+        self._oracle_op("ack_invalidate", stream, page, node, dirty,
+                        expect=int(res[0, 0]))
         key = (stream, page)
         if key in self.pending_mig:
             self.pending_mig[key]["waiting"].discard(node)
@@ -416,6 +611,9 @@ class DPCProtocol:
         res, _ = self._routed(dirx.complete_migrate, [key[0]], [key[1]],
                               info["src"], [info["src"]])
         if res[0, 0] == D.ST_OK:
+            self._oracle_completion("complete_migrate", key,
+                                    (info["src"], info["src"]),
+                                    bool(res[0, 2]))
             self.commit_pages([key[0]], [key[1]], info["src"],
                               [info["src_slot"]])
         self.counters["migration_aborts"] += 1
@@ -452,18 +650,30 @@ class DPCProtocol:
             if res[0, 0] != D.ST_OK:
                 # src died mid-round (entry gone) or state changed under us:
                 # give the reserved frame back and drop the transaction
-                self._pool_update(dst, pp.release(
-                    self.state.pools[dst],
-                    jnp.asarray([dst_slot], jnp.int32)))
+                self._release_frames(dst, [dst_slot])
                 self.counters["migration_aborts"] += 1
                 continue
+            was_dirty = bool(res[0, 2])
+            self._oracle_completion("complete_migrate", key, (dst, src),
+                                    was_dirty)
             dst_pfn = dst * self.cfg.pool_pages + dst_slot
             if copy_fn is not None:
                 copy_fn(key, info["old_pfn"], dst_pfn)
+            # dirty=True: the hand-off carries the writeback obligation (the
+            # directory keeps the dirty bit on the entry at the new owner)
             self.commit_pages([key[0]], [key[1]], dst, [dst_slot])
-            self._pool_update(src, pp.release(
-                self.state.pools[src],
-                jnp.asarray([info["src_slot"]], jnp.int32)))
+            if was_dirty and self.writeback is not None:
+                # checkpoint the moving page: enqueue the *source* frame's
+                # bytes (still the materialized copy) and pin it until the
+                # flush commits — migration must never free the only
+                # unpersisted copy of a dirty page
+                self._enqueue_writeback(key, src, info["src_slot"])
+                self._pool_update(src, pp.retire(
+                    self.state.pools[src],
+                    jnp.asarray([info["src_slot"]], jnp.int32)))
+                self.counters["migration_writebacks"] += 1
+            else:
+                self._release_frames(src, [info["src_slot"]])
             self.counters["migrations"] += 1
             moved.append((key, info["old_pfn"], dst_pfn))
         return moved
@@ -486,6 +696,12 @@ class DPCProtocol:
     def drop_mapping(self, streams, pages, node: int, dirty=None) -> np.ndarray:
         aux = None if dirty is None else np.asarray(dirty, np.int32)
         res, _ = self._routed(dirx.sharer_drop, streams, pages, node, aux)
+        if self.oracle is not None:
+            d = (np.zeros(len(res), np.int32) if aux is None
+                 else np.broadcast_to(aux, (len(res),)))
+            for s, p, dd, st in zip(streams, pages, d, res[:, 0]):
+                self._oracle_op("sharer_drop", int(s), int(p), int(node),
+                                bool(dd), expect=int(st))
         return res[:, 0]
 
     # -- liveness (paper §5) ------------------------------------------------------
@@ -500,6 +716,8 @@ class DPCProtocol:
             dirs[i] = dshard
             lost += int(n_owned)
         self.state = self.state._replace(dirs=tuple(dirs))
+        if self.oracle is not None:
+            self.oracle.fail_node(node)
         for key, info in list(self.pending_inv.items()):
             info["waiting"].discard(node)
             if info["owner"] == node:

@@ -164,7 +164,9 @@ class RefDirectory:
             return D.ST_BAD, False
         if e.sharers:
             return D.ST_BLOCKED, False  # ACKs outstanding
-        dirty = e.inv_dirty
+        # a sharer_drop(dirty=True) landing mid-teardown accumulates into
+        # e.dirty, not inv_dirty — fold both in, like the array's single lane
+        dirty = e.inv_dirty or e.dirty
         del self.entries[key]
         self.stats.completions += 1
         return D.ST_OK, dirty
@@ -286,6 +288,9 @@ class RefPagePool:
         self.ref_bit: List[int] = [0] * num_pages
         self.hot: List[int] = [0] * num_pages
         self.clock_hand = 0
+        # flush-before-free mirror of pagepool.S_WRITEBACK: slots whose dirty
+        # contents are being persisted; pinned until the flush commits
+        self.writeback: set = set()
 
     def alloc(self) -> int:
         """Returns a free slot or -1 (caller must reclaim)."""
@@ -307,11 +312,18 @@ class RefPagePool:
     def decay_hot(self) -> None:
         self.hot = [h >> 1 for h in self.hot]
 
+    def retire(self, slot: int) -> None:
+        """DRAINING -> WRITEBACK: pin the slot until its flush commits."""
+        assert self.key_of[slot] is not None
+        assert slot not in self.free
+        self.writeback.add(slot)
+
     def release(self, slot: int) -> Optional[Key]:
         key = self.key_of[slot]
         self.key_of[slot] = None
         self.ref_bit[slot] = 0
         self.hot[slot] = 0
+        self.writeback.discard(slot)
         self.free.append(slot)
         return key
 
@@ -325,7 +337,8 @@ class RefPagePool:
             slot = self.clock_hand
             self.clock_hand = (self.clock_hand + 1) % self.num_pages
             scanned += 1
-            if self.key_of[slot] is None:
+            if self.key_of[slot] is None or slot in self.writeback \
+                    or slot in victims:   # never pick the same slot twice
                 continue
             if self.ref_bit[slot]:
                 self.ref_bit[slot] = 0
@@ -344,3 +357,6 @@ class RefPagePool:
         assert installed.isdisjoint(set(self.free))
         assert len(set(self.free)) == len(self.free)
         assert len(installed) + len(self.free) == self.num_pages
+        # flush-before-free: a retiring slot is never free nor unbound
+        assert self.writeback <= installed, "WRITEBACK slot without a key"
+        assert self.writeback.isdisjoint(set(self.free))

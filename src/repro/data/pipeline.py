@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import refimpl
+from repro.storage import MemoryBackingStore
 
 
 @dataclasses.dataclass
@@ -34,20 +35,47 @@ class DataConfig:
     storage_latency_s: float = 0.0   # simulated object-store latency
 
 
-class ShardStore:
-    """The "backing storage": deterministic shard synthesis."""
+class ShardStore(MemoryBackingStore):
+    """The "backing storage" of the host tier, as a ``BackingStore``.
+
+    Shards are pages of stream 0: ``read`` serves any shard ever written
+    (the durable/staged tiers of ``MemoryBackingStore``) and falls back to
+    deterministic synthesis — the seeded generator stands in for an
+    infinite, read-only object store, with its cost made explicit so cache
+    hits are observable.  The host tier (``HostShardCache``) and the page
+    tier (``core/protocol.py``) now speak the same storage interface.
+    """
+
+    STREAM = 0  # all shards live on one storage stream ("the corpus file")
 
     def __init__(self, cfg: DataConfig):
+        super().__init__()
         self.cfg = cfg
         self.fetches = 0
 
-    def fetch(self, shard_id: int) -> np.ndarray:
-        self.fetches += 1
+    def read(self, stream: int, page: int) -> np.ndarray:
+        data = super().read(stream, page)   # counts the hit, or the miss
+        if data is not None:
+            return data
         if self.cfg.storage_latency_s:
             time.sleep(self.cfg.storage_latency_s)
-        rng = np.random.RandomState(self.cfg.seed * 9973 + shard_id)
+        # stream folds into the seed (stream 0 — the host tier's only
+        # stream — keeps the corpus identical to the pre-refactor bytes)
+        rng = np.random.RandomState(self.cfg.seed * 9973
+                                    + stream * 31337 + page)
         return rng.randint(0, self.cfg.vocab_size,
                            size=self.cfg.shard_tokens).astype(np.int32)
+
+    def contains(self, stream: int, page: int) -> bool:
+        # honest caveat for generic BackingStore callers: this store can
+        # synthesize *every* key, so "contains" means "readable", not
+        # "previously written" — missing-page conditions do not exist here
+        return True
+
+    def fetch(self, shard_id: int) -> np.ndarray:
+        """Host-tier convenience: fetch one shard ("file") from storage."""
+        self.fetches += 1
+        return self.read(self.STREAM, shard_id)
 
 
 class HostShardCache:

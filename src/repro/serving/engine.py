@@ -84,6 +84,11 @@ class ServingEngine:
         self._ap = np.full((max_batch,), -1, np.int32)
         self._step_count = 0
 
+        # storage tier: evicted dirty KV pages flush through the writeback
+        # queue; this engine's pools are the byte source (and refill sink)
+        if self.kv.writeback is not None:
+            self.kv.set_page_bytes_fn(self._fetch_page_bytes)
+
     # ------------------------------------------------------------------
 
     def submit(self, tokens: Sequence[int], max_new_tokens: int = 16) -> int:
@@ -100,7 +105,11 @@ class ServingEngine:
             lk = self.kv.lookup([key[0]], [key[1]], self.node)[0]
             if lk.page_id >= 0:
                 if lk.needs_fill:
-                    self.kv.commit([key[0]], [key[1]], self.node, [lk])
+                    # the caller decodes fresh KV into this frame without
+                    # installing any store bytes — strip a (stale) refill so
+                    # the commit stays dirty and eviction writes it back
+                    self.kv.commit([key[0]], [key[1]], self.node,
+                                   [dataclasses.replace(lk, refill=None)])
                 return lk.page_id
             if lk.status in (D.ST_FULL,):
                 self.kv.reclaim(self.node, self.kv.dpc.inv_batch_threshold)
@@ -116,6 +125,23 @@ class ServingEngine:
         lookups = self.kv.lookup([k[0] for k in keys], [k[1] for k in keys],
                                  self.node)
         self.stats.pages_needed += len(keys)
+
+        # storage refill: an evicted full page whose bytes survive in the
+        # backing store (or the still-pending writeback queue) is installed
+        # directly — the refault path skips prefill recompute.  Only the
+        # contiguous leading prefix is refilled: a refilled page must land
+        # inside the reuse prefix below, or the page-table assembly would
+        # alloc a private duplicate and double-commit its key.
+        for i, lk in enumerate(lookups[:len(req.tokens) // page]):
+            if not lk.needs_fill and lk.page_id >= 0:
+                continue   # already present: the prefix keeps extending
+            if lk.needs_fill and lk.refill is not None and lk.page_id >= 0 \
+                    and self._install_page_bytes(lk.page_id, lk.refill):
+                self.kv.commit([keys[i][0]], [keys[i][1]], self.node, [lk])
+                lookups[i] = dataclasses.replace(lk, needs_fill=False)
+                self.stats.pages_refilled += 1
+            else:
+                break      # gap: later refills would leave the prefix
 
         # longest prefix of already-present pages (full pages only)
         n_full = len(req.tokens) // page
@@ -304,6 +330,7 @@ class ServingEngine:
 
         now = time.monotonic()
         n_active = 0
+        completed: List[Request] = []
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -314,6 +341,7 @@ class ServingEngine:
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 req.t_done = now
+                completed.append(req)
                 self.active[slot] = None
                 self._sl[slot] = 0
                 self._pt[slot, :] = -1
@@ -321,6 +349,17 @@ class ServingEngine:
                 self._sync_cache_tables()
             else:
                 n_active += 1
+
+        # durability rides the step boundary: stamp an epoch, pump the
+        # queue (sync mode flushes one batch; async harvests completions),
+        # and fsync each completed request's streams — its pages are
+        # guaranteed refillable once the response is surfaced
+        if self.kv.writeback is not None:
+            self.kv.advance_epoch()
+            self.kv.pump_storage()
+            for req in completed:
+                for stream in {k[0] for k in req.page_keys}:
+                    self.kv.fsync_stream(stream)
 
         # ownership migration rides the step boundary — batched, never inside
         # the per-token decode (the paper's "off the critical path" batching)
@@ -347,6 +386,44 @@ class ServingEngine:
                 req.page_ids = [remap.get(p, p) for p in req.page_ids]
         self._sync_cache_tables()
         return len(moved)
+
+    # -- storage tier (repro/storage) -----------------------------------------
+
+    def _fetch_page_bytes(self, key, pfn: int):
+        """Writeback byte source: one page's KV rows as float32 (bf16-exact;
+        npy extents want a builtin dtype).  None when there is no paged
+        cache to read from."""
+        pc = steps.paged_part(self.cache)
+        if pc is None:
+            return None
+        slot = pfn % self.kv.dpc.pool_pages_per_shard
+        if isinstance(pc, MLAPagedCache):
+            return np.asarray(pc.latent_pools[:, slot]).astype(np.float32)
+        return np.stack([np.asarray(pc.k_pools[:, slot]),
+                         np.asarray(pc.v_pools[:, slot])]).astype(np.float32)
+
+    def _install_page_bytes(self, pid: int, data: np.ndarray) -> bool:
+        """Refill sink: scatter store bytes back into the paged pools.
+        Returns False on shape mismatch (caller falls back to prefill)."""
+        pc = steps.paged_part(self.cache)
+        if pc is None:
+            return False
+        slot = pid % self.kv.dpc.pool_pages_per_shard
+        if isinstance(pc, MLAPagedCache):
+            if data.shape != pc.latent_pools[:, slot].shape:
+                return False
+            pc = pc._replace(latent_pools=pc.latent_pools.at[:, slot].set(
+                jnp.asarray(data, pc.latent_pools.dtype)))
+        else:
+            if data.shape != (2,) + pc.k_pools[:, slot].shape:
+                return False
+            pc = pc._replace(
+                k_pools=pc.k_pools.at[:, slot].set(
+                    jnp.asarray(data[0], pc.k_pools.dtype)),
+                v_pools=pc.v_pools.at[:, slot].set(
+                    jnp.asarray(data[1], pc.v_pools.dtype)))
+        self.cache = steps.replace_paged(self.cache, pc)
+        return True
 
     def _copy_page(self, key, src_pfn: int, dst_pfn: int) -> None:
         """Data-plane hook for migrate_finish: move one page's KV rows.

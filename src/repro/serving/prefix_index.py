@@ -60,6 +60,7 @@ class PrefixStats:
         self.pages_local = 0
         self.pages_remote = 0
         self.pages_filled = 0
+        self.pages_refilled = 0   # evicted pages restored from the store
         self.prefill_tokens_saved = 0
         self.prefill_tokens_run = 0
 

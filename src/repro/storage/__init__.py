@@ -1,0 +1,28 @@
+"""Durable backing-store + async writeback subsystem.
+
+The storage tier DPC's single-copy invariant was always implicitly leaning
+on: an evicted dirty page has *no* other DRAM replica, so reclamation and
+migration must end in a real "writeback to storage" before the frame is
+reusable.  This package provides
+
+  ``BackingStore``        the storage-tier interface (page-granular put/get
+                          with an explicit ``sync`` durability point)
+  ``MemoryBackingStore``  staged/durable dict pair; ``crash()`` drops the
+                          staged writes — the crash-consistency test double
+  ``FileBackingStore``    npy-per-extent files with atomic replace + fsync
+  ``WritebackQueue``      batched asynchronous dirty-page flusher with
+                          epoch-ordered flush barriers and per-stream fsync
+
+The page tier (``core/protocol.py``) and the host tier
+(``data/pipeline.ShardStore``) both speak ``BackingStore``.
+"""
+
+from repro.storage.backing import (BackingStore, FileBackingStore,
+                                   MemoryBackingStore)
+from repro.storage.writeback import (WritebackConfig, WritebackQueue,
+                                     make_storage)
+
+__all__ = [
+    "BackingStore", "MemoryBackingStore", "FileBackingStore",
+    "WritebackConfig", "WritebackQueue", "make_storage",
+]

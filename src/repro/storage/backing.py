@@ -1,0 +1,252 @@
+"""Backing-store implementations: the durable tier below the page cache.
+
+A ``BackingStore`` is page-granular: keys are ``(stream, page)`` like every
+other layer of the protocol, values are numpy arrays of any shape/dtype (KV
+page bytes, token shards, ...).  Durability is explicit: ``write`` stages a
+page, ``sync`` is the durability point (everything staged before it survives
+``crash()``).  The ``WritebackQueue`` flushes obligations in FIFO order and
+calls ``sync`` once per batch, so the durable image is always a prefix of the
+write sequence — the crash-consistency ordering DAXFS-style filesystems make
+the hard part of shared storage.
+
+``FileBackingStore`` groups pages into fixed-size *extents*, one ``.npz``
+file per extent (data + presence mask), written via tmp-file + fsync +
+atomic rename.  A one-page flush rewrites its whole extent — that is the
+write amplification ``benchmarks/writeback.py`` measures, and why batching
+adjacent dirty pages into one sync matters.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+
+Key = Tuple[int, int]  # (stream, page) — same key space as the directory
+
+
+class BackingStore:
+    """Interface + shared accounting for the durable page tier."""
+
+    def __init__(self):
+        self.stats = {
+            "pages_written": 0, "pages_read": 0, "read_misses": 0,
+            "bytes_staged": 0, "bytes_written": 0, "bytes_read": 0,
+            "syncs": 0,
+        }
+
+    # -- required ---------------------------------------------------------
+
+    def write(self, stream: int, page: int, data: np.ndarray) -> None:
+        """Stage one page (durable only after the next ``sync``)."""
+        raise NotImplementedError
+
+    def read(self, stream: int, page: int) -> Optional[np.ndarray]:
+        """Latest staged-or-durable copy, or None if never written."""
+        raise NotImplementedError
+
+    def sync(self) -> None:
+        """Durability point: everything staged so far survives a crash."""
+        raise NotImplementedError
+
+    # -- optional ---------------------------------------------------------
+
+    def contains(self, stream: int, page: int) -> bool:
+        return self.read(stream, page) is not None
+
+    def delete(self, stream: int, page: int) -> None:
+        raise NotImplementedError
+
+    def crash(self) -> None:
+        """Simulate power loss: drop every write staged since the last sync
+        (test hook; the file store reloads from disk on next read)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release resources (the file store removes a self-created root)."""
+
+    # -- accounting -------------------------------------------------------
+
+    def _note_write(self, data: np.ndarray) -> None:
+        self.stats["pages_written"] += 1
+        self.stats["bytes_staged"] += int(data.nbytes)
+
+    def _note_read(self, data: Optional[np.ndarray]) -> None:
+        if data is None:
+            self.stats["read_misses"] += 1
+        else:
+            self.stats["pages_read"] += 1
+            self.stats["bytes_read"] += int(data.nbytes)
+
+
+class MemoryBackingStore(BackingStore):
+    """Staged/durable dict pair — the fast tier-0 store and the crash-
+    consistency test double (``crash`` drops the staged dict)."""
+
+    def __init__(self):
+        super().__init__()
+        self._staged: Dict[Key, np.ndarray] = {}
+        self._durable: Dict[Key, np.ndarray] = {}
+
+    def write(self, stream: int, page: int, data: np.ndarray) -> None:
+        data = np.array(data, copy=True)
+        self._staged[(stream, page)] = data
+        self._note_write(data)
+
+    def read(self, stream: int, page: int) -> Optional[np.ndarray]:
+        key = (stream, page)
+        data = self._staged.get(key)
+        if data is None:
+            data = self._durable.get(key)
+        self._note_read(data)
+        return None if data is None else np.array(data, copy=True)
+
+    def sync(self) -> None:
+        for data in self._staged.values():
+            self.stats["bytes_written"] += int(data.nbytes)
+        self._durable.update(self._staged)
+        self._staged.clear()
+        self.stats["syncs"] += 1
+
+    def delete(self, stream: int, page: int) -> None:
+        self._staged.pop((stream, page), None)
+        self._durable.pop((stream, page), None)
+
+    def crash(self) -> None:
+        self._staged.clear()
+
+    def __len__(self) -> int:
+        return len(self._durable | self._staged)
+
+
+class _Extent:
+    """In-memory working copy of one extent file (data + presence mask)."""
+
+    __slots__ = ("data", "mask")
+
+    def __init__(self, data: np.ndarray, mask: np.ndarray):
+        self.data = data
+        self.mask = mask
+
+
+class FileBackingStore(BackingStore):
+    """npy-per-extent file store with atomic, fsync'd extent rewrites.
+
+    Pages are grouped ``extent_pages`` to a file; the first write to an
+    extent fixes its page shape/dtype.  ``sync`` rewrites every dirty extent
+    (tmp file -> fsync -> rename), so bytes_written / bytes_staged exposes
+    the extent-granularity write amplification.
+    """
+
+    def __init__(self, root: Optional[str] = None, extent_pages: int = 8):
+        super().__init__()
+        self._owns_root = not root
+        self.root = root or tempfile.mkdtemp(prefix="dpc_store_")
+        os.makedirs(self.root, exist_ok=True)
+        self.extent_pages = int(extent_pages)
+        self._extents: Dict[Key, _Extent] = {}     # (stream, extent_id) ->
+        self._dirty: Set[Key] = set()
+        # extents known absent on disk: first-touch fills probe the store on
+        # every miss, so the common never-written case must not pay a
+        # stat() syscall per page (single-writer assumption)
+        self._absent: Set[Key] = set()
+
+    # -- extent plumbing --------------------------------------------------
+
+    def _path(self, stream: int, eid: int) -> str:
+        return os.path.join(self.root, f"s{stream & 0xFFFFFFFF:08x}_e{eid}.npz")
+
+    def _load(self, stream: int, eid: int,
+              template: Optional[np.ndarray] = None) -> Optional[_Extent]:
+        ext = self._extents.get((stream, eid))
+        if ext is not None:
+            return ext
+        if (stream, eid) in self._absent and template is None:
+            return None
+        path = self._path(stream, eid)
+        if os.path.exists(path):
+            with np.load(path) as z:
+                ext = _Extent(z["data"].copy(), z["mask"].copy())
+        elif template is not None:
+            ext = _Extent(
+                np.zeros((self.extent_pages,) + template.shape,
+                         template.dtype),
+                np.zeros((self.extent_pages,), bool))
+        else:
+            self._absent.add((stream, eid))
+            return None
+        self._absent.discard((stream, eid))
+        self._extents[(stream, eid)] = ext
+        return ext
+
+    # -- BackingStore -----------------------------------------------------
+
+    def write(self, stream: int, page: int, data: np.ndarray) -> None:
+        data = np.asarray(data)
+        eid, off = page // self.extent_pages, page % self.extent_pages
+        ext = self._load(stream, eid, template=data)
+        if ext.data.shape[1:] != data.shape or ext.data.dtype != data.dtype:
+            raise ValueError(
+                f"extent ({stream},{eid}) holds {ext.data.dtype}"
+                f"{ext.data.shape[1:]} pages, got {data.dtype}{data.shape}")
+        ext.data[off] = data
+        ext.mask[off] = True
+        self._dirty.add((stream, eid))
+        self._note_write(data)
+
+    def read(self, stream: int, page: int) -> Optional[np.ndarray]:
+        eid, off = page // self.extent_pages, page % self.extent_pages
+        ext = self._load(stream, eid)
+        data = None
+        if ext is not None and ext.mask[off]:
+            data = np.array(ext.data[off], copy=True)
+        self._note_read(data)
+        return data
+
+    def sync(self) -> None:
+        for stream, eid in sorted(self._dirty):
+            ext = self._extents[(stream, eid)]
+            path = self._path(stream, eid)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    np.savez(f, data=ext.data, mask=ext.mask)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+            self.stats["bytes_written"] += int(ext.data.nbytes
+                                               + ext.mask.nbytes)
+        self._dirty.clear()
+        self.stats["syncs"] += 1
+
+    def delete(self, stream: int, page: int) -> None:
+        eid, off = page // self.extent_pages, page % self.extent_pages
+        ext = self._load(stream, eid)
+        if ext is not None:
+            ext.mask[off] = False
+            self._dirty.add((stream, eid))
+
+    def crash(self) -> None:
+        # staged state is exactly the dirty working copies: drop them and the
+        # next read reloads whatever the last atomic rename published
+        for key in self._dirty:
+            self._extents.pop(key, None)
+        self._dirty.clear()
+
+    def extent_files(self) -> int:
+        return sum(1 for n in os.listdir(self.root) if n.endswith(".npz"))
+
+    def close(self) -> None:
+        """Drop working copies; a self-created temp root is removed so
+        benchmark/test runs do not leak extent files into /tmp."""
+        self._extents.clear()
+        self._dirty.clear()
+        if self._owns_root:
+            shutil.rmtree(self.root, ignore_errors=True)

@@ -1,0 +1,343 @@
+"""Asynchronous batched writeback queue with epoch-ordered flush barriers.
+
+This is the missing half of the paper's reclamation path: "writeback to
+storage" as a real pipeline instead of a counter.  Dirty-page flush
+*obligations* (page bytes captured at enqueue time) are drained in strict
+FIFO order by a background flusher (or by explicit ``pump`` calls in
+deterministic/sync mode), ``batch_size`` pages per ``BackingStore.sync`` —
+so the durable image is always a prefix of the obligation sequence and a
+crash can never surface write N+1 without write N.
+
+Ordering / durability API:
+
+  ``advance_epoch``   stamp a boundary (the engine calls it per step)
+  ``flush_barrier``   block until every obligation from epochs <= e (default:
+                      everything enqueued so far) is durable
+  ``fsync_stream``    block until one stream's obligations are durable — the
+                      fsync(fd) analog the serving engine runs on request
+                      completion
+  ``peek``            latest not-yet-durable bytes for a key (read-your-
+                      writes: a refault between enqueue and sync must see
+                      the pending copy, not the stale durable one)
+
+Flush-before-free: obligations carry an opaque ``token`` (the protocol
+passes ``(node, slot)``); tokens surface on ``drain_completions()`` only
+after their batch's sync, and the protocol releases the frame only then.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.backing import (BackingStore, FileBackingStore,
+                                   MemoryBackingStore)
+
+Key = Tuple[int, int]
+
+
+@dataclasses.dataclass
+class WritebackConfig:
+    batch_size: int = 32            # obligations per store.sync
+    flush_interval_s: float = 0.002  # async flusher wake period
+    max_pending: int = 1 << 16      # backpressure bound
+    async_mode: bool = True         # background thread; False = caller pumps
+    barrier_timeout_s: float = 30.0
+
+
+@dataclasses.dataclass
+class _Obligation:
+    seq: int
+    epoch: int
+    key: Key
+    data: np.ndarray
+    token: Optional[Tuple[int, int]]
+    t_enqueue: float
+    in_flight: bool = False
+
+
+class WritebackQueue:
+    """Batched dirty-page flusher over a ``BackingStore``."""
+
+    def __init__(self, store: BackingStore,
+                 cfg: Optional[WritebackConfig] = None):
+        self.store = store
+        self.cfg = cfg or WritebackConfig()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        # serializes flush batches: the durable image must stay a strict
+        # prefix of the seq order even when pump() races the flusher thread
+        self._flush_mutex = threading.Lock()
+        # insertion order == seq order (only the flusher removes entries)
+        self._pending: Dict[int, _Obligation] = {}
+        self._latest_by_key: Dict[Key, int] = {}
+        self._completed: List[Tuple[Tuple[int, int], Key]] = []
+        self._seq = 0
+        self._epoch = 0
+        self._durable_seq = -1
+        self._closed = False
+        self._barrier_lat_s: List[float] = []
+        self.stats = {
+            "enqueued": 0, "coalesced": 0, "flushed_pages": 0, "batches": 0,
+            "barriers": 0, "bytes_enqueued": 0, "flush_errors": 0,
+        }
+        self._thread: Optional[threading.Thread] = None
+        if self.cfg.async_mode:
+            self._thread = threading.Thread(
+                target=self._flusher, name="dpc-writeback", daemon=True)
+            self._thread.start()
+
+    # -- producer side -----------------------------------------------------
+
+    def enqueue(self, key: Key, data: np.ndarray,
+                token: Optional[Tuple[int, int]] = None) -> int:
+        """Record a flush obligation; ``data`` is captured by copy so the
+        source frame may be overwritten (though the protocol keeps it in
+        WRITEBACK state until the flush commits anyway).  Returns the seq."""
+        data = np.array(data, copy=True)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("writeback queue is closed")
+            while len(self._pending) >= self.cfg.max_pending \
+                    and self._thread is not None:
+                self._cv.wait(0.01)
+            self.stats["enqueued"] += 1
+            self.stats["bytes_enqueued"] += int(data.nbytes)
+            # coalesce token-less rewrites of a still-queued key: the earlier
+            # obligation's slot in the FIFO absorbs the newer bytes (per-key
+            # ordering is preserved — there is only one pending copy)
+            prev = self._latest_by_key.get(key)
+            if prev is not None and token is None:
+                ob = self._pending.get(prev)
+                if ob is not None and not ob.in_flight and ob.token is None:
+                    ob.data = data
+                    self.stats["coalesced"] += 1
+                    return ob.seq
+            seq = self._seq
+            self._seq += 1
+            self._pending[seq] = _Obligation(
+                seq=seq, epoch=self._epoch, key=key, data=data, token=token,
+                t_enqueue=time.perf_counter())
+            self._latest_by_key[key] = seq
+            if len(self._pending) >= self.cfg.batch_size:
+                self._cv.notify_all()
+            return seq
+
+    def advance_epoch(self) -> int:
+        """Stamp an ordering boundary; later enqueues belong to the new
+        epoch.  ``flush_barrier(upto_epoch=e)`` orders against these."""
+        with self._lock:
+            self._epoch += 1
+            return self._epoch
+
+    # -- read-your-writes --------------------------------------------------
+
+    def peek(self, key: Key) -> Optional[np.ndarray]:
+        """Latest pending (not yet durable) bytes for ``key``, else None."""
+        with self._lock:
+            seq = self._latest_by_key.get(key)
+            if seq is None:
+                return None
+            ob = self._pending.get(seq)
+            return None if ob is None else np.array(ob.data, copy=True)
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def has_pending_stream(self, stream: int) -> bool:
+        with self._lock:
+            return any(ob.key[0] == stream for ob in self._pending.values())
+
+    # -- flush side --------------------------------------------------------
+
+    def _take_batch(self) -> List[_Obligation]:
+        with self._lock:
+            batch = []
+            for ob in self._pending.values():      # FIFO: insertion order
+                if len(batch) >= self.cfg.batch_size:
+                    break
+                if ob.in_flight:
+                    continue
+                ob.in_flight = True
+                batch.append(ob)
+            return batch
+
+    def _flush_once(self) -> int:
+        with self._flush_mutex:
+            batch = self._take_batch()
+            if not batch:
+                return 0
+            try:
+                for ob in batch:
+                    self.store.write(ob.key[0], ob.key[1], ob.data)
+                self.store.sync()                  # the durability point
+            except Exception:
+                # a failed sync must not wedge the pipeline: un-mark the
+                # batch so the next flush re-drives it (obligations and
+                # their frame pins are still intact)
+                with self._cv:
+                    for ob in batch:
+                        ob.in_flight = False
+                    self.stats["flush_errors"] += 1
+                    self._cv.notify_all()
+                raise
+            with self._cv:
+                for ob in batch:
+                    del self._pending[ob.seq]
+                    if self._latest_by_key.get(ob.key) == ob.seq:
+                        del self._latest_by_key[ob.key]
+                    if ob.token is not None:
+                        self._completed.append((ob.token, ob.key))
+                self._durable_seq = max(self._durable_seq, batch[-1].seq)
+                self.stats["flushed_pages"] += len(batch)
+                self.stats["batches"] += 1
+                self._cv.notify_all()
+            return len(batch)
+
+    def _flusher(self) -> None:
+        while True:
+            with self._cv:
+                if self._closed and not self._pending:
+                    return
+                if len(self._pending) < self.cfg.batch_size \
+                        and not self._closed:
+                    self._cv.wait(self.cfg.flush_interval_s)
+                if not self._pending:
+                    if self._closed:
+                        return
+                    continue
+            try:
+                self._flush_once()
+            except Exception:
+                # transient store failure (disk full, ...): the thread
+                # survives and retries the re-driven batch after a beat
+                time.sleep(self.cfg.flush_interval_s or 0.01)
+
+    def pump(self, max_batches: Optional[int] = None) -> int:
+        """Drain synchronously on the caller's thread (sync mode, tests,
+        and the engine's step-boundary pump).  Returns pages flushed."""
+        flushed = 0
+        while max_batches is None or max_batches > 0:
+            n = self._flush_once()
+            if n == 0:
+                break
+            flushed += n
+            if max_batches is not None:
+                max_batches -= 1
+        return flushed
+
+    # -- barriers ----------------------------------------------------------
+
+    def _barrier_done(self, upto_epoch: Optional[int],
+                      stream: Optional[int]) -> bool:
+        if stream is not None:
+            return not any(ob.key[0] == stream
+                           for ob in self._pending.values())
+        if upto_epoch is None:
+            return not self._pending
+        return all(ob.epoch > upto_epoch for ob in self._pending.values())
+
+    def _wait(self, upto_epoch: Optional[int], stream: Optional[int],
+              timeout: Optional[float]) -> float:
+        t0 = time.perf_counter()
+        deadline = t0 + (timeout if timeout is not None
+                         else self.cfg.barrier_timeout_s)
+        while True:
+            with self._cv:
+                if self._barrier_done(upto_epoch, stream):
+                    break
+                if self._thread is not None:
+                    # expedite: wake the flusher now instead of letting the
+                    # obligations sit out the remaining flush interval
+                    self._cv.notify_all()
+                    if not self._cv.wait(min(0.05, self.cfg.flush_interval_s
+                                             or 0.05)):
+                        pass
+                    if time.perf_counter() > deadline:
+                        raise TimeoutError(
+                            f"flush barrier: {len(self._pending)} obligations"
+                            " still pending")
+                    continue
+            # sync mode: the barrier itself pumps the queue dry
+            if self._flush_once() == 0 and time.perf_counter() > deadline:
+                raise TimeoutError("flush barrier stalled in sync mode")
+        lat = time.perf_counter() - t0
+        self.stats["barriers"] += 1
+        self._barrier_lat_s.append(lat)
+        return lat
+
+    def flush_barrier(self, upto_epoch: Optional[int] = None,
+                      timeout: Optional[float] = None) -> float:
+        """Block until every obligation from epochs <= ``upto_epoch``
+        (default: everything enqueued so far) is durable.  Returns the
+        barrier latency in seconds."""
+        return self._wait(upto_epoch, None, timeout)
+
+    def fsync_stream(self, stream: int,
+                     timeout: Optional[float] = None) -> float:
+        """Block until all of ``stream``'s enqueued obligations are durable
+        (the per-file fsync analog)."""
+        return self._wait(None, stream, timeout)
+
+    # -- completions / teardown -------------------------------------------
+
+    def drain_completions(self) -> List[Tuple[Tuple[int, int], Key]]:
+        """Tokens of obligations whose flush committed since the last call
+        — the protocol releases exactly these frames (flush-before-free)."""
+        with self._lock:
+            out, self._completed = self._completed, []
+            return out
+
+    def close(self, drain: bool = True) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=self.cfg.barrier_timeout_s)
+            self._thread = None
+        if drain:
+            self.pump()
+
+    # -- metrics -----------------------------------------------------------
+
+    def write_amplification(self) -> float:
+        """Durable bytes written per logical dirty byte flushed (extent
+        rewrites and failed coalescing push this above 1.0)."""
+        logical = self.stats["bytes_enqueued"]
+        return self.store.stats["bytes_written"] / max(logical, 1)
+
+    def barrier_latencies_s(self) -> List[float]:
+        return list(self._barrier_lat_s)
+
+    def barrier_p99_s(self) -> float:
+        if not self._barrier_lat_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self._barrier_lat_s), 99))
+
+
+def make_storage(backend: str, *, root: str = "", extent_pages: int = 8,
+                 batch_size: int = 32, flush_interval_s: float = 0.002,
+                 async_mode: bool = True
+                 ) -> Tuple[Optional[BackingStore],
+                            Optional[WritebackQueue]]:
+    """Config-driven factory: build the (store, queue) pair for a DPCConfig.
+
+    ``backend``: "none" (disabled) | "memory" | "file".
+    """
+    if backend in ("", "none"):
+        return None, None
+    if backend == "memory":
+        store: BackingStore = MemoryBackingStore()
+    elif backend == "file":
+        store = FileBackingStore(root or None, extent_pages=extent_pages)
+    else:
+        raise ValueError(f"unknown storage backend {backend!r}")
+    queue = WritebackQueue(store, WritebackConfig(
+        batch_size=batch_size, flush_interval_s=flush_interval_s,
+        async_mode=async_mode))
+    return store, queue

@@ -351,8 +351,11 @@ else:
 
 class TestProtocolFlows:
     def make(self, placement="sharded", pool_pages=8):
+        # shadow_oracle: every flow in this class also runs against the
+        # refimpl in lockstep — dirty-bit divergence fails loudly
         cfg = ProtocolConfig(num_nodes=4, pool_pages=pool_pages,
-                             directory_capacity=256, placement=placement)
+                             directory_capacity=256, placement=placement,
+                             shadow_oracle=True)
         return DPCProtocol(cfg)
 
     @pytest.mark.parametrize("placement", ["sharded", "central"])

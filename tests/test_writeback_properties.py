@@ -1,0 +1,218 @@
+"""Property tests: random write / reclaim / migrate / flush interleavings.
+
+Drives the full storage-integrated protocol (DistributedKVCache with a
+memory BackingStore, sync-mode WritebackQueue, and the refimpl shadow
+oracle) through random op sequences and asserts, after every op:
+
+  flush-before-free   no frame with an uncommitted flush obligation is ever
+                      reusable (protocol violation counter stays 0, pool
+                      state partition holds)
+  single-copy         the shadow oracle's invariants (exactly one owner,
+                      no sharers in E) hold — divergence from the array
+                      directory raises inside the protocol itself
+  read-your-writes    a refaulted page's refill bytes equal the last bytes
+                      written to it, whether they come from the pending
+                      queue or the durable store
+
+Tier-1 runs the fixed-seed variant; hypothesis (when present) searches the
+same space under ``-m property``.
+"""
+
+import numpy as np
+import pytest
+
+try:  # dev-only dep: collection must never hard-fail without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core import pagepool as pp
+from repro.core.dpc_cache import DistributedKVCache
+
+NODES = 2
+POOL = 3
+STREAMS = [1, 2, 3, 4]
+PAGES = [0, 1]
+OP_NAMES = ["fill", "write", "reclaim", "reclaim_begin", "reclaim_finish",
+            "migrate", "pump", "barrier", "epoch"]
+
+
+class Harness:
+    """The model: ``expected`` holds each key's last-written bytes;
+    ``frames`` simulates the data plane (pfn -> bytes)."""
+
+    def __init__(self):
+        dpc = DPCConfig(page_size=4, pool_pages_per_shard=POOL,
+                        storage_backend="memory", writeback_async=False,
+                        writeback_batch=2, shadow_oracle=True,
+                        migrate_threshold=0)
+        self.kv = DistributedKVCache(dpc, NODES)
+        self.frames = {}
+        self.kv.set_page_bytes_fn(lambda key, pfn: self.frames.get(pfn))
+        self.expected = {}
+        self.version = 0
+
+    def _fresh_bytes(self):
+        self.version += 1
+        return np.full((6,), self.version, np.int32)
+
+    # -- ops ---------------------------------------------------------------
+
+    def fill(self, key, node):
+        lk = self.kv.lookup([key[0]], [key[1]], node)[0]
+        if lk.status == D.ST_GRANT_E:
+            if lk.refill is not None:
+                # read-your-writes after refault: the recovered bytes must
+                # be the last ones written, from queue or store alike
+                assert key in self.expected, f"{key}: refill of never-written"
+                np.testing.assert_array_equal(lk.refill, self.expected[key])
+                self.frames[lk.page_id] = lk.refill
+            else:
+                assert key not in self.expected, \
+                    f"{key}: written bytes lost (no refill offered)"
+                data = self._fresh_bytes()
+                self.frames[lk.page_id] = data
+                self.expected[key] = data
+            self.kv.commit([key[0]], [key[1]], node, [lk])
+        elif lk.status in (D.ST_MAP_S, D.ST_HIT_SHARER, D.ST_HIT_OWNER):
+            np.testing.assert_array_equal(self.frames[lk.page_id],
+                                          self.expected[key])
+        # BLOCKED (teardown in flight) / FULL (pool exhausted): skip
+
+    def write(self, key, _node):
+        view = self.kv.proto.directory_view()
+        ent = view.get(key)
+        if ent is None or ent[0] != 2:   # state O required
+            return
+        owner, pfn = ent[1], ent[3]
+        st = self.kv.proto.mark_dirty([key[0]], [key[1]], owner)[0]
+        if st == D.ST_OK:
+            data = self._fresh_bytes()
+            self.frames[pfn] = data
+            self.expected[key] = data
+
+    def reclaim(self, _key, node, want):
+        self.kv.proto.reclaim_sync(node, want)
+
+    def reclaim_begin(self, _key, node):
+        _, notify = self.kv.proto.reclaim_begin(node, want=1)
+        for key, sharers in notify.items():
+            for s in sharers:   # deliver ACKs but do NOT finish yet
+                self.kv.proto.reclaim_ack(key[0], key[1], s)
+
+    def reclaim_finish(self, _key, node):
+        self.kv.proto.reclaim_finish(node)
+
+    def migrate(self, key, dst):
+        view = self.kv.proto.directory_view()
+        ent = view.get(key)
+        if ent is None or ent[0] != 2 or ent[1] == dst:
+            return
+
+        def copy(_key, src_pfn, dst_pfn):
+            self.frames[dst_pfn] = self.frames[src_pfn]
+
+        self.kv.proto.migrate_sync([(key, dst)], copy_fn=copy)
+
+    def pump(self):
+        self.kv.pump_storage(1)
+
+    def barrier(self):
+        self.kv.flush()
+
+    def epoch(self):
+        self.kv.advance_epoch()
+
+    # -- invariants --------------------------------------------------------
+
+    def check(self):
+        proto = self.kv.proto
+        assert proto.counters["flush_before_free_violations"] == 0
+        assert proto.counters["oracle_mismatches"] == 0
+        proto.oracle.check_invariants()   # single-copy et al.
+        for node in range(NODES):
+            pool = proto.state.pools[node]
+            states = np.asarray(pool.slot_state)
+            # slot states partition the pool; the free stack matches S_FREE
+            assert (states == pp.S_FREE).sum() == int(pool.free_top)
+            # every pinned frame has exactly one outstanding obligation
+            wb_slots = {s for (n, s) in proto._wb_outstanding if n == node}
+            assert wb_slots == set(np.nonzero(states == pp.S_WRITEBACK)[0]
+                                   .tolist())
+
+    def finale(self):
+        """Drain everything, then refault every key ever written."""
+        # complete any dangling invalidation rounds before the final audit
+        for node in range(NODES):
+            self.kv.proto.reclaim_finish(node)
+        self.kv.flush()
+        self.check()
+        assert self.kv.writeback.pending_count() == 0
+        for key in list(self.expected):
+            for node in range(NODES):
+                self.fill(key, node)   # hit, refill, or FULL — all asserted
+            self.kv.proto.reclaim_sync(0, want=1)   # keep pools breathing
+            self.kv.flush()
+
+
+def _run_ops(ops):
+    h = Harness()
+    for op, s, p, node, want in ops:
+        key = (STREAMS[s % len(STREAMS)], PAGES[p % len(PAGES)])
+        node = node % NODES
+        if op == "fill":
+            h.fill(key, node)
+        elif op == "write":
+            h.write(key, node)
+        elif op == "reclaim":
+            h.reclaim(key, node, 1 + want % 3)
+        elif op == "reclaim_begin":
+            h.reclaim_begin(key, node)
+        elif op == "reclaim_finish":
+            h.reclaim_finish(key, node)
+        elif op == "migrate":
+            h.migrate(key, node)
+        elif op == "pump":
+            h.pump()
+        elif op == "barrier":
+            h.barrier()
+        elif op == "epoch":
+            h.epoch()
+        h.check()
+    h.finale()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_writeback_matches_model_seeded(seed):
+    """Tier-1 fixed-seed variant (runs even without hypothesis)."""
+    rng = np.random.default_rng(seed)
+    ops = [(OP_NAMES[rng.integers(len(OP_NAMES))],
+            int(rng.integers(8)), int(rng.integers(8)),
+            int(rng.integers(NODES)), int(rng.integers(4)))
+           for _ in range(80)]
+    _run_ops(ops)
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(
+            st.sampled_from(OP_NAMES),
+            st.integers(0, 7),            # stream pick
+            st.integers(0, 7),            # page pick
+            st.integers(0, NODES - 1),    # node / migration dst
+            st.integers(0, 3),            # want
+        ),
+        min_size=1, max_size=60)
+
+    @pytest.mark.property
+    @settings(deadline=None)  # example count comes from the profile
+    @given(OPS)
+    def test_writeback_matches_model(ops):
+        _run_ops(ops)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_writeback_matches_model():
+        pass
