@@ -39,10 +39,16 @@ REQS_PER_NODE = 6
 
 
 def make_engines(mode: str, n_nodes: int, params, arch):
+    # "dpc_notlb" is the ablation row: the same relaxed-coherence protocol
+    # with the per-node mapping cache off — every steady-state re-read pays
+    # the full directory pipeline (the pre-TLB behavior)
+    dpc_mode, tlb = (("dpc", False) if mode == "dpc_notlb"
+                     else (mode, True))
     run = RunConfig(
         arch=arch, shape=ShapeConfig("b", PROMPT * 2, 4, "decode"),
         mesh=MeshConfig((1,), ("data",)),
-        dpc=DPCConfig(mode=mode, page_size=PAGE, pool_pages_per_shard=512))
+        dpc=DPCConfig(mode=dpc_mode, page_size=PAGE,
+                      pool_pages_per_shard=512, tlb_enabled=tlb))
     kv = DistributedKVCache(run.dpc, n_nodes)
     return [ServingEngine(run, params, max_batch=4,
                           max_pages_per_seq=PROMPT * 2 // PAGE + 2,
@@ -58,7 +64,8 @@ def run():
     hot_prefix = rng.randint(0, arch.vocab_size, PROMPT).tolist()
 
     base_tput = None
-    for mode in ("local_only", "replicated", "dpc", "dpc_sc"):
+    tput_by_mode = {}
+    for mode in ("local_only", "replicated", "dpc_notlb", "dpc", "dpc_sc"):
         for n_nodes in (1, 2, 4):
             engines, kv = make_engines(mode, n_nodes, params, arch)
             t0 = time.monotonic()
@@ -82,11 +89,22 @@ def run():
             run_tok = sum(e.stats.prefill_tokens_run for e in engines)
             loc = sum(e.stats.pages_local for e in engines)
             rem = sum(e.stats.pages_remote for e in engines)
+            tput_by_mode[(mode, n_nodes)] = tput
+            tlb_h = kv.stats.get("tlb_hits", 0)
             emit(f"app.{mode}.n{n_nodes}", 1e6 / max(tput, 1e-9),
                  f"agg_tput={tput:.2f}tok/s "
                  f"rel={tput / base_tput:.2f}x "
                  f"prefill_saved={saved} run={run_tok} "
-                 f"hits(l/r)={loc}/{rem}")
+                 f"hits(l/r)={loc}/{rem} tlb_hits={tlb_h}")
+
+    # tentpole check: steady-state serving throughput with the mapping
+    # cache on vs off (same protocol, same workload)
+    for n_nodes in (1, 2, 4):
+        on = tput_by_mode[("dpc", n_nodes)]
+        off = tput_by_mode[("dpc_notlb", n_nodes)]
+        emit(f"app.tlb_speedup.n{n_nodes}", 1e6 / max(on, 1e-9),
+             f"tlb_on={on:.2f}tok/s tlb_off={off:.2f}tok/s "
+             f"speedup={on / max(off, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,19 @@ import jax.numpy as jnp
 ROWS: List[str] = []
 
 
+def zipf_draws(rng: np.random.Generator, n: int, size: int,
+               alpha: float = 1.1) -> np.ndarray:
+    """Ranked Zipf draws over [0, n) — rank 0 is the hottest key.
+
+    The shared skew model for every suite that needs a hot-head/long-tail
+    key mix (migration convergence, control-plane scaling): exact ranked
+    probabilities, no mod-folded tail distortion.
+    """
+    prob = 1.0 / np.arange(1, n + 1) ** alpha
+    prob /= prob.sum()
+    return rng.choice(n, size=size, p=prob)
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)

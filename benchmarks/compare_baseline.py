@@ -1,0 +1,81 @@
+"""CI perf-regression guard: fresh smoke numbers vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare_baseline <fresh_dir> \
+        [--baselines benchmarks/baselines] [--threshold 2.0] [--strict]
+
+For every ``BENCH_<suite>.json`` emitted by ``benchmarks.run --smoke`` that
+has a committed counterpart under ``benchmarks/baselines/``, rows are joined
+by name and any ``us_per_call`` regression beyond ``--threshold`` (default
+2x) is reported as a GitHub ``::warning::`` annotation.  The check is
+deliberately **non-blocking** (exit 0 unless ``--strict``): smoke timings on
+shared CI runners are noisy, so the signal is the annotation trail across
+PRs, not a red build.  Rows that exist on only one side (new/renamed
+benchmarks) are listed informationally and never warn.
+
+Refresh the baseline after an intentional perf change::
+
+    PYTHONPATH=src BENCH_DIR=benchmarks/baselines python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh_dir", help="directory holding fresh BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="warn when fresh/baseline exceeds this ratio")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regressions (off in CI)")
+    args = ap.parse_args()
+
+    fresh_paths = sorted(glob.glob(os.path.join(args.fresh_dir,
+                                                "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"compare_baseline: no BENCH_*.json under {args.fresh_dir}")
+        return 0
+
+    regressions, compared = [], 0
+    for fresh_path in fresh_paths:
+        name = os.path.basename(fresh_path)
+        base_path = os.path.join(args.baselines, name)
+        if not os.path.exists(base_path):
+            print(f"# {name}: no committed baseline — skipped")
+            continue
+        fresh, base = _load_rows(fresh_path), _load_rows(base_path)
+        for row, base_us in sorted(base.items()):
+            if row not in fresh:
+                print(f"# {name}: row '{row}' gone from fresh run")
+                continue
+            if base_us <= 0:
+                continue
+            compared += 1
+            ratio = fresh[row] / base_us
+            if ratio > args.threshold:
+                regressions.append((row, base_us, fresh[row], ratio))
+                print(f"::warning title=perf smoke regression::"
+                      f"{row}: {base_us:.1f}us -> {fresh[row]:.1f}us "
+                      f"({ratio:.1f}x, threshold {args.threshold:.1f}x)")
+        for row in sorted(set(fresh) - set(base)):
+            print(f"# {name}: new row '{row}' (no baseline yet)")
+
+    print(f"compare_baseline: {compared} rows compared, "
+          f"{len(regressions)} over {args.threshold:.1f}x")
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,17 +5,26 @@ Scenarios per page read (4-node cluster, node 2 reading):
         prefill recompute of the page's tokens) + COMMIT
   CM-R  miss locally, hit remote: directory lookup -> MAP_S + first data-path
         access (page fetch / remote attention)
-  CH-R  established mapping: data-path access only (directory rehit is
-        amortized; we also report the rehit lookup cost)
+  CH-R  established mapping: data-path access only — with the per-node
+        mapping cache (core/tlb.py) the re-read lookup is a host-side TLB
+        probe, no directory opcode, no device round trip
 
 The "storage" tier is prefill recompute; the data plane is the paged
-attention + page gather kernels.  The structural claim reproduced: CM is
-dominated by materialization and CM-R/CH-R by remote-memory-speed access,
-with the directory adding ~nothing to CM (piggybacked) — then
-latency(CM) >> latency(CM-R) ~ latency(CH-R).
+attention + page gather kernels.  The structural claims reproduced:
+  (1) CM is dominated by materialization, CM-R/CH-R by remote-memory-speed
+      access: latency(CM) >> latency(CM-R) ~ latency(CH-R);
+  (2) the tentpole — a TLB-hit lookup is >= 10x cheaper than re-running the
+      directory pipeline for the same established mapping (the paper's
+      "the directory adds ~nothing to a re-read", made true in code).
+
+``smoke=True`` shrinks the model and batch sweep to a seconds-scale run that
+CI executes end-to-end; the >= 10x TLB acceptance gate is asserted in both
+modes.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -23,7 +32,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn, time_host
-from repro.configs import get_smoke_arch
 from repro.configs.base import ArchConfig, DPCConfig
 from repro.core.dpc_cache import DistributedKVCache
 from repro.kernels import dispatch
@@ -35,25 +43,68 @@ NODES = 4
 SPAN_PAGES = 8          # a prefix span of 8 pages = 128 tokens
 
 
-def bench_arch() -> ArchConfig:
+def bench_arch(smoke: bool = False) -> ArchConfig:
     """Big enough that recompute visibly dominates a page fetch on CPU."""
+    if smoke:
+        return ArchConfig(name="bench-lm-smoke", family="dense",
+                          num_layers=4, d_model=128, num_heads=4,
+                          num_kv_heads=2, head_dim=32, d_ff=512,
+                          vocab_size=8192, source="bench")
     return ArchConfig(name="bench-lm", family="dense", num_layers=8,
                       d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
                       d_ff=1024, vocab_size=32768, source="bench")
 
 
-def run():
-    arch = bench_arch()
+def _warm_remote(dpc: DPCConfig, streams, pages) -> DistributedKVCache:
+    """Install the working set on node 0 and map it once from node 2, so a
+    subsequent node-2 lookup is an established-mapping re-read (CH-R)."""
+    kv = DistributedKVCache(dpc, NODES)
+    lks = kv.lookup(streams, pages, 0)
+    kv.commit(streams, pages, 0, lks)
+    kv.lookup(streams, pages, 2)
+    return kv
+
+
+def _tlb_section(batch_pages: int, iters: int) -> float:
+    """Tentpole check: steady-state re-read lookup cost, directory-rehit
+    (TLB off) vs TLB-hit.  Returns the speedup."""
+    streams = list(range(1, batch_pages + 1))
+    pages = [0] * batch_pages
+
+    base = DPCConfig(page_size=PAGE, pool_pages_per_shard=256)
+    kv_off = _warm_remote(dataclasses.replace(base, tlb_enabled=False),
+                          streams, pages)
+    t_rehit = time_host(lambda: kv_off.lookup(streams, pages, 2),
+                        iters=iters) / batch_pages
+
+    kv_on = _warm_remote(base, streams, pages)
+    t_tlb = time_host(lambda: kv_on.lookup(streams, pages, 2),
+                      iters=iters) / batch_pages
+    assert kv_on.stats["tlb_hits"] > 0, "TLB never hit — cache not wired"
+
+    speedup = t_rehit / max(t_tlb, 1e-9)
+    emit(f"read.lookup.dir_rehit.b{batch_pages}", t_rehit,
+         "full directory pipeline per re-read (tlb_enabled=False)")
+    emit(f"read.lookup.tlb_hit.b{batch_pages}", t_tlb,
+         f"speedup_vs_dir_rehit={speedup:.1f}x")
+    return speedup
+
+
+def run(smoke: bool = False):
+    arch = bench_arch(smoke)
     api = registry.get_model(arch)
     params = init_params(api.specs(arch), jax.random.PRNGKey(0))
     dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=256)
+    iters = 2 if smoke else 3
 
     # --- "storage fetch": prefill recompute of one PREFIX SPAN (the unit a
     # miss actually costs: the whole missing span re-runs through the model)
     span = PAGE * SPAN_PAGES
     batch = {"tokens": jnp.zeros((1, span), jnp.int32)}
     prefill = jax.jit(lambda p, b: api.prefill(p, arch, b, remat=False)[0])
-    t_storage = time_fn(prefill, params, batch) / SPAN_PAGES  # per page
+    t_storage = time_fn(prefill, params, batch,
+                        warmup=1 if smoke else 2,
+                        iters=3 if smoke else 10) / SPAN_PAGES  # per page
 
     # --- data plane: one-page attention (the remote/local hit service time)
     hkv, hd = arch.num_kv_heads, arch.resolved_head_dim
@@ -72,16 +123,15 @@ def run():
     t_gather = time_fn(lambda *a: dispatch.page_gather(*a, impl="ref"),
                        k_pool, ids)
 
-    for batch_pages in (1, 32, 128):
+    for batch_pages in ((1, 32) if smoke else (1, 32, 128)):
         # --- directory control-plane costs, batched
-        kv = DistributedKVCache(dpc, NODES)
         streams = list(range(1, batch_pages + 1))
         pages = [0] * batch_pages
 
         def cm_lookup():
             kv2 = DistributedKVCache(dpc, NODES)
             return kv2.lookup(streams, pages, node=2)
-        t_cm_dir = time_host(cm_lookup, iters=3) / batch_pages
+        t_cm_dir = time_host(cm_lookup, iters=iters) / batch_pages
 
         # warm node 0, then first remote lookup from node 2 (CM-R)
         kv = DistributedKVCache(dpc, NODES)
@@ -91,7 +141,7 @@ def run():
         def cmr_lookup():
             return kv.lookup(streams, pages, 2)
         t_cmr_dir = time_host(cmr_lookup, iters=1, warmup=0) / batch_pages
-        t_chr_dir = time_host(cmr_lookup, iters=3) / batch_pages  # rehits
+        t_chr_dir = time_host(cmr_lookup, iters=iters) / batch_pages  # rehits
 
         t_cm = t_cm_dir + t_storage
         t_cmr = t_cmr_dir + t_gather
@@ -105,10 +155,20 @@ def run():
              f"dir={t_chr_dir:.1f}us attend={t_attend:.1f}us "
              f"speedup_vs_CM={t_cm / t_chr:.1f}x")
 
-    # paper claim check: remote hits are much cheaper than misses
-    assert t_storage > t_gather, \
-        f"storage fetch ({t_storage:.0f}us) must dominate remote fetch " \
-        f"({t_gather:.0f}us)"
+    # --- tentpole: mapping cache takes the directory off the re-read path
+    speedup = _tlb_section(32 if smoke else 128, iters=3 if smoke else 5)
+    assert speedup >= 10.0, (
+        f"TLB-hit lookup only {speedup:.1f}x cheaper than the directory "
+        f"rehit path — the mapping cache is not off the hot path")
+
+    # paper claim check: remote hits are much cheaper than misses.  At smoke
+    # scale the shrunken model's recompute can dip under the fixed jax
+    # dispatch overhead of a page gather, so the structural claim is only
+    # asserted for the full-size run
+    if not smoke:
+        assert t_storage > t_gather, \
+            f"storage fetch ({t_storage:.0f}us) must dominate remote " \
+            f"fetch ({t_gather:.0f}us)"
 
 
 if __name__ == "__main__":

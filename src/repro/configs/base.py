@@ -357,6 +357,13 @@ class DPCConfig:
     kv_dtype: str = "bfloat16"          # int8 enables quantized pool
     # directory placement: sharded (hash-partitioned) | central (shard 0)
     directory_placement: str = "sharded"
+    # --- per-node mapping cache (software TLB, core/tlb.py) ---
+    # established grants are cached node-side so steady-state re-reads pay
+    # zero directory ops and zero device round trips; teardowns shoot the
+    # cached entries down before they complete (protocol.py)
+    tlb_enabled: bool = True
+    tlb_slots: int = 1024               # per-node entries (power of two)
+    tlb_max_probe: int = 8              # open-addressing probe bound
     # --- ownership migration (core/migration.py; 0 threshold disables) ---
     migrate_threshold: int = 4          # decayed remote accesses that promote
     migrate_batch: int = 32             # max MIGRATEs per round

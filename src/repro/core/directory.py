@@ -562,6 +562,39 @@ def mark_dirty(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     return d, res
 
 
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def clear_dirty(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """CLEAR_DIRTY: the owner persisted the page's bytes out-of-band.
+
+    A migration hand-off checkpoints the moving frame into the writeback
+    queue, but ``complete_migrate`` deliberately carries the dirty bit to the
+    new owner; without this opcode the migrated page would pay a second
+    writeback on its next eviction.  Only the current owner of an O entry may
+    clear it.  Result pfn lane carries the previous dirty bit.
+    """
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream != D.INVALID
+        found, _ = probe(d.keys, stream, page, max_probe)
+        slot = jnp.maximum(found, 0)
+        ok = valid & (found >= 0) & (d.state[slot] == O) & \
+            (d.owner[slot] == node)
+
+        was = jnp.where(ok & d.dirty[slot], jnp.int32(1), jnp.int32(0))
+        dirty = _cond_write(d.dirty, found, jnp.bool_(False), ok)
+        status = jnp.where(valid, jnp.where(ok, D.ST_OK, D.ST_BAD),
+                           jnp.int32(STAT_SKIP))
+        res = res.at[i].set(jnp.stack([status, node, was]))
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (d._replace(dirty=dirty, stats=stats), res)
+
+    n = descs.shape[0]
+    d, res = lax.fori_loop(0, n, step, (d, jnp.zeros((n, 3), jnp.int32)))
+    return d, res
+
+
 @functools.partial(jax.jit, donate_argnums=0)
 def fail_node(d: DirectoryState, node: jax.Array):
     """Liveness (paper §5): drop a failed node from the whole directory.

@@ -66,8 +66,15 @@ class DistributedKVCache:
             directory_capacity=dpc.directory_capacity,
             inv_batch_threshold=dpc.inv_batch_threshold,
             placement=dpc.directory_placement,
+            tlb_slots=dpc.tlb_slots if dpc.tlb_enabled else 0,
+            tlb_max_probe=dpc.tlb_max_probe,
             shadow_oracle=dpc.shadow_oracle,
         ), store=self.store, writeback=self.writeback)
+        # buffered CLOCK touches for TLB owner-hits: slot -> hit count per
+        # node, flushed in ONE batched pp.touch_weighted per engine step —
+        # the steady-state hit path itself never talks to the device
+        self._touch_buf: List[Dict[int, int]] = [
+            {} for _ in range(num_nodes)]
         # replicated-mode bookkeeping: per-node private caches
         self._replica_maps: List[Dict[Tuple[int, int], int]] = [
             {} for _ in range(num_nodes)]
@@ -84,7 +91,8 @@ class DistributedKVCache:
         ))
         self.stats = {"lookups": 0, "fills": 0, "remote_hits": 0,
                       "local_hits": 0, "evictions": 0, "migrations": 0,
-                      "refills": 0, "sync_flushes": 0}
+                      "refills": 0, "sync_flushes": 0,
+                      "tlb_hits": 0, "tlb_misses": 0}
 
     # ------------------------------------------------------------------
     # storage tier
@@ -138,41 +146,101 @@ class DistributedKVCache:
 
     def lookup(self, streams: Sequence[int], pages: Sequence[int],
                node: int) -> List[PageLookup]:
-        """Batched page lookup for ``node`` (FUSE_DPC_READ)."""
-        self.stats["lookups"] += len(streams)
+        """Batched page lookup for ``node`` (FUSE_DPC_READ).
+
+        Runs TLB-first: rows whose mapping is cached in the node's software
+        TLB (core/tlb.py) are answered with zero directory opcodes and zero
+        device round trips — CLOCK touches for owner-hits are buffered and
+        flushed once per engine step (``flush_tlb_touches``).  Only the
+        remaining rows fall through to the directory pipeline.
+        """
+        n = len(streams)
+        self.stats["lookups"] += n
         mode = self.dpc.mode
         if mode in ("replicated", "local_only"):
             return self._lookup_uncoordinated(streams, pages, node)
 
-        res = self.proto.read_pages(list(streams), list(pages), node)
-        out = []
+        out: List[Optional[PageLookup]] = [None] * n
+        miss = list(range(n))
+        tlbs = self.proto.tlbs
+        if tlbs is not None and n:
+            owners, pfns, shared, hit = tlbs.lookup_batch(node, streams,
+                                                          pages)
+            miss = []
+            pool_pages = self.dpc.pool_pages_per_shard
+            touch_buf = self._touch_buf[node]
+            oracle_on = self.proto.oracle is not None
+            for i in range(n):
+                if not hit[i]:
+                    miss.append(i)
+                    continue
+                key = (int(streams[i]), int(pages[i]))
+                owner, pfn = int(owners[i]), int(pfns[i])
+                if oracle_on:
+                    self.proto.check_tlb_grant(key, node, owner, pfn,
+                                               bool(shared[i]))
+                if shared[i]:
+                    out[i] = PageLookup(D.ST_HIT_SHARER, pfn, owner,
+                                        False, True)
+                    self.stats["remote_hits"] += 1
+                    if self.dpc.migration_enabled:
+                        # the hotness signal keeps flowing on cached hits —
+                        # host-side dict work, still no directory traffic
+                        self.migrator.note_remote_access(key, node)
+                else:
+                    out[i] = PageLookup(D.ST_HIT_OWNER, pfn, node,
+                                        False, False)
+                    self.stats["local_hits"] += 1
+                    slot = pfn % pool_pages
+                    touch_buf[slot] = touch_buf.get(slot, 0) + 1
+            self.stats["tlb_hits"] += n - len(miss)
+            self.stats["tlb_misses"] += len(miss)
+        if not miss:
+            return out  # pure steady-state: the directory saw nothing
+
+        res = self.proto.read_pages([streams[i] for i in miss],
+                                    [pages[i] for i in miss], node)
         pool_pages = self.dpc.pool_pages_per_shard
-        for i in range(len(streams)):
-            st = int(res.status[i])
+        for j, i in enumerate(miss):
+            st = int(res.status[j])
             if st == D.ST_GRANT_E:
-                slot = int(res.slot[i])
+                slot = int(res.slot[j])
                 key = (int(streams[i]), int(pages[i]))
                 refill = self._storage_read(key)
                 if refill is not None:
                     self.stats["refills"] += 1
-                out.append(PageLookup(st, node * pool_pages + slot, node,
-                                      needs_fill=True, remote=False,
-                                      refill=refill))
+                out[i] = PageLookup(st, node * pool_pages + slot, node,
+                                    needs_fill=True, remote=False,
+                                    refill=refill)
                 self.stats["fills"] += 1
             elif st in (D.ST_MAP_S, D.ST_HIT_SHARER):
-                out.append(PageLookup(st, int(res.pfn[i]),
-                                      int(res.owner[i]), False, True))
+                out[i] = PageLookup(st, int(res.pfn[j]),
+                                    int(res.owner[j]), False, True)
                 self.stats["remote_hits"] += 1
                 if self.dpc.migration_enabled:  # else the ledger never drains
                     self.migrator.note_remote_access(
                         (int(streams[i]), int(pages[i])), node)
             elif st == D.ST_HIT_OWNER:
-                out.append(PageLookup(st, int(res.pfn[i]), node, False,
-                                      False))
+                out[i] = PageLookup(st, int(res.pfn[j]), node, False,
+                                    False)
                 self.stats["local_hits"] += 1
             else:  # BLOCKED / FULL -> caller reclaims or recomputes
-                out.append(PageLookup(st, -1, -1, True, False))
+                out[i] = PageLookup(st, -1, -1, True, False)
         return out
+
+    def flush_tlb_touches(self) -> int:
+        """Apply every buffered TLB-hit CLOCK touch in one batched device
+        call per node (the engine runs this at step boundaries; reclaim runs
+        it first so the scan sees current heat).  Returns slots touched."""
+        total = 0
+        for node, buf in enumerate(self._touch_buf):
+            if not buf:
+                continue
+            self.proto.touch_slots(node, list(buf.keys()),
+                                   list(buf.values()))
+            total += len(buf)
+            buf.clear()
+        return total
 
     def commit(self, streams, pages, node: int, lookups: List[PageLookup],
                dirty=None):
@@ -206,6 +274,7 @@ class DistributedKVCache:
         async pipeline stays off the critical path, otherwise we wait the
         barrier out (the synchronous-writeback fallback) so the caller's
         retry sees free frames instead of spinning."""
+        self.flush_tlb_touches()   # CLOCK must see the buffered heat
         freed, wb = self.proto.reclaim_sync(node, want)
         self.stats["evictions"] += freed
         if self.writeback is not None and wb:

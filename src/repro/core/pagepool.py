@@ -134,6 +134,28 @@ def touch(pool: PoolState, slots: jax.Array) -> PoolState:
 
 
 @functools.partial(jax.jit, donate_argnums=0)
+def touch_weighted(pool: PoolState, slots: jax.Array,
+                   counts: jax.Array) -> PoolState:
+    """Batched flush of buffered TLB-hit touches: one device call applies a
+    whole engine step's worth of CLOCK/hotness updates.
+
+    ``counts[i]`` accesses are credited to ``slots[i]`` (saturating at
+    HOT_MAX).  Slots that are negative (padding) or no longer INSTALLED are
+    skipped — the mapping may have been shot down and the frame freed (or
+    reallocated into RESERVED) between buffering and flush, and a stale
+    touch must not resurrect a dead frame's heat.
+
+    Skipped rows alias onto index 0, so the scatters must be commutative
+    (max/add with a zero contribution), never ``set`` — a duplicate-index
+    ``set`` writing the old value back could race out a real update."""
+    safe = jnp.maximum(slots, 0)
+    ok = (slots >= 0) & (pool.slot_state[safe] == S_INSTALLED)
+    ref = pool.ref.at[safe].max(jnp.where(ok, 1, 0).astype(jnp.int8))
+    hot = pool.hot.at[safe].add(jnp.where(ok, counts, 0))
+    return pool._replace(ref=ref, hot=jnp.minimum(hot, HOT_MAX))
+
+
+@functools.partial(jax.jit, donate_argnums=0)
 def decay_hot(pool: PoolState) -> PoolState:
     """Halve every hotness counter (exponential decay tick)."""
     return pool._replace(hot=pool.hot >> 1)

@@ -36,6 +36,7 @@ from repro.core import descriptors as D
 from repro.core import directory as dirx
 from repro.core import pagepool as pp
 from repro.core import refimpl
+from repro.core.tlb import TLBGroup
 
 
 @dataclasses.dataclass
@@ -46,6 +47,11 @@ class ProtocolConfig:
     inv_batch_threshold: int = 32    # paper §4.3
     max_probe: int = 128
     placement: str = "sharded"       # sharded | central
+    # per-node mapping cache (software TLB, core/tlb.py): established grants
+    # are cached so steady-state re-reads skip the directory entirely.
+    # 0 slots disables it.
+    tlb_slots: int = 1024
+    tlb_max_probe: int = 8
     # run the pure-Python RefDirectory in lockstep and assert the dirty bit
     # returned on every completed invalidation/migration matches the
     # oracle's needs_writeback — protocol/oracle divergence fails loudly
@@ -143,6 +149,18 @@ class DPCProtocol:
         # frames pinned in S_WRITEBACK until their flush commits:
         # (node, slot) -> key.  release refuses these (flush-before-free).
         self._wb_outstanding: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # per-node mapping cache + shootdown plumbing (core/tlb.py); the
+        # protocol keeps it coherent (installs on commit, precise shootdowns
+        # on teardown fan-outs, epoch flash on node failure) and the cache
+        # facade (dpc_cache) serves hits from it
+        self.tlbs: Optional[TLBGroup] = None
+        if cfg.tlb_slots > 0:
+            self.tlbs = TLBGroup(cfg.num_nodes, cfg.tlb_slots,
+                                 cfg.tlb_max_probe)
+        # reusable host-side descriptor buffers, one per power-of-two batch
+        # size: _routed fills these and ships ONE array to the device instead
+        # of building + padding fresh arrays per call
+        self._desc_scratch: Dict[int, np.ndarray] = {}
         # executable-spec shadow (satellite: divergence must fail loudly)
         self.oracle: Optional[refimpl.RefDirectory] = None
         if cfg.shadow_oracle:
@@ -157,7 +175,7 @@ class DPCProtocol:
             "migrations": 0, "migration_noops": 0, "migration_aborts": 0,
             "migration_acks": 0, "writebacks_committed": 0,
             "migration_writebacks": 0, "flush_before_free_violations": 0,
-            "oracle_mismatches": 0,
+            "oracle_mismatches": 0, "dirty_clears": 0,
         }
 
     def attach_storage(self, store=None, writeback=None,
@@ -191,13 +209,22 @@ class DPCProtocol:
         res = np.zeros((n, 3), np.int32)
         extra: Dict[int, np.ndarray] = {}
         for shard, idxs in _group_by_shard(self.cfg, streams, pages).items():
-            batch = D.make_batch(streams[idxs], pages[idxs], nodes[idxs],
-                                 aux[idxs])
             # pad to the next power of two: opcode programs recompile per
-            # batch shape, so this bounds jit variants to log2(n) per opcode
-            n_real = batch.shape[0]
-            batch = D.pad_batch(batch, 1 << (n_real - 1).bit_length())
-            out = self._dir_op(op, shard, batch)
+            # batch shape, so this bounds jit variants to log2(n) per opcode.
+            # The padded host buffer is cached per size and filled in place —
+            # one device transfer per shard instead of a stack + concat chain.
+            n_real = len(idxs)
+            n_pad = 1 << (n_real - 1).bit_length()
+            buf = self._desc_scratch.get(n_pad)
+            if buf is None:
+                buf = np.full((n_pad, D.N_LANES), int(D.INVALID), np.int32)
+                self._desc_scratch[n_pad] = buf
+            buf[n_real:] = int(D.INVALID)
+            buf[:n_real, D.LANE_STREAM] = streams[idxs]
+            buf[:n_real, D.LANE_PAGE] = pages[idxs]
+            buf[:n_real, D.LANE_NODE] = nodes[idxs]
+            buf[:n_real, D.LANE_AUX] = aux[idxs]
+            out = self._dir_op(op, shard, jnp.asarray(buf))
             res[idxs] = np.asarray(out[0])[:n_real]
             if len(out) > 1:  # begin_invalidate/migrate return sharer masks
                 extra[shard] = (idxs, np.asarray(out[1])[:n_real])
@@ -326,11 +353,16 @@ class DPCProtocol:
         n = len(res)
         slots = np.full((n,), -1, np.int32)
 
+        # pool mutations (alloc + CLOCK touch) build on one local PoolState
+        # and land in a single _pool_update — the seed paid two to three
+        # device-state swaps per read batch here
+        pool = self.state.pools[node]
+        dirty_pool = False
         grant_rows = np.nonzero(res[:, 0] == D.ST_GRANT_E)[0]
         if len(grant_rows):
             want = jnp.asarray(np.ones(len(grant_rows), bool))
-            pool, got = pp.alloc(self.state.pools[node], want)
-            self._pool_update(node, pool)
+            pool, got = pp.alloc(pool, want)
+            dirty_pool = True
             got = np.asarray(got)
             slots[grant_rows] = got
             # pool exhausted -> abort those E grants (caller must reclaim)
@@ -345,8 +377,22 @@ class DPCProtocol:
         local = np.nonzero(res[:, 0] == D.ST_HIT_OWNER)[0]
         if len(local):
             lslots = res[local, 2] % self.cfg.pool_pages
-            self._pool_update(node, pp.touch(self.state.pools[node],
-                                             jnp.asarray(lslots, jnp.int32)))
+            pool = pp.touch(pool, jnp.asarray(lslots, jnp.int32))
+            dirty_pool = True
+        if dirty_pool:
+            self._pool_update(node, pool)
+
+        # fill the requester's mapping cache: established grants (own pages
+        # and S-mappings) are servable TLB-side until a shootdown lands
+        if self.tlbs is not None:
+            streams_a = np.asarray(streams, np.int32)
+            pages_a = np.asarray(pages, np.int32)
+            for i in np.nonzero((res[:, 0] == D.ST_HIT_OWNER) |
+                                (res[:, 0] == D.ST_MAP_S) |
+                                (res[:, 0] == D.ST_HIT_SHARER))[0]:
+                self.tlbs.install(node, int(streams_a[i]), int(pages_a[i]),
+                                  int(res[i, 1]), int(res[i, 2]),
+                                  shared=int(res[i, 0]) != D.ST_HIT_OWNER)
 
         self._oracle_lookup(streams, pages, node, res[:, 0])
 
@@ -384,6 +430,12 @@ class DPCProtocol:
         self._pool_update(node, pp.install(
             self.state.pools[node], jnp.asarray(slots), jnp.asarray(keys)))
         self.counters["commits"] += int((res[:, 0] == D.ST_OK).sum())
+        if self.tlbs is not None:
+            # a committed page is an established owner mapping: cache it
+            # inline so the very next re-read is already directory-free
+            for i in np.nonzero((res[:, 0] == D.ST_OK) & (pfns >= 0))[0]:
+                self.tlbs.install(node, int(keys[i, 0]), int(keys[i, 1]),
+                                  node, int(pfns[i]), shared=False)
         if dirty is not None:
             dirty = np.broadcast_to(np.asarray(dirty, bool),
                                     np.asarray(streams).shape)
@@ -419,6 +471,51 @@ class DPCProtocol:
                 self._oracle_op("mark_dirty", int(s), int(p), int(node),
                                 expect=int(st))
         return res[:, 0]
+
+    def clear_dirty(self, streams, pages, node: int) -> np.ndarray:
+        """CLEAR_DIRTY: drop the writeback obligation of pages whose bytes
+        were just persisted out-of-band (the migration hand-off checkpoint).
+        Owner-only; see directory.clear_dirty."""
+        res, _ = self._routed(dirx.clear_dirty, streams, pages, node)
+        if self.oracle is not None:
+            for s, p, st in zip(streams, pages, res[:, 0]):
+                self._oracle_op("clear_dirty", int(s), int(p), int(node),
+                                expect=int(st))
+        self.counters["dirty_clears"] += int((res[:, 0] == D.ST_OK).sum())
+        return res[:, 0]
+
+    # -- mapping cache (software TLB, core/tlb.py) -----------------------------
+
+    def check_tlb_grant(self, key: Tuple[int, int], node: int, owner: int,
+                        pfn: int, shared: bool) -> None:
+        """Shadow-oracle single-copy assert: a TLB hit must never return a
+        mapping the directory no longer grants.  Fails loudly (like the
+        dirty-bit completion assert) instead of serving stale bytes."""
+        if self.oracle is None:
+            return
+        ok, why = self.oracle.grants_mapping(key[0], key[1], node, owner,
+                                             pfn, shared)
+        assert ok, (
+            f"stale TLB hit on node {node} for {key}: cached "
+            f"(owner={owner}, pfn={pfn}, shared={shared}) but {why} — a "
+            f"shootdown was lost and the single-copy invariant is broken")
+
+    def touch_slots(self, node: int, slots, counts) -> None:
+        """Flush a step's buffered TLB-hit CLOCK touches in ONE batched
+        device call (pow2-padded to bound jit variants)."""
+        slots = np.asarray(slots, np.int32)
+        counts = np.asarray(counts, np.int32)
+        n = len(slots)
+        if n == 0:
+            return
+        n_pad = 1 << (n - 1).bit_length()
+        if n_pad != n:
+            slots = np.concatenate(
+                [slots, np.full((n_pad - n,), -1, np.int32)])
+            counts = np.concatenate(
+                [counts, np.zeros((n_pad - n,), np.int32)])
+        self._pool_update(node, pp.touch_weighted(
+            self.state.pools[node], jnp.asarray(slots), jnp.asarray(counts)))
 
     # -- reclamation (§4.3) ------------------------------------------------------
 
@@ -465,13 +562,26 @@ class DPCProtocol:
                     "owner": node, "slot": int(victims_np[row]),
                     "waiting": set(sharer_nodes),
                 }
+                if self.tlbs is not None:
+                    # TLB shootdown fan-out piggybacks on the DIR_INVs the
+                    # directory just named: the initiating owner drops its
+                    # entry now, each sharer's queue is serviced at its ACK
+                    self.tlbs.drop(node, key)
+                    for s in sharer_nodes:
+                        self.tlbs.post(s, key)
         self.counters["reclaims"] += len(notify)
         self.counters["dir_invs"] += sum(len(v) for v in notify.values())
         return victims_np, notify
 
     def reclaim_ack(self, stream: int, page: int, node: int,
                     dirty: bool = False) -> int:
-        """FUSE_DPC_INV_ACK from sharer ``node`` (notification manager path)."""
+        """FUSE_DPC_INV_ACK from sharer ``node`` (notification manager path).
+
+        The node's pending TLB shootdowns are serviced first: the ACK is the
+        sharer's promise that its mapping — including the cached one — is
+        torn down (shootdown-before-complete)."""
+        if self.tlbs is not None:
+            self.tlbs.service(node)
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
@@ -496,6 +606,11 @@ class DPCProtocol:
                  if v["owner"] == node and not v["waiting"]]
         if not ready:
             return 0, 0
+        if self.tlbs is not None:
+            # safety net: sharers whose ACKs were force-cleared (fail_node)
+            # never serviced their queues — drain everything before any
+            # entry leaves the directory
+            self.tlbs.service_all()
         streams = [k[0] for k, _ in ready]
         pages = [k[1] for k, _ in ready]
         res, _ = self._routed(dirx.complete_invalidate, streams, pages, node)
@@ -588,12 +703,21 @@ class DPCProtocol:
                 "src": src, "dst": int(dsts[j]), "src_slot": src_slot,
                 "old_pfn": old_pfn, "waiting": set(sharer_nodes),
             }
+            if self.tlbs is not None:
+                # same shootdown discipline as reclamation: the source's
+                # owner-mode entry dies now, sharers (the destination is
+                # usually among them) drain their queues at ACK time
+                self.tlbs.drop(src, key)
+                for s in sharer_nodes:
+                    self.tlbs.post(s, key)
             self.counters["dir_invs"] += len(sharer_nodes)
         return statuses, notify
 
     def migrate_ack(self, stream: int, page: int, node: int,
                     dirty: bool = False) -> int:
         """Sharer ACK for a migration DIR_INV (same opcode as reclamation)."""
+        if self.tlbs is not None:
+            self.tlbs.service(node)
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
@@ -631,6 +755,8 @@ class DPCProtocol:
         page-table rewriting by the caller."""
         ready = [(k, v) for k, v in self.pending_mig.items()
                  if not v["waiting"]]
+        if ready and self.tlbs is not None:
+            self.tlbs.service_all()   # shootdown-before-complete safety net
         moved: List[Tuple[Tuple[int, int], int, int]] = []
         for key, info in ready:
             del self.pending_mig[key]
@@ -672,6 +798,10 @@ class DPCProtocol:
                     self.state.pools[src],
                     jnp.asarray([info["src_slot"]], jnp.int32)))
                 self.counters["migration_writebacks"] += 1
+                # the hand-off just checkpointed the page's bytes, so the
+                # entry at the new owner starts clean — CLEAR_DIRTY stops
+                # the migrated page paying a second writeback on eviction
+                self.clear_dirty([key[0]], [key[1]], dst)
             else:
                 self._release_frames(src, [info["src_slot"]])
             self.counters["migrations"] += 1
@@ -694,6 +824,11 @@ class DPCProtocol:
     # -- sharer-side voluntary drop ---------------------------------------------
 
     def drop_mapping(self, streams, pages, node: int, dirty=None) -> np.ndarray:
+        if self.tlbs is not None:
+            # the voluntary drop is its own shootdown: the cached mapping
+            # dies with the real one, before the directory clears the bit
+            for s, p in zip(streams, pages):
+                self.tlbs.drop(node, (int(s), int(p)))
         aux = None if dirty is None else np.asarray(dirty, np.int32)
         res, _ = self._routed(dirx.sharer_drop, streams, pages, node, aux)
         if self.oracle is not None:
@@ -709,6 +844,11 @@ class DPCProtocol:
     def fail_node(self, node: int) -> int:
         """Directory-side failure handling: remove the node everywhere and
         unblock any invalidation waiting on its ACK."""
+        if self.tlbs is not None:
+            # fail_node wipes directory entries wholesale without naming
+            # keys, so precise shootdowns cannot cover it — the global
+            # epoch flash invalidates every cached mapping cluster-wide
+            self.tlbs.flash_all()
         dirs = list(self.state.dirs)
         lost = 0
         for i, dshard in enumerate(dirs):

@@ -236,6 +236,48 @@ class RefDirectory:
         e.dirty = True
         return D.ST_OK
 
+    def clear_dirty(self, stream: int, page: int, node: int
+                    ) -> Tuple[int, bool]:
+        """CLEAR_DIRTY: the owner persisted the bytes out-of-band (e.g. a
+        migration hand-off checkpointed the moving frame) — drop the
+        writeback obligation.  Returns (status, was_dirty)."""
+        e = self.entries.get((stream, page))
+        if e is None or e.state != O or e.owner != node:
+            self.stats.bad += 1
+            return D.ST_BAD, False
+        was = e.dirty
+        e.dirty = False
+        e.inv_dirty = False
+        return D.ST_OK, was
+
+    # -- TLB oracle (core/tlb.py coherence assert) ----------------------------
+
+    def grants_mapping(self, stream: int, page: int, node: int, owner: int,
+                       pfn: int, shared: bool) -> Tuple[bool, str]:
+        """Does the directory still grant ``node`` this cached mapping?
+
+        Owner-mode entries require a live O entry owned by ``node`` with the
+        same published PFN.  Shared-mode entries require the node's sharer
+        bit and the same (owner, pfn) — a sharer may legally keep reading
+        through TBI/TBM *until its INV_ACK lands* (the bit is still set),
+        which is exactly the window real hardware has before a shootdown.
+        """
+        e = self.entries.get((stream, page))
+        if e is None:
+            return False, "no directory entry"
+        if shared:
+            if node not in e.sharers:
+                return False, f"sharer bit gone (state={STATE_NAMES[e.state]})"
+            if e.owner != owner or e.pfn != pfn:
+                return False, f"mapping moved to ({e.owner}, pfn={e.pfn})"
+            return True, ""
+        if e.state != O or e.owner != node:
+            return False, (f"not the owner (state={STATE_NAMES[e.state]}, "
+                           f"owner={e.owner})")
+        if e.pfn != pfn:
+            return False, f"pfn republished ({e.pfn})"
+        return True, ""
+
     # -- liveness (paper §5): node failure -------------------------------------
 
     def fail_node(self, node: int) -> Tuple[List[Key], List[Key]]:

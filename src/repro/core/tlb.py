@@ -1,0 +1,243 @@
+"""Per-node mapping cache — a software TLB in front of the DPC directory.
+
+The paper's speedups hinge on established mappings being remote-memory-speed:
+after the first MAP_S, "the directory adds ~nothing" to a re-read.  The seed
+paid directory cost on 100% of accesses — every lookup ran the full
+``read_pages`` -> ``_routed`` -> per-shard jitted opcode pipeline with host
+syncs and device round trips.  This module caches established grants so a
+steady-state re-read costs a few numpy ops and nothing else: **zero directory
+opcodes, zero device round trips**.
+
+Structure (mirrors the directory's open addressing, host-side numpy):
+
+    keys   [S, 2] int32   (stream, page); EMPTY/TOMB sentinels like directory
+    owner  [S]    int32   owner node of the cached mapping
+    pfn    [S]    int32   global frame number the mapping resolves to
+    shared [S]    bool    False = owner-mode (HIT_OWNER), True = S-mapping
+    epoch  [S]    int64   global shootdown epoch at install time
+
+A cached entry is *advisory*: it may be dropped at any time (capacity
+replacement, shootdown) and the reader falls back to the directory.  What it
+must never do is survive a teardown — coherence is enforced by the protocol
+(core/protocol.py) through two mechanisms, mirroring hardware TLB shootdowns:
+
+  precise shootdowns   ``begin_invalidate`` / ``begin_migrate`` fan-outs
+                       already name the sharer set; the protocol posts the
+                       key to each named node's **invalidation queue** and
+                       the queue is serviced (entries dropped) no later than
+                       that node's INV_ACK — i.e. before the transaction can
+                       complete ("shootdown-before-complete").
+  epoch flash          ``fail_node`` removes directory entries wholesale
+                       without naming keys; the safety net is a **global
+                       shootdown epoch** — bumping it invalidates every
+                       cached entry on every node in O(1).
+
+CLOCK touches for owner-mode hits are NOT issued per hit (that would be a
+device round trip); callers buffer hit slots and flush them in one batched
+``pagepool.touch_weighted`` per engine step (see DistributedKVCache).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.descriptors import hash_key_py
+
+Key = Tuple[int, int]
+
+EMPTY = -1   # never-used slot: probe chains stop here
+TOMB = -2    # shot-down slot: probe chains continue past
+
+_C1 = np.uint32(0x9E3779B9)
+_C2 = np.uint32(0x85EBCA6B)
+_C3 = np.uint32(0xC2B2AE35)
+
+
+def _hash_np(streams: np.ndarray, pages: np.ndarray) -> np.ndarray:
+    """Vectorized mirror of descriptors.hash_key (uint32 wraparound)."""
+    h = streams.astype(np.uint32) * _C1
+    h = h ^ (pages.astype(np.uint32) * _C2)
+    h = h ^ (h >> np.uint32(16))
+    h = h * _C3
+    h = h ^ (h >> np.uint32(13))
+    return h
+
+
+class MappingTLB:
+    """One node's fixed-size open-addressed mapping cache."""
+
+    def __init__(self, slots: int, max_probe: int = 8):
+        assert slots & (slots - 1) == 0, "tlb slots must be a power of two"
+        self.slots = slots
+        self.max_probe = min(max_probe, slots)
+        self.keys = np.full((slots, 2), EMPTY, np.int32)
+        self.owner = np.full((slots,), -1, np.int32)
+        self.pfn = np.full((slots,), -1, np.int32)
+        self.shared = np.zeros((slots,), bool)
+        self.epoch = np.zeros((slots,), np.int64)
+        # precise-shootdown inbox: keys posted by in-flight directory
+        # transactions, drained (entries dropped) at this node's ACK
+        self.pending_inv: Deque[Key] = deque()
+        self.stats = {"hits": 0, "misses": 0, "installs": 0,
+                      "replacements": 0, "shootdowns": 0}
+
+    # -- scalar ops (install / drop run on the already-slow miss path) -------
+
+    def _probe(self, stream: int, page: int, epoch: int
+               ) -> Tuple[int, int]:
+        """Returns (found_slot, insert_slot); -1 = none within max_probe."""
+        mask = self.slots - 1
+        h = hash_key_py(stream, page) & mask
+        insert = -1
+        for step in range(self.max_probe):
+            i = (h + step) & mask
+            s = int(self.keys[i, 0])
+            if s == stream and int(self.keys[i, 1]) == page:
+                return i, insert
+            stale = s >= 0 and int(self.epoch[i]) != epoch
+            if insert < 0 and (s == EMPTY or s == TOMB or stale):
+                insert = i
+            if s == EMPTY:
+                break
+        return -1, insert
+
+    def install(self, stream: int, page: int, owner: int, pfn: int,
+                shared: bool, epoch: int) -> None:
+        found, insert = self._probe(stream, page, epoch)
+        slot = found
+        if slot < 0:
+            if insert < 0:
+                # chain full within max_probe: replace the home slot — a TLB
+                # is a cache, losing an entry only costs a directory re-read
+                slot = hash_key_py(stream, page) & (self.slots - 1)
+                self.stats["replacements"] += 1
+            else:
+                slot = insert
+            self.keys[slot] = (stream, page)
+            self.stats["installs"] += 1
+        self.owner[slot] = owner
+        self.pfn[slot] = pfn
+        self.shared[slot] = shared
+        self.epoch[slot] = epoch
+
+    def drop(self, stream: int, page: int, epoch: int) -> bool:
+        # the scalar probe matches the key regardless of epoch, so a
+        # stale-epoch residue is tombed here too (harmless and keeps the
+        # chain short); only the vectorized hit path is epoch-gated
+        found, _ = self._probe(stream, page, epoch)
+        if found < 0:
+            return False
+        self.keys[found] = (TOMB, TOMB)
+        self.stats["shootdowns"] += 1
+        return True
+
+    # -- batched lookup (the steady-state hot path) --------------------------
+
+    def lookup_batch(self, streams: np.ndarray, pages: np.ndarray,
+                     epoch: int) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray]:
+        """Vectorized probe.  Returns (owner, pfn, shared, hit) arrays; rows
+        with ``hit == False`` must fall back to the directory."""
+        n = len(streams)
+        mask = self.slots - 1
+        idx = (_hash_np(streams, pages) & np.uint32(mask)).astype(np.int64)
+        found = np.full((n,), -1, np.int64)
+        live = np.ones((n,), bool)
+        for _ in range(self.max_probe):
+            ks = self.keys[idx]
+            match = live & (ks[:, 0] == streams) & (ks[:, 1] == pages) \
+                & (self.epoch[idx] == epoch)
+            found = np.where(match, idx, found)
+            # EMPTY terminates the chain; TOMB and stale rows are probed past
+            live = live & ~match & (ks[:, 0] != EMPTY)
+            if not live.any():
+                break
+            idx = (idx + 1) & mask
+        hit = found >= 0
+        safe = np.maximum(found, 0)
+        self.stats["hits"] += int(hit.sum())
+        self.stats["misses"] += int(n - hit.sum())
+        return self.owner[safe], self.pfn[safe], self.shared[safe], hit
+
+
+class TLBGroup:
+    """The cluster's per-node TLBs + the coherence plumbing the protocol
+    drives: per-node precise-shootdown queues and the global flash epoch."""
+
+    def __init__(self, num_nodes: int, slots: int, max_probe: int = 8):
+        self.nodes: List[MappingTLB] = [MappingTLB(slots, max_probe)
+                                        for _ in range(num_nodes)]
+        self.global_epoch = 1
+        self.stats = {"posted": 0, "serviced": 0, "flashes": 0}
+
+    # -- read path -----------------------------------------------------------
+
+    def lookup_batch(self, node: int, streams, pages):
+        s = np.asarray(streams, np.int32)
+        p = np.asarray(pages, np.int32)
+        return self.nodes[node].lookup_batch(s, p, self.global_epoch)
+
+    def lookup(self, node: int, stream: int, page: int
+               ) -> Optional[Tuple[int, int, bool]]:
+        owner, pfn, shared, hit = self.lookup_batch(node, [stream], [page])
+        if not hit[0]:
+            return None
+        return int(owner[0]), int(pfn[0]), bool(shared[0])
+
+    # -- fills ----------------------------------------------------------------
+
+    def install(self, node: int, stream: int, page: int, owner: int,
+                pfn: int, shared: bool) -> None:
+        self.nodes[node].install(stream, page, owner, pfn, shared,
+                                 self.global_epoch)
+
+    # -- coherence -------------------------------------------------------------
+
+    def drop(self, node: int, key: Key) -> bool:
+        """Immediate local teardown (initiator side / voluntary drop)."""
+        return self.nodes[node].drop(key[0], key[1], self.global_epoch)
+
+    def post(self, node: int, key: Key) -> None:
+        """Queue a precise shootdown for ``node`` (DIR_INV piggyback)."""
+        self.nodes[node].pending_inv.append(key)
+        self.stats["posted"] += 1
+
+    def service(self, node: int) -> int:
+        """Drain ``node``'s shootdown queue — runs no later than the node's
+        INV_ACK, so a completed teardown can never leave a stale entry."""
+        q = self.nodes[node].pending_inv
+        n = len(q)
+        while q:
+            key = q.popleft()
+            self.nodes[node].drop(key[0], key[1], self.global_epoch)
+        self.stats["serviced"] += n
+        return n
+
+    def service_all(self) -> int:
+        """Safety net before transaction completion: queues of nodes whose
+        ACKs were force-cleared (e.g. by ``fail_node``) drain here."""
+        return sum(self.service(n) for n in range(len(self.nodes)))
+
+    def flash_all(self) -> None:
+        """Global shootdown epoch bump: every cached entry on every node is
+        invalid in O(1).  The fallback for teardowns that cannot name keys
+        (``fail_node`` wipes a whole node's directory ownership)."""
+        self.global_epoch += 1
+        self.stats["flashes"] += 1
+        for t in self.nodes:
+            t.pending_inv.clear()
+
+    # -- views -----------------------------------------------------------------
+
+    def entries(self, node: int) -> dict:
+        """Host view {key: (owner, pfn, shared)} of live entries (tests)."""
+        t = self.nodes[node]
+        out = {}
+        for i in range(t.slots):
+            if int(t.keys[i, 0]) >= 0 and int(t.epoch[i]) == self.global_epoch:
+                out[(int(t.keys[i, 0]), int(t.keys[i, 1]))] = (
+                    int(t.owner[i]), int(t.pfn[i]), bool(t.shared[i]))
+        return out

@@ -350,6 +350,10 @@ class ServingEngine:
             else:
                 n_active += 1
 
+        # TLB-hit CLOCK touches buffered during this step's lookups land in
+        # one batched device call — the hit path itself stayed device-free
+        self.kv.flush_tlb_touches()
+
         # durability rides the step boundary: stamp an epoch, pump the
         # queue (sync mode flushes one batch; async harvests completions),
         # and fsync each completed request's streams — its pages are

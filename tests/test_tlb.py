@@ -1,0 +1,386 @@
+"""Mapping-cache (software TLB) coherence tests.
+
+The tentpole invariant: a TLB hit must never return a mapping the directory
+no longer grants.  Every kv-level test here runs with the refimpl shadow
+oracle on, so ``DPCProtocol.check_tlb_grant`` asserts that invariant on every
+single cached hit; the interleaving tests race a cached reader against
+reclamation, migration, and node failure — a lost shootdown fails loudly at
+the exact faulting lookup.
+
+Also covers the CLEAR_DIRTY satellite (array opcode ≡ refimpl; migrated
+pages stop paying double writebacks).
+"""
+
+import numpy as np
+import pytest
+
+try:  # dev-only dep: collection must never hard-fail without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core import pagepool as pp
+from repro.core import refimpl as R
+from repro.core.dpc_cache import DistributedKVCache
+from repro.core.tlb import TLBGroup
+
+NODES = 4
+CAP = 64
+CFG = dirx.DirectoryConfig(capacity=CAP, num_nodes=NODES, max_probe=CAP)
+
+
+def batch(stream, page, node, aux=0):
+    return D.make_batch([stream], [page], [node], [aux])
+
+
+def make_kv(pool_pages=8, **kw) -> DistributedKVCache:
+    dpc = DPCConfig(page_size=8, pool_pages_per_shard=pool_pages,
+                    shadow_oracle=True, migrate_threshold=0, tlb_slots=64,
+                    **kw)
+    return DistributedKVCache(dpc, NODES)
+
+
+def seed_pages(kv, streams, pages, owner=0):
+    lks = kv.lookup(streams, pages, owner)
+    kv.commit(streams, pages, owner, lks)
+    return lks
+
+
+# ---------------------------------------------------------------------------
+# TLB structure unit tests
+# ---------------------------------------------------------------------------
+
+
+class TestMappingTLBUnit:
+    def test_install_lookup_drop(self):
+        g = TLBGroup(2, slots=16)
+        g.install(0, 5, 3, owner=1, pfn=42, shared=True)
+        assert g.lookup(0, 5, 3) == (1, 42, True)
+        assert g.lookup(1, 5, 3) is None        # per-node isolation
+        assert g.drop(0, (5, 3))
+        assert g.lookup(0, 5, 3) is None
+        assert not g.drop(0, (5, 3))            # already gone
+
+    def test_reinstall_updates_in_place(self):
+        g = TLBGroup(1, slots=16)
+        g.install(0, 1, 1, owner=0, pfn=7, shared=False)
+        g.install(0, 1, 1, owner=2, pfn=19, shared=True)
+        assert g.lookup(0, 1, 1) == (2, 19, True)
+        assert g.nodes[0].stats["installs"] == 1   # second was an update
+
+    def test_capacity_replacement_never_wrong(self):
+        """Overfilling a tiny TLB loses entries (it is a cache) but every
+        surviving lookup answer must still be the installed mapping."""
+        g = TLBGroup(1, slots=8, max_probe=2)
+        truth = {}
+        for i in range(32):
+            key = (i, i * 3)
+            g.install(0, key[0], key[1], owner=i % 4, pfn=i, shared=False)
+            truth[key] = (i % 4, i, False)
+        hits = 0
+        for key, want in truth.items():
+            got = g.lookup(0, key[0], key[1])
+            if got is not None:
+                assert got == want
+                hits += 1
+        assert 0 < hits <= 8
+
+    def test_flash_invalidates_everything(self):
+        g = TLBGroup(2, slots=16)
+        g.install(0, 1, 0, 0, 5, False)
+        g.install(1, 1, 0, 0, 5, True)
+        g.flash_all()
+        assert g.lookup(0, 1, 0) is None and g.lookup(1, 1, 0) is None
+        # slots are reusable after the flash
+        g.install(0, 1, 0, 2, 9, True)
+        assert g.lookup(0, 1, 0) == (2, 9, True)
+
+    def test_pending_queue_services_before_hit(self):
+        g = TLBGroup(1, slots=16)
+        g.install(0, 7, 0, 0, 3, False)
+        g.post(0, (7, 0))
+        # posted but not yet serviced: the entry is still visible (the
+        # pre-ACK window real hardware also has)
+        assert g.lookup(0, 7, 0) is not None
+        assert g.service(0) == 1
+        assert g.lookup(0, 7, 0) is None
+
+
+# ---------------------------------------------------------------------------
+# CLEAR_DIRTY opcode: array impl ≡ refimpl
+# ---------------------------------------------------------------------------
+
+
+class TestClearDirty:
+    def fresh(self):
+        return dirx.init_directory(CFG), R.RefDirectory(CAP, NODES)
+
+    def _install(self, d, ref, s, p, owner, pfn):
+        d, _ = dirx.lookup_and_install(d, batch(s, p, owner), max_probe=CAP)
+        ref.lookup_and_install(s, p, owner)
+        d, _ = dirx.commit(d, batch(s, p, owner, aux=pfn))
+        ref.commit(s, p, owner, pfn)
+        return d
+
+    def test_owner_clears_and_result_carries_old_bit(self):
+        d, ref = self.fresh()
+        d = self._install(d, ref, 1, 0, owner=2, pfn=7)
+        d, _ = dirx.mark_dirty(d, batch(1, 0, 2))
+        ref.mark_dirty(1, 0, 2)
+        d, res = dirx.clear_dirty(d, batch(1, 0, 2))
+        st_ref, was_ref = ref.clear_dirty(1, 0, 2)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK == st_ref
+        assert bool(res[0, 2]) and was_ref            # old bit reported
+        host = dirx.to_host_dict(d, CFG)
+        assert host[(1, 0)][4] is False               # entry now clean
+        # idempotent: second clear reports was_dirty=False
+        d, res = dirx.clear_dirty(d, batch(1, 0, 2))
+        st_ref, was_ref = ref.clear_dirty(1, 0, 2)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_OK == st_ref
+        assert not bool(res[0, 2]) and not was_ref
+
+    def test_non_owner_and_absent_are_bad(self):
+        d, ref = self.fresh()
+        d, res = dirx.clear_dirty(d, batch(9, 9, 0))
+        assert np.asarray(res)[0, 0] == D.ST_BAD == ref.clear_dirty(9, 9, 0)[0]
+        d = self._install(d, ref, 1, 0, owner=2, pfn=7)
+        d, res = dirx.clear_dirty(d, batch(1, 0, 3))   # not the owner
+        assert np.asarray(res)[0, 0] == D.ST_BAD == ref.clear_dirty(1, 0, 3)[0]
+
+    def test_migrated_page_pays_single_writeback(self):
+        """The ROADMAP follow-on closed: the hand-off checkpoints the bytes
+        and CLEAR_DIRTY stops the destination paying a second writeback."""
+        kv = make_kv(storage_backend="memory", writeback_async=False,
+                     writeback_batch=4)
+        payload = np.ones((4,), np.float32)
+        kv.set_page_bytes_fn(lambda key, pfn: payload)
+        lks = seed_pages(kv, [5], [0])
+        assert lks[0].refill is None
+        kv.lookup([5], [0], 1)
+        moved = kv.proto.migrate_sync([((5, 0), 1)])
+        assert len(moved) == 1
+        assert kv.proto.counters["migration_writebacks"] == 1
+        assert kv.proto.counters["dirty_clears"] == 1
+        kv.flush()
+        wb = kv.proto.counters["writebacks"]
+        freed, wrote = kv.proto.reclaim_sync(1, 1)
+        assert freed == 1 and wrote == 0
+        assert kv.proto.counters["writebacks"] == wb
+        assert kv.proto.counters["oracle_mismatches"] == 0
+        # the persisted bytes are still refillable after the clean eviction
+        lk = kv.lookup([5], [0], 2)[0]
+        assert lk.status == D.ST_GRANT_E and lk.refill is not None
+
+
+# ---------------------------------------------------------------------------
+# kv-level coherence: every cached hit is oracle-checked
+# ---------------------------------------------------------------------------
+
+
+class TestTLBCoherence:
+    def test_steady_state_hit_is_directory_free(self):
+        kv = make_kv()
+        seed_pages(kv, [1, 1], [0, 1])
+        kv.lookup([1, 1], [0, 1], 2)          # establish remote mappings
+        reads = kv.proto.counters["reads"]
+        for node, want_remote in ((0, False), (2, True)):
+            lks = kv.lookup([1, 1], [0, 1], node)
+            assert all(lk.page_id >= 0 for lk in lks)
+            assert all(lk.remote == want_remote for lk in lks)
+        assert kv.proto.counters["reads"] == reads, \
+            "steady-state re-read touched the directory"
+        assert kv.stats["tlb_hits"] >= 4
+
+    def test_buffered_touches_flush_in_one_batch(self):
+        kv = make_kv()
+        lks = seed_pages(kv, [1, 1], [0, 1])
+        slots = [lk.page_id % kv.dpc.pool_pages_per_shard for lk in lks]
+        for _ in range(3):
+            kv.lookup([1, 1], [0, 1], 0)      # owner TLB hits, buffered
+        hot_before = np.asarray(kv.proto.state.pools[0].hot)[slots]
+        assert kv.flush_tlb_touches() == 2
+        hot_after = np.asarray(kv.proto.state.pools[0].hot)[slots]
+        assert (hot_after == np.minimum(hot_before + 3, pp.HOT_MAX)).all()
+        assert kv.flush_tlb_touches() == 0    # buffer drained
+
+    def test_reclaim_shoots_down_owner_and_sharers(self):
+        kv = make_kv(pool_pages=4)
+        seed_pages(kv, [3] * 4, list(range(4)))
+        kv.lookup([3] * 4, list(range(4)), 1)   # node 1 caches S-mappings
+        kv.lookup([3] * 4, list(range(4)), 1)   # (now TLB-resident)
+        kv.reclaim(0, 2)
+        # no stale entries survive on either side (oracle would fail the
+        # lookup below loudly if one did)
+        gone = [k for k, e in kv.proto.directory_view().items()]
+        assert len(gone) == 2
+        for node in (0, 1):
+            lks = kv.lookup([3] * 4, list(range(4)), node)
+            assert all(lk.status != D.ST_BAD for lk in lks)
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_shootdown_lands_no_later_than_the_ack(self):
+        kv = make_kv()
+        seed_pages(kv, [5], [0])
+        kv.lookup([5], [0], 2)
+        kv.lookup([5], [0], 2)                  # cached on node 2
+        tlbs = kv.proto.tlbs
+        assert (5, 0) in tlbs.entries(2)
+        _, notify = kv.proto.reclaim_begin(0, want=1)
+        assert notify == {(5, 0): [2]}
+        # pre-ACK window: the entry may still serve (directory still names
+        # node 2 a sharer) — and the owner's own entry is already gone
+        assert (5, 0) not in tlbs.entries(0)
+        lk = kv.lookup([5], [0], 2)[0]
+        assert lk.status == D.ST_HIT_SHARER     # legal: bit still set
+        kv.proto.reclaim_ack(5, 0, 2)
+        assert (5, 0) not in tlbs.entries(2), \
+            "ACK completed but the cached mapping survived"
+        kv.proto.reclaim_finish(0)
+        lk = kv.lookup([5], [0], 2)[0]
+        assert lk.status == D.ST_GRANT_E        # entry fully torn down
+
+    def test_migration_moves_cached_ownership(self):
+        kv = make_kv()
+        seed_pages(kv, [7], [0])
+        kv.lookup([7], [0], 1)
+        kv.lookup([7], [0], 1)                  # cached shared @1
+        moved = kv.proto.migrate_sync([((7, 0), 1)])
+        assert len(moved) == 1
+        reads = kv.proto.counters["reads"]
+        lk = kv.lookup([7], [0], 1)[0]          # dst now owner, TLB-served
+        assert lk.status == D.ST_HIT_OWNER and not lk.remote
+        assert kv.proto.counters["reads"] == reads
+        lk = kv.lookup([7], [0], 0)[0]          # old owner re-maps S
+        assert lk.status == D.ST_MAP_S and lk.remote
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_fail_node_flashes_every_cache(self):
+        kv = make_kv()
+        seed_pages(kv, [9], [0])
+        kv.lookup([9], [0], 2)
+        kv.lookup([9], [0], 2)                  # cached @2 -> owner 0
+        kv.fail_node(0)                         # owner dies; entries wiped
+        lk = kv.lookup([9], [0], 2)[0]          # must NOT stale-hit
+        assert lk.status == D.ST_GRANT_E
+        assert kv.proto.tlbs.stats["flashes"] == 1
+
+    def test_drop_mapping_drops_cached_entry(self):
+        kv = make_kv()
+        seed_pages(kv, [2], [0])
+        kv.lookup([2], [0], 3)
+        kv.lookup([2], [0], 3)
+        assert (2, 0) in kv.proto.tlbs.entries(3)
+        kv.proto.drop_mapping([2], [0], 3)
+        assert (2, 0) not in kv.proto.tlbs.entries(3)
+        lk = kv.lookup([2], [0], 3)[0]          # re-maps through directory
+        assert lk.status == D.ST_MAP_S
+
+
+# ---------------------------------------------------------------------------
+# interleavings: lookup / reclaim / migrate / fail_node racing cached readers
+# ---------------------------------------------------------------------------
+
+
+N_KEYS = 6
+OPS = ["read", "read", "reclaim_begin", "migrate_begin", "ack_one",
+       "reclaim_finish", "migrate_finish", "drop", "fail"]
+
+
+def _run_interleaving(events):
+    """Every event is chased by a cached-reader lookup; the shadow oracle
+    (check_tlb_grant) asserts shootdown-before-complete at each one."""
+    kv = make_kv(pool_pages=4)
+    proto = kv.proto
+    keys = [(11, p) for p in range(N_KEYS)]
+    failed = set()
+
+    def deliver_one_ack():
+        for pend in (proto.pending_inv, proto.pending_mig):
+            for key, info in pend.items():
+                if info["waiting"]:
+                    node = min(info["waiting"])
+                    if pend is proto.pending_inv:
+                        proto.reclaim_ack(key[0], key[1], node)
+                    else:
+                        proto.migrate_ack(key[0], key[1], node)
+                    return
+
+    for op, ki, node, reader in events:
+        s, p = keys[ki]
+        if op == "read":
+            lks = kv.lookup([s], [p], node)
+            kv.commit([s], [p], node, lks)
+        elif op == "reclaim_begin":
+            proto.reclaim_begin(node, want=1)
+        elif op == "migrate_begin":
+            proto.migrate_begin([((s, p), node)])
+        elif op == "ack_one":
+            deliver_one_ack()
+        elif op == "reclaim_finish":
+            proto.reclaim_finish(node)
+        elif op == "migrate_finish":
+            proto.migrate_finish()
+        elif op == "drop":
+            proto.drop_mapping([s], [p], node)
+        elif op == "fail":
+            if node not in failed and len(failed) < NODES - 2:
+                failed.add(node)
+                kv.fail_node(node)
+        # the racing cached reader: any stale TLB entry fails loudly here
+        rs, rp = keys[(ki + reader) % N_KEYS]
+        kv.lookup([rs], [rp], (node + reader) % NODES)
+        proto.oracle.check_invariants()
+
+    # drain in-flight transactions; the settled state must also be clean
+    for _ in range(NODES * N_KEYS):
+        if not any(i["waiting"] for i in proto.pending_inv.values()) and \
+                not any(i["waiting"] for i in proto.pending_mig.values()):
+            break
+        deliver_one_ack()
+    for node in range(NODES):
+        proto.reclaim_finish(node)
+    proto.migrate_finish()
+    for node in range(NODES):
+        for s, p in keys:
+            kv.lookup([s], [p], node)
+    assert proto.counters["oracle_mismatches"] == 0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tlb_coherence_under_seeded_interleavings(seed):
+    """Tier-1 fixed-seed variant (runs even without hypothesis)."""
+    rng = np.random.default_rng(seed)
+    events = [(OPS[rng.integers(len(OPS))],
+               int(rng.integers(N_KEYS)), int(rng.integers(NODES)),
+               int(rng.integers(NODES)))
+              for _ in range(70)]
+    _run_interleaving(events)
+
+
+if HAVE_HYPOTHESIS:
+    EVENTS = st.lists(
+        st.tuples(
+            st.sampled_from(OPS),
+            st.integers(0, N_KEYS - 1),     # key index
+            st.integers(0, NODES - 1),      # node
+            st.integers(0, NODES - 1),      # racing-reader offset
+        ),
+        min_size=1, max_size=50,
+    )
+
+    @pytest.mark.property
+    @settings(deadline=None)  # example count comes from the profile
+    @given(EVENTS)
+    def test_tlb_coherence_under_interleavings(events):
+        """Hypothesis-driven search over the same space (with shrinking)."""
+        _run_interleaving(events)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_tlb_coherence_under_interleavings():
+        pass
