@@ -13,6 +13,15 @@ The paper's claims checked here:
   (2) when aggregate cache covers the shared working set, dpc >> per-node
       caching;
   (3) dpc_sc trails dpc only slightly.
+
+Ablations: ``dpc_notlb`` re-runs dpc with the mapping cache off (every
+steady-state re-read pays the directory), and the ``app.write.*`` rows run a
+dirty-page workload (storage tier on, every filled page owes a writeback)
+with TLB write grants on vs off — the tentpole's write-path ablation.
+
+``smoke=True`` is a real seconds-scale run (fewer nodes/requests/tokens)
+that CI executes end-to-end, emitting ``BENCH_app_serving.json`` rows that
+are diffed against the committed baseline.
 """
 
 from __future__ import annotations
@@ -38,53 +47,68 @@ NEW_TOKENS = 4
 REQS_PER_NODE = 6
 
 
-def make_engines(mode: str, n_nodes: int, params, arch):
+def make_engines(mode: str, n_nodes: int, params, arch, prompt=PROMPT,
+                 **dpc_kw):
     # "dpc_notlb" is the ablation row: the same relaxed-coherence protocol
     # with the per-node mapping cache off — every steady-state re-read pays
     # the full directory pipeline (the pre-TLB behavior)
     dpc_mode, tlb = (("dpc", False) if mode == "dpc_notlb"
                      else (mode, True))
     run = RunConfig(
-        arch=arch, shape=ShapeConfig("b", PROMPT * 2, 4, "decode"),
+        arch=arch, shape=ShapeConfig("b", prompt * 2, 4, "decode"),
         mesh=MeshConfig((1,), ("data",)),
         dpc=DPCConfig(mode=dpc_mode, page_size=PAGE,
-                      pool_pages_per_shard=512, tlb_enabled=tlb))
+                      pool_pages_per_shard=512, tlb_enabled=tlb, **dpc_kw))
     kv = DistributedKVCache(run.dpc, n_nodes)
     return [ServingEngine(run, params, max_batch=4,
-                          max_pages_per_seq=PROMPT * 2 // PAGE + 2,
+                          max_pages_per_seq=prompt * 2 // PAGE + 2,
                           node=i, num_nodes=n_nodes, kv_cache=kv)
             for i in range(n_nodes)], kv
 
 
-def run():
+def _drive(engines, rng, hot_prefix, vocab, reqs_per_node, new_tokens):
+    """Submit the shared-prefix workload and run it dry.  Returns seconds."""
+    n_nodes = len(engines)
+    t0 = time.monotonic()
+    for i in range(reqs_per_node * n_nodes):
+        # every request reads the hot shared prefix + a private tail
+        tail = rng.randint(0, vocab, 8).tolist()
+        engines[i % n_nodes].submit(hot_prefix + tail,
+                                    max_new_tokens=new_tokens)
+    for _ in range(100000):
+        n = sum(e.step() for e in engines)
+        if n == 0:
+            break
+    return time.monotonic() - t0
+
+
+def run(smoke: bool = False):
+    node_counts = (1, 2) if smoke else (1, 2, 4)
+    reqs_per_node = 3 if smoke else REQS_PER_NODE
+    new_tokens = 2 if smoke else NEW_TOKENS
+    prompt = 32 if smoke else PROMPT
+    modes = (("local_only", "dpc_notlb", "dpc") if smoke else
+             ("local_only", "replicated", "dpc_notlb", "dpc", "dpc_sc"))
+
     arch = get_smoke_arch(ARCH)
     api = registry.get_model(arch)
     params = init_params(api.specs(arch), jax.random.PRNGKey(0))
     rng = np.random.RandomState(7)
-    hot_prefix = rng.randint(0, arch.vocab_size, PROMPT).tolist()
+    hot_prefix = rng.randint(0, arch.vocab_size, prompt).tolist()
 
     base_tput = None
     tput_by_mode = {}
-    for mode in ("local_only", "replicated", "dpc_notlb", "dpc", "dpc_sc"):
-        for n_nodes in (1, 2, 4):
-            engines, kv = make_engines(mode, n_nodes, params, arch)
-            t0 = time.monotonic()
-            for i in range(REQS_PER_NODE * n_nodes):
-                # every request reads the hot shared prefix + a private tail
-                tail = rng.randint(0, arch.vocab_size, 8).tolist()
-                engines[i % n_nodes].submit(hot_prefix + tail,
-                                            max_new_tokens=NEW_TOKENS)
-            for _ in range(100000):
-                n = sum(e.step() for e in engines)
-                if n == 0:
-                    break
-            dt = time.monotonic() - t0
+    for mode in modes:
+        for n_nodes in node_counts:
+            engines, kv = make_engines(mode, n_nodes, params, arch,
+                                       prompt=prompt)
+            dt = _drive(engines, rng, hot_prefix, arch.vocab_size,
+                        reqs_per_node, new_tokens)
             # engines time-share one CPU: the scalable quantity is AGGREGATE
             # decode throughput; per-node = aggregate / n under real overlap
-            tput = REQS_PER_NODE * NEW_TOKENS * n_nodes / dt
+            tput = reqs_per_node * new_tokens * n_nodes / dt
             if base_tput is None:
                 base_tput = tput
-            s = engines[0].stats
             saved = sum(e.stats.prefill_tokens_saved for e in engines)
             run_tok = sum(e.stats.prefill_tokens_run for e in engines)
             loc = sum(e.stats.pages_local for e in engines)
@@ -97,15 +121,47 @@ def run():
                  f"prefill_saved={saved} run={run_tok} "
                  f"hits(l/r)={loc}/{rem} tlb_hits={tlb_h}")
 
-    # tentpole check: steady-state serving throughput with the mapping
-    # cache on vs off (same protocol, same workload)
-    for n_nodes in (1, 2, 4):
+    # tentpole check (reads): steady-state serving throughput with the
+    # mapping cache on vs off (same protocol, same workload)
+    for n_nodes in node_counts:
         on = tput_by_mode[("dpc", n_nodes)]
         off = tput_by_mode[("dpc_notlb", n_nodes)]
         emit(f"app.tlb_speedup.n{n_nodes}", 1e6 / max(on, 1e-9),
              f"tlb_on={on:.2f}tok/s tlb_off={off:.2f}tok/s "
              f"speedup={on / max(off, 1e-9):.2f}x")
 
+    # tentpole check (writes): dirty-page serving (storage tier on — every
+    # filled page owes a writeback, so every commit registers dirty bits)
+    # with TLB write grants on vs off.  The structural signal is the dirty
+    # registration traffic: buffered + batch-flushed vs one op per page.
+    n_nodes = max(node_counts[0], node_counts[-1] // 2) or 1
+    wr = {}
+    for grants in (True, False):
+        engines, kv = make_engines(
+            "dpc", n_nodes, params, arch, prompt=prompt,
+            storage_backend="memory", writeback_async=False,
+            tlb_write_grants=grants)
+        dt = _drive(engines, rng, hot_prefix, arch.vocab_size,
+                    reqs_per_node, new_tokens)
+        tput = reqs_per_node * new_tokens * n_nodes / dt
+        c = kv.proto.counters
+        wr[grants] = tput
+        tag = "on" if grants else "off"
+        emit(f"app.write.grants_{tag}.n{n_nodes}", 1e6 / max(tput, 1e-9),
+             f"agg_tput={tput:.2f}tok/s "
+             f"write_hits={c['tlb_write_hits']} "
+             f"buffered={c['dirty_buffered']} "
+             f"flush_batches={c['dirty_mark_flushes']} "
+             f"writebacks={c['writebacks']}")
+        kv.close()
+    emit(f"app.write_grant_speedup.n{n_nodes}",
+         1e6 / max(wr[True], 1e-9),
+         f"grants_on={wr[True]:.2f}tok/s grants_off={wr[False]:.2f}tok/s "
+         f"speedup={wr[True] / max(wr[False], 1e-9):.2f}x")
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

@@ -1,29 +1,43 @@
 """CI perf-regression guard: fresh smoke numbers vs the committed baseline.
 
     PYTHONPATH=src python -m benchmarks.compare_baseline <fresh_dir> \
-        [--baselines benchmarks/baselines] [--threshold 2.0] [--strict]
+        [--baselines benchmarks/baselines] [--warn-threshold 2.0] \
+        [--fail-threshold 4.0] [--allowlist benchmarks/baselines/ALLOWLIST] \
+        [--strict]
 
 For every ``BENCH_<suite>.json`` emitted by ``benchmarks.run --smoke`` that
 has a committed counterpart under ``benchmarks/baselines/``, rows are joined
-by name and any ``us_per_call`` regression beyond ``--threshold`` (default
-2x) is reported as a GitHub ``::warning::`` annotation.  The check is
-deliberately **non-blocking** (exit 0 unless ``--strict``): smoke timings on
-shared CI runners are noisy, so the signal is the annotation trail across
-PRs, not a red build.  Rows that exist on only one side (new/renamed
+by name and ``us_per_call`` ratios are classified:
+
+  ratio > fail-threshold (4x)   ``::error::`` annotation, **build fails**
+                                (exit 1) — unless the row is allowlisted
+  ratio > warn-threshold (2x)   ``::warning::`` annotation, non-blocking
+                                (smoke timings on shared runners are noisy;
+                                the 2-4x band is the annotation trail)
+
+The ALLOWLIST (one row name or fnmatch pattern per line, ``#`` comments)
+exempts intentionally-moved rows from the *blocking* tier until the next
+baseline refresh; allowlisted regressions still print, so the exemption is
+visible in the log.  Rows that exist on only one side (new/renamed
 benchmarks) are listed informationally and never warn.
 
-Refresh the baseline after an intentional perf change::
+Refresh the baseline after an intentional perf change — by hand::
 
     PYTHONPATH=src BENCH_DIR=benchmarks/baselines python -m benchmarks.run --smoke
+
+or via the ``refresh-baselines`` workflow_dispatch job in CI, which runs the
+same command and uploads the refreshed JSONs as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import glob
 import json
 import os
 import sys
+from typing import List, Optional, Tuple
 
 
 def _load_rows(path: str) -> dict:
@@ -32,26 +46,42 @@ def _load_rows(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("fresh_dir", help="directory holding fresh BENCH_*.json")
-    ap.add_argument("--baselines", default="benchmarks/baselines")
-    ap.add_argument("--threshold", type=float, default=2.0,
-                    help="warn when fresh/baseline exceeds this ratio")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero on regressions (off in CI)")
-    args = ap.parse_args()
+def load_allowlist(path: Optional[str]) -> List[str]:
+    """Row names / fnmatch patterns exempt from the blocking tier."""
+    if not path or not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                out.append(line)
+    return out
 
-    fresh_paths = sorted(glob.glob(os.path.join(args.fresh_dir,
-                                                "BENCH_*.json")))
+
+def _allowlisted(row: str, patterns: List[str]) -> bool:
+    return any(fnmatch.fnmatchcase(row, p) for p in patterns)
+
+
+def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
+            warn_threshold: float = 2.0, fail_threshold: float = 4.0,
+            allowlist: Optional[List[str]] = None, strict: bool = False,
+            ) -> Tuple[int, List[Tuple[str, float]], List[Tuple[str, float]]]:
+    """Returns (exit_code, warnings, failures) where each entry is
+    (row_name, ratio).  ``exit_code`` is 1 iff a non-allowlisted row
+    exceeded ``fail_threshold`` (or any warned and ``strict``)."""
+    allowlist = allowlist or []
+    fresh_paths = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
     if not fresh_paths:
-        print(f"compare_baseline: no BENCH_*.json under {args.fresh_dir}")
-        return 0
+        print(f"compare_baseline: no BENCH_*.json under {fresh_dir}")
+        return 0, [], []
 
-    regressions, compared = [], 0
+    warnings: List[Tuple[str, float]] = []
+    failures: List[Tuple[str, float]] = []
+    compared = 0
     for fresh_path in fresh_paths:
         name = os.path.basename(fresh_path)
-        base_path = os.path.join(args.baselines, name)
+        base_path = os.path.join(baselines, name)
         if not os.path.exists(base_path):
             print(f"# {name}: no committed baseline — skipped")
             continue
@@ -64,17 +94,56 @@ def main() -> int:
                 continue
             compared += 1
             ratio = fresh[row] / base_us
-            if ratio > args.threshold:
-                regressions.append((row, base_us, fresh[row], ratio))
-                print(f"::warning title=perf smoke regression::"
-                      f"{row}: {base_us:.1f}us -> {fresh[row]:.1f}us "
-                      f"({ratio:.1f}x, threshold {args.threshold:.1f}x)")
+            detail = (f"{row}: {base_us:.1f}us -> {fresh[row]:.1f}us "
+                      f"({ratio:.1f}x)")
+            if ratio > fail_threshold:
+                if _allowlisted(row, allowlist):
+                    print(f"# allowlisted regression (not blocking): "
+                          f"{detail}")
+                    warnings.append((row, ratio))
+                else:
+                    failures.append((row, ratio))
+                    print(f"::error title=perf smoke regression::{detail} "
+                          f"exceeds blocking threshold "
+                          f"{fail_threshold:.1f}x — refresh the baseline "
+                          f"(refresh-baselines job) or allowlist the row "
+                          f"if the move is intentional")
+            elif ratio > warn_threshold:
+                warnings.append((row, ratio))
+                print(f"::warning title=perf smoke regression::{detail}, "
+                      f"warn threshold {warn_threshold:.1f}x")
         for row in sorted(set(fresh) - set(base)):
             print(f"# {name}: new row '{row}' (no baseline yet)")
 
     print(f"compare_baseline: {compared} rows compared, "
-          f"{len(regressions)} over {args.threshold:.1f}x")
-    return 1 if (args.strict and regressions) else 0
+          f"{len(warnings)} over {warn_threshold:.1f}x (warn), "
+          f"{len(failures)} over {fail_threshold:.1f}x (blocking)")
+    code = 1 if failures or (strict and warnings) else 0
+    return code, warnings, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh_dir", help="directory holding fresh BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument("--warn-threshold", "--threshold", type=float,
+                    default=2.0, dest="warn_threshold",
+                    help="annotate when fresh/baseline exceeds this ratio")
+    ap.add_argument("--fail-threshold", type=float, default=4.0,
+                    help="fail the build when fresh/baseline exceeds this "
+                         "ratio (unless the row is allowlisted)")
+    ap.add_argument("--allowlist", default=None,
+                    help="row-name/pattern file exempting rows from the "
+                         "blocking tier (default <baselines>/ALLOWLIST)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on warnings too")
+    args = ap.parse_args()
+    allowlist_path = args.allowlist or os.path.join(args.baselines,
+                                                    "ALLOWLIST")
+    code, _, _ = compare(args.fresh_dir, args.baselines,
+                         args.warn_threshold, args.fail_threshold,
+                         load_allowlist(allowlist_path), args.strict)
+    return code
 
 
 if __name__ == "__main__":

@@ -364,6 +364,14 @@ class DPCConfig:
     tlb_enabled: bool = True
     tlb_slots: int = 1024               # per-node entries (power of two)
     tlb_max_probe: int = 8              # open-addressing probe bound
+    # write grants: MODE_M entries let mark_dirty/write_prepare complete with
+    # zero directory ops; dirty bits buffer per node and flush in one batched
+    # op per engine step (and always before a teardown can observe the page)
+    tlb_write_grants: bool = True
+    # deliver TLB shootdowns as piggybacked descriptor lanes on the next
+    # opcode batch routed to the sharer (False = legacy synchronous draining;
+    # kept for the piggyback==sync equivalence property tests)
+    tlb_shootdown_piggyback: bool = True
     # --- ownership migration (core/migration.py; 0 threshold disables) ---
     migrate_threshold: int = 4          # decayed remote accesses that promote
     migrate_batch: int = 32             # max MIGRATEs per round

@@ -45,6 +45,11 @@ class WriteTicket:
     slots: np.ndarray
     # rows being written through a remote mapping (dirty at ack time)
     remote_rows: np.ndarray
+    # rows written through an already-owned mapping: the write dirties the
+    # page, registered via the TLB write-grant fast path (a steady-state
+    # re-write pays zero directory ops — see protocol.mark_dirty)
+    owner_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
 
 
 class CoherenceManager:
@@ -72,11 +77,12 @@ class CoherenceManager:
         res = self.proto.write_prepare(streams, pages, node, strong=True)
         locked = res.granted()
         remote = res.remote_hits()
+        owner = res.local_hits()
         return WriteTicket(streams, pages, node, True,
-                           locked, res.slot[locked], remote)
+                           locked, res.slot[locked], remote, owner)
 
     def commit(self, ticket: WriteTicket) -> int:
-        """Step 2 (FUSE_DPC_UNLOCK): commit locked pages, dirty remote ones."""
+        """Step 2 (FUSE_DPC_UNLOCK): commit locked pages, dirty the rest."""
         n_ops = 0
         if len(ticket.locked_rows):
             self.proto.commit_pages(ticket.streams[ticket.locked_rows],
@@ -88,4 +94,11 @@ class CoherenceManager:
                                   ticket.pages[ticket.remote_rows],
                                   ticket.node)
             n_ops += len(ticket.remote_rows)
+        if len(ticket.owner_rows):
+            # owned pages were written too: register the dirty bits — a
+            # cached write grant makes this free (buffered, zero dir ops)
+            self.proto.mark_dirty(ticket.streams[ticket.owner_rows],
+                                  ticket.pages[ticket.owner_rows],
+                                  ticket.node)
+            n_ops += len(ticket.owner_rows)
         return n_ops

@@ -12,6 +12,20 @@ int32 row::
 Invalid rows are marked with ``stream_id == INVALID`` so fixed-capacity batches
 can be padded (the directory skips them), mirroring the paper's batched
 virtqueue messages.
+
+Piggybacked shootdown lanes (paper §4.3 batching): queued TLB shootdowns for
+a node ride the next opcode batch routed on that node's behalf instead of
+being drained in-process.  A shootdown row reuses the 4-lane layout with a
+distinct lane-0 sentinel so every directory opcode treats it as inert::
+
+    lane 0  SHOOTDOWN   (-3) sentinel — directory ops skip the row
+    lane 1  page_idx    logical page index of the mapping to drop
+    lane 2  node        the *target* node whose TLB entry dies
+    lane 3  stream_id   stream of the mapping to drop (aux lane repurposed)
+
+The receiving node services these lanes (drops the cached mappings) before
+executing the batch's own descriptors — see core/protocol.py ``_routed`` and
+core/tlb.py ``deliver``.
 """
 
 from __future__ import annotations
@@ -23,12 +37,40 @@ import jax.numpy as jnp
 import numpy as np
 
 INVALID = jnp.int32(-1)
+SHOOTDOWN = jnp.int32(-3)   # lane-0 sentinel: piggybacked TLB shootdown row
 N_LANES = 4
 
 LANE_STREAM = 0
 LANE_PAGE = 1
 LANE_NODE = 2
 LANE_AUX = 3
+
+
+def encode_shootdowns(triples) -> np.ndarray:
+    """Encode (target_node, stream, page) triples as piggyback lane rows.
+
+    Returns a [K, 4] int32 array appendable to any opcode batch; directory
+    ops skip the rows (negative lane 0), the target node's TLB services them
+    before the batch's own descriptors execute.
+    """
+    rows = np.full((len(triples), N_LANES), int(INVALID), np.int32)
+    for i, (node, stream, page) in enumerate(triples):
+        rows[i, LANE_STREAM] = int(SHOOTDOWN)
+        rows[i, LANE_PAGE] = page
+        rows[i, LANE_NODE] = node
+        rows[i, LANE_AUX] = stream
+    return rows
+
+
+def decode_shootdowns(rows: np.ndarray):
+    """Inverse of ``encode_shootdowns``: [K, 4] -> (node, stream, page)
+    triples, ignoring any non-shootdown rows."""
+    out = []
+    for row in np.asarray(rows):
+        if int(row[LANE_STREAM]) == int(SHOOTDOWN):
+            out.append((int(row[LANE_NODE]), int(row[LANE_AUX]),
+                        int(row[LANE_PAGE])))
+    return out
 
 # Status codes returned per descriptor by directory ops (mirrors Fig. 2 events)
 ST_OK = 0            # op applied

@@ -17,7 +17,10 @@ Entry normal form per slot (the paper's 14 B entry, widened to array lanes):
 Batch semantics: descriptors are applied **in order** (a ``fori_loop``), so
 two requests for the same absent page in one batch behave exactly like two
 serialized directory transactions: first gets E, the second BLOCKED —
-"directory operations are atomic at the page level".
+"directory operations are atomic at the page level".  Rows whose lane 0 is
+negative are inert here: INVALID (-1) pads fixed-capacity batches and
+SHOOTDOWN (-3) marks piggybacked TLB-shootdown lanes that only the receiving
+node's mapping cache consumes (descriptors.encode_shootdowns).
 
 Placement: these arrays live wherever the caller puts them — replicated on
 shard 0 for the paper-faithful *central* directory, or hash-partitioned over
@@ -183,7 +186,7 @@ def lookup_and_install(d: DirectoryState, descs: jax.Array,
     def step(i, carry):
         d, res = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, insert = probe(d.keys, stream, page, max_probe)
 
         present = found >= 0
@@ -245,7 +248,7 @@ def commit(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
         d, res = carry
         stream, page, node, pfn_in = (descs[i, 0], descs[i, 1],
                                       descs[i, 2], descs[i, 3])
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         ok = valid & (found >= 0) & (d.state[slot] == E) & (d.owner[slot] == node)
@@ -271,7 +274,7 @@ def abort_install(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     def step(i, carry):
         d, res = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         ok = valid & (found >= 0) & (d.state[slot] == E) & (d.owner[slot] == node)
@@ -304,7 +307,7 @@ def begin_invalidate(d: DirectoryState, descs: jax.Array,
     def step(i, carry):
         d, res, masks = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         ok = valid & (found >= 0) & (d.state[slot] == O) & (d.owner[slot] == node)
@@ -341,7 +344,7 @@ def ack_invalidate(d: DirectoryState, descs: jax.Array,
         d, res = carry
         stream, page, node, is_dirty = (descs[i, 0], descs[i, 1],
                                         descs[i, 2], descs[i, 3])
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         row = d.sharers[slot]
@@ -378,7 +381,7 @@ def complete_invalidate(d: DirectoryState, descs: jax.Array,
     def step(i, carry):
         d, res = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         in_tbi = valid & (found >= 0) & (d.state[slot] == TBI) & \
@@ -426,7 +429,7 @@ def begin_migrate(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     def step(i, carry):
         d, res, masks = carry
         stream, page, dst = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         st = d.state[slot]
@@ -478,7 +481,7 @@ def complete_migrate(d: DirectoryState, descs: jax.Array,
         d, res = carry
         stream, page, dst, old = (descs[i, 0], descs[i, 1],
                                   descs[i, 2], descs[i, 3])
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         in_tbm = valid & (found >= 0) & (d.state[slot] == TBM) & \
@@ -514,7 +517,7 @@ def sharer_drop(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
         d, res = carry
         stream, page, node, is_dirty = (descs[i, 0], descs[i, 1],
                                         descs[i, 2], descs[i, 3])
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         row = d.sharers[slot]
@@ -544,7 +547,7 @@ def mark_dirty(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     def step(i, carry):
         d, res = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         mapped = (d.owner[slot] == node) | has_bit(d.sharers[slot], node)
@@ -576,7 +579,7 @@ def clear_dirty(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     def step(i, carry):
         d, res = carry
         stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
-        valid = stream != D.INVALID
+        valid = stream >= 0  # skips INVALID padding + SHOOTDOWN lanes
         found, _ = probe(d.keys, stream, page, max_probe)
         slot = jnp.maximum(found, 0)
         ok = valid & (found >= 0) & (d.state[slot] == O) & \

@@ -27,6 +27,7 @@ from repro.core import descriptors as D
 from repro.core import pagepool as pp
 from repro.core.migration import MigrationConfig, OwnershipMigrator
 from repro.core.protocol import DPCProtocol, ProtocolConfig
+from repro.core.tlb import MODE_S
 from repro.storage import make_storage
 
 
@@ -68,6 +69,8 @@ class DistributedKVCache:
             placement=dpc.directory_placement,
             tlb_slots=dpc.tlb_slots if dpc.tlb_enabled else 0,
             tlb_max_probe=dpc.tlb_max_probe,
+            tlb_write_grants=dpc.tlb_write_grants,
+            tlb_piggyback=dpc.tlb_shootdown_piggyback,
             shadow_oracle=dpc.shadow_oracle,
         ), store=self.store, writeback=self.writeback)
         # buffered CLOCK touches for TLB owner-hits: slot -> hit count per
@@ -164,8 +167,9 @@ class DistributedKVCache:
         miss = list(range(n))
         tlbs = self.proto.tlbs
         if tlbs is not None and n:
-            owners, pfns, shared, hit = tlbs.lookup_batch(node, streams,
-                                                          pages)
+            owners, pfns, modes, hit = tlbs.lookup_batch(node, streams,
+                                                         pages)
+            shared = modes == MODE_S
             miss = []
             pool_pages = self.dpc.pool_pages_per_shard
             touch_buf = self._touch_buf[node]
@@ -241,6 +245,12 @@ class DistributedKVCache:
             total += len(buf)
             buf.clear()
         return total
+
+    def flush_dirty_marks(self) -> int:
+        """Register every buffered write-grant dirty bit in one batched
+        directory op per node (step boundary; teardowns flush on their own
+        before they could observe the page).  Returns keys flushed."""
+        return self.proto.flush_dirty_marks()
 
     def commit(self, streams, pages, node: int, lookups: List[PageLookup],
                dirty=None):

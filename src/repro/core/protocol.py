@@ -36,7 +36,7 @@ from repro.core import descriptors as D
 from repro.core import directory as dirx
 from repro.core import pagepool as pp
 from repro.core import refimpl
-from repro.core.tlb import TLBGroup
+from repro.core.tlb import MODE_M, MODE_O, MODE_S, TLBGroup
 
 
 @dataclasses.dataclass
@@ -52,6 +52,16 @@ class ProtocolConfig:
     # 0 slots disables it.
     tlb_slots: int = 1024
     tlb_max_probe: int = 8
+    # write grants: a MODE_M entry at the owner lets mark_dirty /
+    # write_prepare complete with zero directory ops; dirty bits buffer per
+    # node and flush in one batched op per engine step — and always before
+    # a teardown can observe the page (reclaim/migrate/fail flush first)
+    tlb_write_grants: bool = True
+    # deliver TLB shootdowns as piggybacked SHOOTDOWN lanes appended to the
+    # next opcode batch routed for the sharer, serviced before the batch's
+    # own ops (paper §4.3 batching).  False = legacy synchronous in-process
+    # draining, kept as the reference mode for equivalence property tests.
+    tlb_piggyback: bool = True
     # run the pure-Python RefDirectory in lockstep and assert the dirty bit
     # returned on every completed invalidation/migration matches the
     # oracle's needs_writeback — protocol/oracle divergence fails loudly
@@ -157,6 +167,17 @@ class DPCProtocol:
         if cfg.tlb_slots > 0:
             self.tlbs = TLBGroup(cfg.num_nodes, cfg.tlb_slots,
                                  cfg.tlb_max_probe)
+        # buffered write-grant dirty marks, one set per node: a MODE_M hit
+        # adds its key here instead of paying a directory op; the set is
+        # flushed in ONE batched mark_dirty per node per engine step, and
+        # always before any teardown could observe the page
+        self._dirty_buf: List[set] = [set() for _ in range(cfg.num_nodes)]
+        # buffered CLOCK touches for TLB-served write_prepare owner hits
+        # (the directory path touched HIT_OWNER rows in read_pages — hot
+        # re-written pages must not look cold to the eviction scan); they
+        # flush with the dirty marks, so reclaim_begin sees the heat
+        self._wtouch_buf: List[Dict[int, int]] = [
+            {} for _ in range(cfg.num_nodes)]
         # reusable host-side descriptor buffers, one per power-of-two batch
         # size: _routed fills these and ships ONE array to the device instead
         # of building + padding fresh arrays per call
@@ -176,6 +197,8 @@ class DPCProtocol:
             "migration_acks": 0, "writebacks_committed": 0,
             "migration_writebacks": 0, "flush_before_free_violations": 0,
             "oracle_mismatches": 0, "dirty_clears": 0,
+            "tlb_write_hits": 0, "write_prepare_hits": 0,
+            "dirty_buffered": 0, "dirty_mark_flushes": 0,
         }
 
     def attach_storage(self, store=None, writeback=None,
@@ -199,13 +222,30 @@ class DPCProtocol:
         return out[1:]
 
     def _routed(self, op, streams, pages, nodes, aux=None):
-        """Route a descriptor batch to directory shards; reassemble results."""
+        """Route a descriptor batch to directory shards; reassemble results.
+
+        Piggyback lanes: queued TLB shootdowns for every node this batch is
+        routed on behalf of (the node lane) ride along as SHOOTDOWN rows and
+        are serviced — cached entries dropped — *before* the batch's own
+        descriptors execute, the paper's §4.3 batched-invalidation delivery.
+        A sharer's INV_ACK is itself a routed batch, so delivery still lands
+        no later than the ACK; transaction completes fence any node that saw
+        no traffic since its post (``TLBGroup.fence``).
+        """
         streams = np.asarray(streams, np.int32)
         pages = np.asarray(pages, np.int32)
         nodes = np.broadcast_to(np.asarray(nodes, np.int32), streams.shape)
         aux = (np.zeros_like(streams) if aux is None
                else np.broadcast_to(np.asarray(aux, np.int32), streams.shape))
         n = len(streams)
+        sd_rows: Optional[np.ndarray] = None
+        if self.tlbs is not None and self.cfg.tlb_piggyback and n:
+            triples = self.tlbs.drain_for(np.unique(nodes).tolist())
+            if triples:
+                sd_rows = D.encode_shootdowns(triples)
+                # receiver-side service: the lanes are decoded and the cached
+                # mappings die before any of the batch's own ops run
+                self.tlbs.deliver(D.decode_shootdowns(sd_rows))
         res = np.zeros((n, 3), np.int32)
         extra: Dict[int, np.ndarray] = {}
         for shard, idxs in _group_by_shard(self.cfg, streams, pages).items():
@@ -214,7 +254,8 @@ class DPCProtocol:
             # The padded host buffer is cached per size and filled in place —
             # one device transfer per shard instead of a stack + concat chain.
             n_real = len(idxs)
-            n_pad = 1 << (n_real - 1).bit_length()
+            n_sd = 0 if sd_rows is None else len(sd_rows)
+            n_pad = 1 << (n_real + n_sd - 1).bit_length()
             buf = self._desc_scratch.get(n_pad)
             if buf is None:
                 buf = np.full((n_pad, D.N_LANES), int(D.INVALID), np.int32)
@@ -224,6 +265,11 @@ class DPCProtocol:
             buf[:n_real, D.LANE_PAGE] = pages[idxs]
             buf[:n_real, D.LANE_NODE] = nodes[idxs]
             buf[:n_real, D.LANE_AUX] = aux[idxs]
+            if n_sd:
+                # the lanes ride the first shard's batch (directory-inert:
+                # every opcode skips negative lane-0 rows)
+                buf[n_real:n_real + n_sd] = sd_rows
+                sd_rows = None
             out = self._dir_op(op, shard, jnp.asarray(buf))
             res[idxs] = np.asarray(out[0])[:n_real]
             if len(out) > 1:  # begin_invalidate/migrate return sharer masks
@@ -390,9 +436,10 @@ class DPCProtocol:
             for i in np.nonzero((res[:, 0] == D.ST_HIT_OWNER) |
                                 (res[:, 0] == D.ST_MAP_S) |
                                 (res[:, 0] == D.ST_HIT_SHARER))[0]:
+                mode = (MODE_O if int(res[i, 0]) == D.ST_HIT_OWNER
+                        else MODE_S)
                 self.tlbs.install(node, int(streams_a[i]), int(pages_a[i]),
-                                  int(res[i, 1]), int(res[i, 2]),
-                                  shared=int(res[i, 0]) != D.ST_HIT_OWNER)
+                                  int(res[i, 1]), int(res[i, 2]), mode)
 
         self._oracle_lookup(streams, pages, node, res[:, 0])
 
@@ -435,7 +482,7 @@ class DPCProtocol:
             # inline so the very next re-read is already directory-free
             for i in np.nonzero((res[:, 0] == D.ST_OK) & (pfns >= 0))[0]:
                 self.tlbs.install(node, int(keys[i, 0]), int(keys[i, 1]),
-                                  node, int(pfns[i]), shared=False)
+                                  node, int(pfns[i]), MODE_O)
         if dirty is not None:
             dirty = np.broadcast_to(np.asarray(dirty, bool),
                                     np.asarray(streams).shape)
@@ -453,24 +500,133 @@ class DPCProtocol:
 
         Strong mode consults the directory for every page in the write range:
         absent pages are locked in E; remotely-owned pages come back as S
-        mappings to write through (CXL keeps them coherent).  Relaxed mode is
-        a no-op returning local-write statuses — pages not previously in DPC
-        stay local-only and untracked (paper §5 Relaxed consistency).
+        mappings to write through (CXL keeps them coherent).  Established
+        mappings are served TLB-first: a cached owner/shared grant answers
+        the lock step with **zero directory ops and zero device round
+        trips** — only the remaining rows run the read pipeline.  Relaxed
+        mode is a no-op returning local-write statuses — pages not
+        previously in DPC stay local-only and untracked (paper §5 Relaxed
+        consistency).
         """
         if not strong:
             n = len(np.asarray(streams))
             z = np.zeros((n,), np.int32)
             return ReadResult(np.full((n,), D.ST_OK, np.int32),
                               z - 1, z - 1, z - 1)
-        return self.read_pages(streams, pages, node)
+        streams_a = np.asarray(streams, np.int32)
+        pages_a = np.asarray(pages, np.int32)
+        n = len(streams_a)
+        if self.tlbs is None or not self.cfg.tlb_write_grants or n == 0:
+            return self.read_pages(streams, pages, node)
+        owners, pfns, modes, hit = self.tlbs.lookup_batch(node, streams_a,
+                                                          pages_a)
+        if not hit.any():
+            return self.read_pages(streams, pages, node)
+        status = np.zeros((n,), np.int32)
+        owner_out = np.full((n,), -1, np.int32)
+        pfn_out = np.full((n,), -1, np.int32)
+        slots = np.full((n,), -1, np.int32)
+        wtouch = self._wtouch_buf[node]
+        for i in np.nonzero(hit)[0]:
+            key = (int(streams_a[i]), int(pages_a[i]))
+            shared = int(modes[i]) == MODE_S
+            self.check_tlb_grant(key, node, int(owners[i]), int(pfns[i]),
+                                 shared)
+            status[i] = D.ST_HIT_SHARER if shared else D.ST_HIT_OWNER
+            owner_out[i] = owners[i]
+            pfn_out[i] = pfns[i]
+            if not shared:
+                # the directory path CLOCK-touched HIT_OWNER rows; buffer
+                # the equivalent heat, flushed with the dirty marks
+                slot = int(pfns[i]) % self.cfg.pool_pages
+                wtouch[slot] = wtouch.get(slot, 0) + 1
+        self.counters["write_prepare_hits"] += int(hit.sum())
+        miss = np.nonzero(~hit)[0]
+        if len(miss):
+            sub = self.read_pages(streams_a[miss], pages_a[miss], node)
+            status[miss] = sub.status
+            owner_out[miss] = sub.owner
+            pfn_out[miss] = sub.pfn
+            slots[miss] = sub.slot
+        return ReadResult(status, owner_out, pfn_out, slots)
 
     def mark_dirty(self, streams, pages, node: int) -> np.ndarray:
-        res, _ = self._routed(dirx.mark_dirty, streams, pages, node)
-        if self.oracle is not None:
-            for s, p, st in zip(streams, pages, res[:, 0]):
-                self._oracle_op("mark_dirty", int(s), int(p), int(node),
-                                expect=int(st))
-        return res[:, 0]
+        """Register writes' dirty bits — TLB write grants first.
+
+        Rows whose mapping is cached in owner mode complete with zero
+        directory ops: a MODE_M entry means the bit is already registered
+        (or buffered); a MODE_O hit buffers the key into the node's dirty
+        set and upgrades the entry to MODE_M.  Buffered bits flush in ONE
+        batched directory op per engine step (``flush_dirty_marks``) — and
+        always before a teardown can observe the page, so the writeback
+        obligation can never be lost.  Only the remaining rows (sharer
+        mappings, misses) pay the per-call directory pipeline.
+        """
+        streams = np.asarray(streams, np.int32)
+        pages = np.asarray(pages, np.int32)
+        n = len(streams)
+        status = np.full((n,), D.ST_OK, np.int32)
+        miss = np.arange(n)
+        if self.tlbs is not None and self.cfg.tlb_write_grants and n:
+            owners, pfns, modes, hit = self.tlbs.lookup_batch(node, streams,
+                                                              pages)
+            own_hit = hit & (modes >= MODE_O)
+            buf = self._dirty_buf[node]
+            for i in np.nonzero(own_hit)[0]:
+                key = (int(streams[i]), int(pages[i]))
+                if int(modes[i]) != MODE_M:
+                    buf.add(key)
+                    self.tlbs.install(node, key[0], key[1], int(owners[i]),
+                                      int(pfns[i]), MODE_M)
+                    self.counters["dirty_buffered"] += 1
+                self.check_tlb_write_grant(key, node, int(pfns[i]))
+            self.counters["tlb_write_hits"] += int(own_hit.sum())
+            miss = np.nonzero(~own_hit)[0]
+        if len(miss):
+            res, _ = self._routed(dirx.mark_dirty, streams[miss],
+                                  pages[miss], node)
+            if self.oracle is not None:
+                for s, p, st in zip(streams[miss], pages[miss], res[:, 0]):
+                    self._oracle_op("mark_dirty", int(s), int(p), int(node),
+                                    expect=int(st))
+            status[miss] = res[:, 0]
+        return status
+
+    def flush_dirty_marks(self, node: Optional[int] = None) -> int:
+        """Flush buffered write-grant dirty bits in ONE batched directory op
+        per node (the engine runs this at step boundaries; teardown begins
+        run it first so no teardown can observe an unregistered bit).
+        Returns keys flushed."""
+        if self.tlbs is None:
+            return 0
+        which = range(self.cfg.num_nodes) if node is None else [node]
+        total = 0
+        for nd in which:
+            tbuf = self._wtouch_buf[nd]
+            if tbuf:
+                # write-hit CLOCK heat lands with the same cadence, so the
+                # reclaim scan never sees hot re-written pages as cold
+                self.touch_slots(nd, list(tbuf.keys()), list(tbuf.values()))
+                tbuf.clear()
+            buf = self._dirty_buf[nd]
+            if not buf:
+                continue
+            keys = sorted(buf)
+            buf.clear()
+            res, _ = self._routed(dirx.mark_dirty,
+                                  [k[0] for k in keys],
+                                  [k[1] for k in keys], nd)
+            if self.oracle is not None:
+                for (s, p), st in zip(keys, res[:, 0]):
+                    self._oracle_op("mark_dirty", s, p, nd, expect=int(st))
+                    assert int(st) == D.ST_OK, (
+                        f"buffered dirty mark for {(s, p)} on node {nd} "
+                        f"landed {D.STATUS_NAMES.get(int(st), st)} — it was "
+                        f"flushed after a teardown observed the page (the "
+                        f"flush-before-teardown fence was violated)")
+            total += len(keys)
+            self.counters["dirty_mark_flushes"] += 1
+        return total
 
     def clear_dirty(self, streams, pages, node: int) -> np.ndarray:
         """CLEAR_DIRTY: drop the writeback obligation of pages whose bytes
@@ -500,6 +656,33 @@ class DPCProtocol:
             f"(owner={owner}, pfn={pfn}, shared={shared}) but {why} — a "
             f"shootdown was lost and the single-copy invariant is broken")
 
+    def check_tlb_write_grant(self, key: Tuple[int, int], node: int,
+                              pfn: int) -> None:
+        """Shadow-oracle write-grant assert: a MODE_M hit must still be the
+        directory-granted owner AND its dirty bit must be registered or
+        buffered — a violation means a writeback obligation would be lost."""
+        if self.oracle is None:
+            return
+        ok, why, dirty = self.oracle.grants_write(key[0], key[1], node, pfn)
+        assert ok, (
+            f"stale TLB write grant on node {node} for {key}: cached "
+            f"pfn={pfn} but {why} — a write landed on a revoked mapping")
+        assert dirty or key in self._dirty_buf[node], (
+            f"TLB write grant for {key} on node {node} has no registered "
+            f"or buffered dirty bit — the writeback obligation was dropped")
+
+    def _assert_no_late_shootdown(self, key: Tuple[int, int]) -> None:
+        """Shadow-oracle completion assert: once a teardown transaction for
+        ``key`` completes (all ACKs in, fence run), no node's mapping cache
+        may still serve it — a holder means a piggybacked shootdown lane was
+        lost past the fence."""
+        if self.oracle is None or self.tlbs is None:
+            return
+        held = self.tlbs.holders(key)
+        assert not held, (
+            f"late shootdown: nodes {held} still cache {key} at teardown "
+            f"completion — a piggybacked lane was lost past the fence")
+
     def touch_slots(self, node: int, slots, counts) -> None:
         """Flush a step's buffered TLB-hit CLOCK touches in ONE batched
         device call (pow2-padded to bound jit variants)."""
@@ -527,6 +710,11 @@ class DPCProtocol:
         to DRAINING (retained, I/O-blocked) — they are *not* freed until
         ``reclaim_finish`` observes all ACKs ("deterministic reclamation").
         """
+        # write grants flush first: begin_invalidate moves entries to TBI,
+        # which refuses mark_dirty — a buffered bit flushed any later would
+        # be dropped and its writeback lost.  Keys owned by this node are
+        # only ever buffered on this node (write grants are owner-only).
+        self.flush_dirty_marks(node)
         pool, victims = pp.clock_scan(self.state.pools[node], want)
         victims_np = np.asarray(victims)
         victims_np = victims_np[victims_np >= 0]
@@ -561,11 +749,13 @@ class DPCProtocol:
                 self.pending_inv[key] = {
                     "owner": node, "slot": int(victims_np[row]),
                     "waiting": set(sharer_nodes),
+                    "sharers": list(sharer_nodes),
                 }
                 if self.tlbs is not None:
                     # TLB shootdown fan-out piggybacks on the DIR_INVs the
                     # directory just named: the initiating owner drops its
-                    # entry now, each sharer's queue is serviced at its ACK
+                    # entry now; each sharer's shootdown rides the lanes of
+                    # the next batch routed its way (no later than its ACK)
                     self.tlbs.drop(node, key)
                     for s in sharer_nodes:
                         self.tlbs.post(s, key)
@@ -577,11 +767,13 @@ class DPCProtocol:
                     dirty: bool = False) -> int:
         """FUSE_DPC_INV_ACK from sharer ``node`` (notification manager path).
 
-        The node's pending TLB shootdowns are serviced first: the ACK is the
-        sharer's promise that its mapping — including the cached one — is
-        torn down (shootdown-before-complete)."""
-        if self.tlbs is not None:
-            self.tlbs.service(node)
+        The ACK is itself a routed batch, so in piggyback mode the node's
+        pending shootdown lanes ride it and are serviced before the ack
+        executes — the ACK is still the sharer's promise that its mapping,
+        including the cached one, is torn down (shootdown-before-complete).
+        """
+        if self.tlbs is not None and not self.cfg.tlb_piggyback:
+            self.tlbs.service(node)   # legacy synchronous draining
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
@@ -607,10 +799,18 @@ class DPCProtocol:
         if not ready:
             return 0, 0
         if self.tlbs is not None:
-            # safety net: sharers whose ACKs were force-cleared (fail_node)
-            # never serviced their queues — drain everything before any
-            # entry leaves the directory
-            self.tlbs.service_all()
+            if self.cfg.tlb_piggyback:
+                # bounded-staleness epoch fence: any named sharer still
+                # behind its post epoch (ACK force-cleared, no batch traffic
+                # since) gets a forced delivery before the entry can leave
+                # the directory — completes always observe all teardowns
+                self.tlbs.fence([s for _, v in ready
+                                 for s in v.get("sharers", ())])
+            else:
+                # legacy safety net: drain every queue synchronously
+                self.tlbs.service_all()
+            for key, _ in ready:
+                self._assert_no_late_shootdown(key)
         streams = [k[0] for k, _ in ready]
         pages = [k[1] for k, _ in ready]
         res, _ = self._routed(dirx.complete_invalidate, streams, pages, node)
@@ -663,6 +863,10 @@ class DPCProtocol:
         sharer; the hand-off completes in ``migrate_finish`` only after all
         ACKs, exactly like deterministic reclamation.  Keys already in an
         invalidation or migration round are skipped (BLOCKED)."""
+        # sources are only known after the directory answers, so every
+        # node's buffered write-grant dirty bits flush before any O -> TBM
+        # transition can make a late mark_dirty land BAD
+        self.flush_dirty_marks()
         n = len(pairs)
         statuses = np.full((n,), D.ST_BLOCKED, np.int32)
         rows = [i for i, (key, _) in enumerate(pairs)
@@ -702,11 +906,13 @@ class DPCProtocol:
             self.pending_mig[key] = {
                 "src": src, "dst": int(dsts[j]), "src_slot": src_slot,
                 "old_pfn": old_pfn, "waiting": set(sharer_nodes),
+                "sharers": list(sharer_nodes),
             }
             if self.tlbs is not None:
                 # same shootdown discipline as reclamation: the source's
-                # owner-mode entry dies now, sharers (the destination is
-                # usually among them) drain their queues at ACK time
+                # owner-mode entry dies now; each sharer's shootdown (the
+                # destination is usually among them) rides the piggyback
+                # lanes of the next batch routed its way
                 self.tlbs.drop(src, key)
                 for s in sharer_nodes:
                     self.tlbs.post(s, key)
@@ -715,9 +921,10 @@ class DPCProtocol:
 
     def migrate_ack(self, stream: int, page: int, node: int,
                     dirty: bool = False) -> int:
-        """Sharer ACK for a migration DIR_INV (same opcode as reclamation)."""
-        if self.tlbs is not None:
-            self.tlbs.service(node)
+        """Sharer ACK for a migration DIR_INV (same opcode as reclamation;
+        the ACK batch carries the node's pending shootdown lanes)."""
+        if self.tlbs is not None and not self.cfg.tlb_piggyback:
+            self.tlbs.service(node)   # legacy synchronous draining
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
@@ -756,9 +963,16 @@ class DPCProtocol:
         ready = [(k, v) for k, v in self.pending_mig.items()
                  if not v["waiting"]]
         if ready and self.tlbs is not None:
-            self.tlbs.service_all()   # shootdown-before-complete safety net
+            if self.cfg.tlb_piggyback:
+                # shootdown-before-complete: fence the named sharers so no
+                # undelivered lane survives the hand-off
+                self.tlbs.fence([s for _, v in ready
+                                 for s in v.get("sharers", ())])
+            else:
+                self.tlbs.service_all()   # legacy safety net
         moved: List[Tuple[Tuple[int, int], int, int]] = []
         for key, info in ready:
+            self._assert_no_late_shootdown(key)
             del self.pending_mig[key]
             src, dst = info["src"], info["dst"]
             if dst == src:  # retargeted after a destination failure
@@ -844,6 +1058,10 @@ class DPCProtocol:
     def fail_node(self, node: int) -> int:
         """Directory-side failure handling: remove the node everywhere and
         unblock any invalidation waiting on its ACK."""
+        # register surviving buffered dirty bits while their entries still
+        # exist (the failing node's own marks die with its data — flushing
+        # them first keeps the flush-status assert honest)
+        self.flush_dirty_marks()
         if self.tlbs is not None:
             # fail_node wipes directory entries wholesale without naming
             # keys, so precise shootdowns cannot cover it — the global

@@ -278,6 +278,28 @@ class RefDirectory:
             return False, f"pfn republished ({e.pfn})"
         return True, ""
 
+    def grants_write(self, stream: int, page: int, node: int, pfn: int
+                     ) -> Tuple[bool, str, bool]:
+        """Does the directory still grant ``node`` a cached *write* grant
+        (a MODE_M mapping-cache entry)?
+
+        A write grant requires live ownership of an O entry with the same
+        published PFN — exactly the owner-mode read grant.  The third return
+        is the entry's dirty bit: the caller (core/protocol.py) asserts the
+        M promise — dirty already registered *or* sitting in the owner's
+        buffered-dirty set awaiting the next batched flush — so a buffered
+        mark can never be dropped behind a teardown.
+        """
+        e = self.entries.get((stream, page))
+        if e is None:
+            return False, "no directory entry", False
+        if e.state != O or e.owner != node:
+            return False, (f"not the owner (state={STATE_NAMES[e.state]}, "
+                           f"owner={e.owner})"), False
+        if e.pfn != pfn:
+            return False, f"pfn republished ({e.pfn})", False
+        return True, "", e.dirty
+
     # -- liveness (paper §5): node failure -------------------------------------
 
     def fail_node(self, node: int) -> Tuple[List[Key], List[Key]]:

@@ -6,27 +6,49 @@ paid directory cost on 100% of accesses — every lookup ran the full
 ``read_pages`` -> ``_routed`` -> per-shard jitted opcode pipeline with host
 syncs and device round trips.  This module caches established grants so a
 steady-state re-read costs a few numpy ops and nothing else: **zero directory
-opcodes, zero device round trips**.
+opcodes, zero device round trips** — and, since the write-grant extension,
+the same holds for a steady-state re-*write* (``mark_dirty`` on an owned
+page whose dirty bit the directory already has, or will get in the next
+batched flush).
 
 Structure (mirrors the directory's open addressing, host-side numpy):
 
     keys   [S, 2] int32   (stream, page); EMPTY/TOMB sentinels like directory
     owner  [S]    int32   owner node of the cached mapping
     pfn    [S]    int32   global frame number the mapping resolves to
-    shared [S]    bool    False = owner-mode (HIT_OWNER), True = S-mapping
+    mode   [S]    int8    MODE_S (shared) / MODE_O (owner) / MODE_M (owner
+                          with a registered-or-buffered write grant)
     epoch  [S]    int64   global shootdown epoch at install time
+
+Entry modes:
+
+  MODE_S   remote S-mapping (HIT_SHARER / MAP_S): servable for reads.
+  MODE_O   owner mapping (HIT_OWNER / commit): reads are local, a write
+           must still register its dirty bit with the directory once.
+  MODE_M   owner mapping whose dirty bit is already registered at the
+           directory *or* sits in the owner's buffered-dirty set awaiting
+           the next batched flush — a re-write is a pure cache hit.
 
 A cached entry is *advisory*: it may be dropped at any time (capacity
 replacement, shootdown) and the reader falls back to the directory.  What it
 must never do is survive a teardown — coherence is enforced by the protocol
 (core/protocol.py) through two mechanisms, mirroring hardware TLB shootdowns:
 
-  precise shootdowns   ``begin_invalidate`` / ``begin_migrate`` fan-outs
+  piggybacked lanes    ``begin_invalidate`` / ``begin_migrate`` fan-outs
                        already name the sharer set; the protocol posts the
-                       key to each named node's **invalidation queue** and
-                       the queue is serviced (entries dropped) no later than
-                       that node's INV_ACK — i.e. before the transaction can
-                       complete ("shootdown-before-complete").
+                       key to each named node's **shootdown queue**.  Queued
+                       keys are not drained in-process: they are encoded as
+                       SHOOTDOWN descriptor rows appended to the next opcode
+                       batch routed on behalf of that node (paper §4.3-style
+                       batching) and serviced *before* the batch's own ops
+                       execute.  A sharer's INV_ACK is itself a routed batch,
+                       so delivery still lands no later than the ACK.
+  epoch fence          every ``post`` bumps the target's post-epoch; a
+                       delivery advances its served-epoch.  Before a teardown
+                       transaction completes, the protocol fences the named
+                       sharers: any of them still behind (ACK force-cleared,
+                       no traffic since) gets a forced delivery — bounded
+                       staleness, completes always observe all teardowns.
   epoch flash          ``fail_node`` removes directory entries wholesale
                        without naming keys; the safety net is a **global
                        shootdown epoch** — bumping it invalidates every
@@ -34,13 +56,16 @@ must never do is survive a teardown — coherence is enforced by the protocol
 
 CLOCK touches for owner-mode hits are NOT issued per hit (that would be a
 device round trip); callers buffer hit slots and flush them in one batched
-``pagepool.touch_weighted`` per engine step (see DistributedKVCache).
+``pagepool.touch_weighted`` per engine step (see DistributedKVCache).  The
+write path mirrors the pattern: dirty marks for MODE_O hits are buffered
+per node (core/protocol.py) and flushed in one batched ``mark_dirty`` per
+engine step — and always before any teardown can observe the page.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,6 +75,11 @@ Key = Tuple[int, int]
 
 EMPTY = -1   # never-used slot: probe chains stop here
 TOMB = -2    # shot-down slot: probe chains continue past
+
+# entry modes (int8 lane); 0 is "unset" so a zeroed table holds no grants
+MODE_S = 1   # shared mapping (remote reads)
+MODE_O = 2   # owner mapping (local reads; a write still owes one mark_dirty)
+MODE_M = 3   # owner mapping with write grant (dirty registered or buffered)
 
 _C1 = np.uint32(0x9E3779B9)
 _C2 = np.uint32(0x85EBCA6B)
@@ -76,10 +106,11 @@ class MappingTLB:
         self.keys = np.full((slots, 2), EMPTY, np.int32)
         self.owner = np.full((slots,), -1, np.int32)
         self.pfn = np.full((slots,), -1, np.int32)
-        self.shared = np.zeros((slots,), bool)
+        self.mode = np.zeros((slots,), np.int8)
         self.epoch = np.zeros((slots,), np.int64)
-        # precise-shootdown inbox: keys posted by in-flight directory
-        # transactions, drained (entries dropped) at this node's ACK
+        # shootdown inbox: keys posted by in-flight directory transactions,
+        # delivered (entries dropped) by the piggyback lanes of the next
+        # opcode batch routed for this node — no later than its INV_ACK
         self.pending_inv: Deque[Key] = deque()
         self.stats = {"hits": 0, "misses": 0, "installs": 0,
                       "replacements": 0, "shootdowns": 0}
@@ -105,7 +136,7 @@ class MappingTLB:
         return -1, insert
 
     def install(self, stream: int, page: int, owner: int, pfn: int,
-                shared: bool, epoch: int) -> None:
+                mode: int, epoch: int) -> None:
         found, insert = self._probe(stream, page, epoch)
         slot = found
         if slot < 0:
@@ -120,7 +151,7 @@ class MappingTLB:
             self.stats["installs"] += 1
         self.owner[slot] = owner
         self.pfn[slot] = pfn
-        self.shared[slot] = shared
+        self.mode[slot] = mode
         self.epoch[slot] = epoch
 
     def drop(self, stream: int, page: int, epoch: int) -> bool:
@@ -131,6 +162,7 @@ class MappingTLB:
         if found < 0:
             return False
         self.keys[found] = (TOMB, TOMB)
+        self.mode[found] = 0
         self.stats["shootdowns"] += 1
         return True
 
@@ -139,7 +171,7 @@ class MappingTLB:
     def lookup_batch(self, streams: np.ndarray, pages: np.ndarray,
                      epoch: int) -> Tuple[np.ndarray, np.ndarray,
                                           np.ndarray, np.ndarray]:
-        """Vectorized probe.  Returns (owner, pfn, shared, hit) arrays; rows
+        """Vectorized probe.  Returns (owner, pfn, mode, hit) arrays; rows
         with ``hit == False`` must fall back to the directory."""
         n = len(streams)
         mask = self.slots - 1
@@ -160,18 +192,25 @@ class MappingTLB:
         safe = np.maximum(found, 0)
         self.stats["hits"] += int(hit.sum())
         self.stats["misses"] += int(n - hit.sum())
-        return self.owner[safe], self.pfn[safe], self.shared[safe], hit
+        return self.owner[safe], self.pfn[safe], self.mode[safe], hit
 
 
 class TLBGroup:
     """The cluster's per-node TLBs + the coherence plumbing the protocol
-    drives: per-node precise-shootdown queues and the global flash epoch."""
+    drives: per-node shootdown queues with piggybacked delivery (post /
+    drain / deliver / fence epochs) and the global flash epoch."""
 
     def __init__(self, num_nodes: int, slots: int, max_probe: int = 8):
         self.nodes: List[MappingTLB] = [MappingTLB(slots, max_probe)
                                         for _ in range(num_nodes)]
         self.global_epoch = 1
-        self.stats = {"posted": 0, "serviced": 0, "flashes": 0}
+        # bounded-staleness fence epochs: post_epoch counts shootdowns posted
+        # to a node, served_epoch the prefix it has delivered.  A node is
+        # "caught up" iff served == posted; transaction completes fence on it.
+        self.post_epoch = [0] * num_nodes
+        self.served_epoch = [0] * num_nodes
+        self.stats = {"posted": 0, "serviced": 0, "delivered": 0,
+                      "fenced": 0, "flashes": 0}
 
     # -- read path -----------------------------------------------------------
 
@@ -181,17 +220,18 @@ class TLBGroup:
         return self.nodes[node].lookup_batch(s, p, self.global_epoch)
 
     def lookup(self, node: int, stream: int, page: int
-               ) -> Optional[Tuple[int, int, bool]]:
-        owner, pfn, shared, hit = self.lookup_batch(node, [stream], [page])
+               ) -> Optional[Tuple[int, int, int]]:
+        """Scalar probe: (owner, pfn, mode) or None."""
+        owner, pfn, mode, hit = self.lookup_batch(node, [stream], [page])
         if not hit[0]:
             return None
-        return int(owner[0]), int(pfn[0]), bool(shared[0])
+        return int(owner[0]), int(pfn[0]), int(mode[0])
 
     # -- fills ----------------------------------------------------------------
 
     def install(self, node: int, stream: int, page: int, owner: int,
-                pfn: int, shared: bool) -> None:
-        self.nodes[node].install(stream, page, owner, pfn, shared,
+                pfn: int, mode: int) -> None:
+        self.nodes[node].install(stream, page, owner, pfn, mode,
                                  self.global_epoch)
 
     # -- coherence -------------------------------------------------------------
@@ -201,24 +241,60 @@ class TLBGroup:
         return self.nodes[node].drop(key[0], key[1], self.global_epoch)
 
     def post(self, node: int, key: Key) -> None:
-        """Queue a precise shootdown for ``node`` (DIR_INV piggyback)."""
+        """Queue a shootdown for ``node``: it rides the piggyback lanes of
+        the next opcode batch routed on that node's behalf (DIR_INV
+        piggyback), bumping the node's post epoch for the fence."""
         self.nodes[node].pending_inv.append(key)
+        self.post_epoch[node] += 1
         self.stats["posted"] += 1
 
+    def drain_for(self, nodes: Sequence[int]) -> List[Tuple[int, int, int]]:
+        """Pop every queued shootdown for ``nodes`` and advance their served
+        epochs.  Returns (target_node, stream, page) triples for the caller
+        to encode as piggyback lanes and hand back to ``deliver``."""
+        out: List[Tuple[int, int, int]] = []
+        for n in dict.fromkeys(int(n) for n in nodes):
+            q = self.nodes[n].pending_inv
+            while q:
+                s, p = q.popleft()
+                out.append((n, s, p))
+            self.served_epoch[n] = self.post_epoch[n]
+        return out
+
+    def deliver(self, triples: Sequence[Tuple[int, int, int]]) -> int:
+        """Service decoded piggyback lanes: drop each (node, stream, page).
+        Runs before the carrying batch's own ops execute (protocol._routed),
+        the modeled receiver-side shootdown service."""
+        n = 0
+        for node, s, p in triples:
+            self.nodes[node].drop(s, p, self.global_epoch)
+            n += 1
+        self.stats["delivered"] += n
+        return n
+
+    def fence(self, nodes: Sequence[int]) -> int:
+        """Bounded-staleness fence: force delivery for any named node still
+        behind its post epoch (its ACK was force-cleared, or it saw no batch
+        traffic since the post).  Transaction completes run this so a
+        finished teardown can never leave a cached entry anywhere."""
+        behind = [n for n in dict.fromkeys(int(n) for n in nodes)
+                  if self.served_epoch[n] < self.post_epoch[n]]
+        if not behind:
+            return 0
+        delivered = self.deliver(self.drain_for(behind))
+        self.stats["fenced"] += delivered
+        return delivered
+
     def service(self, node: int) -> int:
-        """Drain ``node``'s shootdown queue — runs no later than the node's
-        INV_ACK, so a completed teardown can never leave a stale entry."""
-        q = self.nodes[node].pending_inv
-        n = len(q)
-        while q:
-            key = q.popleft()
-            self.nodes[node].drop(key[0], key[1], self.global_epoch)
+        """Synchronous in-process drain (legacy / piggyback-off mode): runs
+        no later than the node's INV_ACK so a completed teardown can never
+        leave a stale entry."""
+        n = self.deliver(self.drain_for([node]))
         self.stats["serviced"] += n
         return n
 
     def service_all(self) -> int:
-        """Safety net before transaction completion: queues of nodes whose
-        ACKs were force-cleared (e.g. by ``fail_node``) drain here."""
+        """Synchronous-mode safety net before transaction completion."""
         return sum(self.service(n) for n in range(len(self.nodes)))
 
     def flash_all(self) -> None:
@@ -227,17 +303,24 @@ class TLBGroup:
         (``fail_node`` wipes a whole node's directory ownership)."""
         self.global_epoch += 1
         self.stats["flashes"] += 1
-        for t in self.nodes:
+        for i, t in enumerate(self.nodes):
             t.pending_inv.clear()
+            self.served_epoch[i] = self.post_epoch[i]
 
     # -- views -----------------------------------------------------------------
 
+    def holders(self, key: Key) -> List[int]:
+        """Nodes whose TLB still serves ``key`` (oracle late-shootdown
+        assert: must be empty once the key's teardown completed)."""
+        return [n for n in range(len(self.nodes))
+                if key in self.entries(n)]
+
     def entries(self, node: int) -> dict:
-        """Host view {key: (owner, pfn, shared)} of live entries (tests)."""
+        """Host view {key: (owner, pfn, mode)} of live entries (tests)."""
         t = self.nodes[node]
         out = {}
         for i in range(t.slots):
             if int(t.keys[i, 0]) >= 0 and int(t.epoch[i]) == self.global_epoch:
                 out[(int(t.keys[i, 0]), int(t.keys[i, 1]))] = (
-                    int(t.owner[i]), int(t.pfn[i]), bool(t.shared[i]))
+                    int(t.owner[i]), int(t.pfn[i]), int(t.mode[i]))
         return out

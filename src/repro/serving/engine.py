@@ -351,8 +351,11 @@ class ServingEngine:
                 n_active += 1
 
         # TLB-hit CLOCK touches buffered during this step's lookups land in
-        # one batched device call — the hit path itself stayed device-free
+        # one batched device call — the hit path itself stayed device-free.
+        # Write-grant dirty bits ride the same boundary: one batched
+        # mark_dirty per node instead of one per written page
         self.kv.flush_tlb_touches()
+        self.kv.flush_dirty_marks()
 
         # durability rides the step boundary: stamp an epoch, pump the
         # queue (sync mode flushes one batch; async harvests completions),

@@ -1,0 +1,100 @@
+"""Unit tests for the CI perf-regression gate (benchmarks/compare_baseline).
+
+The acceptance check for ISSUE 5: a synthetic >4x regression must FAIL the
+build (exit 1), a 2-4x one must only warn, and the ALLOWLIST must exempt
+intentionally-moved rows from the blocking tier.  Pure host-side JSON work —
+no jax, tier 1.
+"""
+
+import json
+import subprocess
+import sys
+
+from benchmarks.compare_baseline import compare, load_allowlist
+
+
+def _write_bench(dirpath, suite, rows):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    path = dirpath / f"BENCH_{suite}.json"
+    path.write_text(json.dumps({
+        "suite": suite, "unix_time": 0.0,
+        "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                 for n, us in rows.items()]}))
+    return path
+
+
+def make_pair(tmp_path, base_rows, fresh_rows, suite="x"):
+    _write_bench(tmp_path / "baselines", suite, base_rows)
+    _write_bench(tmp_path / "fresh", suite, fresh_rows)
+    return str(tmp_path / "fresh"), str(tmp_path / "baselines")
+
+
+class TestBlockingGate:
+    def test_over_4x_regression_fails_the_build(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 450.0})
+        code, warns, fails = compare(fresh, base)
+        assert code == 1
+        assert fails == [("x.a", 4.5)]
+
+    def test_2x_to_4x_only_warns(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 250.0})
+        code, warns, fails = compare(fresh, base)
+        assert code == 0 and not fails
+        assert warns == [("x.a", 2.5)]
+
+    def test_within_threshold_is_clean(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 150.0})
+        assert compare(fresh, base) == (0, [], [])
+
+    def test_strict_escalates_warnings(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 250.0})
+        code, _, _ = compare(fresh, base, strict=True)
+        assert code == 1
+
+    def test_improvements_and_missing_rows_never_fail(self, tmp_path):
+        fresh, base = make_pair(tmp_path,
+                                {"x.a": 100.0, "x.gone": 10.0},
+                                {"x.a": 20.0, "x.new": 1.0})
+        assert compare(fresh, base) == (0, [], [])
+
+
+class TestAllowlist:
+    def test_allowlisted_row_does_not_block(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 900.0})
+        code, warns, fails = compare(fresh, base, allowlist=["x.a"])
+        assert code == 0 and not fails
+        assert warns == [("x.a", 9.0)]     # still surfaced, just not red
+
+    def test_fnmatch_pattern_matches_family(self, tmp_path):
+        fresh, base = make_pair(
+            tmp_path, {"x.a.b1": 100.0, "y.c": 100.0},
+            {"x.a.b1": 900.0, "y.c": 900.0})
+        code, _, fails = compare(fresh, base, allowlist=["x.a.*"])
+        assert code == 1                   # y.c still blocks
+        assert fails == [("y.c", 9.0)]
+
+    def test_allowlist_file_parsing(self, tmp_path):
+        p = tmp_path / "ALLOWLIST"
+        p.write_text("# comment\n\nx.a   # trailing comment\nread.*\n")
+        assert load_allowlist(str(p)) == ["x.a", "read.*"]
+        assert load_allowlist(str(tmp_path / "missing")) == []
+
+
+class TestCLI:
+    def test_module_exit_code_matches(self, tmp_path):
+        """The exact invocation CI uses must propagate the failure."""
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 450.0})
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.compare_baseline", fresh,
+             "--baselines", base],
+            capture_output=True, text=True)
+        assert proc.returncode == 1
+        assert "::error" in proc.stdout
+        # allowlist flips it green
+        allow = tmp_path / "ALLOW"
+        allow.write_text("x.*\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.compare_baseline", fresh,
+             "--baselines", base, "--allowlist", str(allow)],
+            capture_output=True, text=True)
+        assert proc.returncode == 0

@@ -335,6 +335,9 @@ class TestProtocolWriteback:
         invalidation must raise, not silently disagree."""
         kv, frames = make_cache()
         fill(kv, frames, [1])
+        # register the buffered write-grant dirty bit first, or the flush at
+        # reclaim_begin would re-dirty the oracle and undo the sabotage
+        kv.proto.flush_dirty_marks()
         kv.proto.oracle.entries[(1, 0)].dirty = False    # sabotage
         kv.proto.oracle.entries[(1, 0)].inv_dirty = False
         with pytest.raises(AssertionError, match="divergence"):

@@ -25,8 +25,9 @@ from repro.core import descriptors as D
 from repro.core import directory as dirx
 from repro.core import pagepool as pp
 from repro.core import refimpl as R
+from repro.core.coherence import CoherenceManager
 from repro.core.dpc_cache import DistributedKVCache
-from repro.core.tlb import TLBGroup
+from repro.core.tlb import MODE_M, MODE_O, MODE_S, TLBGroup
 
 NODES = 4
 CAP = 64
@@ -58,8 +59,8 @@ def seed_pages(kv, streams, pages, owner=0):
 class TestMappingTLBUnit:
     def test_install_lookup_drop(self):
         g = TLBGroup(2, slots=16)
-        g.install(0, 5, 3, owner=1, pfn=42, shared=True)
-        assert g.lookup(0, 5, 3) == (1, 42, True)
+        g.install(0, 5, 3, owner=1, pfn=42, mode=MODE_S)
+        assert g.lookup(0, 5, 3) == (1, 42, MODE_S)
         assert g.lookup(1, 5, 3) is None        # per-node isolation
         assert g.drop(0, (5, 3))
         assert g.lookup(0, 5, 3) is None
@@ -67,10 +68,18 @@ class TestMappingTLBUnit:
 
     def test_reinstall_updates_in_place(self):
         g = TLBGroup(1, slots=16)
-        g.install(0, 1, 1, owner=0, pfn=7, shared=False)
-        g.install(0, 1, 1, owner=2, pfn=19, shared=True)
-        assert g.lookup(0, 1, 1) == (2, 19, True)
+        g.install(0, 1, 1, owner=0, pfn=7, mode=MODE_O)
+        g.install(0, 1, 1, owner=2, pfn=19, mode=MODE_S)
+        assert g.lookup(0, 1, 1) == (2, 19, MODE_S)
         assert g.nodes[0].stats["installs"] == 1   # second was an update
+
+    def test_mode_upgrade_in_place(self):
+        """O -> M (write grant) is an in-place update, not a new install."""
+        g = TLBGroup(1, slots=16)
+        g.install(0, 1, 1, owner=0, pfn=7, mode=MODE_O)
+        g.install(0, 1, 1, owner=0, pfn=7, mode=MODE_M)
+        assert g.lookup(0, 1, 1) == (0, 7, MODE_M)
+        assert g.nodes[0].stats["installs"] == 1
 
     def test_capacity_replacement_never_wrong(self):
         """Overfilling a tiny TLB loses entries (it is a cache) but every
@@ -79,8 +88,8 @@ class TestMappingTLBUnit:
         truth = {}
         for i in range(32):
             key = (i, i * 3)
-            g.install(0, key[0], key[1], owner=i % 4, pfn=i, shared=False)
-            truth[key] = (i % 4, i, False)
+            g.install(0, key[0], key[1], owner=i % 4, pfn=i, mode=MODE_O)
+            truth[key] = (i % 4, i, MODE_O)
         hits = 0
         for key, want in truth.items():
             got = g.lookup(0, key[0], key[1])
@@ -91,23 +100,41 @@ class TestMappingTLBUnit:
 
     def test_flash_invalidates_everything(self):
         g = TLBGroup(2, slots=16)
-        g.install(0, 1, 0, 0, 5, False)
-        g.install(1, 1, 0, 0, 5, True)
+        g.install(0, 1, 0, 0, 5, MODE_O)
+        g.install(1, 1, 0, 0, 5, MODE_S)
         g.flash_all()
         assert g.lookup(0, 1, 0) is None and g.lookup(1, 1, 0) is None
         # slots are reusable after the flash
-        g.install(0, 1, 0, 2, 9, True)
-        assert g.lookup(0, 1, 0) == (2, 9, True)
+        g.install(0, 1, 0, 2, 9, MODE_S)
+        assert g.lookup(0, 1, 0) == (2, 9, MODE_S)
 
     def test_pending_queue_services_before_hit(self):
         g = TLBGroup(1, slots=16)
-        g.install(0, 7, 0, 0, 3, False)
+        g.install(0, 7, 0, 0, 3, MODE_O)
         g.post(0, (7, 0))
         # posted but not yet serviced: the entry is still visible (the
         # pre-ACK window real hardware also has)
         assert g.lookup(0, 7, 0) is not None
         assert g.service(0) == 1
         assert g.lookup(0, 7, 0) is None
+
+    def test_fence_forces_delivery_for_lagging_nodes(self):
+        """The bounded-staleness fence: a node that saw no batch traffic
+        since a post is behind its post epoch; fence() forces delivery."""
+        g = TLBGroup(3, slots=16)
+        g.install(1, 7, 0, 0, 3, MODE_S)
+        g.install(2, 7, 0, 0, 3, MODE_S)
+        g.post(1, (7, 0))
+        g.post(2, (7, 0))
+        # node 1 sees traffic (drain + deliver, the piggyback path)...
+        assert g.deliver(g.drain_for([1])) == 1
+        assert g.lookup(1, 7, 0) is None
+        # ...node 2 does not: it is behind until the fence forces it
+        assert g.served_epoch[2] < g.post_epoch[2]
+        assert g.fence([1, 2]) == 1           # only node 2 was behind
+        assert g.lookup(2, 7, 0) is None
+        assert g.stats["fenced"] == 1
+        assert g.fence([1, 2]) == 0           # everyone caught up
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +203,154 @@ class TestClearDirty:
         # the persisted bytes are still refillable after the clean eviction
         lk = kv.lookup([5], [0], 2)[0]
         assert lk.status == D.ST_GRANT_E and lk.refill is not None
+
+
+# ---------------------------------------------------------------------------
+# piggybacked shootdown lanes (descriptor encoding + delivery transport)
+# ---------------------------------------------------------------------------
+
+
+class TestPiggybackLanes:
+    def test_lane_encoding_roundtrip(self):
+        triples = [(2, 5, 0), (1, 7, 3)]
+        rows = D.encode_shootdowns(triples)
+        assert rows.shape == (2, D.N_LANES)
+        assert (rows[:, D.LANE_STREAM] == int(D.SHOOTDOWN)).all()
+        assert D.decode_shootdowns(rows) == triples
+
+    def test_shootdown_rows_are_directory_inert(self):
+        """A SHOOTDOWN lane riding an opcode batch must not touch directory
+        state — only the receiving node's TLB consumes it."""
+        d = dirx.init_directory(CFG)
+        rows = np.concatenate([np.asarray(batch(1, 0, 2)),
+                               D.encode_shootdowns([(3, 1, 0)])])
+        d, res = dirx.lookup_and_install(d, np.asarray(rows, np.int32),
+                                         max_probe=CAP)
+        res = np.asarray(res)
+        assert res[0, 0] == D.ST_GRANT_E       # the real row worked
+        assert len(dirx.to_host_dict(d, CFG)) == 1   # lane added nothing
+
+    def test_shootdown_rides_next_batch_for_the_node(self):
+        """Queued shootdowns are delivered by the next opcode batch routed
+        on the sharer's behalf — not by an in-process drain."""
+        kv = make_kv()
+        seed_pages(kv, [5], [0])
+        kv.lookup([5], [0], 2)
+        kv.lookup([5], [0], 2)                  # cached S-mapping on node 2
+        tlbs = kv.proto.tlbs
+        kv.proto.reclaim_begin(0, want=1)       # posts the shootdown to 2
+        assert (5, 0) in tlbs.entries(2)        # pre-delivery window
+        delivered0 = tlbs.stats["delivered"]
+        # any unrelated batch routed for node 2 carries the lane
+        kv.lookup([99], [0], 2)
+        assert (5, 0) not in tlbs.entries(2), \
+            "piggybacked shootdown did not ride the node's next batch"
+        assert tlbs.stats["delivered"] == delivered0 + 1
+        kv.proto.reclaim_ack(5, 0, 2)
+        kv.proto.reclaim_finish(0)
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# write grants: steady-state re-writes are directory-free, dirty bits never
+# lost behind a teardown
+# ---------------------------------------------------------------------------
+
+
+class TestWriteGrants:
+    def test_steady_state_rewrite_is_directory_free(self):
+        kv = make_kv()
+        seed_pages(kv, [1, 1], [0, 1])
+        proto = kv.proto
+        st = proto.mark_dirty([1, 1], [0, 1], 0)   # buffers, O -> M
+        assert (st == D.ST_OK).all()
+        reads = proto.counters["reads"]
+        st = proto.mark_dirty([1, 1], [0, 1], 0)   # pure MODE_M hits
+        assert (st == D.ST_OK).all()
+        assert proto.counters["reads"] == reads, \
+            "steady-state re-write touched the directory"
+        assert proto.counters["tlb_write_hits"] >= 4
+        # bits are buffered, not yet registered...
+        assert not any(v[4] for v in proto.directory_view().values())
+        # ...and land in ONE batched op per node at the flush
+        assert kv.flush_dirty_marks() == 2
+        assert all(v[4] for v in proto.directory_view().values())
+        assert proto.counters["dirty_mark_flushes"] == 1
+        assert proto.counters["oracle_mismatches"] == 0
+
+    def test_buffered_dirty_survives_reclaim_without_explicit_flush(self):
+        """The fence: reclaim_begin flushes the owner's buffered bits, so an
+        eviction that raced the step-boundary flush still writes back."""
+        kv = make_kv(storage_backend="memory", writeback_async=False,
+                     writeback_batch=4)
+        kv.set_page_bytes_fn(lambda key, pfn: np.ones((4,), np.float32))
+        seed_pages(kv, [5], [0])        # storage on -> commits mark dirty
+        assert kv.proto._dirty_buf[0], "commit's dirty mark was not buffered"
+        freed, wrote = kv.proto.reclaim_sync(0, 1)   # no explicit flush
+        assert freed == 1 and wrote == 1, \
+            "buffered dirty bit was lost behind the eviction"
+        assert not kv.proto._dirty_buf[0]
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_buffered_dirty_travels_with_migration(self):
+        kv = make_kv(storage_backend="memory", writeback_async=False,
+                     writeback_batch=4)
+        kv.set_page_bytes_fn(lambda key, pfn: np.ones((4,), np.float32))
+        seed_pages(kv, [7], [0])                 # dirty mark buffered @0
+        kv.lookup([7], [0], 1)
+        moved = kv.proto.migrate_sync([((7, 0), 1)])
+        assert len(moved) == 1
+        # migrate_begin flushed the buffer; the hand-off checkpointed the
+        # moving frame exactly as a registered-dirty page would
+        assert kv.proto.counters["migration_writebacks"] == 1
+        assert not kv.proto._dirty_buf[0]
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_write_grant_dies_with_ownership(self):
+        kv = make_kv()
+        seed_pages(kv, [9], [0])
+        kv.proto.mark_dirty([9], [0], 0)         # M-cached at node 0
+        kv.flush_dirty_marks()
+        kv.lookup([9], [0], 1)
+        kv.proto.migrate_sync([((9, 0), 1)])     # ownership moves away
+        assert (9, 0) not in kv.proto.tlbs.entries(0)
+        # a late write from the old owner falls through to the directory
+        # and is refused — never silently served from a stale grant
+        st = kv.proto.mark_dirty([9], [0], 0)
+        assert st[0] == D.ST_BAD
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_sc_rewrite_keeps_pages_hot(self):
+        """TLB-served write_prepare owner hits must still feed CLOCK heat
+        (the directory path touched HIT_OWNER rows) — hot re-written pages
+        must not look cold to the eviction scan."""
+        kv = make_kv()
+        proto = kv.proto
+        coh = CoherenceManager(proto, "dpc_sc")
+        coh.commit(coh.prepare([4, 4], [0, 1], 0))     # first write: locks
+        slots = [v[3] % kv.dpc.pool_pages_per_shard
+                 for v in proto.directory_view().values()]
+        hot_before = np.asarray(proto.state.pools[0].hot)[slots]
+        for _ in range(3):
+            coh.commit(coh.prepare([4, 4], [0, 1], 0))  # TLB-served
+        proto.flush_dirty_marks()                       # heat + dirty land
+        hot_after = np.asarray(proto.state.pools[0].hot)[slots]
+        assert (hot_after >= np.minimum(hot_before + 3, pp.HOT_MAX)).all()
+
+    def test_strong_write_rehit_is_directory_free(self):
+        kv = make_kv()
+        proto = kv.proto
+        coh = CoherenceManager(proto, "dpc_sc")
+        coh.commit(coh.prepare([3, 3], [0, 1], 0))   # first write: locks E
+        reads = proto.counters["reads"]
+        t = coh.prepare([3, 3], [0, 1], 0)           # re-write: TLB-served
+        assert len(t.owner_rows) == 2
+        assert coh.commit(t) == 2
+        assert proto.counters["reads"] == reads, \
+            "DPC_SC re-write of owned pages touched the directory"
+        kv.flush_dirty_marks()
+        assert all(v[4] for v in proto.directory_view().values())
+        assert proto.counters["oracle_mismatches"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -288,14 +463,18 @@ class TestTLBCoherence:
 
 
 N_KEYS = 6
-OPS = ["read", "read", "reclaim_begin", "migrate_begin", "ack_one",
-       "reclaim_finish", "migrate_finish", "drop", "fail"]
+OPS = ["read", "read", "write", "write", "reclaim_begin", "migrate_begin",
+       "ack_one", "reclaim_finish", "migrate_finish", "drop",
+       "flush_writes", "fail"]
 
 
-def _run_interleaving(events):
+def _run_interleaving(events, piggyback=True):
     """Every event is chased by a cached-reader lookup; the shadow oracle
-    (check_tlb_grant) asserts shootdown-before-complete at each one."""
-    kv = make_kv(pool_pages=4)
+    (check_tlb_grant / check_tlb_write_grant) asserts
+    shootdown-before-complete and zero stale write grants at each one.
+    Returns the settled (directory view, writeback count) for the
+    piggyback==sync equivalence property."""
+    kv = make_kv(pool_pages=4, tlb_shootdown_piggyback=piggyback)
     proto = kv.proto
     keys = [(11, p) for p in range(N_KEYS)]
     failed = set()
@@ -316,6 +495,13 @@ def _run_interleaving(events):
         if op == "read":
             lks = kv.lookup([s], [p], node)
             kv.commit([s], [p], node, lks)
+        elif op == "write":
+            # a cached writer: owner-mode entries take the buffered
+            # write-grant fast path, everyone else hits the directory (and
+            # may legally be refused) — the oracle checks both
+            proto.mark_dirty([s], [p], node)
+        elif op == "flush_writes":
+            proto.flush_dirty_marks()
         elif op == "reclaim_begin":
             proto.reclaim_begin(node, want=1)
         elif op == "migrate_begin":
@@ -346,21 +532,37 @@ def _run_interleaving(events):
     for node in range(NODES):
         proto.reclaim_finish(node)
     proto.migrate_finish()
+    proto.flush_dirty_marks()
     for node in range(NODES):
         for s, p in keys:
             kv.lookup([s], [p], node)
     assert proto.counters["oracle_mismatches"] == 0
+    return proto.directory_view(), proto.counters["writebacks"]
+
+
+def _seeded_events(seed: int, n: int = 70):
+    rng = np.random.default_rng(seed)
+    return [(OPS[rng.integers(len(OPS))],
+             int(rng.integers(N_KEYS)), int(rng.integers(NODES)),
+             int(rng.integers(NODES)))
+            for _ in range(n)]
 
 
 @pytest.mark.parametrize("seed", range(4))
 def test_tlb_coherence_under_seeded_interleavings(seed):
-    """Tier-1 fixed-seed variant (runs even without hypothesis)."""
-    rng = np.random.default_rng(seed)
-    events = [(OPS[rng.integers(len(OPS))],
-               int(rng.integers(N_KEYS)), int(rng.integers(NODES)),
-               int(rng.integers(NODES)))
-              for _ in range(70)]
-    _run_interleaving(events)
+    """Tier-1 fixed-seed variant (runs even without hypothesis): cached
+    readers AND cached writers race reclaim/migrate/fail_node."""
+    _run_interleaving(_seeded_events(seed))
+
+
+@pytest.mark.parametrize("seed", range(4, 7))
+def test_piggyback_equals_sync_draining_seeded(seed):
+    """Tier-1 fixed-seed equivalence: delivering shootdowns as piggybacked
+    lanes must settle to the same directory state and the same writeback
+    decisions as the legacy synchronous draining (both oracle-clean)."""
+    events = _seeded_events(seed)
+    assert _run_interleaving(events, piggyback=True) == \
+        _run_interleaving(events, piggyback=False)
 
 
 if HAVE_HYPOTHESIS:
@@ -380,7 +582,20 @@ if HAVE_HYPOTHESIS:
     def test_tlb_coherence_under_interleavings(events):
         """Hypothesis-driven search over the same space (with shrinking)."""
         _run_interleaving(events)
+
+    @pytest.mark.property
+    @settings(deadline=None)
+    @given(EVENTS)
+    def test_piggyback_equals_sync_draining(events):
+        """Property: piggybacked lane delivery ≡ synchronous draining under
+        the refimpl oracle — same settled directory, same writebacks."""
+        assert _run_interleaving(events, piggyback=True) == \
+            _run_interleaving(events, piggyback=False)
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_tlb_coherence_under_interleavings():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_piggyback_equals_sync_draining():
         pass
