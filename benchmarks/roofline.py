@@ -1,7 +1,17 @@
-"""Roofline table — reads results/dryrun.json (produced by launch/dryrun.py)
-and prints the per-(arch × shape × mesh) three-term roofline with bottleneck
+"""Roofline table.
+
+Full mode reads results/dryrun.json (produced by launch/dryrun.py) and
+prints the per-(arch × shape × mesh) three-term roofline with bottleneck
 and MFU-at-bound.  The dry-run itself needs the 512-device flag, so it runs
-as its own process; this module only reports."""
+as its own process; full mode only reports.
+
+``--smoke`` computes the *analytic* two-term roofline (compute + HBM; no
+HLO, so no collective term) for a fixed set of representative cells via
+repro.launch.analytic — pure architecture math, no lowering, no XLA flags,
+seconds-scale.  The emitted ``us_per_call`` is the analytic step bound
+t_bound·1e6: fully deterministic, so the committed baseline gate flags any
+drift in the cost model itself rather than scheduler noise.
+"""
 
 from __future__ import annotations
 
@@ -12,8 +22,84 @@ from benchmarks.common import emit
 
 RESULTS = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
 
+# representative (arch, shape) cells across block kinds: dense, MoE, MLA,
+# SSM-hybrid — single-pod mesh, ship_compute datapath
+SMOKE_CELLS = (
+    ("qwen3-1.7b", "train_4k"),
+    ("qwen3-1.7b", "decode_32k"),
+    ("deepseek-v2-lite-16b", "prefill_32k"),
+    ("qwen3-moe-235b-a22b", "train_4k"),
+    ("zamba2-1.2b", "train_4k"),
+)
 
-def run():
+
+def _smoke_run_config(arch_id: str, shape_name: str):
+    """Minimal RunConfig for the analytic model (mirrors dryrun.build_run
+    without importing dryrun — its module import pins XLA_FLAGS)."""
+    from repro.configs import get_arch, get_shape
+    from repro.configs.base import (DPCConfig, RunConfig, ShardingConfig,
+                                    shape_applicable)
+    from repro.launch.mesh import mesh_config
+    from repro.training import presets
+
+    arch = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        return None, why
+    tk = presets.train_knobs(arch_id)
+    sk = presets.serve_knobs(arch_id)
+    mesh_cfg = mesh_config(multi_pod=False)
+    page = sk.page_size
+    pages_per_req = (shape.seq_len + page - 1) // page
+    dpc = DPCConfig(mode="dpc", page_size=page,
+                    pool_pages_per_shard=max(
+                        4, -(-shape.global_batch * pages_per_req
+                             // mesh_cfg.num_chips) + 2),
+                    max_pages_per_seq=pages_per_req, kv_dtype=sk.kv_dtype)
+    run = RunConfig(arch=arch, shape=shape, mesh=mesh_cfg,
+                    sharding=ShardingConfig(
+                        sequence_parallel=tk.sequence_parallel),
+                    dpc=dpc)
+    return run, ""
+
+
+def _run_smoke() -> None:
+    from repro.launch import analytic
+    from repro.launch.hloanalysis import Roofline
+    from repro.training import presets
+
+    n_cells = 0
+    for arch_id, shape_name in SMOKE_CELLS:
+        run, why = _smoke_run_config(arch_id, shape_name)
+        if run is None:
+            emit(f"roofline.analytic.{arch_id}.{shape_name}", 0.0,
+                 f"skipped: {why}")
+            continue
+        tk = presets.train_knobs(arch_id)
+        n_dev = run.mesh.num_chips
+        costs = analytic.cell_costs(
+            run, n_micro=tk.n_micro,
+            accum_bytes=2 if tk.accum_dtype == "bfloat16" else 4,
+            moment_bytes=2 if tk.moment_dtype == "bfloat16" else 4,
+            kv_dtype_bytes=1 if run.dpc.kv_dtype == "int8" else 2)
+        roof = Roofline(flops_per_dev=costs.flops_total / n_dev,
+                        hbm_bytes_per_dev=costs.hbm_bytes_total / n_dev,
+                        link_bytes_per_dev=0.0, num_devices=n_dev,
+                        model_flops_total=costs.model_flops)
+        emit(f"roofline.analytic.{arch_id}.{shape_name}",
+             roof.t_bound * 1e6,
+             f"tc={roof.t_compute:.2e} tm={roof.t_memory:.2e} "
+             f"dom={roof.bottleneck} mfu_bound={roof.mfu_bound:.3f} "
+             f"(analytic, no collective term)")
+        n_cells += 1
+    emit("roofline.analytic.summary", 0.0, f"cells={n_cells}")
+
+
+def run(smoke: bool = False):
+    if smoke:
+        _run_smoke()
+        return
     if not os.path.exists(RESULTS):
         emit("roofline.missing", 0.0,
              f"run `python -m repro.launch.dryrun` first ({RESULTS})")

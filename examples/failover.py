@@ -1,8 +1,12 @@
 """Fault-tolerance drill: training with a simulated node failure +
-restart-from-checkpoint, and serving with a replica failure mid-stream.
+restart-from-checkpoint, and serving through the full membership
+lifecycle — join, drain (planned departure with ownership evacuation), and
+failover (heartbeat loss with re-homing from the durable backing store).
 
-Run:  PYTHONPATH=src python examples/failover.py
+Run:  PYTHONPATH=src python examples/failover.py [--smoke]
 """
+
+import argparse
 
 import jax
 
@@ -16,53 +20,89 @@ from repro.runtime.liveness import Membership, elastic_mesh_shape
 from repro.serving.engine import ServingEngine
 
 
-def train_failover():
-    print("== training: kill node at step 60, restart from checkpoint ==")
+def train_failover(smoke: bool = False):
+    print("== training: kill node mid-run, restart from checkpoint ==")
     from repro.launch import train
-    train.main(["--arch", "qwen3-1.7b", "--steps", "100", "--batch", "4",
+    steps, kill_at = ("60", "30") if smoke else ("100", "60")
+    train.main(["--arch", "qwen3-1.7b", "--steps", steps, "--batch", "4",
                 "--seq", "64", "--ckpt-dir", "/tmp/repro_failover",
-                "--ckpt-every", "25", "--kill-at", "60", "--log-every", "25"])
+                "--ckpt-every", "25", "--kill-at", kill_at,
+                "--log-every", "25"])
 
 
-def serving_failover():
-    print("\n== serving: replica 1 dies; its pages are lost, cluster "
-          "recovers ==")
+def serving_failover(smoke: bool = False):
+    print("\n== serving: drain replica 2 (planned), fail replica 1 "
+          "(crash), re-home from the durable store ==")
     arch = get_smoke_arch("granite-3-2b")
     api = registry.get_model(arch)
     params = init_params(api.specs(arch), jax.random.PRNGKey(0))
     run = RunConfig(arch=arch, shape=ShapeConfig("s", 64, 4, "decode"),
                     mesh=MeshConfig((1,), ("data",)),
-                    dpc=DPCConfig(page_size=8, pool_pages_per_shard=64))
-    kv = DistributedKVCache(run.dpc, 2)
+                    dpc=DPCConfig(page_size=8, pool_pages_per_shard=64,
+                                  storage_backend="memory",
+                                  writeback_async=False,
+                                  shadow_oracle=True))
+    n_nodes = 3
+    kv = DistributedKVCache(run.dpc, n_nodes)
     engines = [ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
-                             node=i, num_nodes=2, kv_cache=kv)
-               for i in range(2)]
-    membership = Membership(num_nodes=2)
+                             node=i, num_nodes=n_nodes, kv_cache=kv)
+               for i in range(n_nodes)]
+    membership = Membership(num_nodes=n_nodes)
 
     prompt = list(range(10, 34))
-    engines[1].submit(prompt, max_new_tokens=2)
-    for _ in range(20):
-        if engines[1].step() == 0:
-            break
-    print(f"  replica 1 cached {kv.directory_occupancy()} pages")
+    for node, toks in ((1, prompt), (2, list(range(50, 74)))):
+        engines[node].submit(toks, max_new_tokens=2)
+        for _ in range(20):
+            if engines[node].step() == 0:
+                break
+    print(f"  directory holds {kv.directory_occupancy()} pages "
+          f"across {n_nodes} replicas")
 
-    # replica 1 dies: directory drops it; epoch bumps; mesh shrinks
+    # planned departure: replica 2 evacuates before leaving — ownership
+    # batch-MIGRATEs to the survivors, dirty obligations flush, and its
+    # mapping cache retires precisely (no cluster-wide TLB flash)
+    membership.drain(2)
+    st = engines[0].drain_node(2, alive=sorted(membership.alive))
+    print(f"  replica 2 drained: {st['migrated']} pages evacuated, "
+          f"{st['shares_dropped']} sharer mappings retired, "
+          f"{st['aborted']} aborted (epoch={membership.epoch})")
+
+    # crash: replica 1's heartbeat lapses.  Its pages' last-committed bytes
+    # are in the durable tier (fills flush through the writeback queue), so
+    # the survivor re-homes them into E-state instead of dropping them.
+    kv.checkpoint_dirty()
     membership.evict(1, "fail")
-    lost = kv.fail_node(1)
-    print(f"  replica 1 failed -> {lost} owned pages lost "
-          f"(cache shrink, not data loss: prefill regenerates)")
+    lost = engines[0].fail_node(1, rehome_to=0)
+    c = kv.proto.counters
+    print(f"  replica 1 failed -> {lost} owned entries dropped, "
+          f"{c['rehomed_pages']} re-homed from the store, "
+          f"{c['rehome_deferred']} deferred, "
+          f"{c['lost_dirty_pages']} committed dirty pages lost")
+    assert c["lost_dirty_pages"] == 0, "durability broken across failover"
     print(f"  membership epoch={membership.epoch}; new mesh for 16 "
           f"chips/replica: {elastic_mesh_shape(16, 16)}")
 
-    # replica 0 re-reads the prompt: misses, refills, keeps serving
+    # replica 0 keeps serving through the shrunken pool
     engines[0].submit(prompt, max_new_tokens=2)
     for _ in range(20):
         if engines[0].step() == 0:
             break
-    print(f"  replica 0 refilled; directory occupancy="
+    print(f"  replica 0 kept serving; directory occupancy="
           f"{kv.directory_occupancy()}, stats={engines[0].stats.as_dict()}")
+
+    # the drained replica rejoins empty and is re-seeded with cold pages
+    membership.join(2)
+    kv.rejoin_node(2)
+    moved = kv.rebalance_join(2, copy_fn=engines[0]._copy_page)
+    print(f"  replica 2 rejoined (epoch={membership.epoch}) and inherited "
+          f"{len(moved)} cold pages")
+    kv.close()
 
 
 if __name__ == "__main__":
-    train_failover()
-    serving_failover()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter train leg for CI")
+    args = ap.parse_args()
+    train_failover(smoke=args.smoke)
+    serving_failover(smoke=args.smoke)

@@ -101,4 +101,11 @@ class CoherenceManager:
                                   ticket.pages[ticket.owner_rows],
                                   ticket.node)
             n_ops += len(ticket.owner_rows)
+        if ticket.strong and len(ticket.remote_rows):
+            # strong mode promises sharer writes are visible at unlock:
+            # S-mode marks routed through the buffered fast path register
+            # now, in one batched directory op for the whole range.  Owner
+            # re-writes stay buffered (M-grant semantics, flushed at step
+            # boundaries) — that keeps the owned two-step directory-free
+            self.proto.flush_dirty_marks(ticket.node)
         return n_ops

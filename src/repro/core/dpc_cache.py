@@ -306,10 +306,98 @@ class DistributedKVCache:
         self.stats["migrations"] += len(moved)
         return moved
 
-    def fail_node(self, node: int) -> int:
-        lost = self.proto.fail_node(node)
+    def fail_node(self, node: int, rehome_to: Optional[int] = None,
+                  install_fn: Optional[Callable] = None) -> int:
+        lost = self.proto.fail_node(node, rehome_to=rehome_to,
+                                    install_fn=install_fn)
         self._replica_maps[node].clear()
+        self._touch_buf[node].clear()
         return lost
+
+    # ------------------------------------------------------------------
+    # elastic membership
+    # ------------------------------------------------------------------
+
+    def join_node(self) -> int:
+        """Grow the cluster by one node (facade + protocol state)."""
+        node = self.proto.add_node()
+        self.num_nodes = self.proto.cfg.num_nodes
+        self._touch_buf.append({})
+        self._replica_maps.append({})
+        self._replica_free.append(
+            list(range(self.dpc.pool_pages_per_shard - 1, -1, -1)))
+        return node
+
+    def rejoin_node(self, node: int) -> None:
+        """A known node returns from drain/failure with empty caches."""
+        self.proto.rejoin_node(node)
+        self._touch_buf[node].clear()
+        self._replica_maps[node].clear()
+        self._replica_free[node] = list(
+            range(self.dpc.pool_pages_per_shard - 1, -1, -1))
+
+    def rebalance_join(self, node: int, batch: Optional[int] = None,
+                       copy_fn=None) -> List[Tuple[Tuple[int, int],
+                                                   int, int]]:
+        """Seed a joined node with the cluster's coldest pages (ordinary
+        MIGRATE rounds through the hotness machinery)."""
+        return self.migrator.rebalance_join(node, batch=batch,
+                                            copy_fn=copy_fn)
+
+    def drain_node(self, node: int, alive: Optional[Sequence[int]] = None,
+                   copy_fn=None) -> Dict:
+        """Planned departure: evacuate everything ``node`` holds before it
+        leaves.  Destinations prefer the hotness ledger's heaviest remote
+        accessor per page, falling back to a deterministic spread over
+        ``alive``.  Returns the protocol drain stats (``moved`` carries
+        (key, old_pfn, new_pfn) for page-table rewriting)."""
+        self.flush_tlb_touches()
+        if alive is None:
+            alive = [n for n in range(self.num_nodes) if n != node]
+        alive = [n for n in alive if n != node]
+        assert alive, "drain needs at least one surviving node"
+
+        def dest_fn(key):
+            hot, _ = self.migrator.ledger.hottest(key)
+            if hot in alive:
+                return hot
+            return alive[(key[0] ^ key[1]) % len(alive)]
+
+        st = self.proto.drain_node(node, dest_fn=dest_fn, copy_fn=copy_fn)
+        self._touch_buf[node].clear()
+        self._replica_maps[node].clear()
+        return st
+
+    def checkpoint_dirty(self, node: Optional[int] = None) -> int:
+        """Persist registered dirty pages out-of-band (see protocol)."""
+        return self.proto.checkpoint_dirty(node)
+
+    def attach_membership(self, membership, install_fn=None,
+                          copy_fn=None) -> None:
+        """Subscribe the cache to membership epochs: joins grow (or re-seed)
+        state, drains evacuate through the protocol, failures re-home
+        orphans from the durable tier onto the first survivor."""
+
+        def on_change(ev) -> None:
+            if ev.kind == "join":
+                if ev.node >= self.num_nodes:
+                    self.join_node()
+                else:
+                    self.rejoin_node(ev.node)
+            elif ev.kind == "drain":
+                # drain fires while the node is still listed alive
+                dests = sorted(membership.alive - {ev.node})
+                if dests:
+                    self.drain_node(ev.node, alive=dests, copy_fn=copy_fn)
+            elif ev.kind in ("fail", "evict_straggler"):
+                survivors = sorted(membership.alive - {ev.node})
+                rehome = survivors[0] if (survivors and (
+                    self.store is not None or self.writeback is not None)) \
+                    else None
+                self.fail_node(ev.node, rehome_to=rehome,
+                               install_fn=install_fn)
+
+        membership.on_change(on_change)
 
     # ------------------------------------------------------------------
     # uncoordinated baselines

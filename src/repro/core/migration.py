@@ -160,3 +160,59 @@ class OwnershipMigrator:
         for node in range(self.proto.cfg.num_nodes):
             self.proto._pool_update(node,
                                     pp.decay_hot(self.proto.state.pools[node]))
+
+    # -- elastic join ---------------------------------------------------------
+
+    def rebalance_join(self, new_node: int,
+                       donors: Optional[List[int]] = None,
+                       batch: Optional[int] = None, ack_fn=None, copy_fn=None
+                       ) -> List[Tuple[Key, int, int]]:
+        """Seed a freshly joined node with the donors' *coldest* pages.
+
+        The inverse of the hotness policy: a newcomer has no access history,
+        so instead of waiting for the ledger to warm up, the cluster hands
+        it the pages the donors care least about — per-slot pool hotness
+        picks them (coldest first, heaviest donor first on ties), and the
+        hand-offs are ordinary batched MIGRATE transactions.  ``batch``
+        defaults to an even post-join share of the installed pages."""
+        import numpy as np
+
+        from repro.core import pagepool as pp
+
+        proto = self.proto
+        if donors is None:
+            donors = [n for n in range(proto.cfg.num_nodes) if n != new_node]
+        donors = [d for d in donors if d != new_node]
+        if not donors:
+            return []
+        pending = set(proto.pending_inv) | set(proto.pending_mig)
+        cand: List[Tuple[int, int, int, Key]] = []  # (hot, -load, donor, key)
+        loads: Dict[int, int] = {}
+        for d in donors:
+            pool = proto.state.pools[d]
+            ss = np.asarray(pool.slot_state)
+            hot = np.asarray(pool.hot)
+            keys = np.asarray(pool.key_of)
+            rows = np.nonzero(ss == pp.S_INSTALLED)[0]
+            loads[d] = len(rows)
+            for i in rows:
+                key = (int(keys[i, 0]), int(keys[i, 1]))
+                if key in pending or self._cooldown.get(key, 0) > self.round:
+                    continue
+                cand.append((int(hot[i]), 0, d, key))
+        if not cand:
+            return []
+        cand = [(h, -loads[d], d, k) for h, _, d, k in cand]
+        cand.sort(key=lambda t: (t[0], t[1], t[3]))
+        if batch is None:
+            batch = sum(loads.values()) // (len(donors) + 1)
+        pairs = [(k, new_node) for _, _, _, k in cand[:max(batch, 0)]]
+        moved: List[Tuple[Key, int, int]] = []
+        for i in range(0, len(pairs), self.cfg.batch_size):
+            moved.extend(proto.migrate_sync(pairs[i:i + self.cfg.batch_size],
+                                            ack_fn=ack_fn, copy_fn=copy_fn))
+        for key, _, _ in moved:
+            self._cooldown[key] = self.round + self.cfg.cooldown_rounds
+            self.ledger.forget(key)
+        self.stats["migrated"] += len(moved)
+        return moved

@@ -67,6 +67,16 @@ class ProtocolConfig:
     # oracle's needs_writeback — protocol/oracle divergence fails loudly
     # instead of silently dropping (or double-writing) page data
     shadow_oracle: bool = False
+    # directory shard count, frozen at construction.  Elastic joins grow
+    # num_nodes but must never re-hash existing keys to new shards, so
+    # placement stays pinned to the founding layout.  0 resolves from
+    # placement/num_nodes in __post_init__.
+    num_shards: int = 0
+
+    def __post_init__(self) -> None:
+        if self.num_shards <= 0:
+            self.num_shards = 1 if self.placement == "central" \
+                else self.num_nodes
 
     def dir_config(self) -> dirx.DirectoryConfig:
         return dirx.DirectoryConfig(self.directory_capacity, self.num_nodes,
@@ -85,19 +95,21 @@ class DPCState(NamedTuple):
 
 
 def init_state(cfg: ProtocolConfig) -> DPCState:
-    n_dirs = 1 if cfg.placement == "central" else cfg.num_nodes
     dcfg = cfg.dir_config()
     return DPCState(
-        dirs=tuple(dirx.init_directory(dcfg) for _ in range(n_dirs)),
+        dirs=tuple(dirx.init_directory(dcfg) for _ in range(cfg.num_shards)),
         pools=tuple(pp.init_pool(cfg.pool_pages) for _ in range(cfg.num_nodes)),
     )
 
 
 def dir_shard_of(cfg: ProtocolConfig, stream: int, page: int) -> int:
-    """Which directory shard owns the entry for (stream, page)."""
-    if cfg.placement == "central":
+    """Which directory shard owns the entry for (stream, page).
+
+    Keyed on the frozen ``num_shards`` — a node joining later grows the
+    cluster but never moves existing entries between shards."""
+    if cfg.num_shards == 1:
         return 0
-    return D.hash_key_py(stream, page) % cfg.num_nodes
+    return D.hash_key_py(stream, page) % cfg.num_shards
 
 
 def _group_by_shard(cfg: ProtocolConfig, streams, pages) -> Dict[int, List[int]]:
@@ -159,6 +171,11 @@ class DPCProtocol:
         # frames pinned in S_WRITEBACK until their flush commits:
         # (node, slot) -> key.  release refuses these (flush-before-free).
         self._wb_outstanding: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # tokens orphaned by a node rejoin: the node's pool was re-initialized
+        # fresh, so when these flushes commit the frames must NOT be released
+        # into the reborn pool (that would double-free a slot) — harvest
+        # discards them instead.  The obligations' bytes still flush normally.
+        self._wb_stale: set = set()
         # per-node mapping cache + shootdown plumbing (core/tlb.py); the
         # protocol keeps it coherent (installs on commit, precise shootdowns
         # on teardown fan-outs, epoch flash on node failure) and the cache
@@ -185,9 +202,8 @@ class DPCProtocol:
         # executable-spec shadow (satellite: divergence must fail loudly)
         self.oracle: Optional[refimpl.RefDirectory] = None
         if cfg.shadow_oracle:
-            n_dirs = 1 if cfg.placement == "central" else cfg.num_nodes
             self.oracle = refimpl.RefDirectory(
-                cfg.directory_capacity * n_dirs, cfg.num_nodes)
+                cfg.directory_capacity * cfg.num_shards, cfg.num_nodes)
         # counters for the microbenchmarks
         self.counters = {
             "reads": 0, "grants": 0, "remote_hits": 0, "local_hits": 0,
@@ -199,6 +215,9 @@ class DPCProtocol:
             "oracle_mismatches": 0, "dirty_clears": 0,
             "tlb_write_hits": 0, "write_prepare_hits": 0,
             "dirty_buffered": 0, "dirty_mark_flushes": 0,
+            "joins": 0, "rejoins": 0, "drains": 0, "drained_pages": 0,
+            "drain_aborts": 0, "rehomed_pages": 0, "rehome_deferred": 0,
+            "lost_dirty_pages": 0, "checkpointed_pages": 0,
         }
 
     def attach_storage(self, store=None, writeback=None,
@@ -320,7 +339,15 @@ class DPCProtocol:
             return 0
         done = self.writeback.drain_completions()
         by_node: Dict[int, List[int]] = {}
-        for token, _key in done:
+        for token, key in done:
+            if token in self._wb_stale:
+                # a rejoin re-initialized this node's pool: the flush is
+                # durable but the frame no longer exists — do not release
+                # the slot into the reborn pool
+                self._wb_stale.discard(token)
+                if self._wb_outstanding.get(token) == key:
+                    self._wb_outstanding.pop(token)
+                continue
             self._wb_outstanding.pop(token, None)
             by_node.setdefault(token[0], []).append(token[1])
         for node, slots in by_node.items():
@@ -556,11 +583,15 @@ class DPCProtocol:
         Rows whose mapping is cached in owner mode complete with zero
         directory ops: a MODE_M entry means the bit is already registered
         (or buffered); a MODE_O hit buffers the key into the node's dirty
-        set and upgrades the entry to MODE_M.  Buffered bits flush in ONE
-        batched directory op per engine step (``flush_dirty_marks``) — and
-        always before a teardown can observe the page, so the writeback
-        obligation can never be lost.  Only the remaining rows (sharer
-        mappings, misses) pay the per-call directory pipeline.
+        set and upgrades the entry to MODE_M.  Sharer-mode hits buffer the
+        same way (the write went through the coherent S mapping into the
+        owner's frame — only the *bit* needs to reach the directory, and it
+        can ride the batched flush or, if a teardown races in first, the
+        node's INV_ACK dirty lane).  Buffered bits flush in ONE batched
+        directory op per engine step (``flush_dirty_marks``) — and always
+        before a teardown can observe the page, so the writeback obligation
+        can never be lost.  Only true misses pay the per-call directory
+        pipeline.
         """
         streams = np.asarray(streams, np.int32)
         pages = np.asarray(pages, np.int32)
@@ -571,6 +602,7 @@ class DPCProtocol:
             owners, pfns, modes, hit = self.tlbs.lookup_batch(node, streams,
                                                               pages)
             own_hit = hit & (modes >= MODE_O)
+            s_hit = hit & (modes == MODE_S)
             buf = self._dirty_buf[node]
             for i in np.nonzero(own_hit)[0]:
                 key = (int(streams[i]), int(pages[i]))
@@ -580,8 +612,15 @@ class DPCProtocol:
                                       int(pfns[i]), MODE_M)
                     self.counters["dirty_buffered"] += 1
                 self.check_tlb_write_grant(key, node, int(pfns[i]))
-            self.counters["tlb_write_hits"] += int(own_hit.sum())
-            miss = np.nonzero(~own_hit)[0]
+            for i in np.nonzero(s_hit)[0]:
+                key = (int(streams[i]), int(pages[i]))
+                self.check_tlb_grant(key, node, int(owners[i]),
+                                     int(pfns[i]), True)
+                if key not in buf:
+                    buf.add(key)
+                    self.counters["dirty_buffered"] += 1
+            self.counters["tlb_write_hits"] += int((own_hit | s_hit).sum())
+            miss = np.nonzero(~(own_hit | s_hit))[0]
         if len(miss):
             res, _ = self._routed(dirx.mark_dirty, streams[miss],
                                   pages[miss], node)
@@ -611,15 +650,31 @@ class DPCProtocol:
             buf = self._dirty_buf[nd]
             if not buf:
                 continue
-            keys = sorted(buf)
+            # keys mid-teardown stay buffered: TBI/TBM refuse mark_dirty, so
+            # a sharer-buffered bit for a page whose owner started a reclaim
+            # or migration rides the node's INV_ACK dirty lane instead
+            # (_take_buffered_dirty) — flushing it here would land BAD and
+            # drop the writeback obligation
+            held = {k for k in buf
+                    if k in self.pending_inv or k in self.pending_mig}
+            keys = sorted(buf - held)
             buf.clear()
+            buf.update(held)
+            if not keys:
+                continue
             res, _ = self._routed(dirx.mark_dirty,
                                   [k[0] for k in keys],
                                   [k[1] for k in keys], nd)
             if self.oracle is not None:
                 for (s, p), st in zip(keys, res[:, 0]):
                     self._oracle_op("mark_dirty", s, p, nd, expect=int(st))
-                    assert int(st) == D.ST_OK, (
+                    # a mark may legitimately outlive its entry: the owner
+                    # died (fail_node wiped the key) between buffering and
+                    # this flush — the data died with the owner and dropping
+                    # the mark is correct.  An entry the oracle still holds
+                    # means the flush-before-teardown fence was violated.
+                    assert int(st) == D.ST_OK or \
+                        (s, p) not in self.oracle.entries, (
                         f"buffered dirty mark for {(s, p)} on node {nd} "
                         f"landed {D.STATUS_NAMES.get(int(st), st)} — it was "
                         f"flushed after a teardown observed the page (the "
@@ -627,6 +682,19 @@ class DPCProtocol:
             total += len(keys)
             self.counters["dirty_mark_flushes"] += 1
         return total
+
+    def _take_buffered_dirty(self, key: Tuple[int, int], node: int) -> bool:
+        """Pop ``key`` from ``node``'s buffered dirty set.
+
+        Sharer-side marks held back from the batched flush while the key is
+        mid-teardown (TBI/TBM refuse mark_dirty) are carried by the node's
+        INV_ACK / voluntary-drop dirty lane instead — the teardown paths
+        call this to fold the buffered bit in."""
+        buf = self._dirty_buf[node]
+        if key in buf:
+            buf.discard(key)
+            return True
+        return False
 
     def clear_dirty(self, streams, pages, node: int) -> np.ndarray:
         """CLEAR_DIRTY: drop the writeback obligation of pages whose bytes
@@ -774,11 +842,14 @@ class DPCProtocol:
         """
         if self.tlbs is not None and not self.cfg.tlb_piggyback:
             self.tlbs.service(node)   # legacy synchronous draining
+        key = (stream, page)
+        # a buffered sharer-side mark held back from the batched flush (the
+        # key was already in TBI) rides this ACK's dirty lane
+        dirty = bool(dirty) or self._take_buffered_dirty(key, node)
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
                         expect=int(res[0, 0]))
-        key = (stream, page)
         if key in self.pending_inv:
             self.pending_inv[key]["waiting"].discard(node)
         self.counters["inv_acks"] += 1
@@ -925,11 +996,14 @@ class DPCProtocol:
         the ACK batch carries the node's pending shootdown lanes)."""
         if self.tlbs is not None and not self.cfg.tlb_piggyback:
             self.tlbs.service(node)   # legacy synchronous draining
+        key = (stream, page)
+        # held-back sharer-side marks ride the migration ACK the same way
+        # they ride a reclamation ACK
+        dirty = bool(dirty) or self._take_buffered_dirty(key, node)
         res, _ = self._routed(dirx.ack_invalidate, [stream], [page], node,
                               [1 if dirty else 0])
         self._oracle_op("ack_invalidate", stream, page, node, dirty,
                         expect=int(res[0, 0]))
-        key = (stream, page)
         if key in self.pending_mig:
             self.pending_mig[key]["waiting"].discard(node)
         self.counters["migration_acks"] += 1
@@ -1043,25 +1117,64 @@ class DPCProtocol:
             # dies with the real one, before the directory clears the bit
             for s, p in zip(streams, pages):
                 self.tlbs.drop(node, (int(s), int(p)))
-        aux = None if dirty is None else np.asarray(dirty, np.int32)
+        n = len(np.asarray(streams))
+        aux = (np.zeros((n,), np.int32) if dirty is None
+               else np.broadcast_to(np.asarray(dirty, np.int32),
+                                    (n,)).copy())
+        # buffered sharer-side marks for the dropped keys ride the drop's
+        # dirty lane (the S mapping is gone — the flush could no longer
+        # register them)
+        for i, (s, p) in enumerate(zip(streams, pages)):
+            if self._take_buffered_dirty((int(s), int(p)), node):
+                aux[i] = 1
         res, _ = self._routed(dirx.sharer_drop, streams, pages, node, aux)
         if self.oracle is not None:
-            d = (np.zeros(len(res), np.int32) if aux is None
-                 else np.broadcast_to(aux, (len(res),)))
-            for s, p, dd, st in zip(streams, pages, d, res[:, 0]):
+            for s, p, dd, st in zip(streams, pages, aux, res[:, 0]):
                 self._oracle_op("sharer_drop", int(s), int(p), int(node),
                                 bool(dd), expect=int(st))
         return res[:, 0]
 
     # -- liveness (paper §5) ------------------------------------------------------
 
-    def fail_node(self, node: int) -> int:
-        """Directory-side failure handling: remove the node everywhere and
-        unblock any invalidation waiting on its ACK."""
+    def fail_node(self, node: int, rehome_to: Optional[int] = None,
+                  install_fn: Optional[Callable] = None) -> int:
+        """Failover (heartbeat loss): remove the node everywhere and unblock
+        any invalidation waiting on its ACK.
+
+        With ``rehome_to`` given (and a durable tier attached), pages the
+        dead node owned are not simply dropped: every orphan whose bytes
+        survive in the backing store — or in the still-pending writeback
+        queue (read-your-writes: a crash mid-flush must recover the
+        last-committed bytes) — is refilled into E-state on the surviving
+        node (``install_fn(key, pfn, data)`` is the data-plane hook) and
+        committed clean.  An orphan with no durable copy is gone; if its
+        dirty bit was registered that is a lost committed write and counts
+        into ``lost_dirty_pages`` — zero whenever a checkpoint or writeback
+        preceded the crash.  Returns owned entries dropped."""
         # register surviving buffered dirty bits while their entries still
         # exist (the failing node's own marks die with its data — flushing
         # them first keeps the flush-status assert honest)
         self.flush_dirty_marks()
+        # marks the dead node buffered for keys already mid-teardown were
+        # held back from that flush; synthesize the node's ACK now, while
+        # its sharer bit is still set, so the dirty bit survives the wipe
+        for key, info in list(self.pending_inv.items()):
+            if node in info["waiting"] and key in self._dirty_buf[node]:
+                self.reclaim_ack(key[0], key[1], node)
+        for key, info in list(self.pending_mig.items()):
+            if node in info["waiting"] and key in self._dirty_buf[node]:
+                self.migrate_ack(key[0], key[1], node)
+        self._dirty_buf[node].clear()
+        self._wtouch_buf[node].clear()
+        # orphan census before the wipe: pages the dead node owned, with
+        # their registered dirty bits.  E entries have no committed copy to
+        # recover — they die as uncommitted installs.
+        orphans: List[Tuple[Tuple[int, int], bool]] = []
+        if rehome_to is not None and rehome_to != node:
+            for key, (st, owner, _sh, _pfn, dirty) in \
+                    self.directory_view().items():
+                if owner == node and st != dirx.E:
+                    orphans.append((key, bool(dirty)))
         if self.tlbs is not None:
             # fail_node wipes directory entries wholesale without naming
             # keys, so precise shootdowns cannot cover it — the global
@@ -1092,7 +1205,240 @@ class DPCProtocol:
                 # the remaining sharer ACKs drain
                 info["dst"] = info["src"]
         self.counters["dropped_nodes"] += 1
+        if orphans:
+            self._rehome_orphans(orphans, rehome_to, install_fn)
         return lost
+
+    def _rehome_orphans(self, orphans: List[Tuple[Tuple[int, int], bool]],
+                        rehome_to: int,
+                        install_fn: Optional[Callable]) -> None:
+        """Failover recovery: refill each orphan from the durable tier into
+        E-state on the survivor and commit it clean (the durable copy stays
+        the backstop).  Orphans that find no room are deferred, not lost —
+        the durable bytes still serve the next fault's refill."""
+        c = self.counters
+        for key, dirty in sorted(orphans):
+            data = None
+            if self.writeback is not None:
+                data = self.writeback.peek(key)   # read-your-writes
+            if data is None and self.store is not None:
+                data = self.store.read(key[0], key[1])
+            if data is None:
+                if dirty:
+                    c["lost_dirty_pages"] += 1
+                continue
+            rr = self.read_pages([key[0]], [key[1]], rehome_to)
+            if int(rr.status[0]) == D.ST_GRANT_E and int(rr.slot[0]) >= 0:
+                slot = int(rr.slot[0])
+                if install_fn is not None:
+                    install_fn(key, rehome_to * self.cfg.pool_pages + slot,
+                               data)
+                self.commit_pages([key[0]], [key[1]], rehome_to, [slot])
+                c["rehomed_pages"] += 1
+            else:
+                # survivor pool full: deferred, not lost
+                c["rehome_deferred"] += 1
+
+    # -- elastic membership (join / drain / rejoin) ------------------------------
+
+    def add_node(self) -> int:
+        """Join: grow the cluster by one node, returning its id.
+
+        The newcomer gets a fresh pool, mapping cache, and dirty/heat
+        buffers; directory sharer masks widen if the node count crosses a
+        32-bit word boundary.  Shard placement is frozen at init
+        (``num_shards``), so no existing entry moves — the join is
+        metadata-only until ``OwnershipMigrator.rebalance_join`` seeds the
+        node with cold pages through ordinary MIGRATE rounds."""
+        node = self.cfg.num_nodes
+        old_words = (self.cfg.num_nodes + 31) // 32
+        self.cfg.num_nodes += 1
+        new_words = (self.cfg.num_nodes + 31) // 32
+        if new_words != old_words:
+            # widen every shard's sharer bitmask; opcodes key on the array
+            # shape, so the next batch recompiles against the new width
+            dirs = tuple(
+                d._replace(sharers=jnp.pad(
+                    d.sharers, ((0, 0), (0, new_words - old_words))))
+                for d in self.state.dirs)
+            self.state = self.state._replace(dirs=dirs)
+        self.state = self.state._replace(
+            pools=self.state.pools + (pp.init_pool(self.cfg.pool_pages),))
+        if self.tlbs is not None:
+            self.tlbs.add_node()
+        self._dirty_buf.append(set())
+        self._wtouch_buf.append({})
+        if self.oracle is not None:
+            self.oracle.num_nodes = self.cfg.num_nodes
+        self.counters["joins"] += 1
+        return node
+
+    def rejoin_node(self, node: int) -> None:
+        """A previously drained/failed node comes back empty-handed: fresh
+        pool, wiped mapping cache, cleared buffers.  Flush obligations from
+        its previous life keep flushing (durability is not rewound) but
+        their frame tokens go stale — harvest must not release them into
+        the reborn pool."""
+        assert 0 <= node < self.cfg.num_nodes
+        for token in list(self._wb_outstanding):
+            if token[0] == node:
+                self._wb_stale.add(token)
+        pools = list(self.state.pools)
+        pools[node] = pp.init_pool(self.cfg.pool_pages)
+        self.state = self.state._replace(pools=tuple(pools))
+        if self.tlbs is not None:
+            self.tlbs.wipe(node)
+        self._dirty_buf[node].clear()
+        self._wtouch_buf[node].clear()
+        self.counters["rejoins"] += 1
+
+    def drain_node(self, node: int, dest_fn: Optional[Callable] = None,
+                   copy_fn: Optional[Callable] = None) -> Dict:
+        """Planned departure: evacuate everything ``node`` holds *before* it
+        leaves, then retire its mapping cache with a precise per-node wipe —
+        no global epoch flash, so every other node's warm TLB survives.
+
+        Sequence (each step an ordinary protocol transaction):
+          1. flush the buffered dirty marks / write heat (fence),
+          2. settle in-flight teardowns involving the node: deliver its
+             outstanding sharer ACKs (held-back buffered dirty bits ride
+             the ACK dirty lane), force-complete rounds it owns and
+             migrations it sources, retarget migrations headed *to* it,
+          3. voluntarily drop its remaining sharer mappings,
+          4. abort its uncommitted E-state installs, release the frames,
+          5. batch-MIGRATE every page it owns to destinations picked by
+             ``dest_fn(key) -> node`` (default round-robin over the
+             others); dirty pages checkpoint through the writeback queue
+             exactly like any other hand-off,
+          6. flush barrier: its writeback obligations become durable,
+          7. precise TLB retirement for this node only.
+
+        Returns a stats dict; ``moved`` lists (key, old_pfn, new_pfn) for
+        page-table rewriting by the caller."""
+        cfg = self.cfg
+        stats: Dict = {"migrated": 0, "aborted": 0, "e_aborted": 0,
+                       "shares_dropped": 0, "moved": []}
+        self.flush_dirty_marks()
+        for key, info in list(self.pending_inv.items()):
+            if node in info["waiting"]:
+                self.reclaim_ack(key[0], key[1], node)
+        for key, info in list(self.pending_mig.items()):
+            if node in info["waiting"]:
+                self.migrate_ack(key[0], key[1], node)
+        # force-settle rounds the node drives: the drain is a synchronous
+        # protocol driver (like reclaim_sync), so it delivers the remaining
+        # sharers' DIR_INVs itself and completes the transactions
+        if any(v["owner"] == node for v in self.pending_inv.values()):
+            for key, info in list(self.pending_inv.items()):
+                if info["owner"] == node:
+                    for s in list(info["waiting"]):
+                        self.reclaim_ack(key[0], key[1], s)
+            self.reclaim_finish(node)
+        if self.pending_mig:
+            settle = False
+            for key, info in list(self.pending_mig.items()):
+                if info["dst"] == node:
+                    info["dst"] = info["src"]   # abort: ownership stays put
+                if info["src"] == node:
+                    settle = True
+                    for s in list(info["waiting"]):
+                        self.migrate_ack(key[0], key[1], s)
+            if settle:
+                stats["moved"].extend(self.migrate_finish(copy_fn=copy_fn))
+        view = self.directory_view()
+        # 3. sharer-side retirement: later teardowns must not wait on a
+        # departed node's ACK
+        shared = sorted(k for k, v in view.items() if node in v[2])
+        if shared:
+            self.drop_mapping([k[0] for k in shared],
+                              [k[1] for k in shared], node)
+            stats["shares_dropped"] = len(shared)
+        # 4. uncommitted installs: nothing materialized to preserve
+        e_keys = sorted(k for k, v in view.items()
+                        if v[1] == node and v[0] == dirx.E)
+        if e_keys:
+            res, _ = self._routed(dirx.abort_install,
+                                  [k[0] for k in e_keys],
+                                  [k[1] for k in e_keys], node)
+            if self.oracle is not None:
+                for (s, p), st in zip(e_keys, res[:, 0]):
+                    self._oracle_op("abort_install", s, p, node,
+                                    expect=int(st))
+            stats["e_aborted"] = len(e_keys)
+        reserved = np.nonzero(np.asarray(
+            self.state.pools[node].slot_state) == pp.S_RESERVED)[0]
+        if len(reserved):
+            self._release_frames(node, reserved.tolist())
+        # 5. evacuate ownership through ordinary MIGRATE transactions
+        owned = sorted(k for k, v in view.items()
+                       if v[1] == node and v[0] == dirx.O)
+        others = [n for n in range(cfg.num_nodes) if n != node]
+        for i in range(0, len(owned), 64):
+            chunk = owned[i:i + 64]
+            pairs = []
+            for j, key in enumerate(chunk):
+                dst = dest_fn(key) if dest_fn is not None else -1
+                if dst is None or dst < 0 or dst == node \
+                        or dst >= cfg.num_nodes:
+                    dst = others[(i + j) % len(others)]
+                pairs.append((key, int(dst)))
+            stats["moved"].extend(self.migrate_sync(pairs, copy_fn=copy_fn))
+        stats["migrated"] = len(stats["moved"])
+        owned_set = set(owned)
+        stats["aborted"] = len(owned) - sum(
+            1 for k, _o, _n in stats["moved"] if k in owned_set)
+        if self.writeback is not None:
+            # 6. the departing node's obligations become durable; retired
+            # source frames are harvested
+            self.flush()
+        if self.tlbs is not None:
+            self.tlbs.wipe(node)
+        self._dirty_buf[node].clear()
+        self._wtouch_buf[node].clear()
+        c = self.counters
+        c["drains"] += 1
+        c["drained_pages"] += stats["migrated"]
+        c["drain_aborts"] += stats["aborted"]
+        return stats
+
+    def checkpoint_dirty(self, node: Optional[int] = None) -> int:
+        """Persist every registered dirty page's bytes out-of-band (token-
+        less obligations — no frame pins) and clear the dirty bits: the
+        planned-crash fsync that makes a subsequent failover lossless.
+        ``node`` restricts the sweep to one owner.  Returns pages
+        checkpointed."""
+        if self.writeback is None or self.page_bytes_fn is None:
+            return 0
+        self.flush_dirty_marks()
+        by_owner: Dict[int, List[Tuple[int, int]]] = {}
+        for key, (st, owner, _sh, pfn, dirty) in \
+                self.directory_view().items():
+            if not dirty or st != dirx.O:
+                continue
+            if node is not None and owner != node:
+                continue
+            data = self.page_bytes_fn(key, pfn)
+            if data is None:
+                continue
+            self.writeback.enqueue(key, np.asarray(data))
+            by_owner.setdefault(owner, []).append(key)
+        total = 0
+        for owner, keys in by_owner.items():
+            self.clear_dirty([k[0] for k in keys],
+                             [k[1] for k in keys], owner)
+            if self.tlbs is not None:
+                # MODE_M entries promised a registered-or-buffered bit the
+                # clear just dropped — downgrade to MODE_O so the next
+                # write re-registers instead of tripping the write-grant
+                # oracle assert
+                for k in keys:
+                    hit = self.tlbs.lookup(owner, k[0], k[1])
+                    if hit is not None and hit[2] == MODE_M:
+                        self.tlbs.install(owner, k[0], k[1], hit[0],
+                                          hit[1], MODE_O)
+            total += len(keys)
+        self.counters["checkpointed_pages"] += total
+        return total
 
     # -- views ---------------------------------------------------------------
 

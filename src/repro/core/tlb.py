@@ -201,6 +201,8 @@ class TLBGroup:
     drain / deliver / fence epochs) and the global flash epoch."""
 
     def __init__(self, num_nodes: int, slots: int, max_probe: int = 8):
+        self.slots = slots
+        self.max_probe = max_probe
         self.nodes: List[MappingTLB] = [MappingTLB(slots, max_probe)
                                         for _ in range(num_nodes)]
         self.global_epoch = 1
@@ -210,7 +212,25 @@ class TLBGroup:
         self.post_epoch = [0] * num_nodes
         self.served_epoch = [0] * num_nodes
         self.stats = {"posted": 0, "serviced": 0, "delivered": 0,
-                      "fenced": 0, "flashes": 0}
+                      "fenced": 0, "flashes": 0, "wipes": 0}
+
+    # -- elastic membership ---------------------------------------------------
+
+    def add_node(self) -> int:
+        """Join: attach a fresh (empty, caught-up) TLB for a new node."""
+        self.nodes.append(MappingTLB(self.slots, self.max_probe))
+        self.post_epoch.append(0)
+        self.served_epoch.append(0)
+        return len(self.nodes) - 1
+
+    def wipe(self, node: int) -> None:
+        """Precise per-node retirement: drop every mapping the node caches
+        and mark its shootdown queue caught-up — without touching the
+        global epoch, so every *other* node's warm entries survive (the
+        whole point of drain over fail)."""
+        self.nodes[node] = MappingTLB(self.slots, self.max_probe)
+        self.served_epoch[node] = self.post_epoch[node]
+        self.stats["wipes"] += 1
 
     # -- read path -----------------------------------------------------------
 

@@ -24,7 +24,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 @dataclasses.dataclass
 class MembershipEvent:
     epoch: int
-    kind: str          # join | fail | evict_straggler | dir_lost
+    kind: str          # join | drain | fail | evict_straggler | dir_lost
     node: int
     t: float
 
@@ -72,6 +72,15 @@ class Membership:
         if node in self.alive:
             self.alive.discard(node)
             self._emit(kind, node)
+
+    def drain(self, node: int) -> None:
+        """Planned departure: the event fires while the node is still listed
+        alive, so listeners can evacuate through it (the protocol drain
+        needs a live peer to MIGRATE against) before it drops out."""
+        if node not in self.alive:
+            return
+        self._emit("drain", node)
+        self.alive.discard(node)
 
     def join(self, node: int) -> None:
         self.alive.add(node)

@@ -383,8 +383,14 @@ class ServingEngine:
         """Drain the hotness ledger: migrate hot pages toward their traffic,
         copy the KV rows, and rewrite every table that named the old frame."""
         moved = self.kv.run_migrations(copy_fn=self._copy_page)
+        self._apply_remap(moved)
+        return len(moved)
+
+    def _apply_remap(self, moved) -> None:
+        """Rewrite every table naming a moved frame: page hand-offs (migrate
+        or drain) return [(key, old_pfn, new_pfn)]."""
         if not moved:
-            return 0
+            return
         remap = {old: new for _, old, new in moved}
         for old, new in remap.items():
             self._pt[self._pt == old] = new
@@ -392,7 +398,25 @@ class ServingEngine:
             if req is not None:
                 req.page_ids = [remap.get(p, p) for p in req.page_ids]
         self._sync_cache_tables()
-        return len(moved)
+
+    # -- elastic membership ----------------------------------------------------
+
+    def drain_node(self, node: int, alive=None):
+        """Planned node departure: evacuate its pages (KV rows move with
+        them) and rewrite the page tables for the new homes."""
+        st = self.kv.drain_node(node, alive=alive, copy_fn=self._copy_page)
+        self._apply_remap(st.get("moved", []))
+        return st
+
+    def _rehome_install(self, key, pfn: int, data) -> bool:
+        """Failover refill sink: land durable bytes in the survivor's pool."""
+        return self._install_page_bytes(pfn, np.asarray(data))
+
+    def fail_node(self, node: int, rehome_to=None) -> int:
+        """Heartbeat-loss failover; with ``rehome_to``, orphans refill from
+        the durable tier into the survivor's pool."""
+        return self.kv.fail_node(node, rehome_to=rehome_to,
+                                 install_fn=self._rehome_install)
 
     # -- storage tier (repro/storage) -----------------------------------------
 

@@ -10,7 +10,8 @@ import json
 import subprocess
 import sys
 
-from benchmarks.compare_baseline import compare, load_allowlist
+from benchmarks.compare_baseline import (check_allowlist, compare,
+                                         load_allowlist)
 
 
 def _write_bench(dirpath, suite, rows):
@@ -78,6 +79,103 @@ class TestAllowlist:
         p.write_text("# comment\n\nx.a   # trailing comment\nread.*\n")
         assert load_allowlist(str(p)) == ["x.a", "read.*"]
         assert load_allowlist(str(tmp_path / "missing")) == []
+
+
+class TestMedianOfThree:
+    """A >4x shot triggers up to two reruns; the median of the three
+    ratios decides the blocking verdict (scheduler noise must not block)."""
+
+    def test_noise_spike_downgrades_to_warning(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 450.0})
+        shots = iter([{"x.a": 110.0}, {"x.a": 120.0}])
+        calls = []
+
+        def rerun(suite):
+            calls.append(suite)
+            return next(shots)
+
+        code, warns, fails = compare(fresh, base, rerun=rerun)
+        assert code == 0 and not fails
+        # median of [4.5, 1.1, 1.2] = 1.2 — surfaced, not blocking
+        assert warns == [("x.a", 1.2)]
+        assert calls == ["x", "x"]
+
+    def test_real_regression_reproduces_and_blocks(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 450.0})
+        shots = iter([{"x.a": 460.0}, {"x.a": 440.0}])
+        code, warns, fails = compare(fresh, base,
+                                     rerun=lambda s: next(shots))
+        assert code == 1
+        assert fails == [("x.a", 4.5)]   # median of [4.5, 4.6, 4.4]
+
+    def test_warn_band_stays_single_shot(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 250.0})
+
+        def rerun(suite):
+            raise AssertionError("2-4x rows must not trigger reruns")
+
+        code, warns, fails = compare(fresh, base, rerun=rerun)
+        assert code == 0 and warns == [("x.a", 2.5)]
+
+    def test_allowlisted_row_never_reruns(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 900.0})
+
+        def rerun(suite):
+            raise AssertionError("allowlisted rows must not trigger reruns")
+
+        code, _, fails = compare(fresh, base, allowlist=["x.a"],
+                                 rerun=rerun)
+        assert code == 0 and not fails
+
+    def test_unrunnable_suite_keeps_single_shot_verdict(self, tmp_path):
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 450.0})
+        code, _, fails = compare(fresh, base, rerun=lambda s: None)
+        assert code == 1
+        assert fails == [("x.a", 4.5)]
+
+    def test_reruns_fetched_once_per_suite(self, tmp_path):
+        fresh, base = make_pair(tmp_path,
+                                {"x.a": 100.0, "x.b": 100.0},
+                                {"x.a": 900.0, "x.b": 900.0})
+        calls = []
+
+        def rerun(suite):
+            calls.append(suite)
+            return {"x.a": 880.0, "x.b": 920.0}
+
+        code, _, fails = compare(fresh, base, rerun=rerun)
+        assert code == 1 and len(fails) == 2
+        assert calls == ["x", "x"]       # two suspect rows, one cached fetch
+
+
+class TestCheckAllowlist:
+    """refresh-baselines gate: stale fnmatch patterns must error."""
+
+    def test_stale_pattern_errors(self, tmp_path, capsys):
+        _write_bench(tmp_path / "b", "x", {"x.a": 1.0})
+        (tmp_path / "b" / "ALLOWLIST").write_text("x.*\ndead.b1.*\n")
+        assert check_allowlist(str(tmp_path / "b")) == 1
+        out = capsys.readouterr().out
+        assert "::error" in out and "dead.b1.*" in out
+
+    def test_live_patterns_pass(self, tmp_path):
+        _write_bench(tmp_path / "b", "x", {"x.a": 1.0, "read.p99": 2.0})
+        (tmp_path / "b" / "ALLOWLIST").write_text("x.a\nread.*\n")
+        assert check_allowlist(str(tmp_path / "b")) == 0
+
+    def test_empty_allowlist_passes(self, tmp_path):
+        _write_bench(tmp_path / "b", "x", {"x.a": 1.0})
+        assert check_allowlist(str(tmp_path / "b")) == 0
+
+    def test_cli_mode(self, tmp_path):
+        _write_bench(tmp_path / "b", "x", {"x.a": 1.0})
+        (tmp_path / "b" / "ALLOWLIST").write_text("gone.*\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.compare_baseline",
+             "--check-allowlist", "--baselines", str(tmp_path / "b")],
+            capture_output=True, text=True)
+        assert proc.returncode == 1
+        assert "::error" in proc.stdout
 
 
 class TestCLI:

@@ -1,0 +1,453 @@
+"""Membership transitions: join / drain / failover as protocol scenarios.
+
+ISSUE 6 coverage: joins grow directory/TLB/pool state without re-hashing
+shard placement, drains evacuate ownership (racing in-flight MIGRATEs and
+cached writers) with precise TLB retirement, failovers re-home orphans from
+the durable tier with last-committed bytes, and — tier-2 property — drain
+is observably equivalent to (fail + refill-from-store) on settled state.
+Also the satellite regression: sharer-side mark_dirty rides the buffered
+per-node dirty sets instead of paying a per-call directory op.
+"""
+
+import numpy as np
+import pytest
+
+try:  # dev-only dep: collection must never hard-fail without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core import pagepool as pp
+from repro.core.dpc_cache import DistributedKVCache
+from repro.core.protocol import DPCProtocol, ProtocolConfig
+from repro.core.tlb import MODE_S
+from repro.runtime.liveness import Membership
+
+PAGE = 8
+
+
+def make_proto(nodes=4, pool=16, cap=256, **kw):
+    return DPCProtocol(ProtocolConfig(
+        num_nodes=nodes, pool_pages=pool, directory_capacity=cap,
+        shadow_oracle=True, **kw))
+
+
+def put(proto, s, p, node, dirty=False):
+    """Install + commit one page at ``node``; returns its slot."""
+    rr = proto.read_pages([s], [p], node)
+    assert int(rr.status[0]) == D.ST_GRANT_E, int(rr.status[0])
+    slot = int(rr.slot[0])
+    proto.commit_pages([s], [p], node, [slot],
+                       dirty=[dirty] if dirty else None)
+    return slot
+
+
+def make_kv(nodes=4, pool=32, store=True):
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=pool,
+                    directory_capacity=1 << 9, shadow_oracle=True,
+                    storage_backend="memory" if store else "none",
+                    writeback_async=False,
+                    migrate_threshold=3, migrate_batch=64)
+    return DistributedKVCache(dpc, nodes)
+
+
+def seed_kv(kv, frames, node, streams):
+    lks = kv.lookup(streams, [0] * len(streams), node)
+    for s in streams:
+        frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+    kv.commit(streams, [0] * len(streams), node, lks)
+
+
+# ---------------------------------------------------------------------------
+# join
+# ---------------------------------------------------------------------------
+
+
+class TestJoin:
+    def test_join_grows_cluster_and_serves(self):
+        proto = make_proto(nodes=3)
+        put(proto, 1, 0, 0)
+        node = proto.add_node()
+        assert node == 3 and proto.cfg.num_nodes == 4
+        assert len(proto.state.pools) == 4
+        assert proto.tlbs is None or len(proto.tlbs.nodes) == 4
+        # the newcomer reads an existing page (maps S) and faults a new one
+        rr = proto.read_pages([1], [0], node)
+        assert int(rr.status[0]) == D.ST_MAP_S
+        put(proto, 9, 0, node)
+        assert proto.directory_view()[(9, 0)][1] == node
+
+    def test_join_never_rehashes_shard_placement(self):
+        from repro.core.protocol import dir_shard_of
+        proto = make_proto(nodes=3)
+        keys = [(s, 0) for s in range(1, 20)]
+        before = {k: dir_shard_of(proto.cfg, *k) for k in keys}
+        proto.add_node()
+        assert {k: dir_shard_of(proto.cfg, *k) for k in keys} == before
+        assert proto.cfg.num_shards == 3   # frozen at founding layout
+
+    def test_join_across_sharer_word_boundary(self):
+        # 32 -> 33 nodes crosses the uint32 sharer-mask word boundary: the
+        # mask must widen in place with every existing bit preserved
+        proto = make_proto(nodes=32, pool=4, cap=64, placement="central")
+        put(proto, 1, 0, 0)
+        for n in (1, 5, 31):
+            rr = proto.read_pages([1], [0], n)
+            assert int(rr.status[0]) == D.ST_MAP_S
+        assert proto.state.dirs[0].sharers.shape[1] == 1
+        node = proto.add_node()
+        assert node == 32
+        assert proto.state.dirs[0].sharers.shape[1] == 2
+        st, owner, sharers, _, _ = proto.directory_view()[(1, 0)]
+        assert owner == 0 and sharers == {1, 5, 31}
+        rr = proto.read_pages([1], [0], node)   # bit 32 lands in word 1
+        assert int(rr.status[0]) == D.ST_MAP_S
+        assert node in proto.directory_view()[(1, 0)][2]
+
+    def test_join_then_rebalance_converges(self):
+        kv = make_kv(nodes=3)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        for n in range(3):
+            seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(8)])
+        node = kv.join_node()
+        moved = kv.rebalance_join(node)
+        assert moved, "rebalance moved nothing to the joiner"
+        view = kv.proto.directory_view()
+        owned = [sum(1 for v in view.values() if v[1] == n)
+                 for n in range(kv.num_nodes)]
+        assert owned[node] == len(moved)
+        # even share (24 pages / 4 nodes = 6), and nothing lost
+        assert owned[node] == 6 and sum(owned) == 24
+        assert kv.proto.counters["lost_dirty_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# drain
+# ---------------------------------------------------------------------------
+
+
+class TestDrain:
+    def test_drain_evacuates_and_preserves_dirty(self):
+        kv = make_kv(nodes=3)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        seed_kv(kv, frames, 1, list(range(1, 9)))    # fills commit dirty
+        kv.lookup([1, 2], [0, 0], 2)                  # node 2 maps S
+        kv.lookup([3, 4], [0, 0], 0)
+        tlbs = kv.proto.tlbs
+        flashes = tlbs.stats["flashes"]
+        st = kv.drain_node(1)
+        assert st["migrated"] == 8 and st["aborted"] == 0
+        view = kv.proto.directory_view()
+        assert not any(v[1] == 1 for v in view.values())
+        # precise retirement: no global epoch flash, the node wiped once,
+        # and the *other* nodes' warm mappings survived
+        assert tlbs.stats["flashes"] == flashes
+        assert tlbs.stats["wipes"] == 1
+        assert tlbs.lookup(1, 1, 0) is None
+        assert tlbs.lookup(2, 1, 0) is not None
+        # every dirty page's bytes became durable across the hand-off
+        assert kv.proto.counters["lost_dirty_pages"] == 0
+        for s in range(1, 9):
+            data = kv._storage_read((s, 0))
+            assert data is not None
+            np.testing.assert_array_equal(np.asarray(data, np.float32),
+                                          frames[(s, 0)])
+
+    def test_drain_races_inflight_migrate_from_victim(self):
+        # the drain must complete a MIGRATE the victim already sources,
+        # not strand it: the page lands at its planned destination
+        proto = make_proto()
+        put(proto, 1, 0, 1)
+        rr = proto.read_pages([1], [0], 2)            # sharer must ACK
+        assert int(rr.status[0]) == D.ST_MAP_S
+        _, notify = proto.migrate_begin([((1, 0), 3)])
+        assert (1, 0) in proto.pending_mig
+        st = proto.drain_node(1)
+        assert not proto.pending_mig
+        assert proto.directory_view()[(1, 0)][1] == 3
+        assert any(k == (1, 0) for k, _, _ in st["moved"])
+
+    def test_drain_races_inflight_migrate_to_victim(self):
+        # a MIGRATE headed *to* the draining node retargets at the source:
+        # ownership stays put instead of landing on the leaver
+        proto = make_proto()
+        put(proto, 1, 0, 0)
+        rr = proto.read_pages([1], [0], 2)
+        assert int(rr.status[0]) == D.ST_MAP_S
+        proto.migrate_begin([((1, 0), 1)])            # dst = the leaver
+        proto.drain_node(1)
+        # retargeted at the source; the live sharer still owes its ACK
+        assert proto.pending_mig[(1, 0)]["dst"] == 0
+        proto.migrate_ack(1, 0, 2)
+        proto.migrate_finish()
+        assert not proto.pending_mig
+        assert proto.directory_view()[(1, 0)][1] == 0
+
+    def test_drain_with_cached_writer(self):
+        # a sharer-mode cached writer has dirty marks only in its buffered
+        # set; draining that sharer must surface the bit via the voluntary
+        # drop's dirty lane, not lose it
+        proto = make_proto()
+        put(proto, 1, 0, 0)
+        rr = proto.read_pages([1], [0], 1)
+        assert int(rr.status[0]) == D.ST_MAP_S
+        res = proto.mark_dirty([1], [0], 1)           # buffered, no dir op
+        assert int(res[0]) == D.ST_OK
+        assert (1, 0) in proto._dirty_buf[1]
+        assert proto.directory_view()[(1, 0)][4] is False
+        proto.drain_node(1)
+        assert proto.directory_view()[(1, 0)][4] is True
+
+    def test_drain_aborts_uncommitted_installs(self):
+        proto = make_proto()
+        rr = proto.read_pages([5], [0], 1)            # E, never committed
+        assert int(rr.status[0]) == D.ST_GRANT_E
+        st = proto.drain_node(1)
+        assert st["e_aborted"] == 1
+        assert (5, 0) not in proto.directory_view()
+        assert int(pp.num_free(proto.state.pools[1])) == proto.cfg.pool_pages
+
+
+# ---------------------------------------------------------------------------
+# sharer-side dirty buffering (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+class TestSharerDirtyBuffering:
+    def test_s_mode_mark_dirty_pays_zero_directory_ops(self):
+        proto = make_proto()
+        put(proto, 1, 0, 0)
+        proto.read_pages([1], [0], 1)                 # S mapping + TLB entry
+        assert proto.tlbs.lookup(1, 1, 0)[2] == MODE_S
+        hits = proto.counters["tlb_write_hits"]
+        buffered = proto.counters["dirty_buffered"]
+        for _ in range(5):                            # steady-state re-write
+            res = proto.mark_dirty([1], [0], 1)
+            assert int(res[0]) == D.ST_OK
+        assert proto.counters["tlb_write_hits"] == hits + 5
+        assert proto.counters["dirty_buffered"] == buffered + 1  # dedup'd
+        assert proto.directory_view()[(1, 0)][4] is False  # not yet visible
+        assert proto.flush_dirty_marks() == 1         # ONE batched op
+        assert proto.directory_view()[(1, 0)][4] is True
+        if proto.oracle is not None:
+            assert proto.oracle.entries[(1, 0)].dirty
+
+    def test_held_back_mark_rides_migrate_ack(self):
+        # a sharer mark buffered AFTER the key entered teardown (a cached
+        # writer racing an in-flight MIGRATE) is excluded from the batched
+        # flush — TBM refuses mark_dirty — and must ride the sharer's
+        # INV_ACK dirty lane instead
+        proto = make_proto()
+        put(proto, 1, 0, 0)
+        proto.read_pages([1], [0], 1)
+        proto.migrate_begin([((1, 0), 2)])            # key now TBM
+        proto.mark_dirty([1], [0], 1)                 # buffered on node 1
+        assert proto.flush_dirty_marks() == 0         # held back, not lost
+        assert (1, 0) in proto._dirty_buf[1]
+        proto.migrate_ack(1, 0, 1)                    # ACK folds the bit in
+        assert (1, 0) not in proto._dirty_buf[1]
+        proto.migrate_finish()
+        assert proto.directory_view()[(1, 0)][1] == 2
+        assert proto.directory_view()[(1, 0)][4] is True
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+
+
+class TestFailover:
+    def test_failover_mid_writeback_refills_last_committed(self):
+        # bytes still pending in the writeback queue (never flushed) must
+        # re-home read-your-writes: the LAST committed copy wins
+        kv = make_kv(nodes=3)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        seed_kv(kv, frames, 1, [7])
+        kv.checkpoint_dirty()                         # v1 enqueued
+        frames[(7, 0)] = np.full(PAGE, 777.0, np.float32)
+        kv.proto.mark_dirty([7], [0], 1)
+        kv.checkpoint_dirty()                         # v2 supersedes, pending
+        assert kv.store.read(7, 0) is None            # nothing durable yet
+        got = {}
+        kv.fail_node(1, rehome_to=0,
+                     install_fn=lambda k, pfn, d: got.update({k: d}))
+        assert kv.proto.counters["rehomed_pages"] == 1
+        assert kv.proto.counters["lost_dirty_pages"] == 0
+        np.testing.assert_array_equal(
+            np.asarray(got[(7, 0)], np.float32).reshape(-1),
+            np.full(PAGE, 777.0, np.float32))
+        assert kv.proto.directory_view()[(7, 0)][1] == 0
+
+    def test_failover_rehomes_from_durable_store(self):
+        kv = make_kv(nodes=3)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        seed_kv(kv, frames, 1, list(range(1, 7)))
+        kv.checkpoint_dirty()
+        kv.flush()                                    # durable in the store
+        got = {}
+        lost = kv.fail_node(1, rehome_to=2,
+                            install_fn=lambda k, pfn, d: got.update({k: d}))
+        assert lost == 6
+        assert kv.proto.counters["rehomed_pages"] == 6
+        view = kv.proto.directory_view()
+        for s in range(1, 7):
+            assert view[(s, 0)][1] == 2               # re-homed, not dropped
+            np.testing.assert_array_equal(
+                np.asarray(got[(s, 0)], np.float32).reshape(-1),
+                frames[(s, 0)])
+        # re-homed entries committed CLEAN: the durable copy backstops them
+        assert not any(view[(s, 0)][4] for s in range(1, 7))
+
+    def test_fail_without_durable_tier_keeps_legacy_drop(self):
+        proto = make_proto()
+        put(proto, 1, 0, 1, dirty=True)
+        lost = proto.fail_node(1)
+        assert lost == 1
+        assert (1, 0) not in proto.directory_view()
+        assert proto.counters["rehomed_pages"] == 0
+
+    def test_membership_wiring_rolls_through_epochs(self):
+        kv = make_kv(nodes=4)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+
+        def install(key, pfn, data):
+            frames[key] = np.asarray(data)
+
+        m = Membership(num_nodes=4)
+        kv.attach_membership(m, install_fn=install)
+        for n in range(4):
+            seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(4)])
+        m.drain(0)
+        assert not any(v[1] == 0 for v in kv.proto.directory_view().values())
+        m.join(0)
+        assert kv.proto.counters["rejoins"] == 1
+        kv.checkpoint_dirty()
+        m.evict(2, "fail")
+        assert kv.proto.counters["rehomed_pages"] > 0
+        assert kv.proto.counters["lost_dirty_pages"] == 0
+
+    def test_seeded_interleavings(self):
+        # randomized churn under the shadow oracle: lookups, buffered
+        # writes, migrations, drains, rejoins, and checkpointed failovers
+        # interleave; the oracle asserts every transition and no committed
+        # dirty byte may be lost
+        for seed in (0, 1, 2):
+            rng = np.random.default_rng(seed)
+            kv = make_kv(nodes=4, pool=48)
+            frames = {}
+            kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+            m = Membership(num_nodes=4)
+            kv.attach_membership(
+                m, install_fn=lambda k, pfn, d: frames.update(
+                    {k: np.asarray(d)}))
+            for n in range(4):
+                seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(6)])
+            all_streams = [n * 10 + i + 1 for n in range(4) for i in
+                           range(6)]
+            for step in range(30):
+                op = rng.integers(0, 10)
+                node = int(rng.integers(0, 4))
+                if node not in m.alive:
+                    m.join(node)
+                    continue
+                if op < 5:
+                    picks = rng.choice(all_streams, 4)
+                    lks = kv.lookup([int(s) for s in picks], [0] * 4, node)
+                    kv.commit([int(s) for s in picks], [0] * 4, node, lks)
+                elif op < 7:
+                    s = int(rng.choice(all_streams))
+                    kv.proto.mark_dirty([s], [0], node)
+                elif op == 7:
+                    kv.run_migrations()
+                elif op == 8 and len(m.alive) > 2:
+                    m.drain(node)
+                else:
+                    if len(m.alive) > 2:
+                        kv.checkpoint_dirty()
+                        m.evict(node, "fail")
+            kv.flush_dirty_marks()
+            assert kv.proto.counters["lost_dirty_pages"] == 0, seed
+
+
+# ---------------------------------------------------------------------------
+# drain ≡ fail + refill-from-store on settled state
+# ---------------------------------------------------------------------------
+
+
+def _settled_pair(n_pages, dirty_mask, victim):
+    """Two identical settled clusters; returns (kv, frames) twice."""
+    out = []
+    for _ in range(2):
+        kv = make_kv(nodes=3, pool=48)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn, f=frames: f.get(key))
+        for n in range(3):
+            seed_kv(kv, frames, n,
+                    [n * 20 + i + 1 for i in range(n_pages)])
+        for i, d in enumerate(dirty_mask[:n_pages]):
+            if d:
+                kv.proto.mark_dirty([victim * 20 + i + 1], [0], victim)
+        # settle: marks registered, dirty bytes durable, queue drained
+        kv.proto.flush_dirty_marks()
+        kv.checkpoint_dirty()
+        kv.flush()
+        out.append((kv, frames))
+    return out
+
+
+def _observable(kv, frames, departed):
+    """(key -> owner-alive?, key -> bytes) for every surviving entry."""
+    view = kv.proto.directory_view()
+    assert not any(v[1] == departed for v in view.values())
+    assert kv.proto.counters["lost_dirty_pages"] == 0
+    content = {}
+    for key in view:
+        data = kv._storage_read(key)
+        content[key] = (None if data is None
+                        else np.asarray(data, np.float32).reshape(-1)
+                        .tobytes())
+    return set(view), content
+
+
+def _check_drain_equiv_fail(n_pages, dirty_mask, victim):
+    (kv_a, fr_a), (kv_b, fr_b) = _settled_pair(n_pages, dirty_mask, victim)
+    kv_a.drain_node(victim)
+    kv_b.fail_node(victim, rehome_to=(victim + 1) % 3,
+                   install_fn=lambda k, pfn, d, f=fr_b: f.update(
+                       {k: np.asarray(d)}))
+    keys_a, content_a = _observable(kv_a, fr_a, victim)
+    keys_b, content_b = _observable(kv_b, fr_b, victim)
+    # equivalence on the settled observables: the same keys survive, and
+    # every key whose bytes are durable reads back identically
+    assert keys_a == keys_b
+    for key in keys_a:
+        if content_a[key] is not None and content_b[key] is not None:
+            assert content_a[key] == content_b[key], key
+    # every page the victim owned stays reachable in both worlds
+    for i in range(n_pages):
+        assert (victim * 20 + i + 1, 0) in keys_a
+
+
+class TestDrainFailEquivalence:
+    def test_fixed_cases(self):
+        """Tier-1 fixed-seed variant (runs even without hypothesis)."""
+        _check_drain_equiv_fail(4, [True, False, True, False], 1)
+        _check_drain_equiv_fail(3, [True, True, True], 2)
+        _check_drain_equiv_fail(2, [False, False], 0)
+
+    if HAVE_HYPOTHESIS:
+        @pytest.mark.property
+        @settings(max_examples=15, deadline=None)
+        @given(n_pages=st.integers(1, 6),
+               dirty_mask=st.lists(st.booleans(), min_size=6, max_size=6),
+               victim=st.integers(0, 2))
+        def test_property(self, n_pages, dirty_mask, victim):
+            _check_drain_equiv_fail(n_pages, dirty_mask, victim)
