@@ -159,6 +159,38 @@ def run(smoke: bool = False):
          f"grants_on={wr[True]:.2f}tok/s grants_off={wr[False]:.2f}tok/s "
          f"speedup={wr[True] / max(wr[False], 1e-9):.2f}x")
 
+    # tentpole check (overlap): the async data plane issues next-boundary
+    # page allocations, dirty-mark flushes, and writeback pumping while the
+    # device decodes, vs the sync reference mode that serializes them after
+    # the sample.  Decode long enough that every request crosses a page
+    # boundary mid-stream — that's where the double-buffered prefetch lives.
+    ov = {}
+    ov_tokens = PAGE + 2
+    for flag in (True, False):
+        engines, kv = make_engines(
+            "dpc", n_nodes, params, arch, prompt=prompt,
+            storage_backend="memory", writeback_async=False,
+            async_data_plane=flag)
+        dt = _drive(engines, rng, hot_prefix, arch.vocab_size,
+                    reqs_per_node, ov_tokens)
+        tput = reqs_per_node * ov_tokens * n_nodes / dt
+        c = kv.proto.counters
+        ov[flag] = tput
+        hits = sum(e.prefetch_hits for e in engines)
+        stale = sum(e.prefetch_stale for e in engines)
+        tag = "on" if flag else "off"
+        emit(f"app.overlap.{tag}.n{n_nodes}", 1e6 / max(tput, 1e-9),
+             f"agg_tput={tput:.2f}tok/s "
+             f"prefetch_hits={hits} prefetch_stale={stale} "
+             f"lane_copies={c['lane_copies']} "
+             f"lane_flushes={c['lane_flushes']} "
+             f"lane_fences={c['lane_fences']}")
+        kv.close()
+    emit(f"app.overlap_speedup.n{n_nodes}",
+         1e6 / max(ov[True], 1e-9),
+         f"async_on={ov[True]:.2f}tok/s sync={ov[False]:.2f}tok/s "
+         f"speedup={ov[True] / max(ov[False], 1e-9):.2f}x")
+
 
 if __name__ == "__main__":
     import argparse

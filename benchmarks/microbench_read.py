@@ -90,6 +90,26 @@ def _tlb_section(batch_pages: int, iters: int) -> float:
     return speedup
 
 
+def _tlb_sizing_sweep(batch_pages: int, iters: int) -> None:
+    """TLB sizing study (ROADMAP carry-over): steady-state re-read lookup
+    cost across slots x max_probe.  Undersized or probe-starved tables
+    overflow and fall back to the directory (correct, just slower — see
+    tests/test_tlb.py probe-overflow test); the sweep quantifies the cliff."""
+    streams = list(range(1, batch_pages + 1))
+    pages = [0] * batch_pages
+    base = DPCConfig(page_size=PAGE, pool_pages_per_shard=256)
+    for slots, probe in ((16, 1), (16, 4), (64, 4), (256, 8)):
+        kv = _warm_remote(dataclasses.replace(base, tlb_slots=slots,
+                                              tlb_max_probe=probe),
+                          streams, pages)
+        t = time_host(lambda: kv.lookup(streams, pages, 2),
+                      iters=iters) / batch_pages
+        st = kv.proto.tlbs.nodes[2].stats
+        hit_rate = st["hits"] / max(st["hits"] + st["misses"], 1)
+        emit(f"read.tlb_sizing.s{slots}p{probe}", t,
+             f"hit_rate={hit_rate:.2f} replacements={st['replacements']}")
+
+
 def run(smoke: bool = False):
     arch = bench_arch(smoke)
     api = registry.get_model(arch)
@@ -154,6 +174,9 @@ def run(smoke: bool = False):
         emit(f"read.CH-R.b{batch_pages}", t_chr,
              f"dir={t_chr_dir:.1f}us attend={t_attend:.1f}us "
              f"speedup_vs_CM={t_cm / t_chr:.1f}x")
+
+    # --- TLB sizing study: slots x max_probe sweep over the same re-reads
+    _tlb_sizing_sweep(32 if smoke else 128, iters=2 if smoke else 5)
 
     # --- tentpole: mapping cache takes the directory off the re-read path
     speedup = _tlb_section(32 if smoke else 128, iters=3 if smoke else 5)

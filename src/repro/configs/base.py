@@ -372,6 +372,14 @@ class DPCConfig:
     # opcode batch routed to the sharer (False = legacy synchronous draining;
     # kept for the piggyback==sync equivalence property tests)
     tlb_shootdown_piggyback: bool = True
+    # async data plane: migration KV copies and writeback flushes ride
+    # COPY/FLUSH descriptor lanes on routed opcode batches, the engine
+    # double-buffers page allocation (step N overlaps the fetches for
+    # step N+1 behind a generation check), drains evacuate in overlapped
+    # MIGRATE rounds, and _routed pipelines its per-shard device transfers.
+    # False = legacy synchronous stepping, kept as the reference mode for
+    # the async==sync equivalence property tests (tests/test_async_data_plane)
+    async_data_plane: bool = True
     # --- ownership migration (core/migration.py; 0 threshold disables) ---
     migrate_threshold: int = 4          # decayed remote accesses that promote
     migrate_batch: int = 32             # max MIGRATEs per round

@@ -26,6 +26,20 @@ distinct lane-0 sentinel so every directory opcode treats it as inert::
 The receiving node services these lanes (drops the cached mappings) before
 executing the batch's own descriptors — see core/protocol.py ``_routed`` and
 core/tlb.py ``deliver``.
+
+The async data plane adds two more lane kinds on the same sentinel scheme
+(core/protocol.py posts them, batches routed on the target node's behalf
+carry them, and every directory opcode skips them as inert rows)::
+
+    lane 0  COPY        (-4) migration KV copy obligation
+    lane 1  src_pfn     global frame the bytes still live in
+    lane 2  node        destination node (the lane rides its batches)
+    lane 3  dst_pfn     global frame the bytes land in
+
+    lane 0  FLUSH       (-5) deferred writeback-capture obligation
+    lane 1  page_idx    logical page index of the evicted key
+    lane 2  node        owner node whose retired frame holds the bytes
+    lane 3  stream_id   stream of the evicted key
 """
 
 from __future__ import annotations
@@ -38,6 +52,8 @@ import numpy as np
 
 INVALID = jnp.int32(-1)
 SHOOTDOWN = jnp.int32(-3)   # lane-0 sentinel: piggybacked TLB shootdown row
+COPY = jnp.int32(-4)        # lane-0 sentinel: migration KV copy obligation
+FLUSH = jnp.int32(-5)       # lane-0 sentinel: deferred writeback capture
 N_LANES = 4
 
 LANE_STREAM = 0
@@ -71,6 +87,52 @@ def decode_shootdowns(rows: np.ndarray):
             out.append((int(row[LANE_NODE]), int(row[LANE_AUX]),
                         int(row[LANE_PAGE])))
     return out
+
+def encode_copies(triples) -> np.ndarray:
+    """Encode (dst_node, src_pfn, dst_pfn) migration-copy obligations as
+    lane rows appendable to any opcode batch (directory-inert)."""
+    rows = np.full((len(triples), N_LANES), int(INVALID), np.int32)
+    for i, (node, src_pfn, dst_pfn) in enumerate(triples):
+        rows[i, LANE_STREAM] = int(COPY)
+        rows[i, LANE_PAGE] = src_pfn
+        rows[i, LANE_NODE] = node
+        rows[i, LANE_AUX] = dst_pfn
+    return rows
+
+
+def decode_copies(rows: np.ndarray):
+    """Inverse of ``encode_copies``: [K, 4] -> (dst_node, src_pfn, dst_pfn)
+    triples, ignoring any non-COPY rows."""
+    out = []
+    for row in np.asarray(rows):
+        if int(row[LANE_STREAM]) == int(COPY):
+            out.append((int(row[LANE_NODE]), int(row[LANE_PAGE]),
+                        int(row[LANE_AUX])))
+    return out
+
+
+def encode_flushes(triples) -> np.ndarray:
+    """Encode (owner_node, stream, page) deferred writeback-capture
+    obligations as lane rows (same layout as shootdown rows)."""
+    rows = np.full((len(triples), N_LANES), int(INVALID), np.int32)
+    for i, (node, stream, page) in enumerate(triples):
+        rows[i, LANE_STREAM] = int(FLUSH)
+        rows[i, LANE_PAGE] = page
+        rows[i, LANE_NODE] = node
+        rows[i, LANE_AUX] = stream
+    return rows
+
+
+def decode_flushes(rows: np.ndarray):
+    """Inverse of ``encode_flushes``: [K, 4] -> (node, stream, page)
+    triples, ignoring any non-FLUSH rows."""
+    out = []
+    for row in np.asarray(rows):
+        if int(row[LANE_STREAM]) == int(FLUSH):
+            out.append((int(row[LANE_NODE]), int(row[LANE_AUX]),
+                        int(row[LANE_PAGE])))
+    return out
+
 
 # Status codes returned per descriptor by directory ops (mirrors Fig. 2 events)
 ST_OK = 0            # op applied

@@ -71,6 +71,7 @@ class DistributedKVCache:
             tlb_max_probe=dpc.tlb_max_probe,
             tlb_write_grants=dpc.tlb_write_grants,
             tlb_piggyback=dpc.tlb_shootdown_piggyback,
+            async_data_plane=dpc.async_data_plane,
             shadow_oracle=dpc.shadow_oracle,
         ), store=self.store, writeback=self.writeback)
         # buffered CLOCK touches for TLB owner-hits: slot -> hit count per
@@ -107,7 +108,13 @@ class DistributedKVCache:
         self.proto.attach_storage(page_bytes_fn=fn)
 
     def _storage_read(self, key: Tuple[int, int]) -> Optional[np.ndarray]:
-        """Read-your-writes refill: pending queue copy first, then durable."""
+        """Read-your-writes refill: pending queue copy first, then durable.
+
+        A FLUSH lane still in flight holds bytes neither ``peek`` nor the
+        store can see yet — settle the lanes first so a refault between an
+        async eviction and its lane service returns the last-committed
+        bytes, exactly like the sync reference mode."""
+        self.proto.fence_data_lanes()
         if self.writeback is not None:
             data = self.writeback.peek(key)
             if data is not None:
@@ -136,8 +143,16 @@ class DistributedKVCache:
     def advance_epoch(self) -> int:
         return 0 if self.writeback is None else self.writeback.advance_epoch()
 
+    def settle_data_plane(self) -> int:
+        """Force every in-flight lane-carried obligation (COPY / FLUSH) to
+        land.  The engine runs this before dispatching a decode step so the
+        compute can never read a frame whose bytes are still riding a lane.
+        Returns obligations settled."""
+        return self.proto.fence_data_lanes()
+
     def close(self) -> None:
         if self.writeback is not None:
+            self.proto.fence_data_lanes()   # enqueue before close refuses
             self.writeback.close()
             self.proto.harvest_writebacks()
         if self.store is not None:

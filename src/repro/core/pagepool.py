@@ -187,6 +187,23 @@ def reinstate(pool: PoolState, slots: jax.Array) -> PoolState:
 
 
 @functools.partial(jax.jit, donate_argnums=0)
+def orphan(pool: PoolState, slots: jax.Array) -> PoolState:
+    """Disassociate frames from their keys without changing slot state.
+
+    The async data plane uses this when a migration hand-off commits: the
+    destination frame becomes the key's canonical copy immediately, while
+    the source frame stays pinned (DRAINING) as an anonymous staging buffer
+    until its COPY lane services — single-copy holds throughout because the
+    staging frame no longer *names* the key.  Negative slots skipped."""
+    ok = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    key_of = pool.key_of.at[safe].set(
+        jnp.where(ok[:, None], jnp.full((2,), EMPTY, jnp.int32),
+                  pool.key_of[safe]))
+    return pool._replace(key_of=key_of)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
 def retire(pool: PoolState, slots: jax.Array) -> PoolState:
     """DRAINING -> WRITEBACK: the invalidation round completed with the
     dirty bit set and a flush obligation was enqueued.  The frame is pinned

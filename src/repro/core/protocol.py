@@ -62,6 +62,15 @@ class ProtocolConfig:
     # own ops (paper §4.3 batching).  False = legacy synchronous in-process
     # draining, kept as the reference mode for equivalence property tests.
     tlb_piggyback: bool = True
+    # async data plane: migration KV copies and deferred writeback captures
+    # ride COPY/FLUSH descriptor lanes on routed batches (serviced at the
+    # next batch routed on the target node's behalf, or at a fence —
+    # teardown begins, flush barriers, step boundaries), per-shard device
+    # transfers in _routed pipeline instead of awaiting one shard at a
+    # time, and drain_node evacuates through overlapped MIGRATE rounds.
+    # False = legacy synchronous stepping, kept as the reference mode for
+    # the async==sync equivalence property tests.
+    async_data_plane: bool = True
     # run the pure-Python RefDirectory in lockstep and assert the dirty bit
     # returned on every completed invalidation/migration matches the
     # oracle's needs_writeback — protocol/oracle divergence fails loudly
@@ -199,6 +208,16 @@ class DPCProtocol:
         # size: _routed fills these and ships ONE array to the device instead
         # of building + padding fresh arrays per call
         self._desc_scratch: Dict[int, np.ndarray] = {}
+        # --- async data plane (cfg.async_data_plane) -----------------------
+        # in-flight obligations riding descriptor lanes: migration KV copies
+        # and deferred writeback captures queue per target node and are
+        # serviced when the next batch is routed on that node's behalf (like
+        # shootdown lanes) or force-settled by fence_data_lanes().  Host-side
+        # metadata keyed by the lane payload recovers the full obligation.
+        self._lane_copies: Dict[int, List[Tuple[int, int, int]]] = {}
+        self._copy_meta: Dict[Tuple[int, int], Dict] = {}
+        self._lane_flushes: Dict[int, List[Tuple[int, int, int]]] = {}
+        self._flush_meta: Dict[Tuple[int, int, int], int] = {}
         # executable-spec shadow (satellite: divergence must fail loudly)
         self.oracle: Optional[refimpl.RefDirectory] = None
         if cfg.shadow_oracle:
@@ -218,6 +237,7 @@ class DPCProtocol:
             "joins": 0, "rejoins": 0, "drains": 0, "drained_pages": 0,
             "drain_aborts": 0, "rehomed_pages": 0, "rehome_deferred": 0,
             "lost_dirty_pages": 0, "checkpointed_pages": 0,
+            "lane_copies": 0, "lane_flushes": 0, "lane_fences": 0,
         }
 
     def attach_storage(self, store=None, writeback=None,
@@ -257,41 +277,80 @@ class DPCProtocol:
         aux = (np.zeros_like(streams) if aux is None
                else np.broadcast_to(np.asarray(aux, np.int32), streams.shape))
         n = len(streams)
-        sd_rows: Optional[np.ndarray] = None
+        lane_rows: List[np.ndarray] = []
         if self.tlbs is not None and self.cfg.tlb_piggyback and n:
             triples = self.tlbs.drain_for(np.unique(nodes).tolist())
             if triples:
-                sd_rows = D.encode_shootdowns(triples)
+                sd = D.encode_shootdowns(triples)
+                lane_rows.append(sd)
                 # receiver-side service: the lanes are decoded and the cached
                 # mappings die before any of the batch's own ops run
-                self.tlbs.deliver(D.decode_shootdowns(sd_rows))
+                self.tlbs.deliver(D.decode_shootdowns(sd))
+        if self.cfg.async_data_plane and n:
+            # data-plane lanes: pending COPY/FLUSH obligations for the nodes
+            # this batch is routed on behalf of ride along the same way and
+            # are serviced receiver-side before the batch's own ops
+            routed_nodes = np.unique(nodes).tolist()
+            cp = [t for nd in routed_nodes
+                  for t in self._lane_copies.pop(nd, [])]
+            fl = [t for nd in routed_nodes
+                  for t in self._lane_flushes.pop(nd, [])]
+            if cp:
+                rows = D.encode_copies(cp)
+                lane_rows.append(rows)
+                self._service_copy_lanes(D.decode_copies(rows))
+            if fl:
+                rows = D.encode_flushes(fl)
+                lane_rows.append(rows)
+                self._service_flush_lanes(D.decode_flushes(rows))
+        extra_rows = (np.concatenate(lane_rows) if lane_rows else None)
         res = np.zeros((n, 3), np.int32)
         extra: Dict[int, np.ndarray] = {}
-        for shard, idxs in _group_by_shard(self.cfg, streams, pages).items():
+        groups = list(_group_by_shard(self.cfg, streams, pages).items())
+        # async mode issues every shard's device transfer + op before
+        # materializing any result (the host<->device await moves from
+        # per-shard to per-call); sync reference mode awaits shard by shard
+        pipelined = self.cfg.async_data_plane and len(groups) > 1
+        issued = []
+        sizes_used = set()
+        for shard, idxs in groups:
             # pad to the next power of two: opcode programs recompile per
             # batch shape, so this bounds jit variants to log2(n) per opcode.
             # The padded host buffer is cached per size and filled in place —
             # one device transfer per shard instead of a stack + concat chain.
             n_real = len(idxs)
-            n_sd = 0 if sd_rows is None else len(sd_rows)
-            n_pad = 1 << (n_real + n_sd - 1).bit_length()
+            n_ex = 0 if extra_rows is None else len(extra_rows)
+            n_pad = 1 << (n_real + n_ex - 1).bit_length()
             buf = self._desc_scratch.get(n_pad)
             if buf is None:
                 buf = np.full((n_pad, D.N_LANES), int(D.INVALID), np.int32)
                 self._desc_scratch[n_pad] = buf
+            if pipelined and n_pad in sizes_used:
+                # the scratch for this size is potentially aliased by a
+                # still-unmaterialized transfer from an earlier shard in
+                # this same call — fill a fresh buffer instead
+                buf = np.full((n_pad, D.N_LANES), int(D.INVALID), np.int32)
+            sizes_used.add(n_pad)
             buf[n_real:] = int(D.INVALID)
             buf[:n_real, D.LANE_STREAM] = streams[idxs]
             buf[:n_real, D.LANE_PAGE] = pages[idxs]
             buf[:n_real, D.LANE_NODE] = nodes[idxs]
             buf[:n_real, D.LANE_AUX] = aux[idxs]
-            if n_sd:
+            if n_ex:
                 # the lanes ride the first shard's batch (directory-inert:
                 # every opcode skips negative lane-0 rows)
-                buf[n_real:n_real + n_sd] = sd_rows
-                sd_rows = None
+                buf[n_real:n_real + n_ex] = extra_rows
+                extra_rows = None
             out = self._dir_op(op, shard, jnp.asarray(buf))
+            if pipelined:
+                issued.append((shard, idxs, n_real, out))
+            else:
+                res[idxs] = np.asarray(out[0])[:n_real]
+                if len(out) > 1:  # begin_invalidate/migrate: sharer masks
+                    extra[shard] = (idxs, np.asarray(out[1])[:n_real])
+        for shard, idxs, n_real, out in issued:
             res[idxs] = np.asarray(out[0])[:n_real]
-            if len(out) > 1:  # begin_invalidate/migrate return sharer masks
+            if len(out) > 1:
                 extra[shard] = (idxs, np.asarray(out[1])[:n_real])
         return res, extra
 
@@ -360,6 +419,9 @@ class DPCProtocol:
         inline, then harvest completions.  Returns frames freed."""
         if self.writeback is None:
             return 0
+        # lane-carried flush captures must enter the queue before the pump
+        # can observe it (bounded staleness: one engine step at most)
+        self.fence_data_lanes()
         if not self.writeback.cfg.async_mode:
             self.writeback.pump(max_batches)
         return self.harvest_writebacks()
@@ -370,11 +432,99 @@ class DPCProtocol:
         one stream's) are durable, then release their frames."""
         if self.writeback is None:
             return 0
+        # a barrier promises durability for every obligation incurred so
+        # far — including ones still riding lanes, so settle those first
+        self.fence_data_lanes()
         if stream is not None:
             self.writeback.fsync_stream(stream)
         else:
             self.writeback.flush_barrier(upto_epoch)
         return self.harvest_writebacks()
+
+    # -- async data plane: lane-carried obligations ----------------------------
+
+    def _post_copy_lane(self, key: Tuple[int, int], src: int, src_slot: int,
+                        dst: int, src_pfn: int, dst_pfn: int, dirty: bool,
+                        copy_fn) -> None:
+        """Defer a migration's KV copy (and its dirty-page checkpoint) onto
+        a COPY lane riding the next batch routed for the destination.  The
+        source frame stays DRAINING — retained and invisible to clock_scan —
+        until the lane services, so the only materialized copy is pinned."""
+        self._copy_meta[(src_pfn, dst_pfn)] = {
+            "key": key, "src": src, "src_slot": src_slot, "dst": dst,
+            "dirty": dirty, "copy_fn": copy_fn}
+        self._lane_copies.setdefault(dst, []).append((dst, src_pfn, dst_pfn))
+        self.counters["lane_copies"] += 1
+
+    def _service_copy_lanes(self, triples) -> int:
+        """Receiver-side COPY service: run the data-plane copy, then the
+        hand-off epilogue the sync path runs inline — dirty sources
+        checkpoint through the writeback queue (retire + CLEAR_DIRTY at the
+        new owner), clean sources free."""
+        done = 0
+        for (_dst_node, src_pfn, dst_pfn) in triples:
+            info = self._copy_meta.pop((src_pfn, dst_pfn), None)
+            if info is None:
+                continue   # already settled by a fence
+            key = info["key"]
+            if info["copy_fn"] is not None:
+                info["copy_fn"](key, src_pfn, dst_pfn)
+            src, src_slot = info["src"], info["src_slot"]
+            if info["dirty"] and self.writeback is not None:
+                self._enqueue_writeback(key, src, src_slot)
+                self._pool_update(src, pp.retire(
+                    self.state.pools[src],
+                    jnp.asarray([src_slot], jnp.int32)))
+                self.counters["migration_writebacks"] += 1
+                self.clear_dirty([key[0]], [key[1]], info["dst"])
+            else:
+                self._release_frames(src, [src_slot])
+            done += 1
+        return done
+
+    def _post_flush_lane(self, key: Tuple[int, int], node: int,
+                         slot: int) -> None:
+        """Defer a dirty eviction's byte capture onto a FLUSH lane.  The
+        frame is already retired (S_WRITEBACK — pinned, never re-allocated),
+        so capturing at lane service still reads the only materialized copy.
+        The flush token registers eagerly: every pinned frame has exactly
+        one outstanding obligation even while the capture is in flight, and
+        _release_frames refuses the frame (flush-before-free) from the
+        moment it retires."""
+        self._wb_outstanding[(node, slot)] = key
+        self._flush_meta[(node, key[0], key[1])] = slot
+        self._lane_flushes.setdefault(node, []).append(
+            (node, key[0], key[1]))
+        self.counters["lane_flushes"] += 1
+
+    def _service_flush_lanes(self, triples) -> int:
+        """Receiver-side FLUSH service: capture the retired frame's bytes
+        into a writeback obligation (the deferred _enqueue_writeback)."""
+        done = 0
+        for (node, stream, page) in triples:
+            slot = self._flush_meta.pop((node, stream, page), None)
+            if slot is None:
+                continue   # already settled by a fence
+            self._enqueue_writeback((stream, page), node, slot)
+            done += 1
+        return done
+
+    def fence_data_lanes(self) -> int:
+        """Force-settle every pending COPY/FLUSH lane — the data-plane
+        analog of ``TLBGroup.fence``.  Teardown begins, flush barriers,
+        failure/drain/rejoin entry points, and the engine's step boundary
+        call this so nothing that observes frames, dirty bits, or the
+        writeback queue can race an in-flight obligation.  Returns lanes
+        settled."""
+        if not self._lane_copies and not self._lane_flushes:
+            return 0
+        cp = [t for q in self._lane_copies.values() for t in q]
+        fl = [t for q in self._lane_flushes.values() for t in q]
+        self._lane_copies.clear()
+        self._lane_flushes.clear()
+        n = self._service_copy_lanes(cp) + self._service_flush_lanes(fl)
+        self.counters["lane_fences"] += 1
+        return n
 
     # -- shadow oracle (refimpl run in lockstep; divergence fails loudly) ------
 
@@ -782,6 +932,10 @@ class DPCProtocol:
         # which refuses mark_dirty — a buffered bit flushed any later would
         # be dropped and its writeback lost.  Keys owned by this node are
         # only ever buffered on this node (write grants are owner-only).
+        # Lane-carried obligations settle first too: a committed migration
+        # destination with a pending COPY must receive its bytes before the
+        # scan could victimize (and capture) that frame.
+        self.fence_data_lanes()
         self.flush_dirty_marks(node)
         pool, victims = pp.clock_scan(self.state.pools[node], want)
         victims_np = np.asarray(victims)
@@ -895,7 +1049,13 @@ class DPCProtocol:
             del self.pending_inv[key]
             writebacks += int(is_dirty)
             if is_dirty and self.writeback is not None:
-                self._enqueue_writeback(key, node, info["slot"])
+                if self.cfg.async_data_plane:
+                    # defer the byte capture onto a FLUSH lane: the frame
+                    # retires now (pinned in S_WRITEBACK), the enqueue rides
+                    # the next batch routed for this node or the next fence
+                    self._post_flush_lane(key, node, info["slot"])
+                else:
+                    self._enqueue_writeback(key, node, info["slot"])
                 retired_slots.append(info["slot"])
             else:
                 freed_slots.append(info["slot"])
@@ -936,7 +1096,11 @@ class DPCProtocol:
         invalidation or migration round are skipped (BLOCKED)."""
         # sources are only known after the directory answers, so every
         # node's buffered write-grant dirty bits flush before any O -> TBM
-        # transition can make a late mark_dirty land BAD
+        # transition can make a late mark_dirty land BAD.  In-flight data
+        # lanes settle first for the same reason a reclaim fences: a page
+        # whose COPY is still riding must not become a migration source
+        # before its bytes land.
+        self.fence_data_lanes()
         self.flush_dirty_marks()
         n = len(pairs)
         statuses = np.full((n,), D.ST_BLOCKED, np.int32)
@@ -1071,27 +1235,44 @@ class DPCProtocol:
             self._oracle_completion("complete_migrate", key, (dst, src),
                                     was_dirty)
             dst_pfn = dst * self.cfg.pool_pages + dst_slot
-            if copy_fn is not None:
-                copy_fn(key, info["old_pfn"], dst_pfn)
-            # dirty=True: the hand-off carries the writeback obligation (the
-            # directory keeps the dirty bit on the entry at the new owner)
-            self.commit_pages([key[0]], [key[1]], dst, [dst_slot])
-            if was_dirty and self.writeback is not None:
-                # checkpoint the moving page: enqueue the *source* frame's
-                # bytes (still the materialized copy) and pin it until the
-                # flush commits — migration must never free the only
-                # unpersisted copy of a dirty page
-                self._enqueue_writeback(key, src, info["src_slot"])
-                self._pool_update(src, pp.retire(
+            if self.cfg.async_data_plane:
+                # overlap the hand-off's data plane: commit the new owner
+                # now, defer the KV copy (and the dirty checkpoint /
+                # source free) onto a COPY lane riding the next batch
+                # routed for the destination.  The source frame stays
+                # DRAINING (pinned, scan-invisible) until the lane lands.
+                self.commit_pages([key[0]], [key[1]], dst, [dst_slot])
+                self._post_copy_lane(key, src, info["src_slot"], dst,
+                                     info["old_pfn"], dst_pfn, was_dirty,
+                                     copy_fn)
+                # the destination is the key's canonical copy from here on;
+                # the source stays pinned as an anonymous staging buffer so
+                # single-copy holds while the lane is in flight
+                self._pool_update(src, pp.orphan(
                     self.state.pools[src],
                     jnp.asarray([info["src_slot"]], jnp.int32)))
-                self.counters["migration_writebacks"] += 1
-                # the hand-off just checkpointed the page's bytes, so the
-                # entry at the new owner starts clean — CLEAR_DIRTY stops
-                # the migrated page paying a second writeback on eviction
-                self.clear_dirty([key[0]], [key[1]], dst)
             else:
-                self._release_frames(src, [info["src_slot"]])
+                if copy_fn is not None:
+                    copy_fn(key, info["old_pfn"], dst_pfn)
+                # dirty=True: the hand-off carries the writeback obligation
+                # (the directory keeps the dirty bit at the new owner)
+                self.commit_pages([key[0]], [key[1]], dst, [dst_slot])
+                if was_dirty and self.writeback is not None:
+                    # checkpoint the moving page: enqueue the *source*
+                    # frame's bytes (still the materialized copy) and pin
+                    # it until the flush commits — migration must never
+                    # free the only unpersisted copy of a dirty page
+                    self._enqueue_writeback(key, src, info["src_slot"])
+                    self._pool_update(src, pp.retire(
+                        self.state.pools[src],
+                        jnp.asarray([info["src_slot"]], jnp.int32)))
+                    self.counters["migration_writebacks"] += 1
+                    # the hand-off just checkpointed the page's bytes, so
+                    # the entry at the new owner starts clean — CLEAR_DIRTY
+                    # stops a second writeback on eviction
+                    self.clear_dirty([key[0]], [key[1]], dst)
+                else:
+                    self._release_frames(src, [info["src_slot"]])
             self.counters["migrations"] += 1
             moved.append((key, info["old_pfn"], dst_pfn))
         return moved
@@ -1151,6 +1332,12 @@ class DPCProtocol:
         dirty bit was registered that is a lost committed write and counts
         into ``lost_dirty_pages`` — zero whenever a checkpoint or writeback
         preceded the crash.  Returns owned entries dropped."""
+        # settle in-flight lane obligations before anything dies: a pending
+        # COPY whose source is the failing node still has its only copy
+        # pinned in DRAINING — servicing it now lands the bytes (and any
+        # dirty checkpoint) exactly as the sync path already had; dropping
+        # it would lose committed dirty bytes
+        self.fence_data_lanes()
         # register surviving buffered dirty bits while their entries still
         # exist (the failing node's own marks die with its data — flushing
         # them first keeps the flush-status assert honest)
@@ -1280,6 +1467,10 @@ class DPCProtocol:
         their frame tokens go stale — harvest must not release them into
         the reborn pool."""
         assert 0 <= node < self.cfg.num_nodes
+        # pending FLUSH lanes must capture against the OLD pool before it is
+        # re-initialized — their tokens then go stale like any other
+        # outstanding flush of the previous incarnation
+        self.fence_data_lanes()
         for token in list(self._wb_outstanding):
             if token[0] == node:
                 self._wb_stale.add(token)
@@ -1318,6 +1509,10 @@ class DPCProtocol:
         cfg = self.cfg
         stats: Dict = {"migrated": 0, "aborted": 0, "e_aborted": 0,
                        "shares_dropped": 0, "moved": []}
+        # in-flight lane obligations involving the leaver settle up front —
+        # the drain must observe the same frames and dirty bits the sync
+        # reference mode would
+        self.fence_data_lanes()
         self.flush_dirty_marks()
         for key, info in list(self.pending_inv.items()):
             if node in info["waiting"]:
@@ -1373,7 +1568,8 @@ class DPCProtocol:
         owned = sorted(k for k, v in view.items()
                        if v[1] == node and v[0] == dirx.O)
         others = [n for n in range(cfg.num_nodes) if n != node]
-        for i in range(0, len(owned), 64):
+
+        def _chunk_pairs(i):
             chunk = owned[i:i + 64]
             pairs = []
             for j, key in enumerate(chunk):
@@ -1382,7 +1578,29 @@ class DPCProtocol:
                         or dst >= cfg.num_nodes:
                     dst = others[(i + j) % len(others)]
                 pairs.append((key, int(dst)))
-            stats["moved"].extend(self.migrate_sync(pairs, copy_fn=copy_fn))
+            return pairs
+
+        if cfg.async_data_plane:
+            # overlapped rounds: chunk k+1's DIR_INV fan-out goes out before
+            # chunk k's ACKs are delivered and completed, so two evacuation
+            # rounds are always in flight (the COPY lanes their completions
+            # post ride the next round's batches)
+            prev_notify: Dict[Tuple[int, int], List[int]] = {}
+            for i in range(0, len(owned), 64):
+                _, notify = self.migrate_begin(_chunk_pairs(i))
+                for key, sharer_nodes in prev_notify.items():
+                    for s in sharer_nodes:
+                        self.migrate_ack(key[0], key[1], s)
+                prev_notify = notify
+                stats["moved"].extend(self.migrate_finish(copy_fn=copy_fn))
+            for key, sharer_nodes in prev_notify.items():
+                for s in sharer_nodes:
+                    self.migrate_ack(key[0], key[1], s)
+            stats["moved"].extend(self.migrate_finish(copy_fn=copy_fn))
+        else:
+            for i in range(0, len(owned), 64):
+                stats["moved"].extend(
+                    self.migrate_sync(_chunk_pairs(i), copy_fn=copy_fn))
         stats["migrated"] = len(stats["moved"])
         owned_set = set(owned)
         stats["aborted"] = len(owned) - sum(
@@ -1409,6 +1627,9 @@ class DPCProtocol:
         checkpointed."""
         if self.writeback is None or self.page_bytes_fn is None:
             return 0
+        # a checkpoint sweeps the dirty set — lane-carried copies and
+        # captures must land first so the sweep sees settled state
+        self.fence_data_lanes()
         self.flush_dirty_marks()
         by_owner: Dict[int, List[Tuple[int, int]]] = {}
         for key, (st, owner, _sh, pfn, dirty) in \

@@ -84,6 +84,17 @@ class ServingEngine:
         self._ap = np.full((max_batch,), -1, np.int32)
         self._step_count = 0
 
+        # async data plane (DPCConfig.async_data_plane): while decode step N
+        # computes on device, the host allocates the page each request will
+        # need at its next boundary.  A prefetched page installs behind a
+        # generation check — drain/fail bump _gen and any issued-but-
+        # uninstalled prefetch is dropped as stale (the directory re-lookup
+        # in _alloc_page is idempotent, so dropping leaks nothing).
+        self._gen = 0
+        self._prefetch: Dict[int, tuple] = {}  # slot -> (gen, rid, idx, pid)
+        self.prefetch_hits = 0
+        self.prefetch_stale = 0
+
         # storage tier: evicted dirty KV pages flush through the writeback
         # queue; this engine's pools are the byte source (and refill sink)
         if self.kv.writeback is not None:
@@ -277,7 +288,18 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine iteration: admit -> decode -> harvest.  Returns number
-        of active requests."""
+        of active requests.
+
+        Async data plane: the decode step is dispatched, not awaited — the
+        host spends the device time issuing next-boundary page prefetches,
+        flushing buffered TLB touches / dirty marks, and pumping the
+        writeback queue, then blocks only when it samples the tokens."""
+        async_dp = self.kv.dpc.async_data_plane
+        if async_dp:
+            # settle lane-carried COPY/FLUSH obligations (end-of-last-step
+            # migrations, deferred writeback captures) before page tables
+            # are read or rewritten
+            self.kv.settle_data_plane()
         for slot in range(self.max_batch):
             if self.active[slot] is None and self.queue:
                 self._admit(slot, self.queue.popleft())
@@ -286,7 +308,9 @@ class ServingEngine:
         if not live:
             return 0
 
-        # page-boundary allocation for requests whose filling page is full
+        # page-boundary allocation for requests whose filling page is full;
+        # under the async data plane the page was usually allocated during
+        # the previous step's overlap window (generation-checked install)
         page = self.run.dpc.page_size
         pool_pages = self.kv.dpc.pool_pages_per_shard
         for slot, req in enumerate(self.active):
@@ -296,7 +320,9 @@ class ServingEngine:
             if total % page == 0:
                 idx = total // page
                 if idx < self.max_pages and self._pt[slot, idx] < 0:
-                    pid = self._alloc_page((0x7E57 ^ req.rid, int(idx)))
+                    pid = self._take_prefetch(slot, int(idx), req)
+                    if pid < 0:
+                        pid = self._alloc_page((0x7E57 ^ req.rid, int(idx)))
                     if pid >= 0:
                         self._pt[slot, idx] = pid
                         self._ap[slot] = pid % pool_pages
@@ -318,9 +344,23 @@ class ServingEngine:
                                     self.arch.audio.num_codebooks))
         positions = jnp.asarray(self._sl)
 
-        logits, self.cache = self._decode(self.params, tok, positions,
-                                          self.cache)
-        nxt = np.asarray(registry.greedy_sample(logits))
+        if async_dp:
+            inflight = steps.InFlightDecode(
+                *self._decode(self.params, tok, positions, self.cache))
+            self.cache = inflight.cache
+            # ---- overlap window: device decodes while the host works ----
+            self._issue_prefetch()
+            self.kv.flush_tlb_touches()
+            self.kv.flush_dirty_marks()
+            if self.kv.writeback is not None:
+                self.kv.advance_epoch()
+                self.kv.pump_storage()
+                self.kv.writeback.kick()
+            nxt = inflight.sample()  # sync point: ends the overlap window
+        else:
+            logits, self.cache = self._decode(self.params, tok, positions,
+                                              self.cache)
+            nxt = np.asarray(registry.greedy_sample(logits))
 
         pc = steps.paged_part(self.cache)
         if pc is not None:
@@ -343,6 +383,7 @@ class ServingEngine:
                 req.t_done = now
                 completed.append(req)
                 self.active[slot] = None
+                self._prefetch.pop(slot, None)  # unused, not a race: drop
                 self._sl[slot] = 0
                 self._pt[slot, :] = -1
                 self._ap[slot] = -1
@@ -353,17 +394,21 @@ class ServingEngine:
         # TLB-hit CLOCK touches buffered during this step's lookups land in
         # one batched device call — the hit path itself stayed device-free.
         # Write-grant dirty bits ride the same boundary: one batched
-        # mark_dirty per node instead of one per written page
-        self.kv.flush_tlb_touches()
-        self.kv.flush_dirty_marks()
+        # mark_dirty per node instead of one per written page.  Under the
+        # async data plane both flushes (and the epoch stamp + pump) already
+        # happened inside the overlap window above.
+        if not async_dp:
+            self.kv.flush_tlb_touches()
+            self.kv.flush_dirty_marks()
 
         # durability rides the step boundary: stamp an epoch, pump the
         # queue (sync mode flushes one batch; async harvests completions),
         # and fsync each completed request's streams — its pages are
         # guaranteed refillable once the response is surfaced
         if self.kv.writeback is not None:
-            self.kv.advance_epoch()
-            self.kv.pump_storage()
+            if not async_dp:
+                self.kv.advance_epoch()
+                self.kv.pump_storage()
             for req in completed:
                 for stream in {k[0] for k in req.page_keys}:
                     self.kv.fsync_stream(stream)
@@ -376,6 +421,45 @@ class ServingEngine:
                 self._step_count % dpc.migrate_interval_steps == 0:
             self._run_migrations()
         return n_active + len(self.queue)
+
+    # -- async data plane: next-boundary page prefetch -------------------------
+
+    def _take_prefetch(self, slot: int, idx: int, req: Request) -> int:
+        """Consume the prefetched page id for (slot, idx) if one was issued
+        during the previous step's overlap window and is still valid: same
+        membership generation, same request, same page index.  A stale entry
+        is counted and dropped — the directory re-lookup in _alloc_page is
+        idempotent, so dropping never leaks the frame."""
+        ent = self._prefetch.pop(slot, None)
+        if ent is None:
+            return -1
+        gen, rid, p_idx, pid = ent
+        if gen == self._gen and rid == req.rid and p_idx == idx and pid >= 0:
+            self.prefetch_hits += 1
+            return pid
+        self.prefetch_stale += 1
+        return -1
+
+    def _issue_prefetch(self) -> None:
+        """Overlap-window work: allocate the page each live request will need
+        at its NEXT boundary so step N+1's table build is a dictionary hit.
+        Runs while the dispatched decode computes; uses only pre-step host
+        state (``self._sl`` has not been advanced yet)."""
+        page = self.run.dpc.page_size
+        for slot, req in enumerate(self.active):
+            if req is None or slot in self._prefetch:
+                continue
+            if len(req.generated) + 1 >= req.max_new_tokens:
+                continue  # request completes this step: no next boundary
+            total = int(self._sl[slot]) + 1  # position after this step
+            if total % page != 0:
+                continue
+            idx = total // page
+            if idx >= self.max_pages or self._pt[slot, idx] >= 0:
+                continue
+            pid = self._alloc_page((0x7E57 ^ req.rid, int(idx)))
+            if pid >= 0:
+                self._prefetch[slot] = (self._gen, req.rid, idx, pid)
 
     # -- ownership migration (core/migration.py) ------------------------------
 
@@ -397,6 +481,9 @@ class ServingEngine:
         for req in self.active:
             if req is not None:
                 req.page_ids = [remap.get(p, p) for p in req.page_ids]
+        # issued-but-uninstalled prefetches name frames too
+        self._prefetch = {s: (g, r, i, remap.get(p, p))
+                          for s, (g, r, i, p) in self._prefetch.items()}
         self._sync_cache_tables()
 
     # -- elastic membership ----------------------------------------------------
@@ -404,8 +491,13 @@ class ServingEngine:
     def drain_node(self, node: int, alive=None):
         """Planned node departure: evacuate its pages (KV rows move with
         them) and rewrite the page tables for the new homes."""
+        self._gen += 1  # issued prefetches may name the departing node
         st = self.kv.drain_node(node, alive=alive, copy_fn=self._copy_page)
         self._apply_remap(st.get("moved", []))
+        if self.kv.dpc.async_data_plane:
+            # tail evacuation chunk's COPY lanes: settle before any caller
+            # reads the rewritten tables' bytes
+            self.kv.settle_data_plane()
         return st
 
     def _rehome_install(self, key, pfn: int, data) -> bool:
@@ -415,6 +507,7 @@ class ServingEngine:
     def fail_node(self, node: int, rehome_to=None) -> int:
         """Heartbeat-loss failover; with ``rehome_to``, orphans refill from
         the durable tier into the survivor's pool."""
+        self._gen += 1  # drop issued-but-uninstalled prefetches as stale
         return self.kv.fail_node(node, rehome_to=rehome_to,
                                  install_fn=self._rehome_install)
 

@@ -17,6 +17,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as shardlib
@@ -89,6 +90,26 @@ def make_decode_step(run: RunConfig, api, mesh: Optional[Mesh] = None,
                                backend)
 
     return decode
+
+
+class InFlightDecode:
+    """Handle for a dispatched decode step (the async data plane's
+    double-buffer point).
+
+    jax dispatch is asynchronous: the jitted step returns lazy device
+    arrays immediately.  The engine wraps them here, overlaps host-side
+    directory work — next-step page prefetch, dirty-mark flushes, the
+    writeback pump — with the device compute, and only blocks when it
+    calls ``sample()`` for the tokens it actually needs."""
+
+    def __init__(self, logits, cache):
+        self._logits = logits
+        self.cache = cache
+
+    def sample(self) -> np.ndarray:
+        """Greedy-sample the dispatched logits; materializing the result is
+        the synchronization point that ends the overlap window."""
+        return np.asarray(registry.greedy_sample(self._logits))
 
 
 def make_prefill_step(run: RunConfig, api, mesh: Optional[Mesh] = None,

@@ -134,6 +134,18 @@ class WritebackQueue:
             self._epoch += 1
             return self._epoch
 
+    def kick(self) -> int:
+        """Wake the async flusher immediately instead of letting pending
+        obligations sit out the remaining flush interval — the engine kicks
+        right after dispatching a decode step so flushes overlap the device
+        compute.  Sync mode is unaffected (the caller pumps).  Returns the
+        pending count at kick time."""
+        with self._cv:
+            n = len(self._pending)
+            if n and self._thread is not None:
+                self._cv.notify_all()
+            return n
+
     # -- read-your-writes --------------------------------------------------
 
     def peek(self, key: Key) -> Optional[np.ndarray]:

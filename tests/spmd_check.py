@@ -17,6 +17,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import descriptors as D
+from repro.core import directory as dirx
 from repro.core.remote_read import make_shipdata_attend
 from repro.core.ship_compute import make_dpc_attend, make_dpc_attend_mla
 from repro.models.cache import LocalBackend
@@ -129,8 +131,67 @@ def main():
                                     pt, sl, ap)
     all_ok &= check("ship_data_pod.out", got_out, want_out)
 
+    all_ok &= check_lane_transport(mesh)
+
     print("ALL_OK" if all_ok else "SOME_FAILED")
     sys.exit(0 if all_ok else 1)
+
+
+def check_lane_transport(mesh):
+    """Data-plane lanes under SPMD: a routed opcode batch carrying
+    SHOOTDOWN/COPY/FLUSH rows, sharded across the mesh's data axis, must
+    (a) leave the directory op's results and end state identical to the
+    unsharded run, (b) leave lane rows directory-inert (STAT_SKIP), and
+    (c) survive the device round trip bit-exactly so the receiving node
+    decodes the same obligations that were posted."""
+    ok = True
+    dcfg = dirx.DirectoryConfig(capacity=64, num_nodes=8)
+
+    shoot = [(1, 5, 0), (6, 11, 0)]
+    copies = [(3, 7, 9), (3, 8, 10), (5, 2, 4)]
+    flushes = [(4, 6, 0), (4, 9, 1), (2, 1, 0)]
+    lanes = np.concatenate([D.encode_shootdowns(shoot),
+                            D.encode_copies(copies),
+                            D.encode_flushes(flushes)])
+    lookups = np.asarray(D.make_batch(list(range(1, 9)), [0] * 8, [2] * 8))
+    # interleave: every lookup row is followed by a lane row, so inertness
+    # is tested in the adversarial (mixed) layout the transport produces
+    batch = np.empty((16, 4), np.int32)
+    batch[0::2], batch[1::2] = lookups, lanes
+
+    _, want = dirx.lookup_and_install(dirx.init_directory(dcfg),
+                                      jnp.asarray(batch))
+    d_want, _ = dirx.lookup_and_install(dirx.init_directory(dcfg),
+                                        jnp.asarray(batch))
+
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None))
+    sharded = jax.device_put(jnp.asarray(batch), sharding)
+    d_got, got = dirx.lookup_and_install(
+        jax.device_put(dirx.init_directory(dcfg),
+                       jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec())),
+        sharded)
+    ok &= check("lane_transport.results", got, want, atol=0)
+    for field in ("keys", "state", "owner", "pfn"):
+        ok &= check(f"lane_transport.dir.{field}",
+                    getattr(d_got, field), getattr(d_want, field), atol=0)
+
+    skips = np.asarray(got)[1::2, 0]
+    if np.all(skips == dirx.STAT_SKIP):
+        print("OK lane_transport.inert")
+    else:
+        print(f"FAIL lane_transport.inert statuses={skips.tolist()}")
+        ok = False
+
+    # round trip: the sharded device batch decodes to the posted obligations
+    back = np.asarray(sharded)[1::2]
+    rt = (D.decode_shootdowns(back) == shoot
+          and D.decode_copies(back) == copies
+          and D.decode_flushes(back) == flushes)
+    print("OK lane_transport.roundtrip" if rt
+          else "FAIL lane_transport.roundtrip")
+    return ok & rt
 
 
 if __name__ == "__main__":

@@ -1,0 +1,460 @@
+"""Async data plane tests: overlap must be unobservable at settle points.
+
+The tentpole property: running the protocol with ``async_data_plane=True``
+(migration KV copies and writeback captures riding COPY/FLUSH descriptor
+lanes, deferred source frees, pipelined shard transfers) must settle to
+exactly the same directory state, the same per-key store bytes, and the
+same writeback decisions as the legacy synchronous stepping — under
+arbitrary interleavings of reads, writes, reclamation, migration, ACK
+delivery, pump/flush, and node failure, with the refimpl shadow oracle
+checking every intermediate step.
+
+Also covers the teardown races the deferral opens up:
+  * drain_node's overlapped evacuation rounds (COPY lanes pending while the
+    next chunk's DIR_INVs are in flight) — zero lost committed dirty bytes
+  * engine failover racing an issued-but-uninstalled page prefetch — the
+    stale install is dropped by the generation check
+  * reclamation racing a lane-carried flush — a refault settles the lane
+    before reading, so read-your-writes holds through the pending capture
+"""
+
+import numpy as np
+import pytest
+
+try:  # dev-only dep: collection must never hard-fail without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core import pagepool as pp
+from repro.core.dpc_cache import DistributedKVCache
+
+NODES = 4
+
+
+def make_kv(pool_pages=8, num_nodes=NODES, **kw) -> DistributedKVCache:
+    dpc = DPCConfig(page_size=8, pool_pages_per_shard=pool_pages,
+                    shadow_oracle=True, migrate_threshold=0,
+                    directory_capacity=512, **kw)
+    return DistributedKVCache(dpc, num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# lane encoding: roundtrip + directory inertness
+# ---------------------------------------------------------------------------
+
+
+class TestLaneEncoding:
+    def test_copy_roundtrip(self):
+        triples = [(2, 17, 42), (0, 5, 11), (3, 0, 7)]
+        rows = D.encode_copies(triples)
+        assert rows.shape == (3, D.N_LANES)
+        assert (rows[:, D.LANE_STREAM] == int(D.COPY)).all()
+        assert D.decode_copies(rows) == triples
+
+    def test_flush_roundtrip(self):
+        triples = [(1, 99, 3), (2, 7, 0)]
+        rows = D.encode_flushes(triples)
+        assert (rows[:, D.LANE_STREAM] == int(D.FLUSH)).all()
+        assert D.decode_flushes(rows) == triples
+
+    def test_decoders_ignore_foreign_rows(self):
+        """COPY/FLUSH/SHOOTDOWN rows share one batch; each decoder must
+        pick out only its own kind."""
+        mixed = np.concatenate([
+            D.encode_copies([(1, 2, 3)]),
+            D.encode_flushes([(2, 9, 1)]),
+            D.encode_shootdowns([(0, 4, 5)]),
+            np.asarray(D.make_batch([7], [0], [1])),
+        ])
+        assert D.decode_copies(mixed) == [(1, 2, 3)]
+        assert D.decode_flushes(mixed) == [(2, 9, 1)]
+        assert D.decode_shootdowns(mixed) == [(0, 4, 5)]
+
+    def test_lane_rows_are_directory_inert(self):
+        """A batch carrying COPY and FLUSH lanes through a directory opcode
+        must behave exactly as the batch without them: same statuses for the
+        real rows, no phantom entries installed."""
+        cfg = dirx.DirectoryConfig(capacity=64, num_nodes=NODES, max_probe=64)
+        real = np.asarray(D.make_batch([9, 10], [0, 1], [2]))
+        lanes = np.concatenate([D.encode_copies([(1, 3, 12)]),
+                                D.encode_flushes([(0, 9, 0)])])
+        d_plain, res_plain = dirx.lookup_and_install(
+            dirx.init_directory(cfg), jnp.asarray(real), max_probe=64)
+        d_lane, res_lane = dirx.lookup_and_install(
+            dirx.init_directory(cfg),
+            jnp.asarray(np.concatenate([real, lanes])), max_probe=64)
+        np.testing.assert_array_equal(np.asarray(res_plain)[:2],
+                                      np.asarray(res_lane)[:2])
+        assert dirx.to_host_dict(d_plain, cfg) == dirx.to_host_dict(d_lane,
+                                                                    cfg)
+
+
+# ---------------------------------------------------------------------------
+# equivalence property: async settles to the sync reference state
+# ---------------------------------------------------------------------------
+
+
+N_KEYS = 6
+OPS = ["read", "read", "write", "write", "flush_writes", "reclaim_begin",
+       "migrate_begin", "ack_one", "reclaim_finish", "migrate_finish",
+       "pump", "barrier", "fail"]
+
+
+def _run_interleaving(events, async_dp: bool):
+    """Drive one op interleaving over a storage-integrated cache and return
+    the pfn-normalized settled state.  Frame numbers are normalized away:
+    deferred frees legally reorder the free stack, so the *same* settled
+    protocol state lands in different physical slots between modes."""
+    kv = make_kv(pool_pages=16, storage_backend="memory",
+                 writeback_async=False, writeback_batch=2,
+                 async_data_plane=async_dp)
+    proto = kv.proto
+    keys = [(11, p) for p in range(N_KEYS)]
+    frames = {}     # pfn -> bytes (the simulated data plane)
+    expected = {}   # key -> last-written bytes (the model)
+    kv.set_page_bytes_fn(lambda key, pfn: frames.get(pfn))
+    version = [0]
+    failed = set()
+
+    def fresh(key):
+        version[0] += 1
+        return np.full((4,), version[0], np.float32)
+
+    def do_read(s, p, node):
+        lk = kv.lookup([s], [p], node)[0]
+        if lk.status == D.ST_FULL and async_dp:
+            # a deferred source free can make the pool *transiently*
+            # tighter than the sync schedule; settling and retrying makes
+            # the allocation decisions line up again (the engine's analog
+            # is the reclaim-retry loop in _alloc_page)
+            proto.fence_data_lanes()
+            lk = kv.lookup([s], [p], node)[0]
+        if lk.status == D.ST_GRANT_E:
+            if lk.refill is not None:
+                np.testing.assert_array_equal(lk.refill, expected[(s, p)])
+                frames[lk.page_id] = np.asarray(lk.refill)
+            else:
+                assert (s, p) not in expected, "committed bytes lost"
+                data = fresh((s, p))
+                frames[lk.page_id] = data
+                expected[(s, p)] = data
+            kv.commit([s], [p], node, [lk])
+
+    def deliver_one_ack():
+        for pend in (proto.pending_inv, proto.pending_mig):
+            for key, info in pend.items():
+                if info["waiting"]:
+                    node = min(info["waiting"])
+                    if pend is proto.pending_inv:
+                        proto.reclaim_ack(key[0], key[1], node)
+                    else:
+                        proto.migrate_ack(key[0], key[1], node)
+                    return
+
+    def copy_fn(key, src_pfn, dst_pfn):
+        if src_pfn in frames:
+            frames[dst_pfn] = frames[src_pfn]
+
+    for op, ki, node in events:
+        s, p = keys[ki]
+        if node in failed:
+            continue
+        if op == "read":
+            do_read(s, p, node)
+        elif op == "write":
+            ent = proto.directory_view().get((s, p))
+            if ent is not None and ent[0] == dirx.O and \
+                    ent[1] not in failed:
+                owner, pfn = ent[1], ent[3]
+                if proto.mark_dirty([s], [p], owner)[0] == D.ST_OK:
+                    data = fresh((s, p))
+                    frames[pfn] = data
+                    expected[(s, p)] = data
+        elif op == "flush_writes":
+            proto.flush_dirty_marks()
+        elif op == "reclaim_begin":
+            proto.reclaim_begin(node, want=1)
+        elif op == "migrate_begin":
+            proto.migrate_begin([((s, p), node)])
+        elif op == "ack_one":
+            deliver_one_ack()
+        elif op == "reclaim_finish":
+            proto.reclaim_finish(node)
+        elif op == "migrate_finish":
+            proto.migrate_finish(copy_fn=copy_fn)
+        elif op == "pump":
+            kv.pump_storage(1)
+        elif op == "barrier":
+            kv.flush()
+        elif op == "fail":
+            if node not in failed and len(failed) < NODES - 2:
+                failed.add(node)
+                kv.fail_node(node)
+                # re-baseline the model at the durable tier: a key whose
+                # entry died with the node loses its unflushed bytes (in
+                # both modes — fail_node settles its lanes first) and a
+                # refault can only recover the queue/store version
+                view_after = proto.directory_view()
+                for key in list(expected):
+                    if key not in view_after:
+                        data = kv._storage_read(key)
+                        if data is None:
+                            del expected[key]
+                        else:
+                            expected[key] = np.asarray(data)
+        proto.oracle.check_invariants()
+
+    # settle: drain every in-flight transaction, then every obligation
+    for _ in range(NODES * N_KEYS):
+        if not any(i["waiting"] for i in proto.pending_inv.values()) and \
+                not any(i["waiting"] for i in proto.pending_mig.values()):
+            break
+        deliver_one_ack()
+    for node in range(NODES):
+        proto.reclaim_finish(node)
+    proto.migrate_finish(copy_fn=copy_fn)
+    proto.flush_dirty_marks()
+    proto.fence_data_lanes()
+    kv.flush()
+
+    assert proto.counters["oracle_mismatches"] == 0
+    assert proto.counters["flush_before_free_violations"] == 0
+    assert kv.writeback.pending_count() == 0
+
+    # every written key must still read back its last bytes (from a live
+    # frame, the queue — already flushed — or the durable store)
+    reader = next(n for n in range(NODES) if n not in failed)
+    for (s, p), want in expected.items():
+        ent = proto.directory_view().get((s, p))
+        if ent is not None and ent[0] == dirx.O:
+            np.testing.assert_array_equal(frames[ent[3]], want)
+        else:
+            got = kv.store.read(s, p)
+            assert got is not None, f"({s},{p}): bytes dropped"
+            np.testing.assert_array_equal(got, want)
+
+    norm_dir = {
+        key: (ent[0], ent[1], frozenset(ent[2]), bool(ent[4]))
+        for key, ent in proto.directory_view().items()
+    }
+    store = {key: tuple(np.asarray(kv.store.read(*key)).ravel().tolist())
+             for key in expected if kv.store.read(*key) is not None}
+    byte_view = {key: tuple(np.asarray(v).ravel().tolist())
+                 for key, v in expected.items()}
+    kv.close()
+    return (norm_dir, store, byte_view,
+            proto.counters["writebacks"],
+            proto.counters["writebacks_committed"],
+            proto.counters["migration_writebacks"],
+            proto.counters["lost_dirty_pages"])
+
+
+def _seeded_events(seed: int, n: int = 60):
+    rng = np.random.default_rng(seed)
+    return [(OPS[rng.integers(len(OPS))],
+             int(rng.integers(N_KEYS)), int(rng.integers(NODES)))
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_async_equals_sync_seeded(seed):
+    """Tier-1 fixed-seed equivalence: lane-deferred copies/flushes must
+    settle to the same directory, store, and writeback decisions as the
+    synchronous reference mode (both oracle-clean throughout)."""
+    events = _seeded_events(seed)
+    assert _run_interleaving(events, async_dp=True) == \
+        _run_interleaving(events, async_dp=False)
+
+
+if HAVE_HYPOTHESIS:
+    EVENTS = st.lists(
+        st.tuples(
+            st.sampled_from(OPS),
+            st.integers(0, N_KEYS - 1),     # key index
+            st.integers(0, NODES - 1),      # node
+        ),
+        min_size=1, max_size=50,
+    )
+
+    @pytest.mark.property
+    @settings(deadline=None)  # example count comes from the profile
+    @given(EVENTS)
+    def test_async_equals_sync(events):
+        """Hypothesis-driven search over the same interleaving space (with
+        shrinking) — the slow/property tier's stronger version."""
+        assert _run_interleaving(events, async_dp=True) == \
+            _run_interleaving(events, async_dp=False)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_async_equals_sync():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# teardown races opened by the deferral
+# ---------------------------------------------------------------------------
+
+
+class TestDrainRacesOverlappedEvacuation:
+    def test_overlapped_drain_rounds_lose_nothing(self):
+        """drain_node evacuates in overlapped MIGRATE rounds: chunk k+1's
+        DIR_INVs go out while chunk k's COPY lanes are still pending.  All
+        committed bytes (dirty ones included) must survive the hand-offs."""
+        kv = make_kv(pool_pages=192, storage_backend="memory",
+                     writeback_async=False, writeback_batch=8)
+        proto = kv.proto
+        n = 150   # > 2 evacuation chunks of 64
+        streams, pages = [23] * n, list(range(n))
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(pfn))
+        lks = kv.lookup(streams, pages, 0)
+        for p, lk in zip(pages, lks):
+            frames[lk.page_id] = np.full((4,), 1000 + p, np.float32)
+        kv.commit(streams, pages, 0, lks)
+        # dirty a third of them: their evacuation must checkpoint bytes
+        dirty = pages[::3]
+        proto.mark_dirty([23] * len(dirty), dirty, 0)
+        proto.flush_dirty_marks()
+
+        def copy_fn(key, src_pfn, dst_pfn):
+            frames[dst_pfn] = frames[src_pfn]
+
+        st = kv.drain_node(0, copy_fn=copy_fn)
+        assert proto.counters["lane_copies"] > 0      # lanes actually used
+        assert st["migrated"] == n
+        kv.proto.fence_data_lanes()
+        kv.flush()
+        view = proto.directory_view()
+        for p in pages:
+            ent = view[(23, p)]
+            assert ent[0] == dirx.O and ent[1] != 0
+            np.testing.assert_array_equal(
+                frames[ent[3]], np.full((4,), 1000 + p, np.float32))
+        for p in dirty:   # checkpoints are durable
+            np.testing.assert_array_equal(
+                kv.store.read(23, p), np.full((4,), 1000 + p, np.float32))
+        assert proto.counters["lost_dirty_pages"] == 0
+        assert proto.counters["oracle_mismatches"] == 0
+        kv.close()
+
+
+class TestReclaimRacesLaneFlush:
+    def test_refault_settles_pending_flush_lane(self):
+        """A dirty eviction's byte capture rides a FLUSH lane.  A refault
+        from another node racing that lane must still read the committed
+        bytes — _storage_read settles the lanes before touching the queue
+        or the store (read-your-writes through the deferral)."""
+        kv = make_kv(pool_pages=4, storage_backend="memory",
+                     writeback_async=False, writeback_batch=4)
+        proto = kv.proto
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(pfn))
+        lks = kv.lookup([31], [0], 0)
+        frames[lks[0].page_id] = np.full((4,), 77.0, np.float32)
+        kv.commit([31], [0], 0, lks)
+        proto.mark_dirty([31], [0], 0)
+        proto.flush_dirty_marks()
+
+        proto.reclaim_sync(0, want=1)
+        # capture deferred: lane pending, nothing in the queue yet, but the
+        # frame is already pinned with its flush token registered
+        assert proto.counters["lane_flushes"] == 1
+        assert kv.writeback.pending_count() == 0
+        assert int(pp.num_writeback(proto.state.pools[0])) == 1
+        assert len(proto._wb_outstanding) == 1
+
+        lk = kv.lookup([31], [0], 1)[0]   # refault races the pending lane
+        assert lk.status == D.ST_GRANT_E and lk.refill is not None
+        np.testing.assert_array_equal(lk.refill,
+                                      np.full((4,), 77.0, np.float32))
+        kv.flush()
+        assert proto.counters["lost_dirty_pages"] == 0
+        assert proto.counters["flush_before_free_violations"] == 0
+        assert proto.counters["oracle_mismatches"] == 0
+        kv.close()
+
+
+# ---------------------------------------------------------------------------
+# engine level: prefetch generation check + async == sync tokens
+# ---------------------------------------------------------------------------
+
+
+def _make_engine(async_dp: bool, num_nodes: int = 2):
+    import jax
+    from repro.configs import get_smoke_arch
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    from repro.models import registry
+    from repro.models.spec import init_params
+    from repro.serving.engine import ServingEngine
+
+    arch = get_smoke_arch("granite-3-2b")
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    run = RunConfig(arch=arch, shape=ShapeConfig("s", 64, 4, "decode"),
+                    mesh=MeshConfig((1,), ("data",)),
+                    dpc=DPCConfig(page_size=8, pool_pages_per_shard=64,
+                                  shadow_oracle=True,
+                                  async_data_plane=async_dp))
+    kv = DistributedKVCache(run.dpc, num_nodes)
+    return ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
+                         kv_cache=kv), kv
+
+
+class TestEngineAsyncDataPlane:
+    PROMPT = list(range(11, 27))   # 2 full pages
+
+    def test_async_tokens_equal_sync_tokens(self):
+        """The overlapped step must be numerically identical to the sync
+        reference step — same prompts, same params, same greedy tokens."""
+        outs = {}
+        hits = {}
+        for mode in (True, False):
+            eng, kv = _make_engine(mode)
+            eng.submit(self.PROMPT, max_new_tokens=12)
+            eng.submit(self.PROMPT[:8], max_new_tokens=12)
+            finished = {}
+
+            for _ in range(200):
+                before = {id(r): r for r in eng.active if r is not None}
+                n = eng.step()
+                for r in before.values():
+                    if r.done:
+                        finished[r.rid] = tuple(r.generated)
+                if n == 0:
+                    break
+            assert not any(r is not None for r in eng.active)
+            assert set(finished) == {0, 1}
+            assert kv.proto.counters["oracle_mismatches"] == 0
+            outs[mode] = finished
+            hits[mode] = eng.prefetch_hits
+        assert outs[True] == outs[False]
+        assert hits[True] > 0      # the overlap actually engaged
+        assert hits[False] == 0    # reference mode never prefetches
+
+    def test_failover_drops_issued_prefetch_as_stale(self):
+        """A prefetch issued during the overlap window races fail_node: the
+        generation check must drop the stale install and re-allocate through
+        the post-failover directory — no corrupt page table, full output."""
+        eng, kv = _make_engine(True)
+        eng.submit(self.PROMPT, max_new_tokens=24)
+        fired = False
+        for _ in range(200):
+            n = eng.step()
+            if eng._prefetch and not fired:
+                fired = True
+                eng.fail_node(1)   # bumps the generation mid-flight
+            if n == 0:
+                break
+        assert fired, "no prefetch was ever in flight"
+        assert eng.prefetch_stale >= 1
+        assert kv.proto.counters["oracle_mismatches"] == 0
+        # table integrity: every named frame belongs to a live pool slot
+        assert (eng._pt[eng._pt >= 0] <
+                kv.dpc.pool_pages_per_shard * 2).all()

@@ -320,6 +320,7 @@ class TestProtocolWriteback:
 
         moved = proto.migrate_sync([((5, 0), 1)], copy_fn=copy)
         assert len(moved) == 1
+        proto.fence_data_lanes()   # checkpoint rides a COPY lane
         assert proto.counters["migration_writebacks"] == 1
         # source frame pinned until the flush commits
         assert int(pp.num_writeback(proto.state.pools[0])) == 1
@@ -382,6 +383,9 @@ class TestRefaultLoop:
         kv, frames = make_cache()
         fill(kv, frames, [1, 2, 3, 4], value_of=lambda s: 100 + s)
         kv.proto.reclaim_sync(0, want=2)     # obligations pending, unflushed
+        # the byte captures ride FLUSH lanes; settle them into the queue
+        # (the flush itself is still pending — that's the race under test)
+        kv.proto.fence_data_lanes()
         assert kv.writeback.pending_count() == 2
         evicted = [s for s in [1, 2, 3, 4]
                    if (s, 0) not in kv.proto.directory_view()]

@@ -116,6 +116,10 @@ class Harness:
             self.frames[dst_pfn] = self.frames[src_pfn]
 
         self.kv.proto.migrate_sync([(key, dst)], copy_fn=copy)
+        # the hand-off's KV copy rides a COPY lane under the async data
+        # plane; the model observes bytes directly, so settle first (the
+        # engine's analog is settle_data_plane at the step boundary)
+        self.kv.proto.fence_data_lanes()
 
     def pump(self):
         self.kv.pump_storage(1)
