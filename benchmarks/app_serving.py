@@ -109,10 +109,10 @@ def run(smoke: bool = False):
             tput = reqs_per_node * new_tokens * n_nodes / dt
             if base_tput is None:
                 base_tput = tput
-            saved = sum(e.stats.prefill_tokens_saved for e in engines)
-            run_tok = sum(e.stats.prefill_tokens_run for e in engines)
-            loc = sum(e.stats.pages_local for e in engines)
-            rem = sum(e.stats.pages_remote for e in engines)
+            saved = sum(e.prefix_stats.prefill_tokens_saved for e in engines)
+            run_tok = sum(e.prefix_stats.prefill_tokens_run for e in engines)
+            loc = sum(e.prefix_stats.pages_local for e in engines)
+            rem = sum(e.prefix_stats.pages_remote for e in engines)
             tput_by_mode[(mode, n_nodes)] = tput
             tlb_h = kv.stats.get("tlb_hits", 0)
             emit(f"app.{mode}.n{n_nodes}", 1e6 / max(tput, 1e-9),

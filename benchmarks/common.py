@@ -14,6 +14,17 @@ import jax.numpy as jnp
 
 ROWS: List[str] = []
 
+# optional cluster snapshot (repro.obs) attached by a suite: rides along
+# in the BENCH json under "obs" so a perf row regression can be read next
+# to the counters that produced it
+OBS_SNAPSHOT: dict = {}
+
+
+def attach_obs(snapshot: dict) -> None:
+    """Record the suite's ``kv.stats()`` snapshot for ``dump_json``."""
+    OBS_SNAPSHOT.clear()
+    OBS_SNAPSHOT.update(snapshot)
+
 
 def zipf_draws(rng: np.random.Generator, n: int, size: int,
                alpha: float = 1.1) -> np.ndarray:
@@ -46,9 +57,11 @@ def dump_json(suite: str, first_row: int = 0, out_dir: str = "") -> str:
         rows.append({"name": name, "us_per_call": float(us),
                      "derived": derived})
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    doc = {"suite": suite, "unix_time": time.time(), "rows": rows}
+    if OBS_SNAPSHOT:
+        doc["obs"] = OBS_SNAPSHOT
     with open(path, "w") as f:
-        json.dump({"suite": suite, "unix_time": time.time(), "rows": rows},
-                  f, indent=1)
+        json.dump(doc, f, indent=1)
     return path
 
 

@@ -30,7 +30,31 @@ def train_failover(smoke: bool = False):
                 "--log-every", "25"])
 
 
-def serving_failover(smoke: bool = False):
+# per-phase summary columns: (subsystem, counter) rows of the registry
+_PHASE_COLS = (("cache", "lookups"), ("cache", "tlb_hits"),
+               ("protocol", "commits"), ("protocol", "migrations"),
+               ("writeback", "flushed_pages"), ("tlb_group", "posted"))
+
+
+def _phase_counters(kv) -> dict:
+    snap = kv.stats()
+    return {f"{s}.{n}": snap.get("counters", {}).get(s, {}).get(n, 0)
+            for s, n in _PHASE_COLS}
+
+
+def _print_phase_table(phases) -> None:
+    cols = [f"{s}.{n}" for s, n in _PHASE_COLS]
+    widths = [max(len(c), 10) for c in cols]
+    print("  per-phase counter deltas:")
+    print("    " + "phase".ljust(10) +
+          " ".join(c.rjust(w) for c, w in zip(cols, widths)))
+    for (name, cur), (_, prev) in zip(phases[1:], phases):
+        row = " ".join(str(cur[c] - prev[c]).rjust(w)
+                       for c, w in zip(cols, widths))
+        print("    " + name.ljust(10) + row)
+
+
+def serving_failover(smoke: bool = False, trace=None):
     print("\n== serving: drain replica 2 (planned), fail replica 1 "
           "(crash), re-home from the durable store ==")
     arch = get_smoke_arch("granite-3-2b")
@@ -41,13 +65,16 @@ def serving_failover(smoke: bool = False):
                     dpc=DPCConfig(page_size=8, pool_pages_per_shard=64,
                                   storage_backend="memory",
                                   writeback_async=False,
-                                  shadow_oracle=True))
+                                  shadow_oracle=True,
+                                  obs_level="full" if trace else "counters"))
     n_nodes = 3
     kv = DistributedKVCache(run.dpc, n_nodes)
     engines = [ServingEngine(run, params, max_batch=2, max_pages_per_seq=8,
                              node=i, num_nodes=n_nodes, kv_cache=kv)
                for i in range(n_nodes)]
     membership = Membership(num_nodes=n_nodes)
+    membership.attach_obs(kv.obs)
+    phases = [("start", _phase_counters(kv))]
 
     prompt = list(range(10, 34))
     for node, toks in ((1, prompt), (2, list(range(50, 74)))):
@@ -57,6 +84,7 @@ def serving_failover(smoke: bool = False):
                 break
     print(f"  directory holds {kv.directory_occupancy()} pages "
           f"across {n_nodes} replicas")
+    phases.append(("serve", _phase_counters(kv)))
 
     # planned departure: replica 2 evacuates before leaving — ownership
     # batch-MIGRATEs to the survivors, dirty obligations flush, and its
@@ -66,6 +94,7 @@ def serving_failover(smoke: bool = False):
     print(f"  replica 2 drained: {st['migrated']} pages evacuated, "
           f"{st['shares_dropped']} sharer mappings retired, "
           f"{st['aborted']} aborted (epoch={membership.epoch})")
+    phases.append(("drain", _phase_counters(kv)))
 
     # crash: replica 1's heartbeat lapses.  Its pages' last-committed bytes
     # are in the durable tier (fills flush through the writeback queue), so
@@ -81,6 +110,7 @@ def serving_failover(smoke: bool = False):
     assert c["lost_dirty_pages"] == 0, "durability broken across failover"
     print(f"  membership epoch={membership.epoch}; new mesh for 16 "
           f"chips/replica: {elastic_mesh_shape(16, 16)}")
+    phases.append(("failover", _phase_counters(kv)))
 
     # replica 0 keeps serving through the shrunken pool
     engines[0].submit(prompt, max_new_tokens=2)
@@ -88,7 +118,9 @@ def serving_failover(smoke: bool = False):
         if engines[0].step() == 0:
             break
     print(f"  replica 0 kept serving; directory occupancy="
-          f"{kv.directory_occupancy()}, stats={engines[0].stats.as_dict()}")
+          f"{kv.directory_occupancy()}, "
+          f"stats={engines[0].prefix_stats.as_dict()}")
+    phases.append(("resume", _phase_counters(kv)))
 
     # the drained replica rejoins empty and is re-seeded with cold pages
     membership.join(2)
@@ -96,13 +128,37 @@ def serving_failover(smoke: bool = False):
     moved = kv.rebalance_join(2, copy_fn=engines[0]._copy_page)
     print(f"  replica 2 rejoined (epoch={membership.epoch}) and inherited "
           f"{len(moved)} cold pages")
+    phases.append(("rejoin", _phase_counters(kv)))
     kv.close()
+
+    _print_phase_table(phases)
+    snap = kv.stats()
+    print(f"  incarnations={snap.get('incarnations', {})} "
+          f"membership={snap.get('counters', {}).get('membership', {})}")
+
+    if trace:
+        # export the whole history and replay it through the invariant
+        # checker — the CI gate runs `python -m repro.obs.audit` on the
+        # same file afterwards
+        from repro.obs import audit
+        doc = kv.obs.tracer.export_chrome(trace)
+        violations = audit.audit_trace(doc)
+        kinds = {e[1] for e in doc["dpcEvents"]}
+        print(f"  trace: {len(doc['dpcEvents'])} events, {len(kinds)} "
+              f"kinds -> {trace}; audit: {len(violations)} violation(s)")
+        for v in violations[:10]:
+            print(f"    {v}")
+        assert not violations, "trace-replay invariant check failed"
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="shorter train leg for CI")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="capture the serving leg at obs_level=full and "
+                         "export a Chrome trace JSON here (also replays "
+                         "it through repro.obs.audit)")
     args = ap.parse_args()
     train_failover(smoke=args.smoke)
-    serving_failover(smoke=args.smoke)
+    serving_failover(smoke=args.smoke, trace=args.trace)

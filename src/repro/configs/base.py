@@ -396,6 +396,15 @@ class DPCConfig:
     # run the refimpl directory in lockstep and assert dirty-bit agreement
     # on every completed invalidation/migration (tests/debug)
     shadow_oracle: bool = False
+    # --- observability (repro/obs) ---
+    # off      plain-dict stats, seed-identical data-path cost
+    # counters always-on metrics registry (typed counters + gauges + log2
+    #          histograms keyed (node, subsystem, name); gated <1.1x vs off
+    #          by the bench.obs_overhead row)
+    # full     counters plus the ring-buffered protocol event tracer
+    #          (Chrome trace_event export, repro.obs.audit replay checks)
+    obs_level: str = "counters"
+    obs_trace_events: int = 32768       # tracer ring capacity (power of two)
 
     @property
     def enabled(self) -> bool:

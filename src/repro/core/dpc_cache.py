@@ -28,6 +28,7 @@ from repro.core import pagepool as pp
 from repro.core.migration import MigrationConfig, OwnershipMigrator
 from repro.core.protocol import DPCProtocol, ProtocolConfig
 from repro.core.tlb import MODE_S
+from repro.obs import CLUSTER, Obs
 from repro.storage import make_storage
 
 
@@ -53,6 +54,10 @@ class DistributedKVCache:
     def __init__(self, dpc: DPCConfig, num_nodes: int):
         self.dpc = dpc
         self.num_nodes = num_nodes
+        # one observability hub for the whole cluster: protocol, TLBs,
+        # page pools, writeback, engines, and membership all report here
+        self.obs = Obs(dpc.obs_level, num_nodes=num_nodes,
+                       trace_capacity=dpc.obs_trace_events)
         # durable tier: built from config, shared by every node's control
         # plane (the storage server of the paper's testbed)
         self.store, self.writeback = make_storage(
@@ -60,7 +65,7 @@ class DistributedKVCache:
             extent_pages=dpc.storage_extent_pages,
             batch_size=dpc.writeback_batch,
             flush_interval_s=dpc.writeback_interval_s,
-            async_mode=dpc.writeback_async)
+            async_mode=dpc.writeback_async, obs=self.obs)
         self.proto = DPCProtocol(ProtocolConfig(
             num_nodes=num_nodes,
             pool_pages=dpc.pool_pages_per_shard,
@@ -73,7 +78,9 @@ class DistributedKVCache:
             tlb_piggyback=dpc.tlb_shootdown_piggyback,
             async_data_plane=dpc.async_data_plane,
             shadow_oracle=dpc.shadow_oracle,
-        ), store=self.store, writeback=self.writeback)
+            obs_level=dpc.obs_level,
+            obs_trace_events=dpc.obs_trace_events,
+        ), store=self.store, writeback=self.writeback, obs=self.obs)
         # buffered CLOCK touches for TLB owner-hits: slot -> hit count per
         # node, flushed in ONE batched pp.touch_weighted per engine step —
         # the steady-state hit path itself never talks to the device
@@ -93,10 +100,26 @@ class DistributedKVCache:
             decay_every=dpc.migrate_decay_every,
             cooldown_rounds=dpc.migrate_cooldown,
         ))
-        self.stats = {"lookups": 0, "fills": 0, "remote_hits": 0,
-                      "local_hits": 0, "evictions": 0, "migrations": 0,
-                      "refills": 0, "sync_flushes": 0,
-                      "tlb_hits": 0, "tlb_misses": 0}
+        # dict-compatible facade counters; ``kv.stats()`` (the view is
+        # callable) returns the whole cluster's snapshot — counters,
+        # per-node rows, histograms, gauges, incarnations
+        self.stats = self.obs.view(
+            CLUSTER, "cache",
+            ("lookups", "fills", "remote_hits", "local_hits", "evictions",
+             "migrations", "refills", "sync_flushes", "tlb_hits",
+             "tlb_misses"))
+        if self.obs.registry is not None:
+            # pool occupancy gauges are sampled lazily at snapshot time
+            # (one device readback per node per snapshot, zero data-path
+            # cost between snapshots)
+            self.obs.registry.add_gauge_provider(self._publish_pool_gauges)
+
+    def _publish_pool_gauges(self) -> None:
+        """Gauge provider: per-node slot-state census of every page pool."""
+        for node in range(self.proto.cfg.num_nodes):
+            for state, count in pp.occupancy(
+                    self.proto.state.pools[node]).items():
+                self.obs.gauge(node, "pagepool", state, count)
 
     # ------------------------------------------------------------------
     # storage tier
@@ -189,6 +212,10 @@ class DistributedKVCache:
             pool_pages = self.dpc.pool_pages_per_shard
             touch_buf = self._touch_buf[node]
             oracle_on = self.proto.oracle is not None
+            # hotness signal keeps flowing on cached hits — host-side dict
+            # work, still no directory traffic
+            migrator = self.migrator if self.dpc.migration_enabled else None
+            n_shared = 0
             for i in range(n):
                 if not hit[i]:
                     miss.append(i)
@@ -201,19 +228,23 @@ class DistributedKVCache:
                 if shared[i]:
                     out[i] = PageLookup(D.ST_HIT_SHARER, pfn, owner,
                                         False, True)
-                    self.stats["remote_hits"] += 1
-                    if self.dpc.migration_enabled:
-                        # the hotness signal keeps flowing on cached hits —
-                        # host-side dict work, still no directory traffic
-                        self.migrator.note_remote_access(key, node)
+                    n_shared += 1
+                    if migrator is not None:
+                        migrator.note_remote_access(key, node)
                 else:
                     out[i] = PageLookup(D.ST_HIT_OWNER, pfn, node,
                                         False, False)
-                    self.stats["local_hits"] += 1
                     slot = pfn % pool_pages
                     touch_buf[slot] = touch_buf.get(slot, 0) + 1
-            self.stats["tlb_hits"] += n - len(miss)
+            # counters are flushed once per batch, not per row — the
+            # registry's hot-path budget (bench.obs_overhead) rides on this
+            hits = n - len(miss)
+            self.stats["tlb_hits"] += hits
             self.stats["tlb_misses"] += len(miss)
+            if n_shared:
+                self.stats["remote_hits"] += n_shared
+            if hits - n_shared:
+                self.stats["local_hits"] += hits - n_shared
         if not miss:
             return out  # pure steady-state: the directory saw nothing
 
@@ -392,6 +423,8 @@ class DistributedKVCache:
         """Subscribe the cache to membership epochs: joins grow (or re-seed)
         state, drains evacuate through the protocol, failures re-home
         orphans from the durable tier onto the first survivor."""
+        if hasattr(membership, "attach_obs"):
+            membership.attach_obs(self.obs)
 
         def on_change(ev) -> None:
             if ev.kind == "join":

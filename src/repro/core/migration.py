@@ -40,6 +40,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.protocol import DPCProtocol
+from repro.obs import CLUSTER
 
 Key = Tuple[int, int]  # (stream_id, page_idx)
 
@@ -105,8 +106,9 @@ class OwnershipMigrator:
         self.round = 0
         # key -> round number until which it may not migrate again
         self._cooldown: Dict[Key, int] = {}
-        self.stats = {"rounds": 0, "candidates": 0, "migrated": 0,
-                      "cooldown_skips": 0}
+        self.stats = proto.obs.view(
+            CLUSTER, "migration",
+            ("rounds", "candidates", "migrated", "cooldown_skips"))
 
     # -- signal ---------------------------------------------------------------
 

@@ -307,3 +307,18 @@ def num_installed(pool: PoolState) -> jax.Array:
 def num_writeback(pool: PoolState) -> jax.Array:
     """Frames pinned awaiting their flush commit (not yet reusable)."""
     return jnp.sum(pool.slot_state == S_WRITEBACK)
+
+
+_STATE_NAMES = {S_FREE: "free", S_RESERVED: "reserved",
+                S_INSTALLED: "installed", S_DRAINING: "draining",
+                S_WRITEBACK: "writeback"}
+
+
+def occupancy(pool: PoolState) -> dict:
+    """Host-side slot-state census {state_name: count} — one device
+    readback per call; feeds the per-node pool gauges in the obs
+    snapshot, not the data path."""
+    import numpy as np
+    states = np.asarray(pool.slot_state)
+    return {name: int((states == s).sum())
+            for s, name in _STATE_NAMES.items()}

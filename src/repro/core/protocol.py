@@ -37,6 +37,8 @@ from repro.core import directory as dirx
 from repro.core import pagepool as pp
 from repro.core import refimpl
 from repro.core.tlb import MODE_M, MODE_O, MODE_S, TLBGroup
+from repro.obs import CLUSTER, Obs
+from repro.obs import trace as T
 
 
 @dataclasses.dataclass
@@ -81,6 +83,9 @@ class ProtocolConfig:
     # placement stays pinned to the founding layout.  0 resolves from
     # placement/num_nodes in __post_init__.
     num_shards: int = 0
+    # observability (repro/obs): off | counters | full — see DPCConfig
+    obs_level: str = "counters"
+    obs_trace_events: int = 32768
 
     def __post_init__(self) -> None:
         if self.num_shards <= 0:
@@ -90,6 +95,25 @@ class ProtocolConfig:
     def dir_config(self) -> dirx.DirectoryConfig:
         return dirx.DirectoryConfig(self.directory_capacity, self.num_nodes,
                                     self.max_probe)
+
+
+# protocol counter names, pre-declared so views (and ``kv.stats()``
+# snapshots) have stable row order from construction
+PROTOCOL_COUNTERS = (
+    "reads", "grants", "remote_hits", "local_hits",
+    "blocked", "commits", "reclaims", "dir_invs",
+    "inv_acks", "writebacks", "dropped_nodes",
+    "migrations", "migration_noops", "migration_aborts",
+    "migration_acks", "writebacks_committed",
+    "migration_writebacks", "flush_before_free_violations",
+    "oracle_mismatches", "dirty_clears",
+    "tlb_write_hits", "write_prepare_hits",
+    "dirty_buffered", "dirty_mark_flushes",
+    "joins", "rejoins", "drains", "drained_pages",
+    "drain_aborts", "rehomed_pages", "rehome_deferred",
+    "lost_dirty_pages", "checkpointed_pages",
+    "lane_copies", "lane_flushes", "lane_fences",
+)
 
 
 class DPCState(NamedTuple):
@@ -162,9 +186,25 @@ class DPCProtocol:
 
     def __init__(self, cfg: ProtocolConfig, state: Optional[DPCState] = None,
                  *, store=None, writeback=None,
-                 page_bytes_fn: Optional[Callable] = None):
+                 page_bytes_fn: Optional[Callable] = None, obs=None):
         self.cfg = cfg
         self.state = state or init_state(cfg)
+        # --- observability (repro/obs): the cluster hub is either handed
+        # down (dpc_cache owns one per cluster and shares it with storage
+        # and the engines) or created here so a bare protocol still meters
+        # itself.  ``self.counters`` keeps its historical dict shape
+        # through a registry view; ``self.trace`` is None below
+        # obs_level="full" and every emit site gates on that.
+        self.obs: Obs = obs if obs is not None else Obs(
+            cfg.obs_level, num_nodes=cfg.num_nodes,
+            trace_capacity=cfg.obs_trace_events)
+        self.trace = self.obs.tracer
+        if self.trace is not None:
+            self.trace.meta["pool_pages"] = cfg.pool_pages
+            self.trace.meta["num_nodes"] = cfg.num_nodes
+        self._h_batch = self.obs.histogram(CLUSTER, "protocol", "batch_rows")
+        self._h_fence = self.obs.histogram(CLUSTER, "protocol",
+                                           "lane_fence_depth")
         # pages in TBI with outstanding sharer ACKs: (stream, page) -> set(nodes)
         self.pending_inv: Dict[Tuple[int, int], Dict] = {}
         # pages in TBM (ownership hand-off in flight):
@@ -192,7 +232,7 @@ class DPCProtocol:
         self.tlbs: Optional[TLBGroup] = None
         if cfg.tlb_slots > 0:
             self.tlbs = TLBGroup(cfg.num_nodes, cfg.tlb_slots,
-                                 cfg.tlb_max_probe)
+                                 cfg.tlb_max_probe, obs=self.obs)
         # buffered write-grant dirty marks, one set per node: a MODE_M hit
         # adds its key here instead of paying a directory op; the set is
         # flushed in ONE batched mark_dirty per node per engine step, and
@@ -223,22 +263,14 @@ class DPCProtocol:
         if cfg.shadow_oracle:
             self.oracle = refimpl.RefDirectory(
                 cfg.directory_capacity * cfg.num_shards, cfg.num_nodes)
-        # counters for the microbenchmarks
-        self.counters = {
-            "reads": 0, "grants": 0, "remote_hits": 0, "local_hits": 0,
-            "blocked": 0, "commits": 0, "reclaims": 0, "dir_invs": 0,
-            "inv_acks": 0, "writebacks": 0, "dropped_nodes": 0,
-            "migrations": 0, "migration_noops": 0, "migration_aborts": 0,
-            "migration_acks": 0, "writebacks_committed": 0,
-            "migration_writebacks": 0, "flush_before_free_violations": 0,
-            "oracle_mismatches": 0, "dirty_clears": 0,
-            "tlb_write_hits": 0, "write_prepare_hits": 0,
-            "dirty_buffered": 0, "dirty_mark_flushes": 0,
-            "joins": 0, "rejoins": 0, "drains": 0, "drained_pages": 0,
-            "drain_aborts": 0, "rehomed_pages": 0, "rehome_deferred": 0,
-            "lost_dirty_pages": 0, "checkpointed_pages": 0,
-            "lane_copies": 0, "lane_flushes": 0, "lane_fences": 0,
-        }
+        # counters for the microbenchmarks — cluster-scope registry rows
+        # behind a dict-compatible view (plain dict at obs_level="off")
+        self.counters = self.obs.view(CLUSTER, "protocol",
+                                      PROTOCOL_COUNTERS)
+        # eviction classes (pagepool subsystem): what reclaim_finish frees
+        # cleanly vs. retires through the writeback pipeline
+        self.pool_counters = self.obs.view(
+            CLUSTER, "pagepool", ("evict_clean", "evict_dirty"))
 
     def attach_storage(self, store=None, writeback=None,
                        page_bytes_fn: Optional[Callable] = None) -> None:
@@ -278,11 +310,13 @@ class DPCProtocol:
                else np.broadcast_to(np.asarray(aux, np.int32), streams.shape))
         n = len(streams)
         lane_rows: List[np.ndarray] = []
+        n_sd = n_cp = n_fl = 0
         if self.tlbs is not None and self.cfg.tlb_piggyback and n:
             triples = self.tlbs.drain_for(np.unique(nodes).tolist())
             if triples:
                 sd = D.encode_shootdowns(triples)
                 lane_rows.append(sd)
+                n_sd = len(triples)
                 # receiver-side service: the lanes are decoded and the cached
                 # mappings die before any of the batch's own ops run
                 self.tlbs.deliver(D.decode_shootdowns(sd))
@@ -298,12 +332,22 @@ class DPCProtocol:
             if cp:
                 rows = D.encode_copies(cp)
                 lane_rows.append(rows)
+                n_cp = len(cp)
                 self._service_copy_lanes(D.decode_copies(rows))
             if fl:
                 rows = D.encode_flushes(fl)
                 lane_rows.append(rows)
+                n_fl = len(fl)
                 self._service_flush_lanes(D.decode_flushes(rows))
         extra_rows = (np.concatenate(lane_rows) if lane_rows else None)
+        if n:
+            if self._h_batch is not None:
+                self._h_batch.observe(n)
+            if self.trace is not None:
+                # dispatch record with lane composition: how many real rows
+                # and how many piggybacked SHOOTDOWN/COPY/FLUSH descriptors
+                # this batch carried
+                self.trace.emit(T.EV_BATCH, CLUSTER, n, n_sd, n_cp, n_fl)
         res = np.zeros((n, 3), np.int32)
         extra: Dict[int, np.ndarray] = {}
         groups = list(_group_by_shard(self.cfg, streams, pages).items())
@@ -373,6 +417,10 @@ class DPCProtocol:
         if ok:
             self._pool_update(node, pp.release(
                 self.state.pools[node], jnp.asarray(ok, jnp.int32)))
+            if self.trace is not None:
+                base = node * self.cfg.pool_pages
+                for s in ok:
+                    self.trace.emit(T.EV_FRAME_FREE, node, s, 0, base + s)
         return len(ok)
 
     def _enqueue_writeback(self, key: Tuple[int, int], node: int,
@@ -389,6 +437,8 @@ class DPCProtocol:
             data = np.zeros((0,), np.uint8)
         token = (node, slot)
         self._wb_outstanding[token] = key
+        if self.trace is not None:
+            self.trace.emit(T.EV_WB_REG, node, slot, key[0], key[1])
         self.writeback.enqueue(key, np.asarray(data), token=token)
 
     def harvest_writebacks(self) -> int:
@@ -399,6 +449,9 @@ class DPCProtocol:
         done = self.writeback.drain_completions()
         by_node: Dict[int, List[int]] = {}
         for token, key in done:
+            if self.trace is not None:
+                self.trace.emit(T.EV_WB_COMMIT, token[0], token[1],
+                                key[0], key[1])
             if token in self._wb_stale:
                 # a rejoin re-initialized this node's pool: the flush is
                 # durable but the frame no longer exists — do not release
@@ -492,6 +545,11 @@ class DPCProtocol:
         _release_frames refuses the frame (flush-before-free) from the
         moment it retires."""
         self._wb_outstanding[(node, slot)] = key
+        if self.trace is not None:
+            # the obligation exists from the moment the token registers —
+            # the audit's flush-before-free window opens here, not at the
+            # deferred byte capture
+            self.trace.emit(T.EV_WB_REG, node, slot, key[0], key[1])
         self._flush_meta[(node, key[0], key[1])] = slot
         self._lane_flushes.setdefault(node, []).append(
             (node, key[0], key[1]))
@@ -522,6 +580,10 @@ class DPCProtocol:
         fl = [t for q in self._lane_flushes.values() for t in q]
         self._lane_copies.clear()
         self._lane_flushes.clear()
+        if self._h_fence is not None:
+            self._h_fence.observe(len(cp) + len(fl))
+        if self.trace is not None:
+            self.trace.emit(T.EV_LANE_FENCE, CLUSTER, len(cp), len(fl))
         n = self._service_copy_lanes(cp) + self._service_flush_lanes(fl)
         self.counters["lane_fences"] += 1
         return n
@@ -654,6 +716,12 @@ class DPCProtocol:
         self._pool_update(node, pp.install(
             self.state.pools[node], jnp.asarray(slots), jnp.asarray(keys)))
         self.counters["commits"] += int((res[:, 0] == D.ST_OK).sum())
+        if self.trace is not None:
+            # residency interval opens: key -> frame.  The audit replays
+            # these BINDs against single-copy and shootdown-before-remap.
+            for i in np.nonzero((res[:, 0] == D.ST_OK) & (pfns >= 0))[0]:
+                self.trace.emit(T.EV_BIND, node, int(keys[i, 0]),
+                                int(keys[i, 1]), int(pfns[i]))
         if self.tlbs is not None:
             # a committed page is an established owner mapping: cache it
             # inline so the very next re-read is already directory-free
@@ -973,6 +1041,9 @@ class DPCProtocol:
                     "waiting": set(sharer_nodes),
                     "sharers": list(sharer_nodes),
                 }
+                if self.trace is not None:
+                    self.trace.emit(T.EV_TBI_BEGIN, node, key[0], key[1],
+                                    node, len(sharer_nodes))
                 if self.tlbs is not None:
                     # TLB shootdown fan-out piggybacks on the DIR_INVs the
                     # directory just named: the initiating owner drops its
@@ -1007,6 +1078,9 @@ class DPCProtocol:
         if key in self.pending_inv:
             self.pending_inv[key]["waiting"].discard(node)
         self.counters["inv_acks"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_TBI_ACK, node, stream, page, node,
+                            1 if dirty else 0)
         return int(res[0, 0])
 
     def reclaim_finish(self, node: int) -> Tuple[int, int]:
@@ -1047,6 +1121,11 @@ class DPCProtocol:
             self._oracle_completion("complete_invalidate", key, (node,),
                                     is_dirty)
             del self.pending_inv[key]
+            if self.trace is not None:
+                pfn = node * self.cfg.pool_pages + info["slot"]
+                self.trace.emit(T.EV_UNBIND, node, key[0], key[1], pfn)
+                self.trace.emit(T.EV_TBI_END, node, key[0], key[1],
+                                int(row[0]), int(is_dirty))
             writebacks += int(is_dirty)
             if is_dirty and self.writeback is not None:
                 if self.cfg.async_data_plane:
@@ -1066,6 +1145,8 @@ class DPCProtocol:
         if freed_slots:
             self._release_frames(node, freed_slots)
         self.counters["writebacks"] += writebacks
+        self.pool_counters["evict_clean"] += len(freed_slots)
+        self.pool_counters["evict_dirty"] += len(retired_slots)
         return len(freed_slots) + len(retired_slots), writebacks
 
     def reclaim_sync(self, node: int, want: int,
@@ -1143,6 +1224,9 @@ class DPCProtocol:
                 "old_pfn": old_pfn, "waiting": set(sharer_nodes),
                 "sharers": list(sharer_nodes),
             }
+            if self.trace is not None:
+                self.trace.emit(T.EV_TBM_BEGIN, src, key[0], key[1],
+                                src, int(dsts[j]))
             if self.tlbs is not None:
                 # same shootdown discipline as reclamation: the source's
                 # owner-mode entry dies now; each sharer's shootdown (the
@@ -1171,6 +1255,9 @@ class DPCProtocol:
         if key in self.pending_mig:
             self.pending_mig[key]["waiting"].discard(node)
         self.counters["migration_acks"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_TBM_ACK, node, stream, page, node,
+                            1 if dirty else 0)
         return int(res[0, 0])
 
     def _migrate_abort(self, key: Tuple[int, int], info: Dict) -> None:
@@ -1183,8 +1270,17 @@ class DPCProtocol:
             self._oracle_completion("complete_migrate", key,
                                     (info["src"], info["src"]),
                                     bool(res[0, 2]))
+            if self.trace is not None:
+                # the abort's commit re-binds the retained source frame:
+                # close the old residency interval first so the replay sees
+                # unbind -> (re)bind, not a double-bind
+                self.trace.emit(T.EV_UNBIND, info["src"], key[0], key[1],
+                                info["old_pfn"])
             self.commit_pages([key[0]], [key[1]], info["src"],
                               [info["src_slot"]])
+        if self.trace is not None:
+            self.trace.emit(T.EV_TBM_END, info["src"], key[0], key[1],
+                            -1, info["old_pfn"])
         self.counters["migration_aborts"] += 1
 
     def migrate_finish(self, copy_fn=None
@@ -1230,11 +1326,21 @@ class DPCProtocol:
                 # give the reserved frame back and drop the transaction
                 self._release_frames(dst, [dst_slot])
                 self.counters["migration_aborts"] += 1
+                if self.trace is not None:
+                    self.trace.emit(T.EV_TBM_END, dst, key[0], key[1],
+                                    int(res[0, 0]), -1)
                 continue
             was_dirty = bool(res[0, 2])
             self._oracle_completion("complete_migrate", key, (dst, src),
                                     was_dirty)
             dst_pfn = dst * self.cfg.pool_pages + dst_slot
+            if self.trace is not None:
+                # ownership left the source at complete_migrate: the old
+                # residency interval closes here, before the destination's
+                # commit re-binds the key (the orphaned source frame is an
+                # anonymous staging buffer from now on)
+                self.trace.emit(T.EV_UNBIND, src, key[0], key[1],
+                                info["old_pfn"])
             if self.cfg.async_data_plane:
                 # overlap the hand-off's data plane: commit the new owner
                 # now, defer the KV copy (and the dirty checkpoint /
@@ -1274,6 +1380,9 @@ class DPCProtocol:
                 else:
                     self._release_frames(src, [info["src_slot"]])
             self.counters["migrations"] += 1
+            if self.trace is not None:
+                self.trace.emit(T.EV_TBM_END, dst, key[0], key[1],
+                                int(D.ST_OK), dst_pfn)
             moved.append((key, info["old_pfn"], dst_pfn))
         return moved
 
@@ -1362,6 +1471,11 @@ class DPCProtocol:
                     self.directory_view().items():
                 if owner == node and st != dirx.E:
                     orphans.append((key, bool(dirty)))
+        if self.trace is not None:
+            # the audit retires the dead node's frame range and writeback
+            # obligations on this edge, exactly like the protocol does
+            self.trace.emit(T.EV_FAIL, node,
+                            -1 if rehome_to is None else rehome_to)
         if self.tlbs is not None:
             # fail_node wipes directory entries wholesale without naming
             # keys, so precise shootdowns cannot cover it — the global
@@ -1458,6 +1572,8 @@ class DPCProtocol:
         if self.oracle is not None:
             self.oracle.num_nodes = self.cfg.num_nodes
         self.counters["joins"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_JOIN, node, self.cfg.num_nodes)
         return node
 
     def rejoin_node(self, node: int) -> None:
@@ -1477,11 +1593,21 @@ class DPCProtocol:
         pools = list(self.state.pools)
         pools[node] = pp.init_pool(self.cfg.pool_pages)
         self.state = self.state._replace(pools=tuple(pools))
+        if self.trace is not None:
+            self.trace.emit(T.EV_POOL_RESET, node)
         if self.tlbs is not None:
             self.tlbs.wipe(node)
         self._dirty_buf[node].clear()
         self._wtouch_buf[node].clear()
         self.counters["rejoins"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_REJOIN, node,
+                            self.obs.registry.incarnations.get(node, 0) + 1
+                            if self.obs.registry is not None else 0)
+        # incarnation fold (the counter-reset semantics): the reborn node's
+        # per-node live rows restart at zero, their history folds into the
+        # monotonic cluster totals
+        self.obs.reset_node(node)
 
     def drain_node(self, node: int, dest_fn: Optional[Callable] = None,
                    copy_fn: Optional[Callable] = None) -> Dict:
@@ -1509,6 +1635,8 @@ class DPCProtocol:
         cfg = self.cfg
         stats: Dict = {"migrated": 0, "aborted": 0, "e_aborted": 0,
                        "shares_dropped": 0, "moved": []}
+        if self.trace is not None:
+            self.trace.emit(T.EV_DRAIN_BEGIN, node)
         # in-flight lane obligations involving the leaver settle up front —
         # the drain must observe the same frames and dirty bits the sync
         # reference mode would
@@ -1617,6 +1745,9 @@ class DPCProtocol:
         c["drains"] += 1
         c["drained_pages"] += stats["migrated"]
         c["drain_aborts"] += stats["aborted"]
+        if self.trace is not None:
+            self.trace.emit(T.EV_DRAIN_END, node, stats["migrated"],
+                            stats["aborted"], stats["shares_dropped"])
         return stats
 
     def checkpoint_dirty(self, node: Optional[int] = None) -> int:

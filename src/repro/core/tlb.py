@@ -70,8 +70,16 @@ from typing import Deque, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.descriptors import hash_key_py
+from repro.obs import CLUSTER, LEVEL_FULL, Obs
+from repro.obs import trace as T
 
 Key = Tuple[int, int]
+
+# per-node counter names (registry rows under (node, "tlb", ...))
+_TLB_STATS = ("hits", "misses", "installs", "replacements", "shootdowns")
+# group-level plumbing counters (cluster scope)
+_GROUP_STATS = ("posted", "serviced", "delivered", "fenced",
+                "flashes", "wipes")
 
 EMPTY = -1   # never-used slot: probe chains stop here
 TOMB = -2    # shot-down slot: probe chains continue past
@@ -99,7 +107,8 @@ def _hash_np(streams: np.ndarray, pages: np.ndarray) -> np.ndarray:
 class MappingTLB:
     """One node's fixed-size open-addressed mapping cache."""
 
-    def __init__(self, slots: int, max_probe: int = 8):
+    def __init__(self, slots: int, max_probe: int = 8, stats=None,
+                 probe_hist=None):
         assert slots & (slots - 1) == 0, "tlb slots must be a power of two"
         self.slots = slots
         self.max_probe = min(max_probe, slots)
@@ -112,8 +121,11 @@ class MappingTLB:
         # delivered (entries dropped) by the piggyback lanes of the next
         # opcode batch routed for this node — no later than its INV_ACK
         self.pending_inv: Deque[Key] = deque()
-        self.stats = {"hits": 0, "misses": 0, "installs": 0,
-                      "replacements": 0, "shootdowns": 0}
+        # registry-backed when the group hands a MetricsView down (so the
+        # counters survive a wipe-and-replace); plain dict standalone
+        self.stats = stats if stats is not None \
+            else {n: 0 for n in _TLB_STATS}
+        self.probe_hist = probe_hist
 
     # -- scalar ops (install / drop run on the already-slow miss path) -------
 
@@ -178,13 +190,20 @@ class MappingTLB:
         idx = (_hash_np(streams, pages) & np.uint32(mask)).astype(np.int64)
         found = np.full((n,), -1, np.int64)
         live = np.ones((n,), bool)
-        for _ in range(self.max_probe):
+        # probe-depth histogram (registry level): rows record the step at
+        # which their chain resolved; unresolved rows charge max_probe
+        depth = None if self.probe_hist is None \
+            else np.full((n,), self.max_probe, np.int64)
+        for step in range(self.max_probe):
             ks = self.keys[idx]
             match = live & (ks[:, 0] == streams) & (ks[:, 1] == pages) \
                 & (self.epoch[idx] == epoch)
             found = np.where(match, idx, found)
             # EMPTY terminates the chain; TOMB and stale rows are probed past
-            live = live & ~match & (ks[:, 0] != EMPTY)
+            nxt = live & ~match & (ks[:, 0] != EMPTY)
+            if depth is not None:
+                depth[live & ~nxt] = step + 1
+            live = nxt
             if not live.any():
                 break
             idx = (idx + 1) & mask
@@ -192,6 +211,8 @@ class MappingTLB:
         safe = np.maximum(found, 0)
         self.stats["hits"] += int(hit.sum())
         self.stats["misses"] += int(n - hit.sum())
+        if depth is not None and n:
+            self.probe_hist.observe_array(depth)
         return self.owner[safe], self.pfn[safe], self.mode[safe], hit
 
 
@@ -200,25 +221,40 @@ class TLBGroup:
     drives: per-node shootdown queues with piggybacked delivery (post /
     drain / deliver / fence epochs) and the global flash epoch."""
 
-    def __init__(self, num_nodes: int, slots: int, max_probe: int = 8):
+    def __init__(self, num_nodes: int, slots: int, max_probe: int = 8,
+                 obs: Optional[Obs] = None):
         self.slots = slots
         self.max_probe = max_probe
-        self.nodes: List[MappingTLB] = [MappingTLB(slots, max_probe)
-                                        for _ in range(num_nodes)]
+        self.obs = obs if obs is not None else Obs("off")
+        self.trace = self.obs.tracer
+        self.nodes: List[MappingTLB] = [self._make_tlb(n)
+                                        for n in range(num_nodes)]
         self.global_epoch = 1
         # bounded-staleness fence epochs: post_epoch counts shootdowns posted
         # to a node, served_epoch the prefix it has delivered.  A node is
         # "caught up" iff served == posted; transaction completes fence on it.
         self.post_epoch = [0] * num_nodes
         self.served_epoch = [0] * num_nodes
-        self.stats = {"posted": 0, "serviced": 0, "delivered": 0,
-                      "fenced": 0, "flashes": 0, "wipes": 0}
+        self.stats = self.obs.view(CLUSTER, "tlb_group", _GROUP_STATS)
+
+    def _make_tlb(self, node: int) -> MappingTLB:
+        """Per-node TLB wired to the hub: the counter view targets the same
+        registry rows across wipe-and-replace, so per-node stats persist
+        until the rejoin incarnation fold rather than dying with the
+        instance.  The probe-depth distribution costs depth-mask work per
+        probe step, so it rides the ``full`` (tracing) tier, not the
+        always-on counters tier."""
+        return MappingTLB(
+            self.slots, self.max_probe,
+            stats=self.obs.view(node, "tlb", _TLB_STATS),
+            probe_hist=self.obs.histogram(node, "tlb", "probe_depth",
+                                          min_level=LEVEL_FULL))
 
     # -- elastic membership ---------------------------------------------------
 
     def add_node(self) -> int:
         """Join: attach a fresh (empty, caught-up) TLB for a new node."""
-        self.nodes.append(MappingTLB(self.slots, self.max_probe))
+        self.nodes.append(self._make_tlb(len(self.nodes)))
         self.post_epoch.append(0)
         self.served_epoch.append(0)
         return len(self.nodes) - 1
@@ -228,9 +264,11 @@ class TLBGroup:
         and mark its shootdown queue caught-up — without touching the
         global epoch, so every *other* node's warm entries survive (the
         whole point of drain over fail)."""
-        self.nodes[node] = MappingTLB(self.slots, self.max_probe)
+        self.nodes[node] = self._make_tlb(node)
         self.served_epoch[node] = self.post_epoch[node]
         self.stats["wipes"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_SD_WIPE, node)
 
     # -- read path -----------------------------------------------------------
 
@@ -267,6 +305,8 @@ class TLBGroup:
         self.nodes[node].pending_inv.append(key)
         self.post_epoch[node] += 1
         self.stats["posted"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_SD_POST, node, key[0], key[1])
 
     def drain_for(self, nodes: Sequence[int]) -> List[Tuple[int, int, int]]:
         """Pop every queued shootdown for ``nodes`` and advance their served
@@ -286,8 +326,11 @@ class TLBGroup:
         Runs before the carrying batch's own ops execute (protocol._routed),
         the modeled receiver-side shootdown service."""
         n = 0
+        trace = self.trace
         for node, s, p in triples:
             self.nodes[node].drop(s, p, self.global_epoch)
+            if trace is not None:
+                trace.emit(T.EV_SD_DELIVER, node, s, p)
             n += 1
         self.stats["delivered"] += n
         return n
@@ -323,6 +366,8 @@ class TLBGroup:
         (``fail_node`` wipes a whole node's directory ownership)."""
         self.global_epoch += 1
         self.stats["flashes"] += 1
+        if self.trace is not None:
+            self.trace.emit(T.EV_SD_FLASH, CLUSTER)
         for i, t in enumerate(self.nodes):
             t.pending_inv.clear()
             self.served_epoch[i] = self.post_epoch[i]

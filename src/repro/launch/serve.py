@@ -85,7 +85,7 @@ def main(argv=None):
     dt = time.monotonic() - t0
 
     total_tokens = args.requests * args.new_tokens
-    s = eng.stats
+    s = eng.prefix_stats
     print(f"mode={args.mode} requests={args.requests} share={args.share}")
     print(f"  wall={dt:.2f}s decode_tokens={total_tokens} "
           f"tput={total_tokens / dt:.1f} tok/s")

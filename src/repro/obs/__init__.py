@@ -1,0 +1,86 @@
+"""Cluster observability: metrics registry, event tracer, replay audit.
+
+:class:`Obs` is the per-cluster hub every subsystem hangs off.  It is
+constructed once (by :class:`~repro.core.dpc_cache.DistributedKVCache`
+or :class:`~repro.core.protocol.DPCProtocol`) from
+``DPCConfig.obs_level`` and handed down — protocol, TLB group, page
+pool, writeback queue, serving engines, and membership all draw their
+counter views / histogram handles / tracer from the same hub, so one
+``kv.stats()`` call sees the whole cluster and one trace file holds the
+whole history.
+
+Levels: ``off`` (plain dicts, seed-identical cost), ``counters``
+(registry on — the always-on tier, gated <1.1x by
+``bench.obs_overhead``), ``full`` (adds the event tracer).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.obs.registry import (CLUSTER, LEVEL_COUNTERS, LEVEL_FULL,
+                                LEVEL_OFF, Histogram, MetricsRegistry,
+                                MetricsView, StatsDict, parse_level)
+from repro.obs.trace import EventTracer
+
+__all__ = ["Obs", "MetricsRegistry", "MetricsView", "StatsDict",
+           "Histogram", "EventTracer", "CLUSTER", "LEVEL_OFF",
+           "LEVEL_COUNTERS", "LEVEL_FULL", "parse_level"]
+
+
+class Obs:
+    """Observability hub: one registry + (at ``full``) one tracer."""
+
+    def __init__(self, level: str = "counters", num_nodes: int = 0,
+                 trace_capacity: int = 32768):
+        self.level_name = level
+        self.level = parse_level(level)
+        self.num_nodes = num_nodes
+        self.registry: Optional[MetricsRegistry] = (
+            MetricsRegistry() if self.level >= LEVEL_COUNTERS else None)
+        if self.registry is not None:
+            self.registry.hub = self
+        self.tracer: Optional[EventTracer] = (
+            EventTracer(trace_capacity, meta={"num_nodes": num_nodes})
+            if self.level >= LEVEL_FULL else None)
+
+    def view(self, node: int, subsystem: str,
+             names: Tuple[str, ...] = ()):
+        """Dict-compatible counter view for one ``(node, subsystem)``
+        group — a :class:`StatsDict` (plain dict) when obs is off."""
+        if self.registry is None:
+            return StatsDict({n: 0 for n in names})
+        return self.registry.view(node, subsystem, names)
+
+    def histogram(self, node: int, subsystem: str, name: str,
+                  min_level: int = LEVEL_COUNTERS) -> Optional[Histogram]:
+        """Histogram handle, or None below ``min_level`` (call sites gate
+        on it).  Distributions that cost real work per batch on a hot
+        path (e.g. the TLB probe-depth depth-mask bookkeeping) pass
+        ``min_level=LEVEL_FULL`` so the always-on ``counters`` tier keeps
+        its <1.1x overhead budget."""
+        if self.registry is None or self.level < min_level:
+            return None
+        return self.registry.histogram(node, subsystem, name)
+
+    def gauge(self, node: int, subsystem: str, name: str,
+              value: float) -> None:
+        if self.registry is not None:
+            self.registry.set_gauge(node, subsystem, name, value)
+
+    def reset_node(self, node: int) -> None:
+        """Incarnation fold for ``node`` (see
+        :meth:`MetricsRegistry.reset_node`)."""
+        if self.registry is not None:
+            self.registry.reset_node(node)
+
+    def snapshot(self) -> dict:
+        if self.registry is None:
+            return {"level": "off"}
+        snap = self.registry.snapshot()
+        snap["level"] = self.level_name
+        if self.tracer is not None:
+            snap["trace"] = {"events": self.tracer.emitted,
+                             "dropped": self.tracer.dropped,
+                             "capacity": self.tracer.capacity}
+        return snap

@@ -1,0 +1,202 @@
+"""Trace-replay invariant checker.
+
+Replays a captured event stream (from a live :class:`EventTracer` or an
+exported Chrome-trace JSON) and *independently* re-derives the three
+invariants the protocol promises, over the whole history rather than
+just the settled end state the shadow oracle sees:
+
+* **single-copy** — at no point do two frames name one ``(stream,
+  page)``, and no frame names two pages (``EV_BIND``/``EV_UNBIND``
+  bracket every residency interval);
+* **flush-before-free** — a frame with a registered-but-uncommitted
+  writeback obligation (``EV_WB_REG`` without its ``EV_WB_COMMIT``) is
+  never released (``EV_FRAME_FREE``);
+* **shootdown-before-remap** — a page is never re-bound while a posted
+  TLB shootdown for it is still undelivered (``EV_SD_POST`` without
+  ``EV_SD_DELIVER``/``EV_SD_WIPE``/``EV_SD_FLASH``): a stale mapping
+  could still serve the old frame.
+
+Membership edges reset scoped state exactly like the protocol does:
+``EV_FAIL``/``EV_POOL_RESET`` retire the node's frame range and its
+writeback obligations (the frames are gone, not freed), ``EV_SD_WIPE``
+retires one node's posted shootdowns, ``EV_SD_FLASH`` all of them.
+
+CLI (exit 1 on any violation, 2 on unreadable input)::
+
+    python -m repro.obs.audit trace.json [--max-print 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
+
+from repro.obs.trace import (EV_BIND, EV_FAIL, EV_FRAME_FREE, EV_POOL_RESET,
+                             EV_SD_DELIVER, EV_SD_FLASH, EV_SD_POST,
+                             EV_SD_WIPE, EV_UNBIND, EV_WB_COMMIT, EV_WB_REG,
+                             KIND_NAMES)
+
+Key = Tuple[int, int]          # (stream, page)
+
+
+class Violation(NamedTuple):
+    seq: int
+    rule: str                  # single-copy | flush-before-free | ...
+    detail: str
+
+    def __str__(self) -> str:
+        return f"seq={self.seq} [{self.rule}] {self.detail}"
+
+
+def audit_events(events: Iterable[Tuple[int, ...]], *,
+                 pool_pages: int = 0) -> List[Violation]:
+    """Replay ``(seq, kind, node, a, b, c, d)`` tuples and collect
+    violations.  ``pool_pages`` (frames per node, from the trace meta)
+    scopes frame-range cleanup on fail/pool-reset; 0 disables it (fine
+    for synthetic traces that never fail a node)."""
+    bound: Dict[Key, int] = {}            # (stream, page) -> pfn
+    frame_of: Dict[int, Key] = {}         # pfn -> (stream, page)
+    wb_out: Dict[Tuple[int, int], int] = {}   # (node, slot) -> reg seq
+    sd_out: Dict[Key, Dict[int, int]] = {}    # key -> {target: n_posted}
+    out: List[Violation] = []
+
+    def _drop_node_frames(node: int) -> None:
+        if pool_pages <= 0:
+            return
+        lo, hi = node * pool_pages, (node + 1) * pool_pages
+        for pfn in [p for p in frame_of if lo <= p < hi]:
+            key = frame_of.pop(pfn)
+            if bound.get(key) == pfn:
+                del bound[key]
+
+    for ev in events:
+        seq, kind, node, a, b, c, d = (int(x) for x in ev)
+        key = (a, b)
+        if kind == EV_BIND:
+            posts = sd_out.get(key)
+            if posts:
+                targets = sorted(posts)
+                out.append(Violation(
+                    seq, "shootdown-before-remap",
+                    f"page {key} re-bound to pfn={c} with "
+                    f"{sum(posts.values())} undelivered shootdown(s) "
+                    f"posted to node(s) {targets}"))
+            old = bound.get(key)
+            if old is not None and old != c:
+                out.append(Violation(
+                    seq, "single-copy",
+                    f"page {key} double-resident: bound to pfn={old} "
+                    f"and re-bound to pfn={c} with no unbind between"))
+                frame_of.pop(old, None)
+            other = frame_of.get(c)
+            if other is not None and other != key:
+                out.append(Violation(
+                    seq, "single-copy",
+                    f"frame pfn={c} aliased: names page {other} and "
+                    f"page {key} simultaneously"))
+                bound.pop(other, None)
+            bound[key] = c
+            frame_of[c] = key
+        elif kind == EV_UNBIND:
+            if bound.get(key) == c:
+                del bound[key]
+            if frame_of.get(c) == key:
+                del frame_of[c]
+        elif kind == EV_FRAME_FREE:
+            # a=slot, c=pfn, node=frame owner
+            reg = wb_out.pop((node, a), None)
+            if reg is not None:
+                out.append(Violation(
+                    seq, "flush-before-free",
+                    f"frame node={node} slot={a} (pfn={c}) freed with "
+                    f"writeback registered at seq={reg} still "
+                    f"uncommitted"))
+            stale = frame_of.pop(c, None)
+            if stale is not None and bound.get(stale) == c:
+                del bound[stale]
+        elif kind == EV_WB_REG:
+            wb_out[(node, a)] = seq
+        elif kind == EV_WB_COMMIT:
+            wb_out.pop((node, a), None)
+        elif kind == EV_SD_POST:
+            posts = sd_out.setdefault(key, {})
+            posts[node] = posts.get(node, 0) + 1
+        elif kind == EV_SD_DELIVER:
+            posts = sd_out.get(key)
+            if posts is not None:
+                n = posts.get(node, 0)
+                if n <= 1:
+                    posts.pop(node, None)
+                else:
+                    posts[node] = n - 1
+                if not posts:
+                    del sd_out[key]
+        elif kind == EV_SD_WIPE:
+            for k in list(sd_out):
+                sd_out[k].pop(node, None)
+                if not sd_out[k]:
+                    del sd_out[k]
+        elif kind == EV_SD_FLASH:
+            sd_out.clear()
+        elif kind == EV_FAIL:
+            _drop_node_frames(node)
+            for nk in [k for k in wb_out if k[0] == node]:
+                del wb_out[nk]
+        elif kind == EV_POOL_RESET:
+            _drop_node_frames(node)
+            for nk in [k for k in wb_out if k[0] == node]:
+                del wb_out[nk]
+        # other kinds (spans, batches, membership phases) carry no
+        # invariant state — they exist for the timeline
+    return out
+
+
+def audit_trace(doc: dict) -> List[Violation]:
+    """Audit an exported Chrome-trace doc (``dpcEvents`` + ``dpcMeta``)."""
+    events = doc.get("dpcEvents")
+    if events is None:
+        raise ValueError("no dpcEvents in trace doc — was it exported by "
+                         "repro.obs.trace.EventTracer.export_chrome?")
+    meta = doc.get("dpcMeta", {})
+    return audit_events(events, pool_pages=int(meta.get("pool_pages", 0)))
+
+
+def audit_file(path: str) -> List[Violation]:
+    with open(path) as f:
+        return audit_trace(json.load(f))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.audit",
+        description="replay a captured DPC trace and re-check single-copy,"
+                    " flush-before-free, and shootdown-before-remap")
+    ap.add_argument("trace", help="Chrome-trace JSON exported by "
+                                  "EventTracer.export_chrome")
+    ap.add_argument("--max-print", type=int, default=20,
+                    help="cap on violations printed (all are counted)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        violations = audit_trace(doc)
+    except (OSError, ValueError) as e:
+        print(f"audit: cannot read {args.trace}: {e}", file=sys.stderr)
+        return 2
+    n_events = len(doc.get("dpcEvents", ()))
+    dropped = doc.get("dpcMeta", {}).get("dropped", 0)
+    kinds: Set[str] = {KIND_NAMES.get(int(e[1]), "?")
+                       for e in doc.get("dpcEvents", ())}
+    print(f"audit: {n_events} events ({dropped} dropped to ring wrap), "
+          f"{len(kinds)} kinds, {len(violations)} violation(s)")
+    for v in violations[:args.max_print]:
+        print(f"  {v}")
+    if len(violations) > args.max_print:
+        print(f"  ... and {len(violations) - args.max_print} more")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

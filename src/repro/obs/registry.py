@@ -1,0 +1,344 @@
+"""Cluster-wide metrics registry — counters, gauges, log2 histograms.
+
+Every metric is keyed ``(node, subsystem, name)``; ``node == CLUSTER``
+(-1) is the cluster-scope row used by singleton subsystems (the
+directory protocol, the writeback queue).  Design constraints:
+
+* **Cheap enough to stay on in the data path.**  Counters live in one
+  flat ``array('q')`` indexed through an interned key table — an
+  increment is a dict probe plus an array store, no per-event
+  allocation.  Histograms are 64 fixed log2 buckets behind a bound
+  handle (``hist.observe(v)``), again allocation-free.
+
+* **Dict-compatible.**  Subsystems that used an ad-hoc ``self.stats`` /
+  ``self.counters`` dict now hold a :class:`MetricsView` over their
+  ``(node, subsystem)`` row group — ``view["hits"] += 1``,
+  ``view["hits"]``, ``.get``, ``.items`` behave exactly like the old
+  dict, so call sites and existing tests did not have to move.  A view
+  is also callable: ``view()`` returns the full registry snapshot
+  (the ``dpc_cache.stats()`` API rides on this).
+
+* **Membership-aware.**  :meth:`MetricsRegistry.reset_node` is the
+  incarnation fold: live per-node rows are added into a cumulative
+  ``folded`` array and zeroed.  Cluster totals (``live + folded``) stay
+  monotonic across drain / fail / rejoin while per-node live values
+  restart per incarnation — the reset semantics ISSUE 8 pins down for
+  ``rehomed`` / ``prefetch_stale``-style counters.
+
+At ``obs_level="off"`` none of this is constructed: subsystems get a
+:class:`StatsDict` (a plain ``dict`` subclass — seed-identical cost).
+"""
+
+from __future__ import annotations
+
+import array
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+# obs_level ladder: off < counters < full (full adds the event tracer)
+LEVEL_OFF = 0
+LEVEL_COUNTERS = 1
+LEVEL_FULL = 2
+_LEVELS = {"off": LEVEL_OFF, "counters": LEVEL_COUNTERS, "full": LEVEL_FULL}
+
+#: node id of cluster-scope rows (subsystems with no per-node identity)
+CLUSTER = -1
+
+_Key = Tuple[int, str, str]
+
+
+def parse_level(level: str) -> int:
+    try:
+        return _LEVELS[level]
+    except KeyError:
+        raise ValueError(
+            f"obs_level must be one of {sorted(_LEVELS)}, got {level!r}")
+
+
+class Histogram:
+    """Log2-bucketed histogram of non-negative integers.
+
+    Bucket ``b`` counts values with ``bit_length() == b``, i.e. the
+    half-open range ``[2**(b-1), 2**b)`` (bucket 0 is exactly 0) — 64
+    buckets cover any int64, so ``observe`` never allocates.
+    """
+
+    __slots__ = ("count", "total", "buckets")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0
+        self.buckets = array.array("q", bytes(8 * 64))
+
+    def observe(self, value) -> None:
+        v = int(value)
+        if v < 0:
+            v = 0
+        self.count += 1
+        self.total += v
+        self.buckets[v.bit_length()] += 1
+
+    def observe_all(self, values) -> None:
+        """Batch entry point for hot loops (one call per batch, not per
+        sample — the TLB probe loop appends depths to a list and flushes
+        here)."""
+        for v in values:
+            self.observe(v)
+
+    def observe_array(self, values: np.ndarray) -> None:
+        """Vectorized observe for a numpy array of non-negative ints —
+        one bincount per batch instead of a Python loop per sample.
+        ``frexp``'s exponent equals ``bit_length`` for positive ints
+        (exact below 2**53, far beyond any batched quantity here)."""
+        v = np.maximum(np.asarray(values), 0)
+        n = int(v.size)
+        if n == 0:
+            return
+        self.count += n
+        self.total += int(v.sum())
+        bl = np.frexp(v.astype(np.float64))[1]
+        counts = np.bincount(bl)
+        for b in np.nonzero(counts)[0]:
+            self.buckets[int(b)] += int(counts[b])
+
+    def percentile(self, q: float) -> int:
+        """Upper bound of the bucket holding the q-quantile sample
+        (log2 resolution — good for 'p99 is ~2x p50', not for ns-exact
+        latencies)."""
+        if self.count == 0:
+            return 0
+        rank = q * self.count
+        seen = 0
+        for b, n in enumerate(self.buckets):
+            seen += n
+            if seen >= rank and n:
+                return (1 << b) - 1 if b else 0
+        return (1 << 63) - 1
+
+    def reset(self) -> None:
+        self.count = 0
+        self.total = 0
+        for i in range(64):
+            self.buckets[i] = 0
+
+    def snapshot(self) -> dict:
+        mean = self.total / self.count if self.count else 0.0
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "mean": round(mean, 3),
+            "p50": self.percentile(0.50),
+            "p99": self.percentile(0.99),
+            "buckets": {b: n for b, n in enumerate(self.buckets) if n},
+        }
+
+
+class MetricsRegistry:
+    """Flat array-backed store for every ``(node, subsystem, name)`` row."""
+
+    def __init__(self):
+        self._index: Dict[_Key, int] = {}
+        self._live = array.array("q")
+        self._folded = array.array("q")   # pre-incarnation totals (fold)
+        self._hists: Dict[_Key, Histogram] = {}
+        self._gauges: Dict[_Key, float] = {}
+        self._gauge_providers: List = []
+        self.incarnations: Dict[int, int] = {}
+        # back-pointer set by the owning Obs hub so callable views return
+        # the hub-level snapshot (level name, trace stats) when one exists
+        self.hub = None
+
+    def add_gauge_provider(self, fn) -> None:
+        """Register a zero-arg callback run at snapshot time to publish
+        point-in-time gauges (e.g. pool occupancy) — sampled lazily so
+        the data path never pays for them."""
+        self._gauge_providers.append(fn)
+
+    # -- row allocation -------------------------------------------------
+    def index(self, node: int, subsystem: str, name: str) -> int:
+        key = (node, subsystem, name)
+        i = self._index.get(key)
+        if i is None:
+            i = len(self._live)
+            self._index[key] = i
+            self._live.append(0)
+            self._folded.append(0)
+        return i
+
+    def view(self, node: int, subsystem: str,
+             names: Tuple[str, ...] = ()) -> "MetricsView":
+        return MetricsView(self, node, subsystem, names)
+
+    def histogram(self, node: int, subsystem: str, name: str) -> Histogram:
+        key = (node, subsystem, name)
+        h = self._hists.get(key)
+        if h is None:
+            h = self._hists[key] = Histogram()
+        return h
+
+    def set_gauge(self, node: int, subsystem: str, name: str,
+                  value: float) -> None:
+        self._gauges[(node, subsystem, name)] = float(value)
+
+    # -- reads ----------------------------------------------------------
+    def value(self, node: int, subsystem: str, name: str) -> int:
+        i = self._index.get((node, subsystem, name))
+        return 0 if i is None else self._live[i]
+
+    def total(self, subsystem: str, name: str) -> int:
+        """Monotonic cluster total: live + folded, summed over nodes."""
+        out = 0
+        for (n, sub, nm), i in self._index.items():
+            if sub == subsystem and nm == name:
+                out += self._live[i] + self._folded[i]
+        return out
+
+    # -- membership (incarnation fold) ----------------------------------
+    def reset_node(self, node: int) -> None:
+        """Fold ``node``'s live rows into the cumulative totals and zero
+        them: cluster totals stay monotonic, per-node live values restart
+        for the new incarnation.  Histograms are per-incarnation
+        distributions and simply reset; gauges are dropped (the next
+        sample re-publishes them)."""
+        for (n, _sub, _nm), i in self._index.items():
+            if n == node:
+                self._folded[i] += self._live[i]
+                self._live[i] = 0
+        for (n, _sub, _nm), h in self._hists.items():
+            if n == node:
+                h.reset()
+        for key in [k for k in self._gauges if k[0] == node]:
+            del self._gauges[key]
+        self.incarnations[node] = self.incarnations.get(node, 0) + 1
+
+    # -- export ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Nested dict: cluster totals, per-node live rows, histogram
+        summaries, gauges, incarnation counts."""
+        for fn in self._gauge_providers:
+            fn()
+        counters: Dict[str, Dict[str, int]] = {}
+        nodes: Dict[int, Dict[str, Dict[str, int]]] = {}
+        for (node, sub, name), i in sorted(self._index.items()):
+            total = self._live[i] + self._folded[i]
+            if total == 0:
+                continue
+            row = counters.setdefault(sub, {})
+            row[name] = row.get(name, 0) + total
+            if node != CLUSTER:
+                nodes.setdefault(node, {}).setdefault(sub, {})[name] = \
+                    self._live[i]
+        hists: Dict[str, Dict[str, dict]] = {}
+        for (node, sub, name), h in sorted(self._hists.items()):
+            if h.count == 0:
+                continue
+            label = name if node == CLUSTER else f"{name}.n{node}"
+            hists.setdefault(sub, {})[label] = h.snapshot()
+        gauges: Dict[str, Dict[str, float]] = {}
+        for (node, sub, name), v in sorted(self._gauges.items()):
+            label = name if node == CLUSTER else f"{name}.n{node}"
+            gauges.setdefault(sub, {})[label] = v
+        return {
+            "counters": counters,
+            "nodes": nodes,
+            "histograms": hists,
+            "gauges": gauges,
+            "incarnations": dict(self.incarnations),
+        }
+
+
+class MetricsView:
+    """Dict-compatible counter view over one ``(node, subsystem)`` group.
+
+    Unknown names allocate a zero row on first touch, so ad-hoc
+    ``view["new_counter"] += 1`` keeps working exactly like it did on the
+    plain dicts this replaces.
+    """
+
+    __slots__ = ("_reg", "_node", "_sub", "_idx")
+
+    def __init__(self, reg: MetricsRegistry, node: int, subsystem: str,
+                 names: Tuple[str, ...] = ()):
+        self._reg = reg
+        self._node = node
+        self._sub = subsystem
+        self._idx = {n: reg.index(node, subsystem, n) for n in names}
+
+    def _i(self, name: str) -> int:
+        i = self._idx.get(name)
+        if i is None:
+            i = self._reg.index(self._node, self._sub, name)
+            self._idx[name] = i
+        return i
+
+    # dict protocol (the compatibility surface the migration rides on)
+    def __getitem__(self, name: str) -> int:
+        return self._reg._live[self._i(name)]
+
+    def __setitem__(self, name: str, value) -> None:
+        self._reg._live[self._i(name)] = int(value)
+
+    def __contains__(self, name) -> bool:
+        return name in self._idx
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._idx)
+
+    def __len__(self) -> int:
+        return len(self._idx)
+
+    def get(self, name: str, default=0):
+        i = self._idx.get(name)
+        return default if i is None else self._reg._live[i]
+
+    def keys(self):
+        return self._idx.keys()
+
+    def values(self) -> List[int]:
+        live = self._reg._live
+        return [live[i] for i in self._idx.values()]
+
+    def items(self) -> List[Tuple[str, int]]:
+        live = self._reg._live
+        return [(n, live[i]) for n, i in self._idx.items()]
+
+    def update(self, other=(), **kw) -> None:
+        pairs = other.items() if hasattr(other, "items") else other
+        for n, v in pairs:
+            self[n] = v
+        for n, v in kw.items():
+            self[n] = v
+
+    def copy(self) -> Dict[str, int]:
+        return dict(self.items())
+
+    def total(self, name: str) -> int:
+        """Monotonic live+folded value of this row (survives rejoin)."""
+        i = self._i(name)
+        return self._reg._live[i] + self._reg._folded[i]
+
+    # snapshot API: ``kv.stats()`` / ``engine.stats()`` ride on this
+    def __call__(self) -> dict:
+        hub = self._reg.hub
+        return self._reg.snapshot() if hub is None else hub.snapshot()
+
+    def __repr__(self) -> str:
+        return repr(dict(self.items()))
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, MetricsView):
+            other = dict(other.items())
+        return dict(self.items()) == other
+
+
+class StatsDict(dict):
+    """``obs_level='off'`` fallback: a plain dict (seed-identical data
+    path cost) that still honors the callable-snapshot shape so
+    ``kv.stats()`` stays valid with obs disabled."""
+
+    def __call__(self) -> dict:
+        return {"level": "off"}
+
+    def total(self, name: str) -> int:
+        return self.get(name, 0)

@@ -1,0 +1,218 @@
+"""Structured protocol event tracer — ring-buffered binary events.
+
+At ``obs_level="full"`` every protocol transaction edge (TBI/TBM
+begin→ACK→finish, opcode-batch dispatch with lane composition,
+membership join/drain/failover phases, engine step boundaries with
+their async overlap windows) and every invariant-relevant state edge
+(page bind/unbind, frame free, writeback register/commit, shootdown
+post/deliver/wipe/flash) lands in a fixed-size numpy structured ring —
+24 bytes per event, one element assignment, no per-event allocation.
+
+The logical clock is the event sequence number: this is a
+single-process reproduction, so emission order *is* the cluster's
+linearization, and the replay checker (:mod:`repro.obs.audit`) leans on
+exactly that.  Two exports:
+
+* :meth:`EventTracer.events` — the buffered ``(seq, kind, node, a, b,
+  c, d)`` tuples, oldest first (the ring drops the oldest prefix once
+  it wraps; ``dropped`` says how many).
+* :meth:`EventTracer.export_chrome` — Chrome ``trace_event`` JSON
+  (openable in Perfetto / ``chrome://tracing``): nodes render as
+  processes, subsystems as threads, transactions as async spans, and
+  the raw event stream rides along under ``dpcEvents`` + ``dpcMeta`` so
+  ``python -m repro.obs.audit trace.json`` can replay the file
+  standalone.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+# (seq, kind, node, a, b, c, d) — 24-byte packed record
+EVENT_DTYPE = np.dtype([("seq", "<i8"), ("kind", "<i2"), ("node", "<i2"),
+                        ("a", "<i4"), ("b", "<i4"), ("c", "<i4"),
+                        ("d", "<i4")])
+
+# -- event kinds --------------------------------------------------------
+# directory / data plane            args (a, b, c, d)
+EV_BATCH = 1          # opcode batch: a=shard b=n_real c=n_copy d=n_flush
+EV_BIND = 2           # page committed: a=stream b=page c=pfn
+EV_UNBIND = 3         # mapping retired: a=stream b=page c=pfn
+EV_FRAME_FREE = 4     # frame released: a=slot c=pfn (node = frame owner)
+EV_WB_REG = 5         # writeback obligation: a=slot b=stream c=page
+EV_WB_COMMIT = 6      # obligation flushed/harvested: a=slot
+# invalidation (TBI) / migration (TBM) transactions
+EV_TBI_BEGIN = 7      # a=stream b=page c=owner d=n_sharers
+EV_TBI_ACK = 8        # a=stream b=page c=acking_node d=dirty
+EV_TBI_END = 9        # a=stream b=page c=status
+EV_TBM_BEGIN = 10     # a=stream b=page c=src d=dst
+EV_TBM_ACK = 11       # a=stream b=page c=acking_node
+EV_TBM_END = 12       # a=stream b=page c=status d=new_pfn
+# TLB shootdown lifecycle (node = shootdown target)
+EV_SD_POST = 13       # a=stream b=page
+EV_SD_DELIVER = 14    # a=stream b=page
+EV_SD_WIPE = 15       # whole-node TLB retire (drain/rejoin)
+EV_SD_FLASH = 16      # global epoch flash (failover)
+# membership phases
+EV_JOIN = 17          # a=epoch
+EV_REJOIN = 18        # a=epoch
+EV_DRAIN_BEGIN = 19   # a=pages_resident
+EV_DRAIN_END = 20     # a=pages_moved b=pages_flushed
+EV_FAIL = 21          # a=rehome_to
+EV_POOL_RESET = 22    # frame pool discarded (rejoin)
+# serving engine
+EV_STEP_BEGIN = 23    # a=step_index b=batch_size
+EV_STEP_END = 24      # a=step_index
+EV_OVERLAP_BEGIN = 25  # a=step_index  (async host-work window opens)
+EV_OVERLAP_END = 26    # a=step_index  (window closes at sample)
+EV_LANE_FENCE = 27    # a=n_copy b=n_flush drained at a data-lane fence
+
+KIND_NAMES = {
+    EV_BATCH: "batch", EV_BIND: "bind", EV_UNBIND: "unbind",
+    EV_FRAME_FREE: "frame_free", EV_WB_REG: "wb_reg",
+    EV_WB_COMMIT: "wb_commit",
+    EV_TBI_BEGIN: "tbi_begin", EV_TBI_ACK: "tbi_ack", EV_TBI_END: "tbi_end",
+    EV_TBM_BEGIN: "tbm_begin", EV_TBM_ACK: "tbm_ack", EV_TBM_END: "tbm_end",
+    EV_SD_POST: "sd_post", EV_SD_DELIVER: "sd_deliver",
+    EV_SD_WIPE: "sd_wipe", EV_SD_FLASH: "sd_flash",
+    EV_JOIN: "join", EV_REJOIN: "rejoin",
+    EV_DRAIN_BEGIN: "drain_begin", EV_DRAIN_END: "drain_end",
+    EV_FAIL: "fail", EV_POOL_RESET: "pool_reset",
+    EV_STEP_BEGIN: "step_begin", EV_STEP_END: "step_end",
+    EV_OVERLAP_BEGIN: "overlap_begin", EV_OVERLAP_END: "overlap_end",
+    EV_LANE_FENCE: "lane_fence",
+}
+
+# Chrome export: which thread lane each kind renders on
+_TID_DIRECTORY, _TID_TLB, _TID_WRITEBACK, _TID_MEMBER, _TID_ENGINE = \
+    0, 1, 2, 3, 4
+_TID_NAMES = {_TID_DIRECTORY: "directory", _TID_TLB: "tlb",
+              _TID_WRITEBACK: "writeback", _TID_MEMBER: "membership",
+              _TID_ENGINE: "engine"}
+_KIND_TID = {
+    EV_BATCH: _TID_DIRECTORY, EV_BIND: _TID_DIRECTORY,
+    EV_UNBIND: _TID_DIRECTORY, EV_FRAME_FREE: _TID_DIRECTORY,
+    EV_TBI_BEGIN: _TID_DIRECTORY, EV_TBI_ACK: _TID_DIRECTORY,
+    EV_TBI_END: _TID_DIRECTORY, EV_TBM_BEGIN: _TID_DIRECTORY,
+    EV_TBM_ACK: _TID_DIRECTORY, EV_TBM_END: _TID_DIRECTORY,
+    EV_LANE_FENCE: _TID_DIRECTORY,
+    EV_SD_POST: _TID_TLB, EV_SD_DELIVER: _TID_TLB,
+    EV_SD_WIPE: _TID_TLB, EV_SD_FLASH: _TID_TLB,
+    EV_WB_REG: _TID_WRITEBACK, EV_WB_COMMIT: _TID_WRITEBACK,
+    EV_JOIN: _TID_MEMBER, EV_REJOIN: _TID_MEMBER,
+    EV_DRAIN_BEGIN: _TID_MEMBER, EV_DRAIN_END: _TID_MEMBER,
+    EV_FAIL: _TID_MEMBER, EV_POOL_RESET: _TID_MEMBER,
+    EV_STEP_BEGIN: _TID_ENGINE, EV_STEP_END: _TID_ENGINE,
+    EV_OVERLAP_BEGIN: _TID_ENGINE, EV_OVERLAP_END: _TID_ENGINE,
+}
+
+# async-span pairing for the Chrome export: kind -> (peer_end, span name,
+# id fields) — spans are matched at export time, no runtime span ids
+_SPANS = {
+    EV_TBI_BEGIN: (EV_TBI_END, "TBI", ("a", "b")),
+    EV_TBM_BEGIN: (EV_TBM_END, "TBM", ("a", "b")),
+    EV_DRAIN_BEGIN: (EV_DRAIN_END, "DRAIN", ()),
+    EV_STEP_BEGIN: (EV_STEP_END, "STEP", ("a",)),
+    EV_OVERLAP_BEGIN: (EV_OVERLAP_END, "OVERLAP", ("a",)),
+}
+_SPAN_ENDS = {end for end, _, _ in _SPANS.values()}
+
+
+class EventTracer:
+    """Fixed-capacity binary event ring with a logical clock."""
+
+    def __init__(self, capacity: int = 32768, meta: Optional[dict] = None):
+        capacity = max(8, int(capacity))
+        capacity = 1 << (capacity - 1).bit_length()   # round up to pow2
+        self._mask = capacity - 1
+        self._buf = np.zeros(capacity, EVENT_DTYPE)
+        self._n = 0
+        self.meta = dict(meta or {})
+
+    @property
+    def capacity(self) -> int:
+        return len(self._buf)
+
+    @property
+    def emitted(self) -> int:
+        """Total events ever emitted (the logical clock's next value)."""
+        return self._n
+
+    @property
+    def dropped(self) -> int:
+        """Events lost to ring wrap (oldest-first)."""
+        return max(0, self._n - len(self._buf))
+
+    def emit(self, kind: int, node: int = -1, a: int = 0, b: int = 0,
+             c: int = 0, d: int = 0) -> None:
+        n = self._n
+        self._buf[n & self._mask] = (n, kind, node, a, b, c, d)
+        self._n = n + 1
+
+    def events(self) -> List[Tuple[int, int, int, int, int, int, int]]:
+        """Buffered ``(seq, kind, node, a, b, c, d)`` tuples, oldest
+        first."""
+        n, cap = self._n, len(self._buf)
+        if n <= cap:
+            return self._buf[:n].tolist()
+        start = n & self._mask
+        return self._buf[start:].tolist() + self._buf[:start].tolist()
+
+    # -- Chrome trace_event export --------------------------------------
+    def export_chrome(self, path: Optional[str] = None,
+                      extra_meta: Optional[dict] = None) -> dict:
+        """Build (and optionally write) a Chrome ``trace_event`` JSON doc.
+
+        ``ts`` is the logical clock (1 "us" per event), pid = node
+        (-1 = cluster), tid = subsystem lane.  Transactions render as
+        async spans (``ph: b``/``e``) matched by their id fields; every
+        event also lands as an instant so nothing is hidden.  The raw
+        stream is preserved under ``dpcEvents``/``dpcMeta`` for
+        :mod:`repro.obs.audit`.
+        """
+        events = self.events()
+        trace: List[dict] = []
+        pids = sorted({e[2] for e in events})
+        for pid in pids:
+            name = "cluster" if pid < 0 else f"node{pid}"
+            trace.append({"ph": "M", "name": "process_name", "pid": pid,
+                          "args": {"name": name}})
+            for tid, tname in _TID_NAMES.items():
+                trace.append({"ph": "M", "name": "thread_name", "pid": pid,
+                              "tid": tid, "args": {"name": tname}})
+        for seq, kind, node, a, b, c, d in events:
+            tid = _KIND_TID.get(kind, _TID_DIRECTORY)
+            kname = KIND_NAMES.get(kind, f"kind{kind}")
+            span = _SPANS.get(kind)
+            if span is not None or kind in _SPAN_ENDS:
+                if span is not None:
+                    _end, sname, idf = span
+                    ph = "b"
+                else:
+                    sname, idf = next(
+                        (nm, f) for bk, (ek, nm, f) in _SPANS.items()
+                        if ek == kind)
+                    ph = "e"
+                fields = dict(zip("abcd", (a, b, c, d)))
+                sid = ":".join([sname] + [str(fields[f]) for f in idf])
+                trace.append({"ph": ph, "cat": "txn", "name": sname,
+                              "id": sid, "pid": node, "tid": tid,
+                              "ts": seq,
+                              "args": {"a": a, "b": b, "c": c, "d": d}})
+                continue
+            trace.append({"ph": "i", "s": "t", "name": kname, "cat": kname,
+                          "pid": node, "tid": tid, "ts": seq,
+                          "args": {"a": a, "b": b, "c": c, "d": d}})
+        meta = dict(self.meta)
+        meta.update(extra_meta or {})
+        meta["kinds"] = {v: k for k, v in KIND_NAMES.items()}
+        meta["dropped"] = self.dropped
+        doc = {"traceEvents": trace, "displayTimeUnit": "ms",
+               "dpcEvents": [list(e) for e in events], "dpcMeta": meta}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc

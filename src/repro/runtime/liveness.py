@@ -20,6 +20,13 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.obs import CLUSTER
+
+# membership event kind -> counter row in the (CLUSTER, "membership") group
+_KIND_COUNTERS = {"join": "joins", "drain": "drains", "fail": "fails",
+                  "evict_straggler": "stragglers_evicted",
+                  "dir_lost": "dir_lost"}
+
 
 @dataclasses.dataclass
 class MembershipEvent:
@@ -45,6 +52,22 @@ class Membership:
 
     def on_change(self, fn: Callable[[MembershipEvent], None]) -> None:
         self._listeners.append(fn)
+
+    def attach_obs(self, obs) -> None:
+        """Report membership transitions into the observability hub: one
+        counter per event kind plus the current epoch, recorded *before*
+        the reacting listeners run so the protocol's own incarnation fold
+        (rejoin) can never zero the event that caused it."""
+        stats = obs.view(CLUSTER, "membership",
+                         tuple(_KIND_COUNTERS.values()) + ("epoch",))
+
+        def _record(ev: MembershipEvent) -> None:
+            stats["epoch"] = ev.epoch
+            name = _KIND_COUNTERS.get(ev.kind)
+            if name is not None:
+                stats[name] += 1
+
+        self._listeners.insert(0, _record)
 
     def heartbeat(self, node: int) -> None:
         if node in self.alive:

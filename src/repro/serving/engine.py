@@ -30,6 +30,7 @@ from repro.core import descriptors as D
 from repro.core.dpc_cache import DistributedKVCache, PageLookup
 from repro.models import registry
 from repro.models.cache import MLAPagedCache
+from repro.obs import trace as T
 from repro.serving import prefix_index, steps
 from repro.serving.prefix_index import PrefixStats
 
@@ -65,7 +66,9 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_pages = max_pages_per_seq
         self.kv = kv_cache or DistributedKVCache(run.dpc, num_nodes)
-        self.stats = PrefixStats()
+        self.obs = self.kv.obs
+        self.trace = self.obs.tracer
+        self.prefix_stats = PrefixStats()
 
         self.queue: deque = deque()
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -92,8 +95,9 @@ class ServingEngine:
         # in _alloc_page is idempotent, so dropping leaks nothing).
         self._gen = 0
         self._prefetch: Dict[int, tuple] = {}  # slot -> (gen, rid, idx, pid)
-        self.prefetch_hits = 0
-        self.prefetch_stale = 0
+        # per-node registry rows (fold at rejoin, like every node counter)
+        self._obs_stats = self.obs.view(
+            node, "engine", ("prefetch_hits", "prefetch_stale", "steps"))
 
         # storage tier: evicted dirty KV pages flush through the writeback
         # queue; this engine's pools are the byte source (and refill sink)
@@ -101,6 +105,21 @@ class ServingEngine:
             self.kv.set_page_bytes_fn(self._fetch_page_bytes)
 
     # ------------------------------------------------------------------
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self._obs_stats["prefetch_hits"]
+
+    @property
+    def prefetch_stale(self) -> int:
+        return self._obs_stats["prefetch_stale"]
+
+    def stats(self) -> dict:
+        """Cluster-wide snapshot (counters, per-node rows, histograms,
+        gauges) plus this engine's prefix-reuse tallies."""
+        snap = self.obs.snapshot()
+        snap["prefix"] = self.prefix_stats.as_dict()
+        return snap
 
     def submit(self, tokens: Sequence[int], max_new_tokens: int = 16) -> int:
         rid = self._next_rid
@@ -135,7 +154,7 @@ class ServingEngine:
         req.page_keys = keys
         lookups = self.kv.lookup([k[0] for k in keys], [k[1] for k in keys],
                                  self.node)
-        self.stats.pages_needed += len(keys)
+        self.prefix_stats.pages_needed += len(keys)
 
         # storage refill: an evicted full page whose bytes survive in the
         # backing store (or the still-pending writeback queue) is installed
@@ -150,7 +169,7 @@ class ServingEngine:
                     and self._install_page_bytes(lk.page_id, lk.refill):
                 self.kv.commit([keys[i][0]], [keys[i][1]], self.node, [lk])
                 lookups[i] = dataclasses.replace(lk, needs_fill=False)
-                self.stats.pages_refilled += 1
+                self.prefix_stats.pages_refilled += 1
             else:
                 break      # gap: later refills would leave the prefix
 
@@ -160,12 +179,12 @@ class ServingEngine:
         for i, lk in enumerate(lookups[:n_full]):
             if lk.page_id >= 0 and not lk.needs_fill:
                 reuse = i + 1
-                self.stats.pages_remote += int(lk.remote)
-                self.stats.pages_local += int(not lk.remote)
+                self.prefix_stats.pages_remote += int(lk.remote)
+                self.prefix_stats.pages_local += int(not lk.remote)
             else:
                 break
-        self.stats.prefill_tokens_saved += reuse * page
-        self.stats.prefill_tokens_run += len(req.tokens) - reuse * page
+        self.prefix_stats.prefill_tokens_saved += reuse * page
+        self.prefix_stats.prefill_tokens_run += len(req.tokens) - reuse * page
 
         # page table: reused pages + to-fill pages (tail pages are private)
         req.page_ids = []
@@ -179,7 +198,7 @@ class ServingEngine:
                        else self._alloc_page((key[0] ^ 0x5A5A5A ^ req.rid,
                                               key[1])))
                 req.page_ids.append(pid)
-                self.stats.pages_filled += 1
+                self.prefix_stats.pages_filled += 1
         self._pt[slot, :] = -1
         self._pt[slot, :n_pages] = req.page_ids
         self.active[slot] = req
@@ -307,6 +326,9 @@ class ServingEngine:
         live = [r for r in self.active if r is not None]
         if not live:
             return 0
+        step_id = self._step_count
+        if self.trace is not None:
+            self.trace.emit(T.EV_STEP_BEGIN, self.node, step_id, len(live))
 
         # page-boundary allocation for requests whose filling page is full;
         # under the async data plane the page was usually allocated during
@@ -349,6 +371,8 @@ class ServingEngine:
                 *self._decode(self.params, tok, positions, self.cache))
             self.cache = inflight.cache
             # ---- overlap window: device decodes while the host works ----
+            if self.trace is not None:
+                self.trace.emit(T.EV_OVERLAP_BEGIN, self.node, step_id)
             self._issue_prefetch()
             self.kv.flush_tlb_touches()
             self.kv.flush_dirty_marks()
@@ -356,6 +380,8 @@ class ServingEngine:
                 self.kv.advance_epoch()
                 self.kv.pump_storage()
                 self.kv.writeback.kick()
+            if self.trace is not None:
+                self.trace.emit(T.EV_OVERLAP_END, self.node, step_id)
             nxt = inflight.sample()  # sync point: ends the overlap window
         else:
             logits, self.cache = self._decode(self.params, tok, positions,
@@ -416,10 +442,13 @@ class ServingEngine:
         # ownership migration rides the step boundary — batched, never inside
         # the per-token decode (the paper's "off the critical path" batching)
         self._step_count += 1
+        self._obs_stats["steps"] += 1
         dpc = self.run.dpc
         if dpc.migration_enabled and \
                 self._step_count % dpc.migrate_interval_steps == 0:
             self._run_migrations()
+        if self.trace is not None:
+            self.trace.emit(T.EV_STEP_END, self.node, step_id, n_active)
         return n_active + len(self.queue)
 
     # -- async data plane: next-boundary page prefetch -------------------------
@@ -435,9 +464,9 @@ class ServingEngine:
             return -1
         gen, rid, p_idx, pid = ent
         if gen == self._gen and rid == req.rid and p_idx == idx and pid >= 0:
-            self.prefetch_hits += 1
+            self._obs_stats["prefetch_hits"] += 1
             return pid
-        self.prefetch_stale += 1
+        self._obs_stats["prefetch_stale"] += 1
         return -1
 
     def _issue_prefetch(self) -> None:

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import CLUSTER, Obs
 from repro.storage.backing import (BackingStore, FileBackingStore,
                                    MemoryBackingStore)
 
@@ -64,9 +65,11 @@ class WritebackQueue:
     """Batched dirty-page flusher over a ``BackingStore``."""
 
     def __init__(self, store: BackingStore,
-                 cfg: Optional[WritebackConfig] = None):
+                 cfg: Optional[WritebackConfig] = None,
+                 obs: Optional[Obs] = None):
         self.store = store
         self.cfg = cfg or WritebackConfig()
+        self.obs = obs if obs is not None else Obs("off")
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         # serializes flush batches: the durable image must stay a strict
@@ -81,10 +84,12 @@ class WritebackQueue:
         self._durable_seq = -1
         self._closed = False
         self._barrier_lat_s: List[float] = []
-        self.stats = {
-            "enqueued": 0, "coalesced": 0, "flushed_pages": 0, "batches": 0,
-            "barriers": 0, "bytes_enqueued": 0, "flush_errors": 0,
-        }
+        self.stats = self.obs.view(
+            CLUSTER, "writeback",
+            ("enqueued", "coalesced", "flushed_pages", "batches",
+             "barriers", "bytes_enqueued", "flush_errors"))
+        self._h_flush = self.obs.histogram(CLUSTER, "writeback",
+                                           "flush_batch_pages")
         self._thread: Optional[threading.Thread] = None
         if self.cfg.async_mode:
             self._thread = threading.Thread(
@@ -208,6 +213,8 @@ class WritebackQueue:
                 self._durable_seq = max(self._durable_seq, batch[-1].seq)
                 self.stats["flushed_pages"] += len(batch)
                 self.stats["batches"] += 1
+                if self._h_flush is not None:
+                    self._h_flush.observe(len(batch))
                 self._cv.notify_all()
             return len(batch)
 
@@ -334,7 +341,7 @@ class WritebackQueue:
 
 def make_storage(backend: str, *, root: str = "", extent_pages: int = 8,
                  batch_size: int = 32, flush_interval_s: float = 0.002,
-                 async_mode: bool = True
+                 async_mode: bool = True, obs: Optional[Obs] = None
                  ) -> Tuple[Optional[BackingStore],
                             Optional[WritebackQueue]]:
     """Config-driven factory: build the (store, queue) pair for a DPCConfig.
@@ -351,5 +358,5 @@ def make_storage(backend: str, *, root: str = "", extent_pages: int = 8,
         raise ValueError(f"unknown storage backend {backend!r}")
     queue = WritebackQueue(store, WritebackConfig(
         batch_size=batch_size, flush_interval_s=flush_interval_s,
-        async_mode=async_mode))
+        async_mode=async_mode), obs=obs)
     return store, queue

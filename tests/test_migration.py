@@ -461,12 +461,12 @@ class TestEngineIntegration:
         assert_single_copy(kv.proto)
 
         # replica 1 now admits the prefix as LOCAL pages
-        before_local, before_remote = (e1.stats.pages_local,
-                                       e1.stats.pages_remote)
+        before_local, before_remote = (e1.prefix_stats.pages_local,
+                                       e1.prefix_stats.pages_remote)
         e1.submit(prompt, max_new_tokens=2)
         self._drain(e1)
-        assert e1.stats.pages_local > before_local
-        assert e1.stats.pages_remote == before_remote
+        assert e1.prefix_stats.pages_local > before_local
+        assert e1.prefix_stats.pages_remote == before_remote
         # and the old owner can still serve it (as a sharer now)
         e0.submit(prompt, max_new_tokens=2)
         self._drain(e0)

@@ -1,0 +1,396 @@
+"""Observability tier-1 tests: registry, histograms, tracer, audit.
+
+Covers the ISSUE 8 surface end to end:
+  * MetricsRegistry / MetricsView — dict compatibility (the migration
+    contract for every ad-hoc stats dict), incarnation-fold reset
+    semantics, gauge providers, snapshot shape;
+  * Histogram — log2 bucketing, vectorized observe_array == scalar loop;
+  * Obs levels — off is plain dicts, counters has no tracer, full-tier
+    histograms (probe depth) stay None below full;
+  * EventTracer — ring wrap, export roundtrip, balanced Chrome spans;
+  * audit — clean traces pass, each corrupted trace trips exactly its
+    invariant, membership edges scope the cleanup;
+  * integration — a seeded async-data-plane interleaving (the
+    test_async_data_plane schedule) traced at obs_level="full" replays
+    through the checker with zero violations, and membership
+    drain/rejoin folds counters monotonically.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (CLUSTER, LEVEL_FULL, EventTracer, Histogram,
+                       MetricsRegistry, Obs, StatsDict)
+from repro.obs import audit
+from repro.obs import trace as T
+
+
+# ---------------------------------------------------------------------------
+# registry + views
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsRegistry:
+    def test_view_is_dict_compatible(self):
+        reg = MetricsRegistry()
+        v = reg.view(0, "tlb", ("hits", "misses"))
+        v["hits"] += 3
+        v["hits"] += 1
+        assert v["hits"] == 4 and v["misses"] == 0
+        assert v.get("hits") == 4 and v.get("absent", 7) == 7
+        assert "hits" in v and "absent" not in v
+        assert sorted(v.keys()) == ["hits", "misses"]
+        assert dict(v.items()) == {"hits": 4, "misses": 0}
+        assert v == {"hits": 4, "misses": 0}
+        v.update({"misses": 9}, hits=5)
+        assert v.copy() == {"hits": 5, "misses": 9}
+
+    def test_unknown_name_allocates_on_first_touch(self):
+        reg = MetricsRegistry()
+        v = reg.view(1, "proto")
+        v["ad_hoc"] += 2
+        assert v["ad_hoc"] == 2
+        assert reg.value(1, "proto", "ad_hoc") == 2
+
+    def test_views_share_rows_across_instances(self):
+        """Two views over the same (node, subsystem) hit the same storage —
+        the wipe-and-replace TLB path depends on this."""
+        reg = MetricsRegistry()
+        a = reg.view(2, "tlb", ("hits",))
+        b = reg.view(2, "tlb", ("hits",))
+        a["hits"] += 5
+        assert b["hits"] == 5
+
+    def test_reset_node_folds_and_stays_monotonic(self):
+        reg = MetricsRegistry()
+        v = reg.view(1, "engine", ("steps",))
+        other = reg.view(2, "engine", ("steps",))
+        v["steps"] += 10
+        other["steps"] += 3
+        reg.reset_node(1)
+        assert v["steps"] == 0                # live restarts per incarnation
+        assert v.total("steps") == 10         # cluster total is monotonic
+        assert other["steps"] == 3            # other nodes untouched
+        assert reg.incarnations == {1: 1}
+        v["steps"] += 4
+        reg.reset_node(1)
+        assert v.total("steps") == 14
+        assert reg.total("engine", "steps") == 17
+        assert reg.incarnations == {1: 2}
+
+    def test_reset_node_clears_hists_and_gauges(self):
+        reg = MetricsRegistry()
+        h = reg.histogram(1, "tlb", "probe_depth")
+        h.observe(3)
+        reg.set_gauge(1, "pool", "free", 5)
+        reg.set_gauge(2, "pool", "free", 7)
+        reg.reset_node(1)
+        assert h.count == 0
+        snap = reg.snapshot()
+        assert snap["gauges"] == {"pool": {"free.n2": 7.0}}
+
+    def test_gauge_providers_run_lazily_at_snapshot(self):
+        reg = MetricsRegistry()
+        calls = []
+        reg.add_gauge_provider(
+            lambda: (calls.append(1),
+                     reg.set_gauge(CLUSTER, "pool", "free", len(calls))))
+        assert calls == []                    # data path never pays
+        snap = reg.snapshot()
+        assert calls == [1]
+        assert snap["gauges"]["pool"]["free"] == 1.0
+
+    def test_snapshot_shape(self):
+        reg = MetricsRegistry()
+        reg.view(0, "tlb", ("hits",))["hits"] += 2
+        reg.view(CLUSTER, "protocol", ("reads",))["reads"] += 1
+        reg.histogram(CLUSTER, "protocol", "batch").observe(4)
+        snap = reg.snapshot()
+        assert snap["counters"]["tlb"]["hits"] == 2
+        assert snap["counters"]["protocol"]["reads"] == 1
+        assert snap["nodes"][0]["tlb"]["hits"] == 2
+        assert "protocol" not in snap["nodes"].get(0, {})  # cluster row
+        assert snap["histograms"]["protocol"]["batch"]["count"] == 1
+
+
+class TestHistogram:
+    def test_log2_buckets_and_percentiles(self):
+        h = Histogram()
+        for v in (0, 1, 2, 3, 4, 1000):
+            h.observe(v)
+        s = h.snapshot()
+        assert s["count"] == 6 and s["sum"] == 1010
+        # bit_length buckets: 0->0, 1->1, {2,3}->2, 4->3, 1000->10
+        assert s["buckets"] == {0: 1, 1: 1, 2: 2, 3: 1, 10: 1}
+        assert s["p50"] == 3                  # upper bound of bucket 2
+        assert h.percentile(1.0) == (1 << 10) - 1
+        assert Histogram().percentile(0.5) == 0
+
+    def test_observe_array_matches_scalar_loop(self):
+        vals = np.array([0, 1, 2, 3, 7, 8, 255, 256, 10_000, 0, 1])
+        ha, hb = Histogram(), Histogram()
+        ha.observe_array(vals)
+        for v in vals:
+            hb.observe(v)
+        assert ha.snapshot() == hb.snapshot()
+        ha.observe_array(np.array([], np.int64))   # empty batch is a no-op
+        assert ha.count == len(vals)
+
+    def test_negative_values_clamp_to_zero(self):
+        ha, hb = Histogram(), Histogram()
+        ha.observe(-5)
+        hb.observe_array(np.array([-5]))
+        assert ha.snapshot() == hb.snapshot()
+        assert ha.buckets[0] == 1
+
+    def test_reset(self):
+        h = Histogram()
+        h.observe(9)
+        h.reset()
+        assert h.count == 0 and h.total == 0 and sum(h.buckets) == 0
+
+
+class TestObsLevels:
+    def test_off_is_plain_dicts(self):
+        obs = Obs("off")
+        assert obs.registry is None and obs.tracer is None
+        v = obs.view(0, "tlb", ("hits",))
+        assert isinstance(v, StatsDict) and isinstance(v, dict)
+        v["hits"] += 1
+        assert v() == {"level": "off"}
+        assert obs.histogram(0, "tlb", "probe_depth") is None
+        assert obs.snapshot() == {"level": "off"}
+
+    def test_counters_has_registry_but_no_tracer(self):
+        obs = Obs("counters")
+        assert obs.registry is not None and obs.tracer is None
+        assert obs.snapshot()["level"] == "counters"
+
+    def test_full_tier_histograms_gate_below_full(self):
+        """Hot-path distributions (TLB probe depth) ride the full tier —
+        at counters they must come back None so the <1.1x overhead gate
+        holds."""
+        at_counters = Obs("counters")
+        assert at_counters.histogram(0, "tlb", "probe_depth",
+                                     min_level=LEVEL_FULL) is None
+        at_full = Obs("full")
+        assert at_full.histogram(0, "tlb", "probe_depth",
+                                 min_level=LEVEL_FULL) is not None
+        assert at_full.tracer is not None
+
+    def test_callable_view_returns_hub_snapshot(self):
+        obs = Obs("full", num_nodes=2)
+        v = obs.view(0, "cache", ("lookups",))
+        v["lookups"] += 1
+        snap = v()
+        assert snap["level"] == "full"
+        assert snap["trace"]["capacity"] == obs.tracer.capacity
+
+    def test_bad_level_rejected(self):
+        with pytest.raises(ValueError):
+            Obs("verbose")
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+class TestEventTracer:
+    def test_emit_and_events_roundtrip(self):
+        tr = EventTracer(64)
+        tr.emit(T.EV_BIND, 0, 11, 3, 42)
+        tr.emit(T.EV_UNBIND, 0, 11, 3, 42)
+        assert tr.events() == [(0, T.EV_BIND, 0, 11, 3, 42, 0),
+                               (1, T.EV_UNBIND, 0, 11, 3, 42, 0)]
+        assert tr.emitted == 2 and tr.dropped == 0
+
+    def test_ring_wrap_keeps_newest_oldest_first(self):
+        tr = EventTracer(8)       # pow2 already
+        for i in range(20):
+            tr.emit(T.EV_BATCH, 0, i)
+        assert tr.capacity == 8
+        assert tr.dropped == 12
+        evs = tr.events()
+        assert [e[0] for e in evs] == list(range(12, 20))  # seqs, oldest 1st
+        assert [e[3] for e in evs] == list(range(12, 20))
+
+    def test_capacity_rounds_up_to_pow2(self):
+        assert EventTracer(100).capacity == 128
+        assert EventTracer(1).capacity == 8   # floor
+
+    def test_export_chrome_roundtrip(self, tmp_path):
+        tr = EventTracer(64, meta={"num_nodes": 2, "pool_pages": 4})
+        tr.emit(T.EV_TBI_BEGIN, 1, 11, 3, 0, 1)
+        tr.emit(T.EV_TBI_ACK, 1, 11, 3, 1, 0)
+        tr.emit(T.EV_TBI_END, 1, 11, 3, 0)
+        tr.emit(T.EV_BIND, 0, 11, 3, 5)
+        path = tmp_path / "trace.json"
+        doc = tr.export_chrome(str(path))
+        on_disk = json.loads(path.read_text())
+        assert on_disk["dpcEvents"] == [list(e) for e in tr.events()]
+        assert on_disk["dpcMeta"]["pool_pages"] == 4
+        # async spans balance: every "b" has its "e" with the same id
+        begins = [e for e in doc["traceEvents"] if e["ph"] == "b"]
+        ends = [e for e in doc["traceEvents"] if e["ph"] == "e"]
+        assert {e["id"] for e in begins} == {e["id"] for e in ends}
+        assert begins and begins[0]["name"] == "TBI"
+        # instants carry their args; metadata names every pid
+        pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] == "M"
+                and e["name"] == "process_name"}
+        assert pids == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# audit: each invariant trips on exactly its corruption
+# ---------------------------------------------------------------------------
+
+
+def _ev(seq, kind, node=0, a=0, b=0, c=0, d=0):
+    return (seq, kind, node, a, b, c, d)
+
+
+class TestAudit:
+    def test_clean_lifecycle_passes(self):
+        events = [
+            _ev(0, T.EV_BIND, 0, 11, 0, 5),
+            _ev(1, T.EV_WB_REG, 0, 5, 11, 0),
+            _ev(2, T.EV_WB_COMMIT, 0, 5),
+            _ev(3, T.EV_UNBIND, 0, 11, 0, 5),
+            _ev(4, T.EV_FRAME_FREE, 0, 5, 0, 5),
+            _ev(5, T.EV_BIND, 1, 11, 0, 9),     # legal re-home
+        ]
+        assert audit.audit_events(events) == []
+
+    def test_double_bind_is_single_copy_violation(self):
+        events = [_ev(0, T.EV_BIND, 0, 11, 0, 5),
+                  _ev(1, T.EV_BIND, 1, 11, 0, 9)]   # no unbind between
+        (v,) = audit.audit_events(events)
+        assert v.rule == "single-copy" and "double-resident" in v.detail
+        assert v.seq == 1
+
+    def test_frame_aliasing_is_single_copy_violation(self):
+        events = [_ev(0, T.EV_BIND, 0, 11, 0, 5),
+                  _ev(1, T.EV_BIND, 0, 11, 1, 5)]   # same pfn, other page
+        (v,) = audit.audit_events(events)
+        assert v.rule == "single-copy" and "aliased" in v.detail
+
+    def test_free_with_pending_writeback_violates(self):
+        events = [_ev(0, T.EV_WB_REG, 2, 7, 11, 0),
+                  _ev(1, T.EV_FRAME_FREE, 2, 7, 0, 23)]
+        (v,) = audit.audit_events(events)
+        assert v.rule == "flush-before-free" and "seq=0" in v.detail
+
+    def test_rebind_with_undelivered_shootdown_violates(self):
+        events = [_ev(0, T.EV_SD_POST, 3, 11, 0),
+                  _ev(1, T.EV_BIND, 0, 11, 0, 5)]
+        (v,) = audit.audit_events(events)
+        assert v.rule == "shootdown-before-remap"
+        # delivering first makes the same rebind legal...
+        ok = [_ev(0, T.EV_SD_POST, 3, 11, 0),
+              _ev(1, T.EV_SD_DELIVER, 3, 11, 0),
+              _ev(2, T.EV_BIND, 0, 11, 0, 5)]
+        assert audit.audit_events(ok) == []
+        # ...as do a node wipe and a global flash
+        for clear in (_ev(1, T.EV_SD_WIPE, 3), _ev(1, T.EV_SD_FLASH, -1)):
+            evs = [_ev(0, T.EV_SD_POST, 3, 11, 0), clear,
+                   _ev(2, T.EV_BIND, 0, 11, 0, 5)]
+            assert audit.audit_events(evs) == []
+
+    def test_fail_retires_node_frames_and_obligations(self):
+        """EV_FAIL drops the dead node's frame range (pool_pages-scoped)
+        and its writeback obligations — the frames are gone, not freed,
+        so neither re-binding the page elsewhere nor the lost obligation
+        is a violation."""
+        events = [
+            _ev(0, T.EV_BIND, 1, 11, 0, 4 + 1),  # node 1 frame range [4,8)
+            _ev(1, T.EV_WB_REG, 1, 1, 11, 0),
+            _ev(2, T.EV_FAIL, 1, 0),
+            _ev(3, T.EV_BIND, 0, 11, 0, 2),      # re-home, no unbind seen
+        ]
+        assert audit.audit_events(events, pool_pages=4) == []
+        # without the fail edge the same stream is a double-bind
+        bad = [events[0], events[3]]
+        assert len(audit.audit_events(bad, pool_pages=4)) == 1
+
+    def test_audit_trace_requires_dpc_events(self):
+        with pytest.raises(ValueError):
+            audit.audit_trace({"traceEvents": []})
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        tr = EventTracer(64, meta={"pool_pages": 4})
+        tr.emit(T.EV_BIND, 0, 11, 0, 5)
+        clean = tmp_path / "clean.json"
+        tr.export_chrome(str(clean))
+        assert audit.main([str(clean)]) == 0
+        tr.emit(T.EV_BIND, 1, 11, 0, 9)          # corrupt: double-bind
+        bad = tmp_path / "bad.json"
+        tr.export_chrome(str(bad))
+        assert audit.main([str(bad)]) == 1
+        assert audit.main([str(tmp_path / "missing.json")]) == 2
+        out = capsys.readouterr().out
+        assert "violation" in out
+
+
+# ---------------------------------------------------------------------------
+# integration: live cluster traces replay cleanly; membership folds
+# ---------------------------------------------------------------------------
+
+
+class TestClusterIntegration:
+    def test_seeded_interleaving_trace_audits_clean(self, monkeypatch):
+        """Trace one of the async-data-plane seeded interleavings (reads,
+        writes, reclaim TBI, migrate TBM, pump, failover) at
+        obs_level="full" and replay it through the checker."""
+        import test_async_data_plane as adp
+        captured = []
+        orig = adp.make_kv
+
+        def traced_make_kv(*a, **kw):
+            kw.setdefault("obs_level", "full")
+            kv = orig(*a, **kw)
+            captured.append(kv)
+            return kv
+
+        monkeypatch.setattr(adp, "make_kv", traced_make_kv)
+        adp._run_interleaving(adp._seeded_events(seed=0), async_dp=True)
+        (kv,) = captured
+        events = kv.obs.tracer.events()
+        assert kv.obs.tracer.dropped == 0
+        kinds = {e[1] for e in events}
+        assert {T.EV_BATCH, T.EV_BIND, T.EV_TBI_BEGIN} <= kinds
+        violations = audit.audit_events(
+            events, pool_pages=kv.dpc.pool_pages_per_shard)
+        assert violations == []
+
+    def test_membership_events_fold_counters_on_rejoin(self):
+        """Counter-reset semantics on membership events: per-node live
+        counters restart on rejoin (incarnation fold) while cluster
+        totals stay monotonic, and membership transitions themselves are
+        counted."""
+        from repro.runtime.liveness import Membership
+        from test_async_data_plane import make_kv
+
+        kv = make_kv(pool_pages=8, storage_backend="memory",
+                     writeback_async=False)
+        membership = Membership(num_nodes=4)
+        membership.attach_obs(kv.obs)
+        kv.lookup([7], [0], 2)                # node 2 does some work
+        tlb2 = kv.obs.view(2, "tlb", ("misses",))
+        before = tlb2["misses"]
+        assert before > 0
+
+        membership.drain(2)
+        kv.drain_node(2)
+        membership.join(2)
+        kv.rejoin_node(2)                     # incarnation fold happens here
+        assert tlb2["misses"] == 0            # live restarted
+        assert tlb2.total("misses") == before  # total monotonic
+        snap = kv.stats()
+        assert snap["incarnations"] == {2: 1}
+        mem = snap["counters"]["membership"]
+        assert mem["drains"] == 1 and mem["joins"] == 1
+        assert mem["epoch"] == membership.epoch
+        kv.close()

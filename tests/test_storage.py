@@ -435,7 +435,7 @@ class TestEngineStorage:
 
         # resubmit the same prompt: its pages refault from the store
         gen_refilled = run_one()
-        assert eng.stats.pages_refilled >= 3
+        assert eng.prefix_stats.pages_refilled >= 3
         assert gen_cold == gen_refilled, \
             "refilled KV must reproduce generations"
         assert kv.proto.counters["flush_before_free_violations"] == 0

@@ -257,8 +257,8 @@ class TestServingIntegration:
         for _ in range(20):
             if e1.step() == 0:
                 break
-        assert e1.stats.pages_remote >= 3
-        assert e1.stats.prefill_tokens_saved >= 24
+        assert e1.prefix_stats.pages_remote >= 3
+        assert e1.prefix_stats.prefill_tokens_saved >= 24
 
     def test_cached_prefix_generations_identical(self):
         """Cold prefill vs cached-prefix tail-decode admission must produce
@@ -284,7 +284,7 @@ class TestServingIntegration:
                     break
             outs.append(tuple(req.generated))
         assert outs[0] == outs[1]
-        assert eng.stats.prefill_tokens_saved >= 24
+        assert eng.prefix_stats.prefill_tokens_saved >= 24
 
     def test_local_only_mode_never_shares(self):
         from repro.serving.engine import ServingEngine
@@ -302,4 +302,4 @@ class TestServingIntegration:
             for _ in range(20):
                 if eng.step() == 0:
                     break
-        assert eng.stats.pages_local == 0 and eng.stats.pages_remote == 0
+        assert eng.prefix_stats.pages_local == 0 and eng.prefix_stats.pages_remote == 0
