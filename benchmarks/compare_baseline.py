@@ -56,7 +56,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 # suites benchmarks.run can re-execute for the median-of-3 verdict
 KNOWN_SUITES = ("microbench_read", "microbench_write", "reclamation",
                 "control_plane", "app_serving", "roofline", "migration",
-                "writeback")
+                "writeback", "fault_soak")
 
 
 def _load_rows(path: str) -> dict:

@@ -1,0 +1,297 @@
+"""Chaos soak — membership churn under randomized seeded fault schedules.
+
+ISSUE 9 acceptance harness: >= 20 randomized fault schedules (``--smoke``
+runs 5), each a seeded :func:`repro.runtime.faults.random_plan` (message
+drops with bounded retry, lane delay/duplication, node crashes at named
+crash points, clock skew, transient sync failures) driven through
+join / drain / failover / partition-heal churn on a 5-node cluster with
+the shadow oracle checking every transition.  Per schedule, asserted
+inline:
+
+* zero lost committed dirty bytes (crash recovery checkpoints the
+  surviving pooled frames — CXL memory outlives the node — before the
+  failover wipes its state);
+* zero single-copy violations (shadow oracle per-op + explicit
+  ``check_invariants`` at settle + full trace-replay audit);
+* the fenced minority serves reads local-only and commits **no**
+  ownership transitions while fenced;
+* sustained survivor throughput at every churn epoch.
+
+Emits one row per schedule plus a summary; ``BENCH_fault_soak.json``
+(CI uploads it, the perf gate compares against the committed baseline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core.dpc_cache import DistributedKVCache
+from repro.obs.audit import audit_events
+from repro.runtime.faults import FAULT_COUNTERS, NodeCrash, random_plan
+from repro.runtime.liveness import Membership
+
+PAGE = 16
+NODES = 5
+
+# epoch actions the schedule rng draws uniformly — at 5-10 epochs per
+# schedule every kind of churn shows up across the suite
+_ACTIONS = ("traffic", "drain", "fail", "partition")
+
+
+def _new_cluster(per_node: int):
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=per_node * 3,
+                    directory_capacity=1 << 10,
+                    storage_backend="memory", writeback_async=False,
+                    shadow_oracle=True, obs_level="full",
+                    migrate_threshold=3, migrate_batch=per_node * NODES)
+    kv = DistributedKVCache(dpc, NODES)
+    frames = {}
+    kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+    membership = Membership(num_nodes=NODES)
+    kv.attach_membership(
+        membership,
+        install_fn=lambda key, pfn, data: frames.__setitem__(
+            key, np.asarray(data)))
+    return kv, frames, membership
+
+
+def _traffic(kv, frames, readers, all_streams, rng, reads) -> int:
+    """One sustained-traffic leg; returns ops served."""
+    ops = 0
+    for reader in readers:
+        picks = rng.choice(len(all_streams), reads, replace=True)
+        streams = [all_streams[i] for i in picks]
+        pages = [0] * len(streams)
+        lks = kv.lookup(streams, pages, reader)
+        for s, lk in zip(streams, lks):
+            if lk.needs_fill and lk.page_id >= 0:
+                frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+        kv.commit(streams, pages, reader, lks)
+        ops += len(streams)
+    return ops
+
+
+def _recover_crash(kv, membership, crash: NodeCrash) -> None:
+    """Harness reaction to a fault-plan crash: the pooled frames survive
+    the node (CXL), so registered dirty pages checkpoint before the
+    ordinary failover wipes its state — zero lost committed bytes."""
+    kv.checkpoint_dirty()
+    membership.evict(crash.node, kind="fail")
+
+
+def _fault_totals(plan) -> dict:
+    tot = {k: 0 for k in FAULT_COUNTERS}
+    for n in list(range(NODES)) + [-1]:
+        for k, v in plan.counters(n).items():
+            tot[k] += v
+    return tot
+
+
+def run_schedule(seed: int, per_node: int, epochs: int,
+                 intensity: float = 1.0, trace: str = "") -> dict:
+    """One seeded fault schedule; returns its summary stats."""
+    kv, frames, membership = _new_cluster(per_node)
+    rng = np.random.default_rng(seed)
+    membership.clock = time.monotonic   # skew wired below, bounded < timeout
+
+    # steady state: every node first-touches its shard, then checkpoints
+    shard = {}
+    for n in range(NODES):
+        streams = [n * per_node + i + 1 for i in range(per_node)]
+        shard[n] = streams
+        lks = kv.lookup(streams, [0] * per_node, n)
+        for s in streams:
+            frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+        kv.commit(streams, [0] * per_node, n, lks)
+    all_streams = [s for n in range(NODES) for s in shard[n]]
+    kv.checkpoint_dirty()
+
+    # arm the schedule only after the steady state exists: the soak
+    # measures churn under faults, not a cluster that never got built
+    plan = random_plan(seed, NODES, obs=kv.obs, intensity=intensity,
+                       crash_candidates=list(range(1, NODES)))
+    kv.attach_faults(plan)
+    for skewed in plan.cfg.clock_skew_s:
+        # bounded skew (< the liveness timeout) stresses the detector
+        # without manufacturing false suspicions
+        membership.clock = plan.skewed_clock(skewed, time.monotonic)
+
+    crashes = 0
+    t0 = time.perf_counter()
+    total_ops = 0
+    for epoch in range(epochs):
+        action = _ACTIONS[int(rng.integers(len(_ACTIONS)))]
+        victim = int(rng.integers(1, NODES))
+        try:
+            if action == "drain" and victim in membership.alive \
+                    and len(membership.alive) > 2:
+                membership.drain(victim)
+            elif action == "fail" and victim in membership.alive \
+                    and len(membership.alive) > 2:
+                kv.checkpoint_dirty()
+                membership.evict(victim, kind="fail")
+            elif action == "partition" and victim in membership.alive \
+                    and len(membership.alive) > 2:
+                kv.checkpoint_dirty()
+                membership.partition([victim])
+                membership.assert_no_quorum(victim)
+                # the fenced minority keeps serving — local-only, zero
+                # ownership transitions while fenced
+                commits_before = kv.proto.counters["commits"]
+                fenced_lks = kv.lookup(
+                    [9000 + victim, 9100 + victim], [0, 0], victim)
+                assert all(lk.status in (D.ST_GRANT_E, D.ST_FULL)
+                           for lk in fenced_lks), \
+                    f"fenced node {victim} served through the directory"
+                kv.commit([9000 + victim, 9100 + victim], [0, 0],
+                          victim, fenced_lks)
+                assert kv.proto.counters["commits"] == commits_before, \
+                    f"fenced node {victim} committed an ownership transition"
+        except NodeCrash as c:
+            crashes += 1
+            _recover_crash(kv, membership, c)
+
+        ep0 = time.perf_counter()
+        try:
+            ops = _traffic(kv, frames, sorted(membership.alive),
+                           all_streams, rng,
+                           max(4, per_node // 2))
+        except NodeCrash as c:
+            crashes += 1
+            _recover_crash(kv, membership, c)
+            ops = _traffic(kv, frames, sorted(membership.alive),
+                           all_streams, rng, max(4, per_node // 2))
+        dt = max(time.perf_counter() - ep0, 1e-9)
+        assert ops > 0 and ops / dt > 0, \
+            f"schedule {seed} epoch {epoch}: no sustained throughput"
+        total_ops += ops
+
+        # pump fresh dirty pages through the writeback queue every epoch
+        # so the schedule's sync-failure budget (and the reclaim crash
+        # points) actually get exercised
+        try:
+            helper = int(min(membership.alive))
+            wb = [5000 + epoch * 2, 5001 + epoch * 2]
+            lks = kv.lookup(wb, [0, 0], helper)
+            for s in wb:
+                frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+            kv.commit(wb, [0, 0], helper, lks)
+            kv.reclaim(helper, per_node + 2)
+            kv.flush()
+        except NodeCrash as c:
+            crashes += 1
+            _recover_crash(kv, membership, c)
+
+        # heal any partition and drive the guard's re-probe rejoin
+        if membership.fenced:
+            membership.heal()
+            for _ in range(4):
+                kv.probe_fenced(membership)
+            assert not membership.fenced, "heal re-probe never rejoined"
+        # departed nodes come back empty before the next epoch
+        for n in range(NODES):
+            if n not in membership.alive:
+                membership.join(n)
+    wall = time.perf_counter() - t0
+
+    # settle and check everything the schedule could have broken; the
+    # reclaim leg pushes dirty evictions through the writeback queue so
+    # the schedule's sync-failure budget actually gets spent (crash
+    # points stay disarmed — settle is cleanup, not measured churn)
+    plan.disarm()
+    kv.proto.fence_data_lanes()
+    for n in sorted(membership.alive):
+        kv.reclaim(n, 4)
+    kv.flush()
+    if kv.proto.oracle is not None:
+        kv.proto.oracle.check_invariants()
+    c = kv.proto.counters
+    assert c["lost_dirty_pages"] == 0, \
+        f"schedule {seed}: lost {c['lost_dirty_pages']} committed dirty pages"
+    owners: dict = {}
+    for key, (st, owner, _sh, _pfn, _d) in kv.proto.directory_view().items():
+        assert key not in owners, f"double-owned {key}"
+        owners[key] = owner
+    tr = kv.obs.tracer
+    violations = audit_events(
+        tr.events(), pool_pages=kv.dpc.pool_pages_per_shard,
+        dropped=tr.dropped)
+    assert not violations, \
+        f"schedule {seed}: {len(violations)} trace violations: " \
+        f"{[str(v) for v in violations[:5]]}"
+    faults = _fault_totals(plan)
+    # node obs rows reset when a churned node rejoins (new incarnation),
+    # so setup-time skew wiring is re-accounted from the plan itself
+    faults["skew_applied"] = max(faults["skew_applied"],
+                                 len(plan.cfg.clock_skew_s))
+    out = {"seed": seed, "ops": total_ops, "wall_s": wall,
+           "crashes": crashes, "faults": faults,
+           "epoch": membership.epoch, "violations": 0}
+    if trace:
+        # full-history Chrome trace for the CI artifact; the workflow
+        # replays it through `python -m repro.obs.audit` afterwards
+        kv.obs.tracer.export_chrome(trace)
+    kv.close()
+    return out
+
+
+def run(smoke: bool = False, schedules: int = 0, trace: str = "") -> int:
+    n = schedules or (5 if smoke else 24)
+    per_node = 6 if smoke else 12
+    epochs = 5 if smoke else 8
+    absorbed = {k: 0 for k in FAULT_COUNTERS}
+    total_crashes = 0
+    for seed in range(n):
+        s = run_schedule(seed, per_node, epochs,
+                         trace=trace if seed == n - 1 else "")
+        total_crashes += s["crashes"]
+        for k, v in s["faults"].items():
+            absorbed[k] += v
+        emit(f"fault_soak.schedule_{seed}",
+             s["wall_s"] / max(s["ops"], 1) * 1e6,
+             f"ops={s['ops']} crashes={s['crashes']} "
+             f"drops={s['faults']['drops_injected']} "
+             f"delays={s['faults']['lanes_delayed']} "
+             f"dups={s['faults']['lanes_duplicated']} "
+             f"syncfails={s['faults']['sync_fails_injected']} "
+             f"epochs={s['epoch']} lost_dirty=0 violations=0")
+    # rejoin resets the crashed node's obs row (new incarnation), so the
+    # harness's own crash count is the authoritative one
+    absorbed["crashes_fired"] = max(absorbed["crashes_fired"], total_crashes)
+    active = sum(1 for k in ("drops_injected", "lanes_delayed",
+                             "lanes_duplicated", "crashes_fired",
+                             "sync_fails_injected") if absorbed[k])
+    assert active >= 4, f"schedules too tame: only {active} fault kinds fired"
+    emit("fault_soak.summary", 0.0,
+         f"schedules={n} crashes={total_crashes} "
+         f"drops={absorbed['drops_injected']} "
+         f"retries={absorbed['retries']} "
+         f"timeouts={absorbed['send_timeouts']} "
+         f"delays={absorbed['lanes_delayed']} "
+         f"dups={absorbed['lanes_duplicated']} "
+         f"syncfails={absorbed['sync_fails_injected']} "
+         f"skews={absorbed['skew_applied']} "
+         f"lost_dirty=0 violations=0")
+    return n
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--schedules", type=int, default=0,
+                    help="override the schedule count (0 = suite default)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="export the last schedule's full event history "
+                         "as a Chrome trace JSON (CI replays it through "
+                         "repro.obs.audit)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, schedules=args.schedules, trace=args.trace)
+    common.dump_json("fault_soak")

@@ -23,7 +23,7 @@ def main() -> None:
                     help="seconds-scale run of every suite (CI drift check)")
     args = ap.parse_args()
 
-    from benchmarks import (app_serving, common, control_plane,
+    from benchmarks import (app_serving, common, control_plane, fault_soak,
                             microbench_read, microbench_write, migration,
                             reclamation, roofline, writeback)
     suites = [
@@ -35,6 +35,7 @@ def main() -> None:
         ("roofline", roofline.run),                   # brief §Roofline
         ("migration", migration.run),                 # ownership hand-off
         ("writeback", writeback.run),                 # storage tier (flush)
+        ("fault_soak", fault_soak.run),               # chaos soak (ISSUE 9)
     ]
     failures = 0
     for name, fn in suites:

@@ -33,7 +33,8 @@ def train_failover(smoke: bool = False):
 # per-phase summary columns: (subsystem, counter) rows of the registry
 _PHASE_COLS = (("cache", "lookups"), ("cache", "tlb_hits"),
                ("protocol", "commits"), ("protocol", "migrations"),
-               ("writeback", "flushed_pages"), ("tlb_group", "posted"))
+               ("writeback", "flushed_pages"), ("tlb_group", "posted"),
+               ("membership", "detect_to_fence_us"))
 
 
 def _phase_counters(kv) -> dict:

@@ -29,6 +29,7 @@ from repro.core.migration import MigrationConfig, OwnershipMigrator
 from repro.core.protocol import DPCProtocol, ProtocolConfig
 from repro.core.tlb import MODE_S
 from repro.obs import CLUSTER, Obs
+from repro.runtime.liveness import DirectoryClientGuard
 from repro.storage import make_storage
 
 
@@ -92,6 +93,11 @@ class DistributedKVCache:
         self._replica_free: List[List[int]] = [
             list(range(dpc.pool_pages_per_shard - 1, -1, -1))
             for _ in range(num_nodes)]
+        # per-node directory-client guards: server-side fencing trips them
+        # (local-only degradation on the minority side of a partition) and
+        # heal rejoins ride their re-probe hysteresis
+        self.guards: List[DirectoryClientGuard] = [
+            DirectoryClientGuard() for _ in range(num_nodes)]
         # promotion policy: every remote hit feeds the hotness ledger; the
         # engine drains it periodically through run_migrations()
         self.migrator = OwnershipMigrator(self.proto, MigrationConfig(
@@ -198,7 +204,11 @@ class DistributedKVCache:
         n = len(streams)
         self.stats["lookups"] += n
         mode = self.dpc.mode
-        if mode in ("replicated", "local_only"):
+        if mode in ("replicated", "local_only") or \
+                self.proto.is_fenced(node):
+            # a fenced node (minority side of a partition) degrades to
+            # purely local caching — no ownership transitions, no
+            # directory traffic, exactly the client-guard fallback
             return self._lookup_uncoordinated(streams, pages, node)
 
         out: List[Optional[PageLookup]] = [None] * n
@@ -309,7 +319,8 @@ class DistributedKVCache:
         """
         rows = [i for i, lk in enumerate(lookups)
                 if lk.needs_fill and lk.page_id >= 0]
-        if not rows or self.dpc.mode in ("replicated", "local_only"):
+        if not rows or self.dpc.mode in ("replicated", "local_only") \
+                or self.proto.is_fenced(node):
             return
         pool_pages = self.dpc.pool_pages_per_shard
         if dirty is None:
@@ -372,6 +383,7 @@ class DistributedKVCache:
         self._replica_maps.append({})
         self._replica_free.append(
             list(range(self.dpc.pool_pages_per_shard - 1, -1, -1)))
+        self.guards.append(DirectoryClientGuard())
         return node
 
     def rejoin_node(self, node: int) -> None:
@@ -418,19 +430,42 @@ class DistributedKVCache:
         """Persist registered dirty pages out-of-band (see protocol)."""
         return self.proto.checkpoint_dirty(node)
 
+    def attach_faults(self, plan) -> None:
+        """Thread a :class:`repro.runtime.faults.FaultPlan` through the
+        protocol's routed batches / lanes / crash points and the writeback
+        queue's sync path.  ``None`` detaches."""
+        self.proto.attach_faults(plan)
+        if self.writeback is not None and \
+                hasattr(self.writeback, "attach_faults"):
+            self.writeback.attach_faults(plan)
+
     def attach_membership(self, membership, install_fn=None,
                           copy_fn=None) -> None:
         """Subscribe the cache to membership epochs: joins grow (or re-seed)
         state, drains evacuate through the protocol, failures re-home
-        orphans from the durable tier onto the first survivor."""
+        orphans from the durable tier onto the first survivor, fences cut
+        the minority side off (stale-epoch rejection + local-only guard
+        trip + re-home, like a failure the node survives), heals arm the
+        guard's re-probe path (:meth:`probe_fenced` drives the rejoin)."""
         if hasattr(membership, "attach_obs"):
             membership.attach_obs(self.obs)
 
+        def _rehome_target(node: int) -> Optional[int]:
+            survivors = sorted(membership.alive - {node})
+            return survivors[0] if (survivors and (
+                self.store is not None or self.writeback is not None)) \
+                else None
+
         def on_change(ev) -> None:
+            # every committed transition carries its fencing token into
+            # the protocol before the reaction runs — the trace audit
+            # checks the resulting EV_EPOCH stream is monotone
+            self.proto.epoch_bump(ev.epoch, getattr(ev, "fence", ev.epoch))
             if ev.kind == "join":
                 if ev.node >= self.num_nodes:
                     self.join_node()
                 else:
+                    self.proto.unfence_nodes([ev.node])
                     self.rejoin_node(ev.node)
             elif ev.kind == "drain":
                 # drain fires while the node is still listed alive
@@ -438,14 +473,41 @@ class DistributedKVCache:
                 if dests:
                     self.drain_node(ev.node, alive=dests, copy_fn=copy_fn)
             elif ev.kind in ("fail", "evict_straggler"):
-                survivors = sorted(membership.alive - {ev.node})
-                rehome = survivors[0] if (survivors and (
-                    self.store is not None or self.writeback is not None)) \
-                    else None
-                self.fail_node(ev.node, rehome_to=rehome,
+                self.fail_node(ev.node, rehome_to=_rehome_target(ev.node),
                                install_fn=install_fn)
+            elif ev.kind == "fence":
+                # majority-side reaction: reject the minority node's
+                # batches at the committed token, trip its client guard
+                # (it degrades to local-only), and reclaim its pages so
+                # the surviving majority keeps serving them
+                self.proto.fence_nodes([ev.node], token=ev.fence)
+                self.guards[ev.node].trip()
+                self.fail_node(ev.node, rehome_to=_rehome_target(ev.node),
+                               install_fn=install_fn)
+            # "heal" needs no immediate reaction: the fenced node stays
+            # cut off until its guard's re-probe streak completes
 
         membership.on_change(on_change)
+
+    def probe_fenced(self, membership) -> List[int]:
+        """One re-probe round for fenced nodes (call periodically, e.g.
+        per engine step).  A node whose partition healed sees its probes
+        answered (it can reach quorum again) and accumulates the guard's
+        hysteresis streak; once the guard returns to ``dpc`` the node
+        rejoins through the epoch log — which unfences it and re-seeds
+        its caches.  Nodes still partitioned reset their streak.  Returns
+        the nodes that rejoined this round."""
+        rejoined: List[int] = []
+        for node in sorted(membership.fenced):
+            guard = self.guards[node]
+            if membership.has_quorum(node):
+                guard.response_received()
+                if guard.check() == "dpc":
+                    membership.join(node)
+                    rejoined.append(node)
+            else:
+                guard.probe_failed()
+        return rejoined
 
     # ------------------------------------------------------------------
     # uncoordinated baselines

@@ -26,6 +26,7 @@ an opcode batch lands on.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -113,7 +114,25 @@ PROTOCOL_COUNTERS = (
     "drain_aborts", "rehomed_pages", "rehome_deferred",
     "lost_dirty_pages", "checkpointed_pages",
     "lane_copies", "lane_flushes", "lane_fences",
+    "fenced_nodes", "unfenced_nodes", "fenced_rejects",
 )
+
+
+class StaleEpochError(RuntimeError):
+    """A routed opcode batch was issued on behalf of a fenced node.
+
+    The node's membership epoch is stale (it sits on the minority side
+    of a partition, or was declared failed): its fencing token says any
+    directory transition it drives could violate single-copy against
+    the majority's re-homed ownership.  The node must degrade to
+    local-only serving and rejoin through the committed epoch log."""
+
+    def __init__(self, node: int, token: int):
+        super().__init__(
+            f"node {node} is fenced at token {token}: routed batches "
+            "rejected until it rejoins through the epoch log")
+        self.node = node
+        self.token = token
 
 
 class DPCState(NamedTuple):
@@ -258,6 +277,22 @@ class DPCProtocol:
         self._copy_meta: Dict[Tuple[int, int], Dict] = {}
         self._lane_flushes: Dict[int, List[Tuple[int, int, int]]] = {}
         self._flush_meta: Dict[Tuple[int, int, int], int] = {}
+        # --- quorum fencing (runtime/epoch_log) ----------------------------
+        # nodes whose membership epoch is stale: _routed rejects batches on
+        # their behalf (StaleEpochError) until they rejoin.  fence_token is
+        # the highest committed-epoch token this protocol has observed;
+        # _fence_bypass nests while survivor-side cleanup (fail/drain)
+        # legitimately routes batches *for* a fenced or dead node.
+        self._fenced: Dict[int, int] = {}
+        self._fence_bypass = 0
+        self.fence_token = 0
+        # detection -> fence -> recovery latency, measured where the wipe
+        # actually happens (surfaced in the failover example's phase table)
+        self._member_lat = self.obs.view(
+            CLUSTER, "membership",
+            ("detect_to_fence_us", "fence_to_recover_us"))
+        # --- fault injection (runtime/faults): None = clean execution ------
+        self.faults = None
         # executable-spec shadow (satellite: divergence must fail loudly)
         self.oracle: Optional[refimpl.RefDirectory] = None
         if cfg.shadow_oracle:
@@ -282,6 +317,53 @@ class DPCProtocol:
             self.writeback = writeback
         if page_bytes_fn is not None:
             self.page_bytes_fn = page_bytes_fn
+
+    def attach_faults(self, plan) -> None:
+        """Thread a :class:`repro.runtime.faults.FaultPlan` through the
+        routed batches, descriptor lanes, and named crash points.  None
+        detaches (clean execution)."""
+        self.faults = plan
+
+    # -- quorum fencing (runtime/epoch_log) ------------------------------------
+
+    def epoch_bump(self, epoch: int, token: int) -> None:
+        """Record a committed membership epoch: every protocol-visible
+        bump carries its fencing token (monotone — the audit checks)."""
+        self.fence_token = max(self.fence_token, int(token))
+        if self.trace is not None:
+            self.trace.emit(T.EV_EPOCH, CLUSTER, int(epoch), int(token))
+
+    def fence_nodes(self, nodes: Sequence[int],
+                    token: Optional[int] = None) -> int:
+        """Fence ``nodes`` at ``token`` (default: one past the highest
+        observed): their routed batches raise :class:`StaleEpochError`
+        until :meth:`unfence_nodes`.  Returns the token."""
+        token = int(token) if token is not None else self.fence_token + 1
+        self.fence_token = max(self.fence_token, token)
+        for n in nodes:
+            self._fenced[int(n)] = token
+            if self.trace is not None:
+                self.trace.emit(T.EV_FENCE, int(n), token)
+        self.counters["fenced_nodes"] += len(list(nodes))
+        return token
+
+    def unfence_nodes(self, nodes: Sequence[int]) -> None:
+        """Lift the fence (the node rejoined through the epoch log)."""
+        for n in nodes:
+            self._fenced.pop(int(n), None)
+            if self.trace is not None:
+                self.trace.emit(T.EV_UNFENCE, int(n), self.fence_token)
+        self.counters["unfenced_nodes"] += len(list(nodes))
+
+    def fenced_view(self) -> Dict[int, int]:
+        return dict(self._fenced)
+
+    def is_fenced(self, node: int) -> bool:
+        return node in self._fenced
+
+    def _check_crash(self, point: str, node: int) -> None:
+        if self.faults is not None:
+            self.faults.check_crash(point, node)
 
     # -- helpers -------------------------------------------------------------
 
@@ -309,10 +391,34 @@ class DPCProtocol:
         aux = (np.zeros_like(streams) if aux is None
                else np.broadcast_to(np.asarray(aux, np.int32), streams.shape))
         n = len(streams)
+        routed_nodes = np.unique(nodes).tolist() if n else []
+        if self._fenced and not self._fence_bypass:
+            # partition fencing: a batch routed on behalf of a stale-epoch
+            # node is rejected outright — the minority side must degrade
+            # to local-only, never drive directory transitions.  Survivor-
+            # side cleanup (fail/drain re-homing) runs under the bypass.
+            for nd in routed_nodes:
+                if nd in self._fenced:
+                    self.counters["fenced_rejects"] += 1
+                    raise StaleEpochError(nd, self._fenced[nd])
+        if self.faults is not None and n:
+            # injected transient send failures: bounded retry-with-backoff,
+            # accounted per node under (node, "faults", ...)
+            self.faults.routed_send(routed_nodes)
+            # lane reordering: a delayed node's pending descriptor lanes
+            # sit this batch out (delivered delay_batches later, or force-
+            # settled by the next fence — the invariant under test)
+            lane_nodes = [nd for nd in routed_nodes
+                          if not self.faults.lane_delayed(nd)]
+            dup_nodes = {nd for nd in lane_nodes
+                         if self.faults.lane_duplicated(nd)}
+        else:
+            lane_nodes = routed_nodes
+            dup_nodes = set()
         lane_rows: List[np.ndarray] = []
         n_sd = n_cp = n_fl = 0
         if self.tlbs is not None and self.cfg.tlb_piggyback and n:
-            triples = self.tlbs.drain_for(np.unique(nodes).tolist())
+            triples = self.tlbs.drain_for(lane_nodes)
             if triples:
                 sd = D.encode_shootdowns(triples)
                 lane_rows.append(sd)
@@ -320,25 +426,38 @@ class DPCProtocol:
                 # receiver-side service: the lanes are decoded and the cached
                 # mappings die before any of the batch's own ops run
                 self.tlbs.deliver(D.decode_shootdowns(sd))
+                if dup_nodes:
+                    # duplicated delivery: shootdown service is idempotent
+                    # (dropping an already-dropped mapping is a no-op)
+                    self.tlbs.deliver([t for t in D.decode_shootdowns(sd)
+                                       if t[0] in dup_nodes])
         if self.cfg.async_data_plane and n:
             # data-plane lanes: pending COPY/FLUSH obligations for the nodes
             # this batch is routed on behalf of ride along the same way and
             # are serviced receiver-side before the batch's own ops
-            routed_nodes = np.unique(nodes).tolist()
-            cp = [t for nd in routed_nodes
+            cp = [t for nd in lane_nodes
                   for t in self._lane_copies.pop(nd, [])]
-            fl = [t for nd in routed_nodes
+            fl = [t for nd in lane_nodes
                   for t in self._lane_flushes.pop(nd, [])]
             if cp:
                 rows = D.encode_copies(cp)
                 lane_rows.append(rows)
                 n_cp = len(cp)
                 self._service_copy_lanes(D.decode_copies(rows))
+                if dup_nodes:
+                    # second service is a no-op: _copy_meta pops once
+                    self._service_copy_lanes(
+                        [t for t in D.decode_copies(rows)
+                         if t[0] in dup_nodes])
             if fl:
                 rows = D.encode_flushes(fl)
                 lane_rows.append(rows)
                 n_fl = len(fl)
                 self._service_flush_lanes(D.decode_flushes(rows))
+                if dup_nodes:
+                    self._service_flush_lanes(
+                        [t for t in D.decode_flushes(rows)
+                         if t[0] in dup_nodes])
         extra_rows = (np.concatenate(lane_rows) if lane_rows else None)
         if n:
             if self._h_batch is not None:
@@ -554,6 +673,10 @@ class DPCProtocol:
         self._lane_flushes.setdefault(node, []).append(
             (node, key[0], key[1]))
         self.counters["lane_flushes"] += 1
+        # crash point: the obligation token is registered and the capture
+        # rides a lane — a crash here must still flush the bytes (the
+        # failover's lane fence services the capture before the wipe)
+        self._check_crash("post_flush_register", node)
 
     def _service_flush_lanes(self, triples) -> int:
         """Receiver-side FLUSH service: capture the retired frame's bytes
@@ -735,6 +858,9 @@ class DPCProtocol:
             if len(rows):
                 self.mark_dirty(np.asarray(streams, np.int32)[rows],
                                 np.asarray(pages, np.int32)[rows], node)
+        # crash point: the commit is fully applied (directory, pool, TLB,
+        # dirty marks) — a crash here must lose nothing already committed
+        self._check_crash("post_commit", node)
         return res[:, 0]
 
     # -- write path ------------------------------------------------------------
@@ -1097,6 +1223,9 @@ class DPCProtocol:
                  if v["owner"] == node and not v["waiting"]]
         if not ready:
             return 0, 0
+        # crash point: all ACKs are in but nothing completed — pending_inv
+        # is intact, so failover cleanly retires the rounds this node owns
+        self._check_crash("pre_reclaim_finish", node)
         if self.tlbs is not None:
             if self.cfg.tlb_piggyback:
                 # bounded-staleness epoch fence: any named sharer still
@@ -1306,6 +1435,10 @@ class DPCProtocol:
                 self.tlbs.service_all()   # legacy safety net
         moved: List[Tuple[Tuple[int, int], int, int]] = []
         for key, info in ready:
+            # crash point: the hand-off for this key has not begun — its
+            # pending_mig entry is intact, the source frame still DRAINING,
+            # so a source crash here re-homes through the ordinary path
+            self._check_crash("pre_migrate_finish", info["src"])
             self._assert_no_late_shootdown(key)
             del self.pending_mig[key]
             src, dst = info["src"], info["dst"]
@@ -1441,6 +1574,24 @@ class DPCProtocol:
         dirty bit was registered that is a lost committed write and counts
         into ``lost_dirty_pages`` — zero whenever a checkpoint or writeback
         preceded the crash.  Returns owned entries dropped."""
+        t0 = time.perf_counter()
+        # survivor-side cleanup legitimately routes batches *for* the dead
+        # (possibly fenced) node — synthesized ACKs, forced completions —
+        # so the fence check stands down for the duration; crash points
+        # disarm too (recovery for one crash must not trip another)
+        self._fence_bypass += 1
+        if self.faults is not None:
+            self.faults.disarm()
+        try:
+            return self._fail_node_inner(node, rehome_to, install_fn, t0)
+        finally:
+            if self.faults is not None:
+                self.faults.rearm()
+            self._fence_bypass -= 1
+
+    def _fail_node_inner(self, node: int, rehome_to: Optional[int],
+                         install_fn: Optional[Callable],
+                         t0: float) -> int:
         # settle in-flight lane obligations before anything dies: a pending
         # COPY whose source is the failing node still has its only copy
         # pinned in DRAINING — servicing it now lands the bytes (and any
@@ -1490,6 +1641,12 @@ class DPCProtocol:
         self.state = self.state._replace(dirs=tuple(dirs))
         if self.oracle is not None:
             self.oracle.fail_node(node)
+        # the fence point: the TLB flash + directory wipe just made the
+        # dead node's mappings unservable cluster-wide.  Detection -> here
+        # is the window a stale mapping could still have served.
+        self._member_lat["detect_to_fence_us"] += max(
+            1, int((time.perf_counter() - t0) * 1e6))
+        t_fence = time.perf_counter()
         for key, info in list(self.pending_inv.items()):
             info["waiting"].discard(node)
             if info["owner"] == node:
@@ -1508,6 +1665,8 @@ class DPCProtocol:
         self.counters["dropped_nodes"] += 1
         if orphans:
             self._rehome_orphans(orphans, rehome_to, install_fn)
+        self._member_lat["fence_to_recover_us"] += max(
+            1, int((time.perf_counter() - t_fence) * 1e6))
         return lost
 
     def _rehome_orphans(self, orphans: List[Tuple[Tuple[int, int], bool]],
@@ -1632,6 +1791,16 @@ class DPCProtocol:
 
         Returns a stats dict; ``moved`` lists (key, old_pfn, new_pfn) for
         page-table rewriting by the caller."""
+        # the drain routes batches on the leaver's behalf throughout; if
+        # the leaver is (or becomes) fenced the evacuation must still run
+        self._fence_bypass += 1
+        try:
+            return self._drain_node_inner(node, dest_fn, copy_fn)
+        finally:
+            self._fence_bypass -= 1
+
+    def _drain_node_inner(self, node: int, dest_fn: Optional[Callable],
+                          copy_fn: Optional[Callable]) -> Dict:
         cfg = self.cfg
         stats: Dict = {"migrated": 0, "aborted": 0, "e_aborted": 0,
                        "shares_dropped": 0, "moved": []}
@@ -1721,6 +1890,7 @@ class DPCProtocol:
                         self.migrate_ack(key[0], key[1], s)
                 prev_notify = notify
                 stats["moved"].extend(self.migrate_finish(copy_fn=copy_fn))
+                self._check_crash("mid_drain_chunk", node)
             for key, sharer_nodes in prev_notify.items():
                 for s in sharer_nodes:
                     self.migrate_ack(key[0], key[1], s)
@@ -1729,6 +1899,7 @@ class DPCProtocol:
             for i in range(0, len(owned), 64):
                 stats["moved"].extend(
                     self.migrate_sync(_chunk_pairs(i), copy_fn=copy_fn))
+                self._check_crash("mid_drain_chunk", node)
         stats["migrated"] = len(stats["moved"])
         owned_set = set(owned)
         stats["aborted"] = len(owned) - sum(

@@ -14,7 +14,17 @@ just the settled end state the shadow oracle sees:
 * **shootdown-before-remap** — a page is never re-bound while a posted
   TLB shootdown for it is still undelivered (``EV_SD_POST`` without
   ``EV_SD_DELIVER``/``EV_SD_WIPE``/``EV_SD_FLASH``): a stale mapping
-  could still serve the old frame.
+  could still serve the old frame;
+* **epoch/fence monotonicity** — committed epochs (``EV_EPOCH``) are
+  strictly increasing and fencing tokens (``EV_FENCE``/``EV_UNFENCE``)
+  never regress: a token going backwards means a stale membership view
+  committed a transition;
+* **TBI/TBM span balance** — every transaction that begins either ends
+  or is legitimately discarded by a node failure (``EV_FAIL`` retires
+  open invalidations owned by — and migrations sourced at — the dead
+  node, exactly like ``protocol.fail_node`` deletes them); an end with
+  no begin, a double begin, or a span left open at end-of-stream (when
+  the ring dropped nothing) is a leaked transaction.
 
 Membership edges reset scoped state exactly like the protocol does:
 ``EV_FAIL``/``EV_POOL_RESET`` retire the node's frame range and its
@@ -33,10 +43,12 @@ import json
 import sys
 from typing import Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
-from repro.obs.trace import (EV_BIND, EV_FAIL, EV_FRAME_FREE, EV_POOL_RESET,
-                             EV_SD_DELIVER, EV_SD_FLASH, EV_SD_POST,
-                             EV_SD_WIPE, EV_UNBIND, EV_WB_COMMIT, EV_WB_REG,
-                             KIND_NAMES)
+from repro.obs.trace import (EV_BIND, EV_EPOCH, EV_FAIL, EV_FENCE,
+                             EV_FRAME_FREE, EV_POOL_RESET, EV_SD_DELIVER,
+                             EV_SD_FLASH, EV_SD_POST, EV_SD_WIPE,
+                             EV_TBI_BEGIN, EV_TBI_END, EV_TBM_BEGIN,
+                             EV_TBM_END, EV_UNBIND, EV_UNFENCE,
+                             EV_WB_COMMIT, EV_WB_REG, KIND_NAMES)
 
 Key = Tuple[int, int]          # (stream, page)
 
@@ -51,15 +63,23 @@ class Violation(NamedTuple):
 
 
 def audit_events(events: Iterable[Tuple[int, ...]], *,
-                 pool_pages: int = 0) -> List[Violation]:
-    """Replay ``(seq, kind, node, a, b, c, d)`` tuples and collect
+                 pool_pages: int = 0, dropped: int = 0) -> List[Violation]:
+    """Replay ``(seq, kind, node, a, b, c, d[, t])`` tuples and collect
     violations.  ``pool_pages`` (frames per node, from the trace meta)
     scopes frame-range cleanup on fail/pool-reset; 0 disables it (fine
-    for synthetic traces that never fail a node)."""
+    for synthetic traces that never fail a node).  ``dropped`` > 0 (ring
+    wrap lost the oldest prefix) relaxes the span-balance begin checks —
+    an end whose begin predates the surviving window is not a leak."""
     bound: Dict[Key, int] = {}            # (stream, page) -> pfn
     frame_of: Dict[int, Key] = {}         # pfn -> (stream, page)
     wb_out: Dict[Tuple[int, int], int] = {}   # (node, slot) -> reg seq
     sd_out: Dict[Key, Dict[int, int]] = {}    # key -> {target: n_posted}
+    # open transaction spans: key -> (begin seq, owner/src node)
+    tbi_open: Dict[Key, Tuple[int, int]] = {}
+    tbm_open: Dict[Key, Tuple[int, int]] = {}
+    last_epoch: Optional[int] = None
+    last_fence: Optional[int] = None
+    last_seq = 0
     out: List[Violation] = []
 
     def _drop_node_frames(node: int) -> None:
@@ -72,7 +92,8 @@ def audit_events(events: Iterable[Tuple[int, ...]], *,
                 del bound[key]
 
     for ev in events:
-        seq, kind, node, a, b, c, d = (int(x) for x in ev)
+        seq, kind, node, a, b, c, d = (int(x) for x in tuple(ev)[:7])
+        last_seq = seq
         key = (a, b)
         if kind == EV_BIND:
             posts = sd_out.get(key)
@@ -144,12 +165,77 @@ def audit_events(events: Iterable[Tuple[int, ...]], *,
             _drop_node_frames(node)
             for nk in [k for k in wb_out if k[0] == node]:
                 del wb_out[nk]
+            # the protocol deletes pending rounds the dead node owned /
+            # sourced without emitting END events — retire their spans
+            for k in [k for k, (_s, owner) in tbi_open.items()
+                      if owner == node]:
+                del tbi_open[k]
+            for k in [k for k, (_s, src) in tbm_open.items()
+                      if src == node]:
+                del tbm_open[k]
         elif kind == EV_POOL_RESET:
             _drop_node_frames(node)
             for nk in [k for k in wb_out if k[0] == node]:
                 del wb_out[nk]
-        # other kinds (spans, batches, membership phases) carry no
-        # invariant state — they exist for the timeline
+        elif kind == EV_TBI_BEGIN:
+            prev = tbi_open.get(key)
+            if prev is not None:
+                out.append(Violation(
+                    seq, "span-balance",
+                    f"TBI begin for {key} while the round begun at "
+                    f"seq={prev[0]} is still open (double begin)"))
+            tbi_open[key] = (seq, c)
+        elif kind == EV_TBI_END:
+            if tbi_open.pop(key, None) is None and dropped <= 0:
+                out.append(Violation(
+                    seq, "span-balance",
+                    f"TBI end for {key} with no matching begin"))
+        elif kind == EV_TBM_BEGIN:
+            prev = tbm_open.get(key)
+            if prev is not None:
+                out.append(Violation(
+                    seq, "span-balance",
+                    f"TBM begin for {key} while the hand-off begun at "
+                    f"seq={prev[0]} is still open (double begin)"))
+            tbm_open[key] = (seq, c)
+        elif kind == EV_TBM_END:
+            if tbm_open.pop(key, None) is None and dropped <= 0:
+                out.append(Violation(
+                    seq, "span-balance",
+                    f"TBM end for {key} with no matching begin"))
+        elif kind == EV_EPOCH:
+            if last_epoch is not None and a <= last_epoch:
+                out.append(Violation(
+                    seq, "epoch-monotonic",
+                    f"committed epoch went {last_epoch} -> {a} (must be "
+                    f"strictly increasing)"))
+            last_epoch = a
+            if last_fence is not None and b < last_fence:
+                out.append(Violation(
+                    seq, "fence-monotonic",
+                    f"fence token regressed {last_fence} -> {b}"))
+            last_fence = b if last_fence is None else max(last_fence, b)
+        elif kind in (EV_FENCE, EV_UNFENCE):
+            if last_fence is not None and a < last_fence:
+                out.append(Violation(
+                    seq, "fence-monotonic",
+                    f"fence token regressed {last_fence} -> {a} on "
+                    f"{KIND_NAMES[kind]} of node {node}"))
+            last_fence = a if last_fence is None else max(last_fence, a)
+        # other kinds (batches, membership phases) carry no invariant
+        # state — they exist for the timeline
+    if dropped <= 0:
+        end_seq = last_seq
+        for k, (bseq, owner) in sorted(tbi_open.items()):
+            out.append(Violation(
+                end_seq, "span-balance",
+                f"TBI for {k} (owner {owner}) begun at seq={bseq} never "
+                f"completed or retired"))
+        for k, (bseq, src) in sorted(tbm_open.items()):
+            out.append(Violation(
+                end_seq, "span-balance",
+                f"TBM for {k} (src {src}) begun at seq={bseq} never "
+                f"completed or retired"))
     return out
 
 
@@ -160,7 +246,8 @@ def audit_trace(doc: dict) -> List[Violation]:
         raise ValueError("no dpcEvents in trace doc — was it exported by "
                          "repro.obs.trace.EventTracer.export_chrome?")
     meta = doc.get("dpcMeta", {})
-    return audit_events(events, pool_pages=int(meta.get("pool_pages", 0)))
+    return audit_events(events, pool_pages=int(meta.get("pool_pages", 0)),
+                        dropped=int(meta.get("dropped", 0)))
 
 
 def audit_file(path: str) -> List[Violation]:

@@ -2,20 +2,25 @@
 
 At ``obs_level="full"`` every protocol transaction edge (TBI/TBM
 begin→ACK→finish, opcode-batch dispatch with lane composition,
-membership join/drain/failover phases, engine step boundaries with
-their async overlap windows) and every invariant-relevant state edge
-(page bind/unbind, frame free, writeback register/commit, shootdown
-post/deliver/wipe/flash) lands in a fixed-size numpy structured ring —
-24 bytes per event, one element assignment, no per-event allocation.
+membership join/drain/failover/fence phases, engine step boundaries
+with their async overlap windows) and every invariant-relevant state
+edge (page bind/unbind, frame free, writeback register/commit,
+shootdown post/deliver/wipe/flash) lands in a fixed-size numpy
+structured ring — 32 bytes per event, one element assignment, no
+per-event allocation.
 
-The logical clock is the event sequence number: this is a
-single-process reproduction, so emission order *is* the cluster's
-linearization, and the replay checker (:mod:`repro.obs.audit`) leans on
-exactly that.  Two exports:
+Every event carries two clocks.  The *logical* clock is the event
+sequence number: this is a single-process reproduction, so emission
+order *is* the cluster's linearization, and the replay checker
+(:mod:`repro.obs.audit`) leans on exactly that.  The *wall* clock
+(``t``, µs since tracer construction, from ``perf_counter_ns``) makes
+real durations measurable — detection→fence→recovery latency and async
+overlap windows read directly off the Chrome export in µs instead of
+"1 logical tick per event".  Two exports:
 
 * :meth:`EventTracer.events` — the buffered ``(seq, kind, node, a, b,
-  c, d)`` tuples, oldest first (the ring drops the oldest prefix once
-  it wraps; ``dropped`` says how many).
+  c, d, t)`` tuples, oldest first (the ring drops the oldest prefix
+  once it wraps; ``dropped`` says how many).
 * :meth:`EventTracer.export_chrome` — Chrome ``trace_event`` JSON
   (openable in Perfetto / ``chrome://tracing``): nodes render as
   processes, subsystems as threads, transactions as async spans, and
@@ -27,14 +32,17 @@ exactly that.  Two exports:
 from __future__ import annotations
 
 import json
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
-# (seq, kind, node, a, b, c, d) — 24-byte packed record
+# (seq, kind, node, a, b, c, d, t) — 32-byte packed record; ``t`` is the
+# wall clock in µs since tracer construction (appended last so positional
+# consumers of the original 7-field layout keep working on ``ev[:7]``)
 EVENT_DTYPE = np.dtype([("seq", "<i8"), ("kind", "<i2"), ("node", "<i2"),
                         ("a", "<i4"), ("b", "<i4"), ("c", "<i4"),
-                        ("d", "<i4")])
+                        ("d", "<i4"), ("t", "<i8")])
 
 # -- event kinds --------------------------------------------------------
 # directory / data plane            args (a, b, c, d)
@@ -69,6 +77,10 @@ EV_STEP_END = 24      # a=step_index
 EV_OVERLAP_BEGIN = 25  # a=step_index  (async host-work window opens)
 EV_OVERLAP_END = 26    # a=step_index  (window closes at sample)
 EV_LANE_FENCE = 27    # a=n_copy b=n_flush drained at a data-lane fence
+# quorum membership / partition fencing
+EV_EPOCH = 28         # committed epoch bump: a=epoch b=fence_token
+EV_FENCE = 29         # node fenced (stale epoch): a=fence_token
+EV_UNFENCE = 30       # node unfenced (rejoined): a=fence_token
 
 KIND_NAMES = {
     EV_BATCH: "batch", EV_BIND: "bind", EV_UNBIND: "unbind",
@@ -84,6 +96,7 @@ KIND_NAMES = {
     EV_STEP_BEGIN: "step_begin", EV_STEP_END: "step_end",
     EV_OVERLAP_BEGIN: "overlap_begin", EV_OVERLAP_END: "overlap_end",
     EV_LANE_FENCE: "lane_fence",
+    EV_EPOCH: "epoch", EV_FENCE: "fence", EV_UNFENCE: "unfence",
 }
 
 # Chrome export: which thread lane each kind renders on
@@ -105,6 +118,8 @@ _KIND_TID = {
     EV_JOIN: _TID_MEMBER, EV_REJOIN: _TID_MEMBER,
     EV_DRAIN_BEGIN: _TID_MEMBER, EV_DRAIN_END: _TID_MEMBER,
     EV_FAIL: _TID_MEMBER, EV_POOL_RESET: _TID_MEMBER,
+    EV_EPOCH: _TID_MEMBER, EV_FENCE: _TID_MEMBER,
+    EV_UNFENCE: _TID_MEMBER,
     EV_STEP_BEGIN: _TID_ENGINE, EV_STEP_END: _TID_ENGINE,
     EV_OVERLAP_BEGIN: _TID_ENGINE, EV_OVERLAP_END: _TID_ENGINE,
 }
@@ -130,6 +145,7 @@ class EventTracer:
         self._mask = capacity - 1
         self._buf = np.zeros(capacity, EVENT_DTYPE)
         self._n = 0
+        self._t0_ns = time.perf_counter_ns()
         self.meta = dict(meta or {})
 
     @property
@@ -149,12 +165,14 @@ class EventTracer:
     def emit(self, kind: int, node: int = -1, a: int = 0, b: int = 0,
              c: int = 0, d: int = 0) -> None:
         n = self._n
-        self._buf[n & self._mask] = (n, kind, node, a, b, c, d)
+        self._buf[n & self._mask] = (
+            n, kind, node, a, b, c, d,
+            (time.perf_counter_ns() - self._t0_ns) // 1000)
         self._n = n + 1
 
-    def events(self) -> List[Tuple[int, int, int, int, int, int, int]]:
-        """Buffered ``(seq, kind, node, a, b, c, d)`` tuples, oldest
-        first."""
+    def events(self) -> List[Tuple[int, int, int, int, int, int, int, int]]:
+        """Buffered ``(seq, kind, node, a, b, c, d, t)`` tuples, oldest
+        first (``t`` = wall µs since tracer construction)."""
         n, cap = self._n, len(self._buf)
         if n <= cap:
             return self._buf[:n].tolist()
@@ -166,12 +184,14 @@ class EventTracer:
                       extra_meta: Optional[dict] = None) -> dict:
         """Build (and optionally write) a Chrome ``trace_event`` JSON doc.
 
-        ``ts`` is the logical clock (1 "us" per event), pid = node
-        (-1 = cluster), tid = subsystem lane.  Transactions render as
-        async spans (``ph: b``/``e``) matched by their id fields; every
-        event also lands as an instant so nothing is hidden.  The raw
-        stream is preserved under ``dpcEvents``/``dpcMeta`` for
-        :mod:`repro.obs.audit`.
+        ``ts`` is the wall clock (µs since tracer construction), so span
+        widths in Perfetto are real durations; the logical clock rides
+        along as ``args.seq`` for tie-breaking and cross-referencing the
+        audit.  pid = node (-1 = cluster), tid = subsystem lane.
+        Transactions render as async spans (``ph: b``/``e``) matched by
+        their id fields; every event also lands as an instant so nothing
+        is hidden.  The raw stream is preserved under
+        ``dpcEvents``/``dpcMeta`` for :mod:`repro.obs.audit`.
         """
         events = self.events()
         trace: List[dict] = []
@@ -183,7 +203,7 @@ class EventTracer:
             for tid, tname in _TID_NAMES.items():
                 trace.append({"ph": "M", "name": "thread_name", "pid": pid,
                               "tid": tid, "args": {"name": tname}})
-        for seq, kind, node, a, b, c, d in events:
+        for seq, kind, node, a, b, c, d, t in events:
             tid = _KIND_TID.get(kind, _TID_DIRECTORY)
             kname = KIND_NAMES.get(kind, f"kind{kind}")
             span = _SPANS.get(kind)
@@ -200,12 +220,14 @@ class EventTracer:
                 sid = ":".join([sname] + [str(fields[f]) for f in idf])
                 trace.append({"ph": ph, "cat": "txn", "name": sname,
                               "id": sid, "pid": node, "tid": tid,
-                              "ts": seq,
-                              "args": {"a": a, "b": b, "c": c, "d": d}})
+                              "ts": t,
+                              "args": {"a": a, "b": b, "c": c, "d": d,
+                                       "seq": seq}})
                 continue
             trace.append({"ph": "i", "s": "t", "name": kname, "cat": kname,
-                          "pid": node, "tid": tid, "ts": seq,
-                          "args": {"a": a, "b": b, "c": c, "d": d}})
+                          "pid": node, "tid": tid, "ts": t,
+                          "args": {"a": a, "b": b, "c": c, "d": d,
+                                   "seq": seq}})
         meta = dict(self.meta)
         meta.update(extra_meta or {})
         meta["kinds"] = {v: k for k, v in KIND_NAMES.items()}

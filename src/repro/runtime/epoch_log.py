@@ -1,0 +1,159 @@
+"""Lease-based replicated epoch log — the membership control plane.
+
+The single-copy invariant is only as strong as the membership view that
+backs it: if a split cluster can run two independent views, two nodes
+can each believe they own a page.  This module makes every membership
+transition a *proposed log entry* that commits only with acknowledgments
+from a quorum — a majority of all participants (voters plus optional
+witness nodes).  :class:`~repro.runtime.liveness.Membership` is a view
+over the committed log: its epoch is the committed log length, and every
+protocol-visible epoch bump carries the **fencing token** (the commit
+index) so a stale-epoch node's routed batches can be rejected by a
+single integer compare.
+
+Lease model (the DAXFS shape from PAPERS.md): a participant's lease is a
+word on CXL shared memory.  A *crashed* node's lease is still readable —
+its expiry is witness-attested — so node death never blocks a quorum;
+the quorum denominator stays the full participant set (which is exactly
+what prevents split-brain: both sides of a partition count against the
+same denominator, and at most one side can reach a majority).  The only
+thing that blocks acknowledgments is a **partition**: participants on
+the other side of the split are unreachable, their leases can't be
+attested, and a proposer on the minority side raises
+:class:`QuorumLostError` — it must stop serving ownership transitions
+(degrade to local-only, like ``DirectoryClientGuard``) until the
+partition heals and it rejoins through the committed log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, List, Optional, Sequence, Set
+
+__all__ = ["EpochLog", "LogEntry", "QuorumLostError"]
+
+
+class QuorumLostError(RuntimeError):
+    """A proposal could not gather a quorum of acknowledgments — the
+    proposer is on the minority side of a partition and must degrade to
+    local-only serving instead of committing membership transitions."""
+
+    def __init__(self, kind: str, node: int, acks: int, quorum: int):
+        super().__init__(
+            f"membership proposal ({kind!r}, node {node}) reached only "
+            f"{acks}/{quorum} acknowledgments — minority partition, "
+            "degrade to local-only")
+        self.kind = kind
+        self.node = node
+        self.acks = acks
+        self.quorum = quorum
+
+
+@dataclasses.dataclass(frozen=True)
+class LogEntry:
+    """One committed membership transition.
+
+    ``index`` is the 1-based commit index — the cluster epoch after this
+    entry applies, and the fencing token any protocol-visible bump for
+    this transition carries."""
+    index: int
+    kind: str                  # join | drain | fail | fence | heal | ...
+    node: int
+    acks: FrozenSet[int]       # participants that acknowledged
+    term: int                  # partition generation at commit time
+
+
+class EpochLog:
+    """Quorum-committed membership log with a partition model.
+
+    Participants are the voter set (the founding nodes, grown by
+    ``add_voter`` on join) plus ``witnesses`` ack-only members (ids -1,
+    -2, ... — they hold no pages, they only attest leases, which lets a
+    two-node cluster survive one node's death without split-brain).
+    """
+
+    def __init__(self, num_nodes: int, witnesses: int = 0):
+        self.voters: Set[int] = set(range(num_nodes))
+        self.witnesses: Set[int] = {-(i + 1) for i in range(witnesses)}
+        self.entries: List[LogEntry] = []
+        # the minority side of the current partition (empty = healthy).
+        # Witnesses always land majority-side: they model shared-memory
+        # lease words reachable from the surviving fabric.
+        self.minority: Set[int] = set()
+        self.term = 0              # bumps on every partition() / heal()
+
+    # -- views ----------------------------------------------------------
+
+    @property
+    def participants(self) -> Set[int]:
+        return self.voters | self.witnesses
+
+    @property
+    def quorum(self) -> int:
+        """Majority of ALL participants — the denominator never shrinks
+        on death (dead leases still attest), only grows on join."""
+        return len(self.participants) // 2 + 1
+
+    @property
+    def epoch(self) -> int:
+        """Committed log length == current cluster epoch."""
+        return len(self.entries)
+
+    @property
+    def fence_token(self) -> int:
+        """The token a protocol-visible bump for the latest commit
+        carries; monotone non-decreasing by construction."""
+        return len(self.entries)
+
+    def reachable_from(self, proposer: Optional[int]) -> Set[int]:
+        """Participants whose ack (live response or witness-attested
+        lease word) the proposer can collect.  ``None`` proposes from
+        the majority side (the common case: the in-process control
+        plane *is* the surviving fabric)."""
+        if proposer is not None and proposer in self.minority:
+            return set(self.minority)
+        return self.participants - self.minority
+
+    # -- mutation -------------------------------------------------------
+
+    def add_voter(self, node: int) -> None:
+        """A brand-new node joins the voter set (the quorum denominator
+        grows).  Departed voters are *not* removed: their leases persist
+        on CXL shared memory, keeping the denominator fixed so a later
+        partition cannot split-brain against a shrunken quorum."""
+        self.voters.add(int(node))
+
+    def propose(self, kind: str, node: int,
+                proposer: Optional[int] = None) -> LogEntry:
+        """Propose one membership transition; commit iff a quorum acks.
+
+        Raises :class:`QuorumLostError` when the proposer's side cannot
+        reach a majority — the caller must degrade, not retry."""
+        acks = self.reachable_from(proposer)
+        if len(acks) < self.quorum:
+            raise QuorumLostError(kind, node, len(acks), self.quorum)
+        entry = LogEntry(index=len(self.entries) + 1, kind=kind,
+                         node=int(node), acks=frozenset(acks),
+                         term=self.term)
+        self.entries.append(entry)
+        return entry
+
+    def partition(self, minority: Sequence[int]) -> Set[int]:
+        """Split the cluster: ``minority`` becomes unreachable from the
+        rest.  Refuses a split that would leave *no* side with a quorum
+        alive is allowed (both sides then degrade); refuses nothing —
+        the quorum math itself decides who may still commit."""
+        self.minority = set(int(n) for n in minority) & self.voters
+        self.term += 1
+        return set(self.minority)
+
+    def heal(self) -> Set[int]:
+        """The partition heals: everyone is reachable again.  Returns
+        the previously-fenced minority (the caller drives their
+        re-probe/rejoin)."""
+        healed, self.minority = set(self.minority), set()
+        self.term += 1
+        return healed
+
+    def has_quorum(self, proposer: Optional[int] = None) -> bool:
+        return len(self.reachable_from(proposer)) >= self.quorum

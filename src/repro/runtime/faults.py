@@ -1,0 +1,259 @@
+"""Deterministic seed-driven fault injection for the DPC protocol.
+
+Every existing invariant (single-copy, flush-before-free,
+shootdown-before-remap, zero lost committed dirty bytes) has only ever
+been asserted on *clean* executions.  :class:`FaultPlan` threads a
+seeded stream of message-layer faults through the protocol's routed
+opcode batches, its SHOOTDOWN/COPY/FLUSH descriptor lanes, and the
+writeback queue, so the same assertions run under loss, reordering,
+duplication, crashes, and clock skew — deterministically: one seed, one
+schedule, one replayable execution.
+
+Fault semantics are chosen to preserve the protocol's *interface*
+contracts while stressing its *ordering* machinery:
+
+* **drop** — a routed batch send fails transiently; the transport
+  retries with bounded exponential backoff (accounted, never slept) and
+  delivers within ``max_retries`` attempts.  Callers need answers (the
+  directory is RPC-shaped), so reliable-delivery-with-retries is the
+  real-world model; exceeding the budget counts a ``send_timeouts``.
+* **delay** — a node's pending descriptor lanes (shootdowns, COPY,
+  FLUSH) sit out the next ``delay_batches`` routed batches before
+  delivery.  The protocol's fences (``TLBGroup.fence``,
+  ``fence_data_lanes``) must force-settle them before any completion
+  can observe stale state — exactly the machinery under test.
+* **duplicate** — a node's lane delivery is serviced twice; receiver
+  idempotence (metadata pop-once) must make the second a no-op.
+* **crash** — :class:`NodeCrash` raises at a *named crash point* (a
+  clean state boundary: ``pre_migrate_finish``, ``post_flush_register``,
+  ``mid_drain_chunk``, ``pre_reclaim_finish``, ``post_commit``); the
+  harness catches it and drives the ordinary failover path.
+* **clock skew** — a node's liveness clock runs offset, so heartbeat
+  expiry (false suspicion) paths fire under test control.
+* **sync failure** — the backing store's sync fails transiently; the
+  writeback pipeline must re-drive the batch without dropping or
+  reordering obligations.
+
+All accounting lands in the obs registry under ``(node, "faults", ...)``
+so soaks and traces can report exactly which faults a run absorbed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+__all__ = ["FaultConfig", "FaultPlan", "NodeCrash", "InjectedSyncError",
+           "CRASH_POINTS", "FAULT_COUNTERS"]
+
+# named crash points — each is a clean state boundary in the protocol
+CRASH_POINTS = ("pre_migrate_finish", "post_flush_register",
+                "mid_drain_chunk", "pre_reclaim_finish", "post_commit")
+
+FAULT_COUNTERS = ("drops_injected", "retries", "backoff_us",
+                  "send_timeouts", "lanes_delayed", "lanes_duplicated",
+                  "crashes_fired", "sync_fails_injected", "skew_applied")
+
+
+class NodeCrash(RuntimeError):
+    """A node crashed at a named crash point.  The harness catches this
+    and drives the ordinary failover path (``Membership.evict``)."""
+
+    def __init__(self, node: int, point: str):
+        super().__init__(f"node {node} crashed at {point!r}")
+        self.node = node
+        self.point = point
+
+
+class InjectedSyncError(RuntimeError):
+    """Fault-injected transient backing-store sync failure — retried by
+    the writeback pipeline, never surfaced to callers."""
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Knobs for one deterministic fault schedule."""
+    seed: int = 0
+    drop_p: float = 0.0          # transient send failure per routed op
+    delay_p: float = 0.0         # per (node, batch): defer its lanes
+    delay_batches: int = 2       # how many batches a delayed lane sits out
+    dup_p: float = 0.0           # per (node, batch): deliver lanes twice
+    sync_fail_p: float = 0.0     # per writeback batch: transient sync fail
+    max_retries: int = 3
+    backoff_base_us: int = 50    # exponential: base * 2^attempt (accounted)
+    # (crash_point, node) -> fire on the Nth hit of that point for that node
+    crashes: Dict[Tuple[str, int], int] = dataclasses.field(
+        default_factory=dict)
+    clock_skew_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+
+class FaultPlan:
+    """One seeded, replayable fault schedule threaded through a cluster.
+
+    All randomness comes from one ``np.random.default_rng(seed)`` drawn
+    in deterministic call order, so a (seed, workload) pair is exactly
+    reproducible — the property tier leans on that to shrink failures.
+    """
+
+    def __init__(self, cfg: FaultConfig, obs=None):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.obs = obs
+        self._views: Dict[int, dict] = {}
+        # lane delay state: node -> batch index before which its lanes
+        # stay queued; one global batch counter orders the delays
+        self._batch = 0
+        self._delay_until: Dict[int, int] = {}
+        self._crash_hits: Dict[Tuple[str, int], int] = {}
+        self._fired: Set[Tuple[str, int]] = set()
+        # crash points disarm while the recovery path itself runs (the
+        # failover for one crash must not trip another mid-cleanup)
+        self._disarmed = 0
+
+    # -- accounting -----------------------------------------------------
+
+    def _stats(self, node: int) -> dict:
+        view = self._views.get(node)
+        if view is None:
+            if self.obs is not None:
+                view = self.obs.view(node, "faults", FAULT_COUNTERS)
+            else:
+                view = {n: 0 for n in FAULT_COUNTERS}
+            self._views[node] = view
+        return view
+
+    def counters(self, node: int) -> dict:
+        """Read-side view of one node's fault counters."""
+        return dict(self._stats(node))
+
+    # -- routed-batch transport faults ----------------------------------
+
+    def routed_send(self, nodes: Sequence[int]) -> None:
+        """Model the send of one routed opcode batch on behalf of
+        ``nodes``: injected transient failures retry with bounded
+        exponential backoff (accounted in µs, never slept — the soak
+        measures protocol work, not injected sleep)."""
+        self._batch += 1
+        if self.cfg.drop_p <= 0.0:
+            return
+        for nd in nodes:
+            attempts = 0
+            while attempts < self.cfg.max_retries \
+                    and self.rng.random() < self.cfg.drop_p:
+                attempts += 1
+            if attempts:
+                st = self._stats(int(nd))
+                st["drops_injected"] += attempts
+                st["retries"] += attempts
+                st["backoff_us"] += sum(
+                    self.cfg.backoff_base_us << a for a in range(attempts))
+                if attempts >= self.cfg.max_retries:
+                    # budget exhausted: the op still delivers (bounded
+                    # retry is the transport contract) but the overrun
+                    # is visible as a timeout
+                    st["send_timeouts"] += 1
+
+    def lane_delayed(self, node: int) -> bool:
+        """Should ``node``'s pending descriptor lanes sit this batch
+        out?  Once a delay arms, the node's lanes stay queued for
+        ``delay_batches`` routed batches (reorder-by-N) — fences still
+        force-settle them, which is exactly the invariant under test."""
+        node = int(node)
+        until = self._delay_until.get(node)
+        if until is not None:
+            if self._batch < until:
+                return True
+            del self._delay_until[node]
+            return False
+        if self.cfg.delay_p > 0.0 and self.rng.random() < self.cfg.delay_p:
+            self._delay_until[node] = self._batch + self.cfg.delay_batches
+            self._stats(node)["lanes_delayed"] += 1
+            return True
+        return False
+
+    def lane_duplicated(self, node: int) -> bool:
+        """Should ``node``'s lane delivery be serviced twice?"""
+        if self.cfg.dup_p > 0.0 and self.rng.random() < self.cfg.dup_p:
+            self._stats(int(node))["lanes_duplicated"] += 1
+            return True
+        return False
+
+    # -- crash points ---------------------------------------------------
+
+    def check_crash(self, point: str, node: int) -> None:
+        """Raise :class:`NodeCrash` when the plan armed a crash at this
+        (point, node) and its hit count is reached.  Each armed crash
+        fires at most once."""
+        if not self.cfg.crashes or self._disarmed:
+            return
+        key = (point, int(node))
+        want = self.cfg.crashes.get(key)
+        if want is None or key in self._fired:
+            return
+        hits = self._crash_hits.get(key, 0) + 1
+        self._crash_hits[key] = hits
+        if hits >= want:
+            self._fired.add(key)
+            self._stats(int(node))["crashes_fired"] += 1
+            raise NodeCrash(int(node), point)
+
+    def disarm(self) -> None:
+        """Suspend crash points (recovery paths call this so cleanup for
+        one crash cannot trip another)."""
+        self._disarmed += 1
+
+    def rearm(self) -> None:
+        self._disarmed = max(0, self._disarmed - 1)
+
+    # -- clock skew -----------------------------------------------------
+
+    def skewed_clock(self, node: int,
+                     base: Callable[[], float]) -> Callable[[], float]:
+        """Wrap a liveness clock with this node's configured skew."""
+        skew = self.cfg.clock_skew_s.get(int(node), 0.0)
+        if not skew:
+            return base
+        self._stats(int(node))["skew_applied"] += 1
+        return lambda: base() + skew
+
+    # -- storage sync faults --------------------------------------------
+
+    def sync_fails(self) -> bool:
+        """Should this writeback batch's sync fail transiently?"""
+        if self.cfg.sync_fail_p > 0.0 \
+                and self.rng.random() < self.cfg.sync_fail_p:
+            self._stats(-1)["sync_fails_injected"] += 1
+            return True
+        return False
+
+
+def random_plan(seed: int, num_nodes: int, *, obs=None,
+                intensity: float = 1.0,
+                crash_candidates: Sequence[int] = ()) -> FaultPlan:
+    """Draw one randomized :class:`FaultConfig` from ``seed`` — the soak
+    harness's schedule generator.  ``intensity`` scales all fault
+    probabilities; ``crash_candidates`` are nodes the schedule may crash
+    (the harness excludes nodes whose loss the workload can't absorb)."""
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    crashes: Dict[Tuple[str, int], int] = {}
+    if len(crash_candidates) and rng.random() < 0.6:
+        point = CRASH_POINTS[int(rng.integers(len(CRASH_POINTS)))]
+        node = int(crash_candidates[
+            int(rng.integers(len(crash_candidates)))])
+        crashes[(point, node)] = int(rng.integers(1, 4))
+    skew = {}
+    if num_nodes and rng.random() < 0.4:
+        skew[int(rng.integers(num_nodes))] = float(rng.uniform(-5.0, 5.0))
+    cfg = FaultConfig(
+        seed=seed,
+        drop_p=float(rng.uniform(0.0, 0.15)) * intensity,
+        delay_p=float(rng.uniform(0.0, 0.25)) * intensity,
+        delay_batches=int(rng.integers(1, 5)),
+        dup_p=float(rng.uniform(0.0, 0.25)) * intensity,
+        sync_fail_p=float(rng.uniform(0.0, 0.2)) * intensity,
+        crashes=crashes,
+        clock_skew_s=skew,
+    )
+    return FaultPlan(cfg, obs=obs)

@@ -5,13 +5,25 @@ Paper §5 at cluster scale, plus the training-side fault-tolerance features:
   * Heartbeats + failure detection: a node missing ``timeout`` of heartbeats
     is declared failed; the directory drops it (DistributedKVCache.fail_node)
     and any invalidation waiting on its ACK completes — eviction liveness.
-  * Membership epochs: each change bumps the epoch; step functions are
-    re-lowered per epoch mesh (elastic data-parallel width).
+  * Membership epochs over a quorum-committed log
+    (:class:`~repro.runtime.epoch_log.EpochLog`): each change is a proposed
+    entry that commits only with acknowledgments from a majority of
+    voters + witnesses; the epoch is the committed log length and doubles
+    as the fencing token protocol-visible bumps carry.
+  * Partition fencing: ``partition(minority)`` commits "fence" events on
+    the majority side — the minority stops serving ownership transitions
+    (its routed batches are rejected by fence-token compare) and degrades
+    to local-only, the server-side dual of the client guard below.
+    ``heal()`` commits "heal" events; fenced nodes rejoin through the
+    guard's re-probe hysteresis.
   * Symmetric directory failure: clients that lose the directory fall back
-    to local-only caching (paper's client-side timeout).
-  * Straggler watchdog: per-step durations feed an EWMA; steps slower than
-    ``straggler_factor``× the EWMA mark the slowest node suspect, and after
-    ``strikes`` consecutive marks the policy (report | evict) fires.
+    to local-only caching (paper's client-side timeout), and re-probe
+    their way back after ``reprobe_successes`` consecutive responses.
+  * Straggler watchdog: per-step durations feed an EWMA seeded from a
+    warm-up window (a slow *first* step must not poison the baseline);
+    steps slower than ``straggler_factor``× the EWMA mark the slowest
+    node suspect, and after ``strikes`` consecutive marks the policy
+    (report | evict) fires.
 """
 
 from __future__ import annotations
@@ -21,34 +33,55 @@ import time
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.obs import CLUSTER
+from repro.runtime.epoch_log import EpochLog, QuorumLostError
 
 # membership event kind -> counter row in the (CLUSTER, "membership") group
 _KIND_COUNTERS = {"join": "joins", "drain": "drains", "fail": "fails",
                   "evict_straggler": "stragglers_evicted",
-                  "dir_lost": "dir_lost"}
+                  "dir_lost": "dir_lost",
+                  "fence": "fences", "heal": "heals"}
 
 
 @dataclasses.dataclass
 class MembershipEvent:
     epoch: int
-    kind: str          # join | drain | fail | evict_straggler | dir_lost
+    kind: str      # join | drain | fail | fence | heal | evict_* | dir_lost
     node: int
     t: float
+    fence: int = 0  # fencing token (the committing log entry's index)
 
 
 class Membership:
-    """Heartbeat-driven membership with epochs."""
+    """Heartbeat-driven membership, a view over the committed epoch log.
+
+    Construction is backward-compatible: by default the log has the full
+    node set as voters and no partition, so every proposal commits (a
+    healthy fully-connected cluster always has quorum)."""
 
     def __init__(self, num_nodes: int, timeout_s: float = 15.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 log: Optional[EpochLog] = None, witnesses: int = 0):
         self.clock = clock
         self.timeout_s = timeout_s
-        self.epoch = 0
+        self.log = log if log is not None else EpochLog(
+            num_nodes, witnesses=witnesses)
         self.last_seen: Dict[int, float] = {
             n: clock() for n in range(num_nodes)}
         self.alive: Set[int] = set(range(num_nodes))
+        self.fenced: Set[int] = set()
         self.events: List[MembershipEvent] = []
         self._listeners: List[Callable[[MembershipEvent], None]] = []
+        self._lat_stats = None    # set by attach_obs
+
+    @property
+    def epoch(self) -> int:
+        """Committed log length — bumps exactly once per committed
+        membership transition."""
+        return self.log.epoch
+
+    @property
+    def fence_token(self) -> int:
+        return self.log.fence_token
 
     def on_change(self, fn: Callable[[MembershipEvent], None]) -> None:
         self._listeners.append(fn)
@@ -59,10 +92,13 @@ class Membership:
         the reacting listeners run so the protocol's own incarnation fold
         (rejoin) can never zero the event that caused it."""
         stats = obs.view(CLUSTER, "membership",
-                         tuple(_KIND_COUNTERS.values()) + ("epoch",))
+                         tuple(_KIND_COUNTERS.values()) +
+                         ("epoch", "fence_token", "quorum_lost"))
+        self._lat_stats = stats
 
         def _record(ev: MembershipEvent) -> None:
             stats["epoch"] = ev.epoch
+            stats["fence_token"] = ev.fence
             name = _KIND_COUNTERS.get(ev.kind)
             if name is not None:
                 stats[name] += 1
@@ -74,8 +110,12 @@ class Membership:
             self.last_seen[node] = self.clock()
 
     def _emit(self, kind: str, node: int) -> None:
-        self.epoch += 1
-        ev = MembershipEvent(self.epoch, kind, node, self.clock())
+        """Commit the transition to the log, then run the listeners.
+        Raises :class:`QuorumLostError` (uncommitted, no event) when the
+        proposing side lacks quorum."""
+        entry = self.log.propose(kind, node)
+        ev = MembershipEvent(entry.index, kind, node, self.clock(),
+                             fence=entry.index)
         self.events.append(ev)
         for fn in self._listeners:
             fn(ev)
@@ -106,9 +146,55 @@ class Membership:
         self.alive.discard(node)
 
     def join(self, node: int) -> None:
+        self.log.add_voter(node)
         self.alive.add(node)
+        self.fenced.discard(node)
         self.last_seen[node] = self.clock()
         self._emit("join", node)
+
+    # -- partition fencing ------------------------------------------------
+
+    def partition(self, minority: List[int]) -> List[int]:
+        """Split the cluster: ``minority`` lands on the losing side of
+        the partition.  The majority side (this object) still has quorum
+        and commits one "fence" event per minority node — listeners
+        reject the fenced nodes' batches and re-home their pages.  The
+        fenced side, were it to propose, would raise
+        :class:`QuorumLostError` (see :meth:`assert_no_quorum`)."""
+        cut = sorted(self.log.partition(minority) & self.alive)
+        for n in cut:
+            self.alive.discard(n)
+            self.fenced.add(n)
+            self._emit("fence", n)
+        return cut
+
+    def heal(self) -> List[int]:
+        """The partition heals: commit one "heal" event per fenced node.
+        Healing does NOT rejoin them — a healed node re-probes through
+        the :class:`DirectoryClientGuard` hysteresis and only then calls
+        :meth:`join` (the rejoin path), so one flapping link cannot
+        thrash the directory."""
+        healed = sorted(self.log.heal() & self.fenced)
+        for n in healed:
+            self._emit("heal", n)
+        return healed
+
+    def has_quorum(self, proposer: Optional[int] = None) -> bool:
+        return self.log.has_quorum(proposer)
+
+    def assert_no_quorum(self, node: int) -> None:
+        """The minority side's self-check: a fenced node proposing any
+        transition must observe quorum loss (and degrade) — this drives
+        that proposal and expects the raise."""
+        try:
+            self.log.propose("noop", node, proposer=node)
+        except QuorumLostError:
+            if self._lat_stats is not None:
+                self._lat_stats["quorum_lost"] += 1
+            return
+        raise AssertionError(
+            f"node {node} proposed from the minority side and committed — "
+            "split-brain: both partition sides reached quorum")
 
 
 def elastic_mesh_shape(alive_nodes: int, model_parallel: int,
@@ -130,19 +216,31 @@ def elastic_mesh_shape(alive_nodes: int, model_parallel: int,
 
 class StragglerWatchdog:
     def __init__(self, factor: float = 2.0, strikes: int = 3,
-                 ewma: float = 0.9):
+                 ewma: float = 0.9, warmup: int = 2):
         self.factor = factor
         self.strikes_needed = strikes
         self.ewma_coef = ewma
+        self.warmup = max(1, warmup)
+        self._warm: List[float] = []
         self.ewma: Optional[float] = None
         self.strikes: Dict[int, int] = {}
         self.flagged: List[Tuple[int, float]] = []
 
     def observe(self, step_time_s: float,
                 slowest_node: Optional[int] = None) -> Optional[int]:
-        """Feed one step duration; returns a node id when the policy fires."""
+        """Feed one step duration; returns a node id when the policy fires.
+
+        The EWMA seeds from the *median* of a ``warmup``-step window, not
+        from the first step alone — a straggler on step 0 must not poison
+        the baseline (every later step would compare against the outlier
+        and nothing would ever flag)."""
         if self.ewma is None:
-            self.ewma = step_time_s
+            self._warm.append(step_time_s)
+            if len(self._warm) >= self.warmup:
+                warm = sorted(self._warm)
+                mid = len(warm) // 2
+                self.ewma = (warm[mid] if len(warm) % 2
+                             else 0.5 * (warm[mid - 1] + warm[mid]))
             return None
         is_slow = step_time_s > self.factor * self.ewma
         # only non-straggler steps update the baseline
@@ -164,20 +262,45 @@ class StragglerWatchdog:
 class DirectoryClientGuard:
     """Client-side symmetric timeout (paper §5): if the directory stops
     responding, disconnect from DPC, drop remote mappings, and fall back to
-    the purely local page-cache policy."""
+    the purely local page-cache policy.
+
+    Degradation is no longer one-way: once in ``local_only`` the guard
+    keeps probing, and after ``reprobe_successes`` *consecutive*
+    responses it returns to ``dpc`` (hysteresis — one lucky packet on a
+    flapping link must not bounce the client straight back).  Partition
+    heal reuses this: a fenced node's rejoin rides the same streak."""
 
     def __init__(self, timeout_s: float = 10.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 reprobe_successes: int = 3):
         self.timeout_s = timeout_s
         self.clock = clock
+        self.reprobe_successes = max(1, reprobe_successes)
         self.last_response = clock()
         self.mode = "dpc"
+        self._streak = 0
 
     def response_received(self) -> None:
         self.last_response = self.clock()
+        if self.mode == "local_only":
+            self._streak += 1
+            if self._streak >= self.reprobe_successes:
+                self.mode = "dpc"
+                self._streak = 0
+
+    def probe_failed(self) -> None:
+        """A re-probe went unanswered: the streak resets (hysteresis)."""
+        self._streak = 0
+
+    def trip(self) -> None:
+        """Force local-only (server-side fencing trips the client guard
+        directly instead of waiting out the timeout)."""
+        self.mode = "local_only"
+        self._streak = 0
 
     def check(self) -> str:
         if self.mode == "dpc" and \
                 self.clock() - self.last_response > self.timeout_s:
             self.mode = "local_only"
+            self._streak = 0
         return self.mode

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.obs import CLUSTER, Obs
+from repro.runtime.faults import InjectedSyncError
 from repro.storage.backing import (BackingStore, FileBackingStore,
                                    MemoryBackingStore)
 
@@ -90,11 +91,20 @@ class WritebackQueue:
              "barriers", "bytes_enqueued", "flush_errors"))
         self._h_flush = self.obs.histogram(CLUSTER, "writeback",
                                            "flush_batch_pages")
+        self.faults = None          # FaultPlan (attach_faults)
+        self._fault_bypass = 0      # >0: serve the next sync clean
         self._thread: Optional[threading.Thread] = None
         if self.cfg.async_mode:
             self._thread = threading.Thread(
                 target=self._flusher, name="dpc-writeback", daemon=True)
             self._thread.start()
+
+    def attach_faults(self, plan) -> None:
+        """Thread a :class:`repro.runtime.faults.FaultPlan` through the
+        sync path: injected transient sync failures exercise the
+        un-mark/re-drive recovery without dropping or reordering
+        obligations.  ``None`` detaches."""
+        self.faults = plan
 
     # -- producer side -----------------------------------------------------
 
@@ -192,6 +202,10 @@ class WritebackQueue:
             try:
                 for ob in batch:
                     self.store.write(ob.key[0], ob.key[1], ob.data)
+                if self.faults is not None and not self._fault_bypass \
+                        and self.faults.sync_fails():
+                    raise InjectedSyncError(
+                        "fault-injected transient sync failure")
                 self.store.sync()                  # the durability point
             except Exception:
                 # a failed sync must not wedge the pipeline: un-mark the
@@ -231,18 +245,40 @@ class WritebackQueue:
                         return
                     continue
             try:
-                self._flush_once()
+                self._flush_once_retrying()
             except Exception:
                 # transient store failure (disk full, ...): the thread
                 # survives and retries the re-driven batch after a beat
                 time.sleep(self.cfg.flush_interval_s or 0.01)
+
+    def _flush_once_retrying(self) -> int:
+        """:meth:`_flush_once` with bounded retry of *injected* sync
+        failures (the batch survives each attempt un-marked and intact,
+        so re-driving preserves FIFO order and flush-before-free).  Real
+        store errors still propagate to the caller."""
+        attempts = 0
+        while True:
+            try:
+                return self._flush_once()
+            except InjectedSyncError:
+                attempts += 1
+                limit = (self.faults.cfg.max_retries
+                         if self.faults is not None else 0)
+                # the injected fault is *transient* by contract: past the
+                # retry budget the next attempt is served clean
+                if attempts > limit:
+                    self._fault_bypass += 1
+                    try:
+                        return self._flush_once()
+                    finally:
+                        self._fault_bypass -= 1
 
     def pump(self, max_batches: Optional[int] = None) -> int:
         """Drain synchronously on the caller's thread (sync mode, tests,
         and the engine's step-boundary pump).  Returns pages flushed."""
         flushed = 0
         while max_batches is None or max_batches > 0:
-            n = self._flush_once()
+            n = self._flush_once_retrying()
             if n == 0:
                 break
             flushed += n
@@ -283,7 +319,8 @@ class WritebackQueue:
                             " still pending")
                     continue
             # sync mode: the barrier itself pumps the queue dry
-            if self._flush_once() == 0 and time.perf_counter() > deadline:
+            if self._flush_once_retrying() == 0 \
+                    and time.perf_counter() > deadline:
                 raise TimeoutError("flush barrier stalled in sync mode")
         lat = time.perf_counter() - t0
         self.stats["barriers"] += 1

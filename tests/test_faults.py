@@ -1,0 +1,530 @@
+"""Quorum membership, partition fencing, and deterministic fault injection.
+
+ISSUE 9 coverage: membership transitions commit through the quorum-backed
+epoch log (minority proposals raise, never split-brain), fenced nodes'
+routed batches are rejected by fencing-token compare while they degrade to
+local-only and rejoin through the client guard's re-probe hysteresis, and
+the seeded :class:`FaultPlan` (drop / delay / duplicate / crash / skew /
+sync-fail) runs the existing invariants under adversity: duplicate lane
+delivery is idempotent, crashes at every named crash point recover through
+the ordinary failover path with zero lost committed dirty bytes, and —
+tier-2 property — any crash-free fault schedule settles observably
+equivalent to the clean execution.
+"""
+
+import numpy as np
+import pytest
+
+try:  # dev-only dep: collection must never hard-fail without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core.dpc_cache import DistributedKVCache
+from repro.core.protocol import DPCProtocol, ProtocolConfig, StaleEpochError
+from repro.obs.audit import audit_trace
+from repro.runtime.epoch_log import EpochLog, QuorumLostError
+from repro.runtime.faults import (CRASH_POINTS, FaultConfig, FaultPlan,
+                                  InjectedSyncError, NodeCrash, random_plan)
+from repro.runtime.liveness import (DirectoryClientGuard, Membership,
+                                    StragglerWatchdog)
+
+PAGE = 8
+
+
+def make_proto(nodes=4, pool=16, cap=256, **kw):
+    return DPCProtocol(ProtocolConfig(
+        num_nodes=nodes, pool_pages=pool, directory_capacity=cap,
+        shadow_oracle=True, **kw))
+
+
+def put(proto, s, p, node, dirty=False):
+    rr = proto.read_pages([s], [p], node)
+    assert int(rr.status[0]) == D.ST_GRANT_E, int(rr.status[0])
+    slot = int(rr.slot[0])
+    proto.commit_pages([s], [p], node, [slot],
+                       dirty=[dirty] if dirty else None)
+    return slot
+
+
+def make_kv(nodes=5, pool=32, obs_level="counters"):
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=pool,
+                    directory_capacity=1 << 9, shadow_oracle=True,
+                    storage_backend="memory", writeback_async=False,
+                    obs_level=obs_level,
+                    migrate_threshold=3, migrate_batch=64)
+    return DistributedKVCache(dpc, nodes)
+
+
+def seed_kv(kv, frames, node, streams):
+    lks = kv.lookup(streams, [0] * len(streams), node)
+    for s in streams:
+        frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+    kv.commit(streams, [0] * len(streams), node, lks)
+
+
+def wire(kv, frames, membership):
+    """Standard harness wiring: byte capture + re-home install + faults."""
+    kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+    kv.attach_membership(
+        membership,
+        install_fn=lambda key, pfn, data: frames.__setitem__(key, data))
+
+
+# ---------------------------------------------------------------------------
+# epoch log: quorum math
+# ---------------------------------------------------------------------------
+
+
+class TestEpochLog:
+    def test_commit_requires_majority(self):
+        log = EpochLog(5)
+        e = log.propose("join", 4)
+        assert e.index == 1 and log.epoch == 1 == log.fence_token
+        log.partition([3, 4])
+        # majority side (3 of 5) still commits; epoch strictly increases
+        e2 = log.propose("fence", 3)
+        assert e2.index == 2
+        # minority side (2 of 5) cannot
+        with pytest.raises(QuorumLostError) as ei:
+            log.propose("noop", 4, proposer=4)
+        assert ei.value.acks == 2 and ei.value.quorum == 3
+        assert log.epoch == 2   # the failed proposal committed nothing
+
+    def test_even_split_blocks_both_sides_without_witness(self):
+        log = EpochLog(4)
+        log.partition([2, 3])
+        assert not log.has_quorum(0) and not log.has_quorum(2)
+
+    def test_witness_breaks_even_split(self):
+        log = EpochLog(4, witnesses=1)      # 5 participants, quorum 3
+        log.partition([2, 3])
+        # witnesses model CXL lease words on the surviving fabric: the
+        # side that can attest them wins the tie
+        assert log.has_quorum(0) and not log.has_quorum(2)
+
+    def test_denominator_fixed_across_death_grows_on_join(self):
+        log = EpochLog(4)
+        assert log.quorum == 3
+        log.propose("fail", 3)              # death never shrinks quorum
+        assert log.quorum == 3
+        log.add_voter(4)
+        assert log.quorum == 3 and len(log.voters) == 5
+        log.add_voter(4)                    # idempotent rejoin
+        assert len(log.voters) == 5
+
+    def test_heal_restores_quorum(self):
+        log = EpochLog(5)
+        log.partition([0, 1])
+        assert not log.has_quorum(0)
+        assert log.heal() == {0, 1}
+        assert log.has_quorum(0) and log.minority == set()
+
+
+# ---------------------------------------------------------------------------
+# partition fencing end-to-end
+# ---------------------------------------------------------------------------
+
+
+class TestPartitionFencing:
+    def test_fenced_node_batches_rejected_then_unfenced(self):
+        proto = make_proto(nodes=4)
+        put(proto, 1, 0, 0)
+        token = proto.fence_nodes([2])
+        assert proto.is_fenced(2) and token == 1
+        with pytest.raises(StaleEpochError) as ei:
+            proto.read_pages([1], [0], 2)
+        assert ei.value.node == 2 and ei.value.token == token
+        assert proto.counters["fenced_rejects"] == 1
+        # other nodes are untouched
+        rr = proto.read_pages([1], [0], 3)
+        assert int(rr.status[0]) == D.ST_MAP_S
+        proto.unfence_nodes([2])
+        rr = proto.read_pages([1], [0], 2)
+        assert int(rr.status[0]) == D.ST_MAP_S
+        assert proto.counters["unfenced_nodes"] == 1
+
+    def test_partition_fences_minority_and_heals_via_reprobe(self):
+        kv = make_kv(nodes=5)
+        frames = {}
+        m = Membership(num_nodes=5)
+        wire(kv, frames, m)
+        for n in range(5):
+            seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(4)])
+        kv.checkpoint_dirty()
+        before = len(kv.proto.directory_view())
+
+        cut = m.partition([4])
+        assert cut == [4] and m.fenced == {4}
+        assert kv.proto.is_fenced(4)
+        assert kv.guards[4].mode == "local_only"
+        # the minority side observes quorum loss, not a commit
+        m.assert_no_quorum(4)
+        # its pages were re-homed onto survivors: nothing lost, nobody
+        # double-owns (shadow oracle checks every op)
+        assert kv.proto.counters["lost_dirty_pages"] == 0
+        view = kv.proto.directory_view()
+        assert not any(v[1] == 4 for v in view.values())
+        assert len(view) == before
+        # fenced node still *serves* — locally, no ownership transitions
+        transitions = kv.proto.counters["commits"]
+        lks = kv.lookup([91, 92], [0, 0], 4)
+        assert all(lk.status == D.ST_GRANT_E for lk in lks)
+        kv.commit([91, 92], [0, 0], 4, lks)
+        assert kv.proto.counters["commits"] == transitions
+        assert (91, 0) not in kv.proto.directory_view()
+
+        # heal: the guard's hysteresis drives the rejoin, not the heal
+        assert m.heal() == [4]
+        assert m.fenced == {4} and kv.proto.is_fenced(4)
+        rejoined = []
+        for _ in range(kv.guards[4].reprobe_successes):
+            rejoined += kv.probe_fenced(m)
+        assert rejoined == [4]
+        assert not kv.proto.is_fenced(4) and 4 in m.alive
+        rr = kv.lookup([1], [0], 4)     # back through the directory
+        assert rr[0].status in (D.ST_MAP_S, D.ST_HIT_SHARER)
+
+    def test_reprobe_streak_resets_while_still_partitioned(self):
+        kv = make_kv(nodes=5)
+        frames = {}
+        m = Membership(num_nodes=5)
+        wire(kv, frames, m)
+        m.partition([4])
+        # probing against a still-open partition never accumulates
+        for _ in range(10):
+            assert kv.probe_fenced(m) == []
+        assert kv.proto.is_fenced(4) and kv.guards[4].mode == "local_only"
+
+    def test_epoch_and_fence_token_monotone_across_churn(self):
+        kv = make_kv(nodes=5, obs_level="full")
+        frames = {}
+        m = Membership(num_nodes=5)
+        wire(kv, frames, m)
+        for n in range(4):
+            seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(3)])
+        kv.checkpoint_dirty()
+        m.drain(3)
+        m.partition([2])
+        m.heal()
+        for _ in range(3):
+            kv.probe_fenced(m)
+        m.evict(1, kind="fail")
+        assert m.epoch == len(m.log.entries) == kv.proto.fence_token
+        doc = {"dpcEvents": [list(e) for e in kv.obs.tracer.events()],
+               "dpcMeta": {"pool_pages": kv.dpc.pool_pages_per_shard,
+                           "dropped": kv.obs.tracer.dropped}}
+        assert audit_trace(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# fault plan: message-layer faults
+# ---------------------------------------------------------------------------
+
+
+class TestMessageFaults:
+    def _workload(self, proto):
+        for s in range(1, 9):
+            put(proto, s, 0, s % proto.cfg.num_nodes, dirty=False)
+        for s in range(1, 9):
+            proto.read_pages([s], [0], (s + 1) % proto.cfg.num_nodes)
+        proto.reclaim_sync(0, 2)
+        proto.fence_data_lanes()
+        if proto.tlbs is not None:
+            for nd in range(proto.cfg.num_nodes):
+                proto.tlbs.drain_for([nd])
+
+    def test_duplicate_delivery_is_idempotent(self):
+        clean = make_proto(nodes=4, async_data_plane=True)
+        faulty = make_proto(nodes=4, async_data_plane=True)
+        plan = FaultPlan(FaultConfig(seed=7, dup_p=1.0))
+        faulty.attach_faults(plan)
+        self._workload(clean)
+        self._workload(faulty)     # shadow oracle checks every op
+        assert plan.counters(0)["lanes_duplicated"] > 0
+        assert clean.directory_view() == faulty.directory_view()
+
+    def test_drop_retries_are_bounded_and_accounted(self):
+        clean = make_proto(nodes=4)
+        faulty = make_proto(nodes=4)
+        plan = FaultPlan(FaultConfig(seed=3, drop_p=0.9, max_retries=2,
+                                     backoff_base_us=10))
+        faulty.attach_faults(plan)
+        self._workload(clean)
+        self._workload(faulty)
+        tot = {k: sum(plan.counters(n)[k] for n in range(4))
+               for k in ("drops_injected", "retries", "backoff_us",
+                         "send_timeouts")}
+        assert tot["drops_injected"] > 0
+        assert tot["retries"] == tot["drops_injected"]   # every drop redrives
+        assert tot["backoff_us"] > 0 and tot["send_timeouts"] > 0
+        assert clean.directory_view() == faulty.directory_view()
+
+    def test_delayed_lanes_settle_at_fences(self):
+        clean = make_proto(nodes=4, async_data_plane=True)
+        faulty = make_proto(nodes=4, async_data_plane=True)
+        plan = FaultPlan(FaultConfig(seed=11, delay_p=0.8, delay_batches=3))
+        faulty.attach_faults(plan)
+        self._workload(clean)
+        self._workload(faulty)
+        assert sum(plan.counters(n)["lanes_delayed"] for n in range(4)) > 0
+        assert clean.directory_view() == faulty.directory_view()
+
+    def test_clock_skew_drives_false_suspicion(self):
+        plan = FaultPlan(FaultConfig(clock_skew_s={0: 60.0}))
+        t = [0.0]
+        m = Membership(3, timeout_s=5.0, clock=lambda: t[0])
+        # node 0's liveness clock runs 60s ahead: every peer's heartbeat
+        # looks expired from its view — false suspicion under test control
+        m.clock = plan.skewed_clock(0, lambda: t[0])
+        assert set(m.check()) == {0, 1, 2}
+        assert plan.counters(0)["skew_applied"] == 1
+
+    def test_deterministic_given_seed(self):
+        views = []
+        for _ in range(2):
+            proto = make_proto(nodes=4, async_data_plane=True)
+            proto.attach_faults(FaultPlan(FaultConfig(
+                seed=42, drop_p=0.3, delay_p=0.3, dup_p=0.3)))
+            self._workload(proto)
+            views.append(proto.directory_view())
+        assert views[0] == views[1]
+
+
+# ---------------------------------------------------------------------------
+# crash points: recovery through the ordinary failover path
+# ---------------------------------------------------------------------------
+
+
+def _recover(kv, frames, m, crashed):
+    """The harness reaction to a NodeCrash: ordinary failover."""
+    m.evict(crashed, kind="fail")
+    assert kv.proto.counters["lost_dirty_pages"] == 0
+    view = kv.proto.directory_view()
+    assert not any(v[1] == crashed for v in view.values())
+
+
+class TestCrashPoints:
+    def _cluster(self, point, node, pool=32, hits=1):
+        kv = make_kv(nodes=5, pool=pool)
+        frames = {}
+        m = Membership(num_nodes=5)
+        wire(kv, frames, m)
+        for n in range(5):
+            seed_kv(kv, frames, n, [n * 10 + i + 1 for i in range(6)])
+        kv.checkpoint_dirty()
+        # arm after the steady-state setup so the crash hits the op under
+        # test, not the seeding
+        plan = FaultPlan(FaultConfig(seed=1, crashes={(point, node): hits}),
+                         obs=kv.obs)
+        kv.attach_faults(plan)
+        return kv, frames, m, plan
+
+    def test_crash_post_commit(self):
+        kv, frames, m, plan = self._cluster("post_commit", 1)
+        with pytest.raises(NodeCrash) as ei:
+            lks = kv.lookup([99], [0], 1)
+            frames[(99, 0)] = np.zeros(PAGE, np.float32)
+            # committed clean (a durable copy exists): the crash right
+            # after the commit must not lose anything
+            kv.commit([99], [0], 1, lks, dirty=[False])
+        assert (ei.value.node, ei.value.point) == (1, "post_commit")
+        _recover(kv, frames, m, 1)
+        assert plan.counters(1)["crashes_fired"] == 1
+        # the commit itself completed before the crash: survivors refault
+        # the page cleanly
+        assert kv.lookup([99], [0], 2)[0].status in (D.ST_GRANT_E,
+                                                     D.ST_MAP_S)
+
+    def test_crash_pre_reclaim_finish(self):
+        kv, frames, m, plan = self._cluster("pre_reclaim_finish", 0, pool=8)
+        with pytest.raises(NodeCrash):
+            # pool 0 is full (6 seeds + reserve) — reclaim crashes at the
+            # finish boundary, invalidations already delivered
+            kv.reclaim(0, 4)
+        _recover(kv, frames, m, 0)
+        assert plan.counters(0)["crashes_fired"] == 1
+
+    def test_crash_pre_migrate_finish(self):
+        kv, frames, m, plan = self._cluster("pre_migrate_finish", 0)
+        for _ in range(4):       # push (1,0) over the promotion threshold
+            kv.lookup([1], [0], 2)
+        with pytest.raises(NodeCrash):
+            kv.run_migrations()
+        _recover(kv, frames, m, 0)
+        assert plan.counters(0)["crashes_fired"] == 1
+
+    def test_crash_mid_drain_chunk(self):
+        kv, frames, m, plan = self._cluster("mid_drain_chunk", 3)
+        with pytest.raises(NodeCrash):
+            m.drain(3)
+        # the drain died mid-evacuation: the crash becomes a failover
+        _recover(kv, frames, m, 3)
+        assert plan.counters(3)["crashes_fired"] == 1
+
+    def test_crash_post_flush_register(self):
+        kv, frames, m, plan = self._cluster("post_flush_register", 0, pool=8)
+        # fresh dirty pages (the checkpoint cleaned the seeds): reclaiming
+        # the whole pool forces dirty evictions through the FLUSH lane
+        seed_kv(kv, frames, 0, [101, 102])
+        with pytest.raises(NodeCrash):
+            # the dirty eviction defers its byte capture onto a FLUSH lane
+            # and crashes right after the obligation token registers — the
+            # failover's lane fence must still land the bytes
+            kv.reclaim(0, 8)
+        # surviving registered dirty pages persist from the pooled memory
+        # (CXL frames outlive the node) before the failover wipes it
+        kv.checkpoint_dirty()
+        _recover(kv, frames, m, 0)
+        assert plan.counters(0)["crashes_fired"] == 1
+
+    def test_all_named_points_are_reachable(self):
+        assert set(CRASH_POINTS) == {
+            "pre_migrate_finish", "post_flush_register", "mid_drain_chunk",
+            "pre_reclaim_finish", "post_commit"}
+
+    def test_crash_fires_once_and_disarms_during_recovery(self):
+        kv, frames, m, plan = self._cluster("post_commit", 1)
+        with pytest.raises(NodeCrash):
+            lks = kv.lookup([99], [0], 1)
+            kv.commit([99], [0], 1, lks, dirty=[False])
+        _recover(kv, frames, m, 1)   # fail_node disarms; nothing re-fires
+        # armed crashes fire at most once: the same op on another node
+        lks = kv.lookup([98], [0], 2)
+        kv.commit([98], [0], 2, lks)
+        assert plan.counters(1)["crashes_fired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# storage sync faults
+# ---------------------------------------------------------------------------
+
+
+class TestSyncFaults:
+    def test_injected_sync_failures_redrive_in_order(self):
+        kv = make_kv(nodes=3, pool=8)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        plan = FaultPlan(FaultConfig(seed=5, sync_fail_p=1.0, max_retries=2))
+        kv.attach_faults(plan)
+        seed_kv(kv, frames, 0, list(range(1, 8)))    # fills commit dirty
+        kv.reclaim(0, 4)        # dirty evictions enqueue flush obligations
+        kv.flush()
+        # every obligation landed despite the injected failures, in order
+        assert kv.writeback.pending_count() == 0
+        wb = kv.obs.view(-1, "writeback", ())
+        assert wb["flushed_pages"] > 0
+        assert wb["flush_errors"] > 0
+        assert plan.counters(-1)["sync_fails_injected"] > 0
+        # the durable image matches what was evicted: every flushed key
+        # reads back its enqueue-time bytes
+        for s in range(1, 8):
+            got = kv.store.read(s, 0)
+            if got is not None:
+                assert float(got[0]) == float(s)
+
+    def test_retry_budget_exhaustion_serves_clean(self):
+        kv = make_kv(nodes=3, pool=4)
+        frames = {}
+        kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
+        kv.attach_faults(FaultPlan(FaultConfig(seed=5, sync_fail_p=1.0,
+                                               max_retries=2)))
+        seed_kv(kv, frames, 0, [1, 2, 3])
+        kv.reclaim(0, 3)
+        kv.flush()    # p=1.0: every attempt fails until the bypass kicks in
+        assert kv.writeback.pending_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: guard hysteresis, watchdog warm-up
+# ---------------------------------------------------------------------------
+
+
+class TestGuardHysteresis:
+    def test_reprobe_needs_consecutive_successes(self):
+        t = [0.0]
+        g = DirectoryClientGuard(timeout_s=5.0, clock=lambda: t[0],
+                                 reprobe_successes=3)
+        g.trip()
+        assert g.mode == "local_only"
+        g.response_received()
+        g.response_received()
+        g.probe_failed()                  # streak resets: not back yet
+        g.response_received()
+        g.response_received()
+        assert g.mode == "local_only"
+        g.response_received()             # third consecutive
+        assert g.mode == "dpc"
+
+    def test_one_lucky_packet_does_not_bounce_back(self):
+        t = [0.0]
+        g = DirectoryClientGuard(timeout_s=5.0, clock=lambda: t[0])
+        t[0] = 10.0
+        assert g.check() == "local_only"
+        g.response_received()             # single response on a flapping link
+        assert g.mode == "local_only"
+
+
+class TestWatchdogWarmup:
+    def test_slow_first_step_does_not_poison_baseline(self):
+        wd = StragglerWatchdog(factor=2.0, strikes=2, warmup=3)
+        # straggler on step 0: the old first-step seeding would make 5.0
+        # the baseline and nothing would ever flag
+        assert wd.observe(5.0, slowest_node=0) is None
+        assert wd.observe(1.0, slowest_node=1) is None
+        assert wd.observe(1.1, slowest_node=1) is None
+        assert wd.ewma == pytest.approx(1.1)     # median, not the outlier
+        assert wd.observe(5.0, slowest_node=0) is None   # strike 1
+        assert wd.observe(5.0, slowest_node=0) == 0      # strike 2: flagged
+
+    def test_fast_warmup_keeps_existing_behavior(self):
+        wd = StragglerWatchdog(factor=3.0, strikes=2)     # warmup=2 default
+        assert wd.observe(1.0) is None
+        assert wd.observe(1.1) is None
+        assert wd.ewma == pytest.approx(1.05)
+        assert wd.observe(5.0, slowest_node=2) is None
+        assert wd.observe(5.0, slowest_node=2) == 2
+
+
+# ---------------------------------------------------------------------------
+# tier-2 property: fault schedules are observably equivalent to clean runs
+# ---------------------------------------------------------------------------
+
+
+def _check_schedule_settles_clean(seed):
+    rng = np.random.default_rng(seed)
+    ops = [(int(rng.integers(1, 40)), int(rng.integers(4)),
+            int(rng.integers(3))) for _ in range(60)]
+
+    def run(plan):
+        proto = make_proto(nodes=4, pool=16, async_data_plane=True)
+        if plan is not None:
+            proto.attach_faults(plan)
+        for s, node, kind in ops:
+            rr = proto.read_pages([s], [0], node)
+            if int(rr.status[0]) == D.ST_GRANT_E:
+                proto.commit_pages([s], [0], node, [int(rr.slot[0])],
+                                   dirty=[kind == 2])
+            if kind == 1:
+                proto.reclaim_sync(node, 1)
+        proto.fence_data_lanes()
+        proto.flush_dirty_marks()
+        return proto.directory_view()
+
+    faulty = random_plan(seed, 4, crash_candidates=())  # crash-free
+    assert run(None) == run(faulty)
+
+
+class TestFaultEquivalenceProperty:
+    def test_one_seed(self):
+        _check_schedule_settles_clean(1234)
+
+    if HAVE_HYPOTHESIS:
+        @pytest.mark.property
+        @settings(deadline=None, max_examples=20)
+        @given(seed=st.integers(min_value=0, max_value=2 ** 16))
+        def test_property(self, seed):
+            _check_schedule_settles_clean(seed)
