@@ -87,6 +87,7 @@ def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
             allowlist: Optional[List[str]] = None, strict: bool = False,
             rerun: Optional[Callable[[str],
                                      Optional[Dict[str, float]]]] = None,
+            summary_out: Optional[List[dict]] = None,
             ) -> Tuple[int, List[Tuple[str, float]], List[Tuple[str, float]]]:
     """Returns (exit_code, warnings, failures) where each entry is
     (row_name, ratio).  ``exit_code`` is 1 iff a non-allowlisted row
@@ -96,7 +97,11 @@ def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
     suspect suite: a row over ``fail_threshold`` is judged on the median of
     its first ratio plus up to two rerun ratios, so a single scheduler
     hiccup cannot block the build.  Reruns are fetched lazily (only suites
-    with a suspect row pay) and cached per suite."""
+    with a suspect row pay) and cached per suite.
+
+    ``summary_out``, if given, collects one dict per compared suite
+    (rows/worst-ratio/warn/fail counts) — the input to
+    :func:`render_markdown_summary` for the CI step summary."""
     allowlist = allowlist or []
     rerun_cache: Dict[str, List[Dict[str, float]]] = {}
 
@@ -126,6 +131,12 @@ def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
             print(f"# {name}: no committed baseline — skipped")
             continue
         fresh, base = _load_rows(fresh_path), _load_rows(base_path)
+        suite_stats = {"suite": name[len("BENCH_"):-len(".json")],
+                       "rows": 0, "worst_row": "", "worst_ratio": 0.0,
+                       "warns": 0, "fails": 0,
+                       "new_rows": len(set(fresh) - set(base)),
+                       "missing_rows": len(set(base) - set(fresh))}
+        n_warn0, n_fail0 = len(warnings), len(failures)
         for row, base_us in sorted(base.items()):
             if row not in fresh:
                 print(f"# {name}: row '{row}' gone from fresh run")
@@ -134,6 +145,10 @@ def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
                 continue
             compared += 1
             ratio = fresh[row] / base_us
+            suite_stats["rows"] += 1
+            if ratio > suite_stats["worst_ratio"]:
+                suite_stats["worst_ratio"] = ratio
+                suite_stats["worst_row"] = row
             detail = (f"{row}: {base_us:.1f}us -> {fresh[row]:.1f}us "
                       f"({ratio:.1f}x)")
             if ratio > fail_threshold:
@@ -169,12 +184,56 @@ def compare(fresh_dir: str, baselines: str = "benchmarks/baselines",
                       f"warn threshold {warn_threshold:.1f}x")
         for row in sorted(set(fresh) - set(base)):
             print(f"# {name}: new row '{row}' (no baseline yet)")
+        suite_stats["warns"] = len(warnings) - n_warn0
+        suite_stats["fails"] = len(failures) - n_fail0
+        if summary_out is not None:
+            summary_out.append(suite_stats)
 
     print(f"compare_baseline: {compared} rows compared, "
           f"{len(warnings)} over {warn_threshold:.1f}x (warn), "
           f"{len(failures)} over {fail_threshold:.1f}x (blocking)")
     code = 1 if failures or (strict and warnings) else 0
     return code, warnings, failures
+
+
+def render_markdown_summary(suites: List[dict],
+                            warn_threshold: float = 2.0,
+                            fail_threshold: float = 4.0) -> str:
+    """Per-suite markdown table for the CI job summary page
+    (``$GITHUB_STEP_SUMMARY``): one row per compared suite with its worst
+    ratio and the warn/fail tallies, so a perf drift is readable from the
+    workflow page without digging through annotations."""
+    lines = ["## Perf smoke vs committed baseline", "",
+             f"Thresholds: warn > {warn_threshold:.1f}x, "
+             f"block > {fail_threshold:.1f}x (median-of-3).", "",
+             "| suite | rows | worst row | worst ratio | warn | fail | "
+             "new | missing |",
+             "|---|---:|---|---:|---:|---:|---:|---:|"]
+    for s in suites:
+        flag = ("🔴" if s["fails"] else
+                "🟡" if s["warns"] else "🟢")
+        worst = (f"`{s['worst_row']}`" if s["worst_row"] else "—")
+        lines.append(
+            f"| {flag} {s['suite']} | {s['rows']} | {worst} | "
+            f"{s['worst_ratio']:.2f}x | {s['warns']} | {s['fails']} | "
+            f"{s['new_rows']} | {s['missing_rows']} |")
+    if not suites:
+        lines.append("| _no suites compared_ | | | | | | | |")
+    return "\n".join(lines) + "\n"
+
+
+def write_step_summary(suites: List[dict], warn_threshold: float,
+                       fail_threshold: float,
+                       path: Optional[str] = None) -> bool:
+    """Append the markdown table to ``$GITHUB_STEP_SUMMARY`` (or an
+    explicit path).  Silently a no-op outside CI."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return False
+    with open(path, "a") as f:
+        f.write(render_markdown_summary(suites, warn_threshold,
+                                        fail_threshold))
+    return True
 
 
 def check_allowlist(baselines: str,
@@ -253,10 +312,13 @@ def main() -> int:
         return check_allowlist(args.baselines, allowlist_path)
     if args.fresh_dir is None:
         ap.error("fresh_dir is required unless --check-allowlist is given")
+    summary: List[dict] = []
     code, _, _ = compare(args.fresh_dir, args.baselines,
                          args.warn_threshold, args.fail_threshold,
                          load_allowlist(allowlist_path), args.strict,
-                         rerun=None if args.no_rerun else _default_rerun)
+                         rerun=None if args.no_rerun else _default_rerun,
+                         summary_out=summary)
+    write_step_summary(summary, args.warn_threshold, args.fail_threshold)
     return code
 
 

@@ -17,6 +17,12 @@ inline:
   ownership transitions while fenced;
 * sustained survivor throughput at every churn epoch.
 
+Two dedicated witness tie-break schedules ride along (smoke and full):
+a 6-voter cluster with one CXL witness lease word partitions a 2- and a
+3-node minority — the 3/3 split only commits because the witness attests
+for the majority — and the whole fenced group must serve local-only with
+**zero** committed ownership transitions until heal + re-probe rejoin.
+
 Emits one row per schedule plus a summary; ``BENCH_fault_soak.json``
 (CI uploads it, the perf gate compares against the committed baseline).
 """
@@ -43,16 +49,16 @@ NODES = 5
 _ACTIONS = ("traffic", "drain", "fail", "partition")
 
 
-def _new_cluster(per_node: int):
+def _new_cluster(per_node: int, nodes: int = NODES, witnesses: int = 0):
     dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=per_node * 3,
                     directory_capacity=1 << 10,
                     storage_backend="memory", writeback_async=False,
                     shadow_oracle=True, obs_level="full",
-                    migrate_threshold=3, migrate_batch=per_node * NODES)
-    kv = DistributedKVCache(dpc, NODES)
+                    migrate_threshold=3, migrate_batch=per_node * nodes)
+    kv = DistributedKVCache(dpc, nodes)
     frames = {}
     kv.set_page_bytes_fn(lambda key, pfn: frames.get(key))
-    membership = Membership(num_nodes=NODES)
+    membership = Membership(num_nodes=nodes, witnesses=witnesses)
     kv.attach_membership(
         membership,
         install_fn=lambda key, pfn, data: frames.__setitem__(
@@ -240,6 +246,81 @@ def run_schedule(seed: int, per_node: int, epochs: int,
     return out
 
 
+def run_minority_schedule(seed: int, per_node: int,
+                          minority_size: int = 3) -> dict:
+    """Witness tie-break schedule: a 6-voter cluster (one CXL witness
+    lease word) partitions a multi-node minority — including the even
+    3/3 split only the witness can break.  The whole fenced group must
+    keep serving local-only and commit **zero** ownership transitions
+    while fenced; the majority side sustains traffic throughout."""
+    nodes = 6
+    kv, frames, membership = _new_cluster(per_node, nodes=nodes,
+                                          witnesses=1)
+    rng = np.random.default_rng(seed)
+
+    shard = {}
+    for n in range(nodes):
+        streams = [n * per_node + i + 1 for i in range(per_node)]
+        shard[n] = streams
+        lks = kv.lookup(streams, [0] * per_node, n)
+        for s in streams:
+            frames[(s, 0)] = np.full(PAGE, float(s), np.float32)
+        kv.commit(streams, [0] * per_node, n, lks)
+    all_streams = [s for n in range(nodes) for s in shard[n]]
+    kv.checkpoint_dirty()
+
+    minority = sorted(int(v) for v in rng.choice(
+        np.arange(1, nodes), size=minority_size, replace=False))
+    t0 = time.perf_counter()
+    cut = membership.partition(minority)
+    assert cut == minority, f"partition fenced {cut}, wanted {minority}"
+
+    # every fenced node: no quorum, local-only service, zero commits
+    commits_before = kv.proto.counters["commits"]
+    for victim in minority:
+        membership.assert_no_quorum(victim)
+        fenced_lks = kv.lookup([9000 + victim, 9100 + victim], [0, 0],
+                               victim)
+        assert all(lk.status in (D.ST_GRANT_E, D.ST_FULL)
+                   for lk in fenced_lks), \
+            f"fenced node {victim} served through the directory"
+        kv.commit([9000 + victim, 9100 + victim], [0, 0], victim,
+                  fenced_lks)
+    assert kv.proto.counters["commits"] == commits_before, \
+        f"fenced group {minority} committed an ownership transition"
+
+    # the witness-backed majority keeps quorum and keeps serving
+    ops = 0
+    for _ in range(3):
+        ops += _traffic(kv, frames, sorted(membership.alive), all_streams,
+                        rng, max(4, per_node // 2))
+    assert ops > 0
+
+    membership.heal()
+    for _ in range(4):
+        kv.probe_fenced(membership)
+    assert not membership.fenced, "heal re-probe never rejoined"
+    wall = time.perf_counter() - t0
+
+    kv.proto.fence_data_lanes()
+    kv.flush()
+    if kv.proto.oracle is not None:
+        kv.proto.oracle.check_invariants()
+    c = kv.proto.counters
+    assert c["lost_dirty_pages"] == 0
+    tr = kv.obs.tracer
+    violations = audit_events(
+        tr.events(), pool_pages=kv.dpc.pool_pages_per_shard,
+        dropped=tr.dropped)
+    assert not violations, \
+        f"minority schedule {seed}: {len(violations)} trace violations"
+    out = {"seed": seed, "ops": ops, "wall_s": wall,
+           "minority": minority, "fenced": len(minority),
+           "epoch": membership.epoch}
+    kv.close()
+    return out
+
+
 def run(smoke: bool = False, schedules: int = 0, trace: str = "") -> int:
     n = schedules or (5 if smoke else 24)
     per_node = 6 if smoke else 12
@@ -263,6 +344,18 @@ def run(smoke: bool = False, schedules: int = 0, trace: str = "") -> int:
     # rejoin resets the crashed node's obs row (new incarnation), so the
     # harness's own crash count is the authoritative one
     absorbed["crashes_fired"] = max(absorbed["crashes_fired"], total_crashes)
+
+    # dedicated witness tie-break schedules: multi-node minority
+    # partitions (one an even 3/3 split) on a 6-voter + 1-witness
+    # cluster — the fenced group must commit zero ownership transitions
+    for i, msize in enumerate((2, 3)):
+        s = run_minority_schedule(1000 + i, per_node, minority_size=msize)
+        emit(f"fault_soak.partition_minority_{msize}",
+             s["wall_s"] / max(s["ops"], 1) * 1e6,
+             f"ops={s['ops']} minority={s['minority']} "
+             f"fenced={s['fenced']} epochs={s['epoch']} "
+             f"commits_while_fenced=0 violations=0")
+
     active = sum(1 for k in ("drops_injected", "lanes_delayed",
                              "lanes_duplicated", "crashes_fired",
                              "sync_fails_injected") if absorbed[k])

@@ -19,9 +19,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated suite names to skip (CI splits "
+                         "headline suites into their own named steps)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run of every suite (CI drift check)")
     args = ap.parse_args()
+    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
 
     from benchmarks import (app_serving, common, control_plane, fault_soak,
                             microbench_read, microbench_write, migration,
@@ -40,6 +44,8 @@ def main() -> None:
     failures = 0
     for name, fn in suites:
         if args.only and args.only not in name:
+            continue
+        if name in skip:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()

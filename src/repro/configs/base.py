@@ -380,6 +380,19 @@ class DPCConfig:
     # False = legacy synchronous stepping, kept as the reference mode for
     # the async==sync equivalence property tests (tests/test_async_data_plane)
     async_data_plane: bool = True
+    # --- cluster prefix tree + predictive prefetch (serving/prefix_tree) ---
+    # tree nodes are keyed exactly like file pages (chain hash, page idx) and
+    # partitioned by the same dir_shard_of placement, so any node's prefill
+    # is visible to any other node's match; a match promotes the matched
+    # tail pages (sharer-bit + TLB install, no alloc on miss) during the
+    # decode overlap window and credits the migration ledger
+    prefix_tree_enabled: bool = True
+    prefix_tree_capacity: int = 4096    # max tree nodes before cold pruning
+    prefix_predict_weight: int = 2      # ledger credit per predicted access
+    # False = per-node prefix index ablation: page keys are salted with the
+    # node id, so no request ever resolves to another node's prefill (the
+    # pre-cluster-tree behavior, kept as the app_serving ablation row)
+    prefix_cluster: bool = True
     # --- ownership migration (core/migration.py; 0 threshold disables) ---
     migrate_threshold: int = 4          # decayed remote accesses that promote
     migrate_batch: int = 32             # max MIGRATEs per round

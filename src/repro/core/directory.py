@@ -241,6 +241,63 @@ def lookup_and_install(d: DirectoryState, descs: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
+def map_shared(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
+    """Predictive promotion probe: sharer-map **present** O entries only.
+
+    The prefetch-flavored half of FUSE_DPC_READ: a predicted page that is
+    resident gains the requester's sharer bit (MAP_S / HIT_* like the read
+    path), but a wrong prediction must cost nothing — an absent key comes
+    back ST_BAD with **no claim** (lookup_and_install would allocate an E
+    entry the predictor never fills), and an in-transition entry (E / TBI /
+    TBM) comes back BLOCKED untouched.  Pure directory transition: frame
+    allocation, TLB install, and pool touches stay caller-side.
+    """
+    n_words = d.sharers.shape[1]
+    set_bit, _, has_bit, _ = _sharer_row_ops(n_words)
+
+    def step(i, carry):
+        d, res = carry
+        stream, page, node = descs[i, 0], descs[i, 1], descs[i, 2]
+        valid = stream >= 0
+        found, _ = probe(d.keys, stream, page, max_probe)
+
+        present = found >= 0
+        st = d.state[jnp.maximum(found, 0)]
+        own = d.owner[jnp.maximum(found, 0)]
+        row = d.sharers[jnp.maximum(found, 0)]
+        cur_pfn = d.pfn[jnp.maximum(found, 0)]
+
+        is_blocked = present & ((st == E) | (st == TBI) | (st == TBM))
+        is_owner = present & (st == O) & (own == node)
+        already_s = present & (st == O) & (own != node) & has_bit(row, node)
+        new_s = present & (st == O) & (own != node) & ~has_bit(row, node)
+
+        status = jnp.where(is_blocked, D.ST_BLOCKED,
+                 jnp.where(is_owner, D.ST_HIT_OWNER,
+                 jnp.where(already_s, D.ST_HIT_SHARER,
+                 jnp.where(new_s, D.ST_MAP_S, D.ST_BAD))))
+        status = jnp.where(valid, status, jnp.int32(STAT_SKIP))
+
+        do_map = valid & new_s
+        sharers = _cond_write(d.sharers, found, set_bit(row, node), do_map)
+
+        out_owner = jnp.where(is_owner | already_s | new_s, own,
+                              jnp.int32(-1))
+        out_pfn = jnp.where(is_owner | already_s | new_s, cur_pfn,
+                            jnp.int32(-1))
+        res = res.at[i].set(jnp.stack([status, out_owner, out_pfn]))
+
+        stats = d.stats.at[jnp.minimum(status, N_STATS - 1)].add(1)
+        return (DirectoryState(d.keys, d.state, d.owner, sharers, d.pfn,
+                               d.dirty, stats), res)
+
+    n = descs.shape[0]
+    res0 = jnp.zeros((n, 3), jnp.int32)
+    d, res = lax.fori_loop(0, n, step, (d, res0))
+    return d, res
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe",), donate_argnums=0)
 def commit(d: DirectoryState, descs: jax.Array, *, max_probe: int = 128):
     """FUSE_DPC_UNLOCK: COMMIT (E -> O), publish the owner's PFN (aux lane)."""
 

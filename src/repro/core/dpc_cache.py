@@ -26,8 +26,9 @@ from repro.configs.base import DPCConfig
 from repro.core import descriptors as D
 from repro.core import pagepool as pp
 from repro.core.migration import MigrationConfig, OwnershipMigrator
-from repro.core.protocol import DPCProtocol, ProtocolConfig
+from repro.core.protocol import DPCProtocol, ProtocolConfig, dir_shard_of
 from repro.core.tlb import MODE_S
+from repro.serving.prefix_tree import ClusterPrefixTree
 from repro.obs import CLUSTER, Obs
 from repro.runtime.liveness import DirectoryClientGuard
 from repro.storage import make_storage
@@ -113,7 +114,16 @@ class DistributedKVCache:
             CLUSTER, "cache",
             ("lookups", "fills", "remote_hits", "local_hits", "evictions",
              "migrations", "refills", "sync_flushes", "tlb_hits",
-             "tlb_misses"))
+             "tlb_misses", "prefix_matches", "prefix_promotes",
+             "prefix_promote_hits"))
+        # cluster prefix tree: committed prompt paths, keyed + sharded
+        # exactly like their directory entries, so any node's prefill is
+        # matchable (and promotable) from any other node
+        self.prefix_tree: Optional[ClusterPrefixTree] = None
+        if dpc.enabled and dpc.prefix_tree_enabled:
+            self.prefix_tree = ClusterPrefixTree(
+                capacity=dpc.prefix_tree_capacity,
+                shard_of=lambda s, p: dir_shard_of(self.proto.cfg, s, p))
         if self.obs.registry is not None:
             # pool occupancy gauges are sampled lazily at snapshot time
             # (one device readback per node per snapshot, zero data-path
@@ -307,6 +317,68 @@ class DistributedKVCache:
         directory op per node (step boundary; teardowns flush on their own
         before they could observe the page).  Returns keys flushed."""
         return self.proto.flush_dirty_marks()
+
+    # ------------------------------------------------------------------
+    # cluster prefix tree + predictive promotion
+    # ------------------------------------------------------------------
+
+    def prefix_insert(self, keys: Sequence[Tuple[int, int]],
+                      node: int) -> int:
+        """Record a committed full-page prompt path in the cluster tree
+        (engines call this right after admission commits).  No-op for
+        uncoordinated modes and fenced nodes — their prefills are not
+        cluster-visible, so advertising them would predict falsely."""
+        if self.prefix_tree is None or self.proto.is_fenced(node):
+            return 0
+        return self.prefix_tree.insert(list(keys), node)
+
+    def prefix_match(self, keys: Sequence[Tuple[int, int]],
+                     node: int) -> List[Tuple[int, int]]:
+        """Longest committed path matching ``keys`` (full pages only);
+        heats the matched tree edges for ``node``."""
+        if self.prefix_tree is None or self.proto.is_fenced(node):
+            return []
+        matched = self.prefix_tree.match(list(keys), node)
+        if matched:
+            self.stats["prefix_matches"] += 1
+        return matched
+
+    def promote_predicted(self, keys: Sequence[Tuple[int, int]],
+                          node: int) -> Tuple[List[Tuple[int, int]], int]:
+        """Predictive prefetch for matched tail pages: batch-promote their
+        directory entries (sharer bit + TLB install + owner CLOCK credit;
+        misses allocate nothing) and credit the migration ledger for the
+        remote ones — prediction-sourced promotion.  Keys already cached in
+        the node's TLB are skipped (they are as warm as promotion could
+        make them).  Returns (promoted_keys, hits)."""
+        if self.prefix_tree is None or self.proto.is_fenced(node) \
+                or not keys:
+            return [], 0
+        keys = list(keys)
+        tlbs = self.proto.tlbs
+        if tlbs is not None:
+            _, _, _, hit = tlbs.lookup_batch(
+                node, [k[0] for k in keys], [k[1] for k in keys])
+            keys = [k for k, h in zip(keys, hit) if not h]
+            if not keys:
+                return [], 0
+        streams = [k[0] for k in keys]
+        pages = [k[1] for k in keys]
+        status = self.proto.promote_pages(streams, pages, node)
+        hits = 0
+        weight = self.dpc.prefix_predict_weight
+        migrator = self.migrator if self.dpc.migration_enabled else None
+        for k, st in zip(keys, status):
+            st = int(st)
+            if st in (D.ST_MAP_S, D.ST_HIT_SHARER):
+                hits += 1
+                if migrator is not None:
+                    migrator.note_predicted_access(k, node, weight)
+            elif st == D.ST_HIT_OWNER:
+                hits += 1
+        self.stats["prefix_promotes"] += len(keys)
+        self.stats["prefix_promote_hits"] += hits
+        return keys, hits
 
     def commit(self, streams, pages, node: int, lookups: List[PageLookup],
                dirty=None):

@@ -108,12 +108,25 @@ class OwnershipMigrator:
         self._cooldown: Dict[Key, int] = {}
         self.stats = proto.obs.view(
             CLUSTER, "migration",
-            ("rounds", "candidates", "migrated", "cooldown_skips"))
+            ("rounds", "candidates", "migrated", "cooldown_skips",
+             "predicted_notes"))
 
     # -- signal ---------------------------------------------------------------
 
     def note_remote_access(self, key: Key, node: int) -> None:
         self.ledger.note(key, node)
+
+    def note_predicted_access(self, key: Key, node: int,
+                              weight: int = 1) -> None:
+        """Prediction-sourced ledger credit: a prefix-tree match says
+        ``node`` is about to read ``key`` — the same promotion signal as an
+        observed remote hit, just ahead of time (and weighted, because a
+        matched path predicts a whole run of accesses, not one).  This is
+        the "predictive promotion" half of the policy: pages on popular
+        prefixes migrate toward their predictors before the remote-read
+        tax is ever paid."""
+        self.ledger.note(key, node, weight=max(weight, 1))
+        self.stats["predicted_notes"] += 1
 
     # -- policy ---------------------------------------------------------------
 

@@ -115,6 +115,7 @@ PROTOCOL_COUNTERS = (
     "lost_dirty_pages", "checkpointed_pages",
     "lane_copies", "lane_flushes", "lane_fences",
     "fenced_nodes", "unfenced_nodes", "fenced_rejects",
+    "promotes", "promote_hits", "promote_misses", "promote_blocked",
 )
 
 
@@ -814,6 +815,61 @@ class DPCProtocol:
         c["blocked"] += int(((res[:, 0] == D.ST_BLOCKED) |
                              (res[:, 0] == D.ST_FULL)).sum())
         return ReadResult(res[:, 0], res[:, 1], res[:, 2], slots)
+
+    # -- predictive promotion (prefix-tree prefetch) ---------------------------
+
+    def promote_pages(self, streams, pages, node: int) -> np.ndarray:
+        """Batched sharer-bit promotion for predicted pages (``map_shared``).
+
+        The prefetch half of the read path: resident pages gain ``node``'s
+        sharer bit plus a TLB entry (the later real lookup is then a zero-op
+        cached hit), and their owner-side frames take a CLOCK touch so a
+        predicted-hot page cannot be reclaimed out from under its prediction.
+        Absent keys are misses — **nothing** is allocated for them, so a
+        wrong prediction costs one inert descriptor row.  Returns the status
+        vector (MAP_S / HIT_* / BLOCKED / BAD per row).
+        """
+        res, _ = self._routed(dirx.map_shared, streams, pages, node)
+        n = len(res)
+        if n == 0:
+            return res[:, 0] if res.ndim == 2 else res
+        hit_mask = ((res[:, 0] == D.ST_MAP_S) |
+                    (res[:, 0] == D.ST_HIT_SHARER) |
+                    (res[:, 0] == D.ST_HIT_OWNER))
+        streams_a = np.asarray(streams, np.int32)
+        pages_a = np.asarray(pages, np.int32)
+        if self.tlbs is not None:
+            for i in np.nonzero(hit_mask)[0]:
+                mode = (MODE_O if int(res[i, 0]) == D.ST_HIT_OWNER
+                        else MODE_S)
+                self.tlbs.install(node, int(streams_a[i]), int(pages_a[i]),
+                                  int(res[i, 1]), int(res[i, 2]), mode)
+        # owner-side CLOCK credit: the promoted frame is about to be read
+        touches: Dict[int, Dict[int, int]] = {}
+        for i in np.nonzero(hit_mask)[0]:
+            owner, pfn = int(res[i, 1]), int(res[i, 2])
+            if pfn >= 0:
+                slot = pfn % self.cfg.pool_pages
+                touches.setdefault(owner, {})[slot] = \
+                    touches.get(owner, {}).get(slot, 0) + 1
+        for owner, buf in touches.items():
+            self.touch_slots(owner, list(buf.keys()), list(buf.values()))
+        if self.oracle is not None:
+            # lockstep only where the op can mutate: on hit/blocked rows the
+            # oracle's lookup_and_install transitions identically (sharer
+            # add / no-op / blocked); a miss row must NOT drive the oracle —
+            # its lookup would claim an E entry map_shared never creates
+            for i in np.nonzero(hit_mask | (res[:, 0] == D.ST_BLOCKED))[0]:
+                ref_st = self.oracle.lookup_and_install(
+                    int(streams_a[i]), int(pages_a[i]), int(node))[0]
+                if ref_st != int(res[i, 0]):
+                    self.counters["oracle_mismatches"] += 1
+        c = self.counters
+        c["promotes"] += n
+        c["promote_hits"] += int(hit_mask.sum())
+        c["promote_misses"] += int((res[:, 0] == D.ST_BAD).sum())
+        c["promote_blocked"] += int((res[:, 0] == D.ST_BLOCKED).sum())
+        return res[:, 0]
 
     # -- commit (FUSE_DPC_UNLOCK) ----------------------------------------------
 

@@ -45,6 +45,11 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     page_ids: List[int] = dataclasses.field(default_factory=list)
     page_keys: List = dataclasses.field(default_factory=list)
+    # predictive prefetch: tree-matched keys promoted for this request
+    # while it sat queued, tagged with the issuing membership generation
+    # (a drain/fail bump drops them as stale at admit, like any prefetch)
+    predicted: List = dataclasses.field(default_factory=list)
+    predicted_gen: int = -1
     done: bool = False
     t_admit: float = 0.0
     t_first: float = 0.0
@@ -148,13 +153,41 @@ class ServingEngine:
                 continue
         return -1
 
+    def _page_keys(self, tokens: Sequence[int]) -> List:
+        """Directory keys for a prompt.  The cluster tree shares one key
+        space (salt 0); the per-node-index ablation salts with the node id
+        so no request ever resolves to another node's prefill."""
+        salt = 0 if self.kv.dpc.prefix_cluster else self.node + 1
+        return prefix_index.page_keys(tokens, self.run.dpc.page_size,
+                                      modality_salt=salt)
+
     def _admit(self, slot: int, req: Request) -> None:
         page = self.run.dpc.page_size
-        keys = prefix_index.page_keys(req.tokens, page)
+        keys = req.page_keys or self._page_keys(req.tokens)
         req.page_keys = keys
         lookups = self.kv.lookup([k[0] for k in keys], [k[1] for k in keys],
                                  self.node)
         self.prefix_stats.pages_needed += len(keys)
+
+        # reconcile the queued-time prediction: a promoted page that is
+        # still resident at admit is a predict hit (the lookup above was a
+        # TLB hit for it — zero directory ops); one evicted/moved since is
+        # a miss; a generation bump since issue drops the whole prediction
+        # as stale, exactly like a boundary prefetch
+        if req.predicted:
+            if req.predicted_gen != self._gen:
+                self.prefix_stats.predict_stale += len(req.predicted)
+            else:
+                by_idx = {k[1]: k for k in keys}
+                for pk in req.predicted:
+                    lk = (lookups[pk[1]] if pk[1] < len(lookups)
+                          and by_idx.get(pk[1]) == pk else None)
+                    if lk is not None and lk.page_id >= 0 \
+                            and not lk.needs_fill:
+                        self.prefix_stats.predict_hits += 1
+                    else:
+                        self.prefix_stats.predict_misses += 1
+            req.predicted = []
 
         # storage refill: an evicted full page whose bytes survive in the
         # backing store (or the still-pending writeback queue) is installed
@@ -206,6 +239,7 @@ class ServingEngine:
         if 0 < reuse == n_full:
             # cached-prefix admission: every full page reused — skip prefill
             # entirely and DECODE the short tail over the cached pages
+            self.kv.prefix_insert(keys[:n_full], self.node)
             self._sl[slot] = reuse * page
             self._ap[slot] = (req.page_ids[reuse] % pool_pages
                               if reuse < n_pages else -1)
@@ -241,6 +275,20 @@ class ServingEngine:
                            [keys[i][1] for i in fill_rows], self.node,
                            [PageLookup(0, req.page_ids[i], self.node, True,
                                        False) for i in fill_rows])
+
+        # advertise the published path in the cluster prefix tree: only the
+        # contiguous run of full pages committed under their true keys —
+        # a page granted under a private (salted) key is not shareable and
+        # must not be predicted for anyone else
+        pub = 0
+        for i in range(n_full):
+            if i < reuse or (lookups[i].needs_fill
+                             and lookups[i].page_id >= 0):
+                pub += 1
+            else:
+                break
+        if pub:
+            self.kv.prefix_insert(keys[:pub], self.node)
 
         self._sl[slot] = len(req.tokens)
         self._ap[slot] = (req.page_ids[-1] % pool_pages if req.page_ids
@@ -371,22 +419,24 @@ class ServingEngine:
                 *self._decode(self.params, tok, positions, self.cache))
             self.cache = inflight.cache
             # ---- overlap window: device decodes while the host works ----
-            if self.trace is not None:
-                self.trace.emit(T.EV_OVERLAP_BEGIN, self.node, step_id)
-            self._issue_prefetch()
-            self.kv.flush_tlb_touches()
-            self.kv.flush_dirty_marks()
-            if self.kv.writeback is not None:
-                self.kv.advance_epoch()
-                self.kv.pump_storage()
-                self.kv.writeback.kick()
-            if self.trace is not None:
-                self.trace.emit(T.EV_OVERLAP_END, self.node, step_id)
+            with steps.OverlapWindow(self.trace, self.node, step_id) as ow:
+                ow.note(self._issue_predictions())
+                self._issue_prefetch()
+                self.kv.flush_tlb_touches()
+                self.kv.flush_dirty_marks()
+                if self.kv.writeback is not None:
+                    self.kv.advance_epoch()
+                    self.kv.pump_storage()
+                    self.kv.writeback.kick()
             nxt = inflight.sample()  # sync point: ends the overlap window
         else:
             logits, self.cache = self._decode(self.params, tok, positions,
                                               self.cache)
             nxt = np.asarray(registry.greedy_sample(logits))
+            # sync reference mode issues the same predictions at the same
+            # step boundary, just serialized after the decode — the async
+            # ≡ sync equivalence property covers the promoted state too
+            self._issue_predictions()
 
         pc = steps.paged_part(self.cache)
         if pc is not None:
@@ -450,6 +500,40 @@ class ServingEngine:
         if self.trace is not None:
             self.trace.emit(T.EV_STEP_END, self.node, step_id, n_active)
         return n_active + len(self.queue)
+
+    # -- predictive prefetch (cluster prefix tree) -----------------------------
+
+    def _issue_predictions(self, budget: int = 16) -> int:
+        """Overlap-window work: match queued prompts against the cluster
+        prefix tree and batch-promote the matched pages before admission
+        needs them.  ``promote_predicted`` skips pages this node's TLB
+        already holds, so in steady state only the *tail* of the matched
+        path pays a directory op — and a promoted page's later real lookup
+        is a pure TLB hit.  Predictions carry the membership generation;
+        drain/fail bumps drop them at admit like any stale prefetch.
+        Returns promotion batches issued."""
+        if self.kv.prefix_tree is None:
+            return 0
+        page = self.run.dpc.page_size
+        issued = 0
+        for req in self.queue:
+            if issued >= budget:
+                break
+            if req.predicted_gen >= 0:
+                continue   # one prediction per queued request
+            req.predicted_gen = self._gen
+            keys = req.page_keys or self._page_keys(req.tokens)
+            req.page_keys = keys
+            matched = self.kv.prefix_match(keys[:len(req.tokens) // page],
+                                           self.node)
+            if not matched:
+                continue
+            promoted, _ = self.kv.promote_predicted(matched, self.node)
+            if promoted:
+                req.predicted = promoted
+                self.prefix_stats.pages_predicted += len(promoted)
+                issued += 1
+        return issued
 
     # -- async data plane: next-boundary page prefetch -------------------------
 

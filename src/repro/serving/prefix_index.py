@@ -63,6 +63,19 @@ class PrefixStats:
         self.pages_refilled = 0   # evicted pages restored from the store
         self.prefill_tokens_saved = 0
         self.prefill_tokens_run = 0
+        # predictive prefetch (cluster prefix tree): pages promoted off a
+        # tree match during the overlap window, and how the prediction aged
+        self.pages_predicted = 0      # matched-tail pages promoted
+        self.predict_hits = 0         # predicted pages admit then reused
+        self.predict_misses = 0       # predicted but gone by admit time
+        self.predict_stale = 0        # dropped by a generation bump
+
+    @property
+    def predict_hit_rate(self) -> float:
+        issued = self.predict_hits + self.predict_misses
+        return self.predict_hits / issued if issued else 0.0
 
     def as_dict(self):
-        return dict(vars(self))
+        d = dict(vars(self))
+        d["predict_hit_rate"] = self.predict_hit_rate
+        return d

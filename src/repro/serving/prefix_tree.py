@@ -1,0 +1,164 @@
+"""Cluster-visible prefix tree over content-addressed KV page keys.
+
+``prefix_index.page_keys`` gives every full prompt page a cluster-unique
+identity ``(chain_hash, page_idx)`` — the chain hash covers every token up
+to the page's end, so a page key *is* its whole prefix.  That makes the
+radix structure degenerate in the nicest possible way: each tree node is
+one page key, a node's children are the observed one-page extensions of
+its prefix, and a root-to-node path is exactly the key sequence a request
+with that prompt would look up.
+
+The tree is the cluster's **prediction** metadata (the directory remains
+the source of truth for residency): nodes are partitioned by the same
+``dir_shard_of`` placement as their directory entries, so the structure
+lives with the sharded directory — any serving node's commit inserts into
+the shard that owns the page, and any other node's match reads it there.
+Per-edge state is a refcount (paths through the edge) plus a decaying
+per-node hotness, which feeds the migration ledger when a match turns
+into a prediction (prediction-sourced promotion credit).
+
+Privacy caveat (mirrors ``page_keys``): only **full** pages enter the
+tree.  A partial trailing page's hash covers a token count nobody else
+can match page-for-page, so it stays private to its request and is never
+inserted, matched, or predicted.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+Key = Tuple[int, int]  # (chain_hash, page_idx) — the directory page key
+
+
+class TreeNode:
+    """One full prompt page; identity is its directory key."""
+
+    __slots__ = ("key", "parent", "children", "refs", "hot")
+
+    def __init__(self, key: Key, parent: Optional["TreeNode"]):
+        self.key = key
+        self.parent = parent
+        # child chain-hash -> node (page_idx is implied: depth + 1)
+        self.children: Dict[int, "TreeNode"] = {}
+        self.refs = 0                       # paths inserted through this edge
+        self.hot: Dict[int, int] = {}       # node id -> decaying access count
+
+    def hottest(self) -> Tuple[int, int]:
+        if not self.hot:
+            return -1, 0
+        n = max(self.hot, key=lambda k: (self.hot[k], -k))
+        return n, self.hot[n]
+
+
+class ClusterPrefixTree:
+    """Radix/chain tree of committed prompt prefixes, sharded like the
+    directory.
+
+    ``shard_of(stream, page) -> shard`` is the directory's placement
+    function; nodes are bucketed per shard purely so the metadata lives
+    (and is accounted) where its directory entry lives — matching walks
+    parent->child links and never scans a shard.
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 shard_of: Optional[Callable[[int, int], int]] = None):
+        self.capacity = max(capacity, 1)
+        self.shard_of = shard_of or (lambda s, p: 0)
+        self.roots: Dict[int, TreeNode] = {}    # first-page hash -> node
+        # shard id -> {key -> node}: the "directory entry" view of the tree
+        self.shards: Dict[int, Dict[Key, TreeNode]] = {}
+        self.size = 0
+        self.inserts = 0
+        self.evicted = 0
+
+    # -- growth -------------------------------------------------------------
+
+    def insert(self, keys: Sequence[Key], node_id: int) -> int:
+        """Record a committed prompt path (full-page keys only, in page
+        order starting at page 0).  Returns nodes created."""
+        created = 0
+        parent: Optional[TreeNode] = None
+        for depth, key in enumerate(keys):
+            if key[1] != depth:
+                break  # not a root-anchored path: refuse quietly
+            table = self.roots if parent is None else parent.children
+            tn = table.get(key[0])
+            if tn is None:
+                tn = TreeNode(key, parent)
+                table[key[0]] = tn
+                self.shards.setdefault(
+                    self.shard_of(key[0], key[1]), {})[key] = tn
+                self.size += 1
+                created += 1
+            tn.refs += 1
+            tn.hot[node_id] = tn.hot.get(node_id, 0) + 1
+            parent = tn
+        self.inserts += 1
+        if self.size > self.capacity:
+            self._prune()
+        return created
+
+    # -- lookup -------------------------------------------------------------
+
+    def match(self, keys: Sequence[Key], node_id: int = -1,
+              weight: int = 1) -> List[Key]:
+        """Longest root-anchored path matching ``keys``; returns the matched
+        keys (every one is a page some request already committed somewhere
+        in the cluster).  ``node_id >= 0`` heats the matched edges — the
+        refcounted hotness that later feeds the migration ledger."""
+        out: List[Key] = []
+        parent: Optional[TreeNode] = None
+        for depth, key in enumerate(keys):
+            if key[1] != depth:
+                break
+            table = self.roots if parent is None else parent.children
+            tn = table.get(key[0])
+            if tn is None or tn.key != key:
+                break
+            out.append(key)
+            if node_id >= 0:
+                tn.hot[node_id] = tn.hot.get(node_id, 0) + weight
+            parent = tn
+        return out
+
+    def predicted_tail(self, keys: Sequence[Key]) -> List[Key]:
+        """Matched keys beyond the first page — the pages a request walking
+        this path will need *after* admission starts (the prefetch set)."""
+        return self.match(keys)[1:]
+
+    # -- maintenance --------------------------------------------------------
+
+    def decay(self) -> None:
+        """Halve every edge's per-node heat (migration-round cadence)."""
+        for table in self.shards.values():
+            for tn in table.values():
+                tn.hot = {n: c >> 1 for n, c in tn.hot.items() if c >> 1 > 0}
+
+    def _prune(self) -> None:
+        """Drop the coldest leaf until back under capacity.  One at a time:
+        removing a leaf can expose its (colder) parent as the next victim,
+        so the leaf set is re-ranked after every drop — a bulk cut from one
+        snapshot could evict a hot path's tail instead."""
+        while self.size > self.capacity:
+            leaves = [tn for table in self.shards.values()
+                      for tn in table.values() if not tn.children]
+            if not leaves:
+                return
+            self._drop(min(leaves,
+                           key=lambda tn: (sum(tn.hot.values()), tn.refs,
+                                           tn.key)))
+
+    def _drop(self, tn: TreeNode) -> None:
+        table = tn.parent.children if tn.parent is not None else self.roots
+        if table.get(tn.key[0]) is tn:
+            del table[tn.key[0]]
+        shard = self.shards.get(self.shard_of(tn.key[0], tn.key[1]), {})
+        if shard.get(tn.key) is tn:
+            del shard[tn.key]
+        self.size -= 1
+        self.evicted += 1
+
+    def stats(self) -> dict:
+        return {"nodes": self.size, "inserts": self.inserts,
+                "evicted": self.evicted,
+                "shards": {s: len(t) for s, t in self.shards.items() if t}}

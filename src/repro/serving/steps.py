@@ -28,6 +28,7 @@ from repro.models import registry
 from repro.models.cache import (DPCPageWriter, HybridCache, LocalPageWriter,
                                 MLAPagedCache, PagedKVCache, RWKVCache,
                                 VLMCache)
+from repro.obs import trace as T
 
 
 def paged_part(cache):
@@ -98,9 +99,10 @@ class InFlightDecode:
 
     jax dispatch is asynchronous: the jitted step returns lazy device
     arrays immediately.  The engine wraps them here, overlaps host-side
-    directory work — next-step page prefetch, dirty-mark flushes, the
-    writeback pump — with the device compute, and only blocks when it
-    calls ``sample()`` for the tokens it actually needs."""
+    directory work — next-step page prefetch, predictive prefix-tree
+    promotion, dirty-mark flushes, the writeback pump — with the device
+    compute, and only blocks when it calls ``sample()`` for the tokens it
+    actually needs."""
 
     def __init__(self, logits, cache):
         self._logits = logits
@@ -110,6 +112,34 @@ class InFlightDecode:
         """Greedy-sample the dispatched logits; materializing the result is
         the synchronization point that ends the overlap window."""
         return np.asarray(registry.greedy_sample(self._logits))
+
+
+class OverlapWindow:
+    """Trace-bracketed host-work window while a dispatched decode computes.
+
+    Everything the engine runs between decode dispatch and ``sample()``
+    belongs in one of these: the tracer sees a single EV_OVERLAP span per
+    step (the audit pairs them), and the window object counts the work
+    batches issued inside it so benchmarks can report how full the bubble
+    actually is.  Usable as a no-op when tracing is off."""
+
+    def __init__(self, trace, node: int, step_id: int):
+        self.trace = trace
+        self.node = node
+        self.step_id = step_id
+        self.issued = 0          # host-work batches issued in the window
+
+    def note(self, n: int = 1) -> None:
+        self.issued += n
+
+    def __enter__(self) -> "OverlapWindow":
+        if self.trace is not None:
+            self.trace.emit(T.EV_OVERLAP_BEGIN, self.node, self.step_id)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if self.trace is not None:
+            self.trace.emit(T.EV_OVERLAP_END, self.node, self.step_id)
 
 
 def make_prefill_step(run: RunConfig, api, mesh: Optional[Mesh] = None,

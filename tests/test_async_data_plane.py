@@ -458,3 +458,110 @@ class TestEngineAsyncDataPlane:
         # table integrity: every named frame belongs to a live pool slot
         assert (eng._pt[eng._pt >= 0] <
                 kv.dpc.pool_pages_per_shard * 2).all()
+
+
+# ---------------------------------------------------------------------------
+# prediction-sourced prefetches: async == sync, stale-generation drops
+# ---------------------------------------------------------------------------
+
+
+def _make_prediction_cluster(async_dp: bool, num_nodes: int = 2):
+    import jax
+    from repro.configs import get_smoke_arch
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    from repro.models import registry
+    from repro.models.spec import init_params
+    from repro.serving.engine import ServingEngine
+
+    arch = get_smoke_arch("granite-3-2b")
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    run = RunConfig(arch=arch, shape=ShapeConfig("s", 64, 4, "decode"),
+                    mesh=MeshConfig((1,), ("data",)),
+                    dpc=DPCConfig(mode="dpc", page_size=8,
+                                  pool_pages_per_shard=512,
+                                  shadow_oracle=True,
+                                  async_data_plane=async_dp))
+    kv = DistributedKVCache(run.dpc, num_nodes)
+    engines = [ServingEngine(run, params, max_batch=2, max_pages_per_seq=10,
+                             node=i, num_nodes=num_nodes, kv_cache=kv)
+               for i in range(num_nodes)]
+    return engines, kv, arch
+
+
+def _prediction_workload(engines, arch, seed=7):
+    """3 shared 32-token prefixes, private 5-token tails, 6 requests per
+    node — deeper than max_batch, so later requests sit queued across
+    step boundaries and get predicted in the overlap window."""
+    rng = np.random.default_rng(seed)
+    hots = [rng.integers(0, arch.vocab_size, 32).tolist() for _ in range(3)]
+    for i in range(6):
+        engines[0].submit(
+            hots[i % 3] + rng.integers(0, arch.vocab_size, 5).tolist(),
+            max_new_tokens=2)
+    for i in range(6):
+        engines[1].submit(
+            hots[i // 2] + rng.integers(0, arch.vocab_size, 5).tolist(),
+            max_new_tokens=2)
+
+
+@pytest.mark.slow
+class TestPredictionAsyncEquivalence:
+    def test_predicted_promotions_async_equal_sync(self):
+        """Prediction-sourced promotions run inside the overlap window in
+        async mode and serialized after the decode in sync mode — the
+        settled tokens, prediction accounting, and promotion counters must
+        be identical (the async ≡ sync property extended to the predictive
+        path)."""
+        outs = {}
+        for mode in (True, False):
+            engines, kv, arch = _make_prediction_cluster(mode)
+            _prediction_workload(engines, arch)
+            tokens = {}
+            for _ in range(500):
+                before = [(e.node, r) for e in engines for r in e.active
+                          if r is not None]
+                n = sum(e.step() for e in engines)
+                for node, r in before:
+                    if r.done:
+                        tokens[(node, r.rid)] = tuple(r.generated)
+                if n == 0:
+                    break
+            assert kv.proto.counters["oracle_mismatches"] == 0
+            pred = sum(e.prefix_stats.pages_predicted for e in engines)
+            hits = sum(e.prefix_stats.predict_hits for e in engines)
+            assert pred > 0 and hits == pred    # nothing evicted under us
+            outs[mode] = (tokens, pred, hits,
+                          kv.proto.counters["promotes"],
+                          kv.proto.counters["promote_hits"])
+        assert outs[True] == outs[False]
+
+    def test_generation_bump_drops_queued_prediction(self):
+        """A prediction issued for a queued request races a failover: the
+        generation check at admit must count the whole prediction stale
+        and fall through to ordinary lookups — no corrupt reuse, full
+        output, oracle clean."""
+        engines, kv, arch = _make_prediction_cluster(True, num_nodes=3)
+        _prediction_workload(engines, arch)
+        bumped = False
+        done = {}
+        for _ in range(500):
+            before = [(e.node, r) for e in engines[:2] for r in e.active
+                      if r is not None]
+            n = sum(e.step() for e in engines[:2])
+            for node, r in before:
+                if r.done:
+                    done[(node, r.rid)] = tuple(r.generated)
+            if not bumped and any(r.predicted for r in engines[1].queue):
+                # node 2 is idle: failing it bumps every engine's view of
+                # the membership generation without disturbing ownership
+                for e in engines[:2]:
+                    e.fail_node(2)
+                bumped = True
+            if n == 0:
+                break
+        assert bumped, "no prediction was ever pending on a queued request"
+        stale = sum(e.prefix_stats.predict_stale for e in engines)
+        assert stale > 0
+        assert kv.proto.counters["oracle_mismatches"] == 0
+        assert len(done) == 12 and all(len(g) == 2 for g in done.values())

@@ -196,3 +196,48 @@ class TestCLI:
              "--baselines", base, "--allowlist", str(allow)],
             capture_output=True, text=True)
         assert proc.returncode == 0
+
+
+class TestStepSummary:
+    def test_summary_out_collects_per_suite_stats(self, tmp_path):
+        from benchmarks.compare_baseline import render_markdown_summary
+        _write_bench(tmp_path / "baselines", "a",
+                     {"a.fast": 100.0, "a.slow": 100.0})
+        _write_bench(tmp_path / "fresh", "a",
+                     {"a.fast": 90.0, "a.slow": 450.0, "a.new": 5.0})
+        _write_bench(tmp_path / "baselines", "b", {"b.x": 10.0})
+        _write_bench(tmp_path / "fresh", "b", {"b.x": 25.0})
+        summary = []
+        code, _, _ = compare(str(tmp_path / "fresh"),
+                             str(tmp_path / "baselines"),
+                             summary_out=summary)
+        assert code == 1
+        by_suite = {s["suite"]: s for s in summary}
+        assert by_suite["a"]["fails"] == 1 and by_suite["a"]["rows"] == 2
+        assert by_suite["a"]["worst_row"] == "a.slow"
+        assert by_suite["a"]["new_rows"] == 1
+        assert by_suite["b"]["warns"] == 1 and by_suite["b"]["fails"] == 0
+        md = render_markdown_summary(summary)
+        assert "| 🔴 a |" in md and "| 🟡 b |" in md
+        assert "`a.slow`" in md and "4.50x" in md
+
+    def test_cli_writes_github_step_summary(self, tmp_path):
+        """The exact CI invocation appends the markdown table to the file
+        named by $GITHUB_STEP_SUMMARY."""
+        import os
+        fresh, base = make_pair(tmp_path, {"x.a": 100.0}, {"x.a": 110.0})
+        dest = tmp_path / "summary.md"
+        env = dict(os.environ, GITHUB_STEP_SUMMARY=str(dest))
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.compare_baseline", fresh,
+             "--baselines", base, "--no-rerun"],
+            capture_output=True, text=True, env=env)
+        assert proc.returncode == 0
+        text = dest.read_text()
+        assert "## Perf smoke vs committed baseline" in text
+        assert "| 🟢 x |" in text
+
+    def test_no_env_is_a_noop(self, tmp_path, monkeypatch):
+        from benchmarks.compare_baseline import write_step_summary
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        assert write_step_summary([], 2.0, 4.0) is False

@@ -1,0 +1,385 @@
+"""Cluster prefix tree + predictive promotion tests.
+
+Three layers, mirroring the feature's stack:
+  * ``prefix_index.page_keys`` edge cases — partial trailing pages stay
+    private, ``modality_salt`` separates identical token streams, and the
+    chain hash is stable across page-size boundaries (a prefix's keys
+    never depend on what comes after it).
+  * ``ClusterPrefixTree`` structure — insert/match/heat, shard placement
+    follows the directory's ``dir_shard_of``, capacity pruning drops the
+    coldest leaves, non-root-anchored paths are refused.
+  * the promotion path — the ``map_shared`` directory op (promotion never
+    claims or installs), ``promote_pages`` protocol lockstep with the
+    shadow oracle, and the engine-level predict-then-admit flow including
+    the per-node-index ablation.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import DPCConfig
+from repro.core import descriptors as D
+from repro.core import directory as dirx
+from repro.core.dpc_cache import DistributedKVCache, dir_shard_of
+from repro.serving import prefix_index
+from repro.serving.prefix_tree import ClusterPrefixTree
+
+PAGE = 8
+
+
+# ---------------------------------------------------------------------------
+# page_keys edge cases (satellite: the stateless key layer under the tree)
+# ---------------------------------------------------------------------------
+
+
+class TestPageKeys:
+    def test_partial_trailing_page_stays_private(self):
+        """Two prompts sharing 2 full pages plus an identical *partial*
+        third page share exactly 2 pages — the partial page's key exists
+        (the engine needs a key to alloc under) but never counts as
+        shared."""
+        base = list(range(100, 100 + 2 * PAGE + 3))   # 2 full + 3 tokens
+        other = list(base)
+        ka = prefix_index.page_keys(base, PAGE)
+        kb = prefix_index.page_keys(other, PAGE)
+        assert len(ka) == 3 and ka == kb              # same keys, even partial
+        assert prefix_index.shared_page_count(base, other, PAGE) == 2
+
+    def test_partial_page_key_differs_from_full(self):
+        """A partial page's hash covers fewer tokens than the full page at
+        the same index, so it can never collide with the full-page key."""
+        full = list(range(2 * PAGE))
+        cut = full[:PAGE + 3]
+        k_full = prefix_index.page_keys(full, PAGE)
+        k_cut = prefix_index.page_keys(cut, PAGE)
+        assert k_full[0] == k_cut[0]
+        assert k_full[1] != k_cut[1]
+
+    def test_modality_salt_separates_identical_streams(self):
+        """The same token ids under different salts (text vs. audio
+        codebooks, or the per-node ablation) must resolve to disjoint key
+        spaces — every page key differs."""
+        toks = list(range(3 * PAGE))
+        a = prefix_index.page_keys(toks, PAGE, modality_salt=0)
+        b = prefix_index.page_keys(toks, PAGE, modality_salt=1)
+        assert all(ka[0] != kb[0] for ka, kb in zip(a, b))
+        assert [k[1] for k in a] == [k[1] for k in b]  # indices unchanged
+
+    def test_chain_hash_stable_across_page_boundaries(self):
+        """Keys are prefix-closed: truncating a prompt at any full-page
+        boundary yields exactly the leading keys of the longer prompt.
+        This is what lets the tree match a queued prompt against paths
+        other requests committed."""
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, 1 << 20, 5 * PAGE + 5).tolist()
+        whole = prefix_index.page_keys(toks, PAGE)
+        for k in range(1, 6):
+            cut = prefix_index.page_keys(toks[:k * PAGE], PAGE)
+            assert cut == whole[:k]
+
+    def test_different_page_size_different_keys(self):
+        """The page size participates in the chunking, so the same stream
+        paged differently must not alias (page 0 of size 8 covers other
+        tokens than page 0 of size 16)."""
+        toks = list(range(32))
+        k8 = prefix_index.page_keys(toks, 8)
+        k16 = prefix_index.page_keys(toks, 16)
+        assert k8[0][0] != k16[0][0]
+
+
+# ---------------------------------------------------------------------------
+# tree structure
+# ---------------------------------------------------------------------------
+
+
+def keys_for(tokens, salt=0):
+    return prefix_index.page_keys(tokens, PAGE, modality_salt=salt)
+
+
+class TestClusterPrefixTree:
+    def test_insert_then_match_longest_path(self):
+        tree = ClusterPrefixTree()
+        hot = list(range(4 * PAGE))
+        tree.insert(keys_for(hot), node_id=0)
+        # a prompt sharing 2 pages then diverging matches exactly 2
+        fork = hot[:2 * PAGE] + [999] * (2 * PAGE)
+        m = tree.match(keys_for(fork), node_id=1)
+        assert m == keys_for(hot)[:2]
+        # the full path matches everything
+        assert tree.match(keys_for(hot)) == keys_for(hot)
+        assert tree.predicted_tail(keys_for(hot)) == keys_for(hot)[1:]
+
+    def test_match_heats_edges_for_requester(self):
+        tree = ClusterPrefixTree()
+        hot = list(range(2 * PAGE))
+        tree.insert(keys_for(hot), node_id=0)
+        tree.match(keys_for(hot), node_id=3, weight=2)
+        root = tree.roots[keys_for(hot)[0][0]]
+        assert root.hot[3] == 2 and root.hot[0] == 1
+        assert root.hottest() == (3, 2)
+        tree.decay()
+        assert root.hot == {3: 1}      # 0's count halved to zero
+
+    def test_non_root_anchored_path_refused(self):
+        """Keys must start at page 0 and be contiguous — a mid-prompt
+        fragment would let a partial page masquerade as shareable."""
+        tree = ClusterPrefixTree()
+        ks = keys_for(list(range(3 * PAGE)))
+        assert tree.insert(ks[1:], node_id=0) == 0     # starts at page 1
+        assert tree.size == 0
+        assert tree.insert([ks[0], ks[2]], node_id=0) == 1  # gap: stops at 0
+        assert tree.size == 1
+
+    def test_shard_placement_matches_directory(self):
+        """Tree nodes are bucketed by the directory's shard placement, so
+        the prediction metadata for a page lives with its directory
+        entry."""
+        dpc = DPCConfig(page_size=PAGE, directory_capacity=256,
+                        directory_placement="sharded")
+        cfg_kv = DistributedKVCache(dpc, 4)
+        try:
+            cfg = cfg_kv.proto.cfg
+            tree = ClusterPrefixTree(
+                shard_of=lambda s, p: dir_shard_of(cfg, s, p))
+            ks = keys_for(list(range(6 * PAGE)))
+            tree.insert(ks, node_id=0)
+            for key in ks:
+                shard = dir_shard_of(cfg, key[0], key[1])
+                assert key in tree.shards[shard]
+        finally:
+            cfg_kv.close()
+
+    def test_capacity_prunes_coldest_leaves(self):
+        tree = ClusterPrefixTree(capacity=6)
+        hot = list(range(4 * PAGE))
+        tree.insert(keys_for(hot), node_id=0)          # 4 nodes
+        for _ in range(5):                             # heat the hot path
+            tree.match(keys_for(hot), node_id=1)
+        cold = [7] * (4 * PAGE)
+        tree.insert(keys_for(cold), node_id=0)         # 8 nodes -> prune
+        assert tree.size <= 6
+        assert tree.evicted >= 2
+        # the hot path survives intact; the cold one lost its tail
+        assert len(tree.match(keys_for(hot))) == 4
+        assert len(tree.match(keys_for(cold))) < 4
+
+
+# ---------------------------------------------------------------------------
+# map_shared: the promotion directory op never claims or installs
+# ---------------------------------------------------------------------------
+
+
+def _dir(capacity=64):
+    cfg = dirx.DirectoryConfig(capacity=capacity, num_nodes=4, max_probe=64)
+    return dirx.init_directory(cfg), cfg
+
+
+class TestMapSharedOp:
+    def test_absent_key_is_bad_and_not_installed(self):
+        d, cfg = _dir()
+        descs = jnp.asarray(D.make_batch([5], [0], [1]))
+        d2, res = dirx.map_shared(d, descs, max_probe=64)
+        assert int(np.asarray(res)[0, 0]) == D.ST_BAD
+        assert dirx.to_host_dict(d2, cfg) == {}        # nothing claimed
+
+    def test_promote_sets_sharer_then_hits(self):
+        d, cfg = _dir()
+        # node 2 owns (5, 0)
+        d, _ = dirx.lookup_and_install(
+            d, jnp.asarray(D.make_batch([5], [0], [2])), max_probe=64)
+        d, _ = dirx.commit(d, jnp.asarray(D.make_batch([5], [0], [2])),
+                           max_probe=64)
+        descs = jnp.asarray(D.make_batch([5], [0], [1]))
+        d, res = dirx.map_shared(d, descs, max_probe=64)
+        st, owner, _ = np.asarray(res)[0]
+        assert st == D.ST_MAP_S and owner == 2
+        assert 1 in dirx.to_host_dict(d, cfg)[(5, 0)][2]   # sharer bit set
+        d, res = dirx.map_shared(d, descs, max_probe=64)   # idempotent
+        assert int(np.asarray(res)[0, 0]) == D.ST_HIT_SHARER
+        # the owner promoting its own page is a plain owner hit
+        d, res = dirx.map_shared(
+            d, jnp.asarray(D.make_batch([5], [0], [2])), max_probe=64)
+        assert int(np.asarray(res)[0, 0]) == D.ST_HIT_OWNER
+
+    def test_in_flight_entry_blocks(self):
+        d, cfg = _dir()
+        d, _ = dirx.lookup_and_install(
+            d, jnp.asarray(D.make_batch([5], [0], [2])), max_probe=64)
+        # still E (uncommitted): promotion must not observe the fill
+        d, res = dirx.map_shared(
+            d, jnp.asarray(D.make_batch([5], [0], [1])), max_probe=64)
+        assert int(np.asarray(res)[0, 0]) == D.ST_BLOCKED
+        assert dirx.to_host_dict(d, cfg)[(5, 0)][0] == dirx.E  # untouched
+
+
+# ---------------------------------------------------------------------------
+# kv-level promotion: TLB skip, oracle lockstep, ledger credit
+# ---------------------------------------------------------------------------
+
+
+def make_kv(**kw):
+    dpc = DPCConfig(page_size=PAGE, pool_pages_per_shard=64,
+                    shadow_oracle=True, directory_capacity=512, **kw)
+    return DistributedKVCache(dpc, 2)
+
+
+class TestPromotePredicted:
+    def test_promote_installs_tlb_and_credits_ledger(self):
+        kv = make_kv()
+        try:
+            ks = keys_for(list(range(3 * PAGE)))
+            lks = kv.lookup([k[0] for k in ks], [k[1] for k in ks], 0)
+            kv.commit([k[0] for k in ks], [k[1] for k in ks], 0, lks)
+            kv.prefix_insert(ks, 0)
+            matched = kv.prefix_match(ks, 1)
+            assert matched == ks
+            promoted, hits = kv.promote_predicted(matched, 1)
+            assert promoted == ks and hits == len(ks)
+            assert kv.proto.counters["promote_hits"] == len(ks)
+            # prediction-sourced ledger credit, weighted
+            w = kv.dpc.prefix_predict_weight
+            for k in ks:
+                assert kv.migrator.ledger.counts[k][1] == w
+            assert kv.migrator.stats["predicted_notes"] == len(ks)
+            # the promoted pages are now TLB hits: zero directory reads
+            before = kv.proto.counters["reads"]
+            lks = kv.lookup([k[0] for k in ks], [k[1] for k in ks], 1)
+            assert all(lk.page_id >= 0 and not lk.needs_fill for lk in lks)
+            assert kv.proto.counters["reads"] == before
+            # re-promoting is a no-op (all TLB-cached)
+            assert kv.promote_predicted(ks, 1) == ([], 0)
+            assert kv.proto.counters["oracle_mismatches"] == 0
+        finally:
+            kv.close()
+
+    def test_promote_miss_allocates_nothing(self):
+        kv = make_kv()
+        try:
+            ghost = [(12345, 0), (54321, 1)]
+            promoted, hits = kv.promote_predicted(ghost, 1)
+            assert hits == 0
+            assert kv.proto.counters["promote_misses"] == 2
+            # a later real lookup still gets a fresh exclusive grant
+            lk = kv.lookup([12345], [0], 0)[0]
+            assert lk.status == D.ST_GRANT_E
+            assert kv.proto.counters["oracle_mismatches"] == 0
+        finally:
+            kv.close()
+
+    def test_fenced_node_cannot_predict_or_advertise(self):
+        kv = make_kv()
+        try:
+            ks = keys_for(list(range(2 * PAGE)))
+            lks = kv.lookup([k[0] for k in ks], [k[1] for k in ks], 0)
+            kv.commit([k[0] for k in ks], [k[1] for k in ks], 0, lks)
+            kv.prefix_insert(ks, 0)
+            kv.proto.fence_nodes([1])
+            assert kv.prefix_match(ks, 1) == []
+            assert kv.promote_predicted(ks, 1) == ([], 0)
+            assert kv.prefix_insert(ks, 1) == 0
+        finally:
+            kv.close()
+
+
+# ---------------------------------------------------------------------------
+# engine level: predict while queued, reconcile at admit, ablation
+# ---------------------------------------------------------------------------
+
+
+def _make_cluster(num_nodes=2, *, max_batch=2, prompt=32, **dpc_kw):
+    import jax
+    from repro.configs import get_smoke_arch
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    from repro.models import registry
+    from repro.models.spec import init_params
+    from repro.serving.engine import ServingEngine
+
+    arch = get_smoke_arch("granite-3-2b")
+    api = registry.get_model(arch)
+    params = init_params(api.specs(arch), jax.random.PRNGKey(0))
+    run = RunConfig(arch=arch, shape=ShapeConfig("s", prompt * 2, 4,
+                                                 "decode"),
+                    mesh=MeshConfig((1,), ("data",)),
+                    dpc=DPCConfig(mode="dpc", page_size=PAGE,
+                                  pool_pages_per_shard=512,
+                                  shadow_oracle=True, **dpc_kw))
+    kv = DistributedKVCache(run.dpc, num_nodes)
+    engines = [ServingEngine(run, params, max_batch=max_batch,
+                             max_pages_per_seq=prompt * 2 // PAGE + 2,
+                             node=i, num_nodes=num_nodes, kv_cache=kv)
+               for i in range(num_nodes)]
+    return engines, kv, arch
+
+
+def _drive(engines, limit=500):
+    for _ in range(limit):
+        if sum(e.step() for e in engines) == 0:
+            return
+    raise AssertionError("engines did not drain")
+
+
+def _submit_mixed(engines, arch, prompt=32, n_prefixes=3, per_node=6,
+                  seed=7):
+    """Node 0 cycles through the prefixes (prefilling each early); node 1+
+    see each prefix twice in a row, so their queued requests reference
+    paths another node committed — the prediction-window case."""
+    rng = np.random.RandomState(seed)
+    hots = [rng.randint(0, arch.vocab_size, prompt).tolist()
+            for _ in range(n_prefixes)]
+    for i in range(per_node):
+        engines[0].submit(
+            hots[i % n_prefixes] + rng.randint(0, arch.vocab_size,
+                                               5).tolist(),
+            max_new_tokens=2)
+    for e in engines[1:]:
+        for i in range(per_node):
+            e.submit(hots[(i // 2) % n_prefixes]
+                     + rng.randint(0, arch.vocab_size, 5).tolist(),
+                     max_new_tokens=2)
+
+
+@pytest.mark.slow
+class TestEnginePrediction:
+    def test_queued_requests_predicted_then_hit(self):
+        """A queued request whose prompt matches another node's committed
+        path gets its tail promoted during the overlap window, and the
+        promoted pages are still resident at admit (predict hits)."""
+        engines, kv, arch = _make_cluster(async_data_plane=True)
+        _submit_mixed(engines, arch)
+        _drive(engines)
+        pred = sum(e.prefix_stats.pages_predicted for e in engines)
+        hits = sum(e.prefix_stats.predict_hits for e in engines)
+        assert pred > 0
+        assert hits / pred > 0.5
+        assert kv.proto.counters["promotes"] > 0
+        assert kv.proto.counters["oracle_mismatches"] == 0
+        assert kv.migrator.stats["predicted_notes"] > 0
+
+    def test_per_node_ablation_never_shares(self):
+        """``prefix_cluster=False`` salts every key with the node id: no
+        cross-node prefix reuse, no predictions — the ablation baseline
+        the benchmark compares against."""
+        engines, kv, arch = _make_cluster(async_data_plane=True,
+                                          prefix_cluster=False)
+        _submit_mixed(engines, arch)
+        _drive(engines)
+        for e in engines[1:]:
+            assert e.prefix_stats.pages_remote == 0
+        assert sum(e.prefix_stats.pages_predicted for e in engines) == 0
+        assert kv.proto.counters["oracle_mismatches"] == 0
+
+    def test_cluster_saves_more_prefill_than_ablation(self):
+        """The headline claim: the cluster tree saves strictly more
+        prefill tokens than per-node indexing on a shared-prefix mix."""
+        saved = {}
+        for cluster in (True, False):
+            engines, kv, arch = _make_cluster(async_data_plane=True,
+                                              prefix_cluster=cluster)
+            _submit_mixed(engines, arch)
+            _drive(engines)
+            saved[cluster] = sum(e.prefix_stats.prefill_tokens_saved
+                                 for e in engines)
+            assert kv.proto.counters["oracle_mismatches"] == 0
+        assert saved[True] > saved[False]
